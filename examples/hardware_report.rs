@@ -1,0 +1,89 @@
+//! Hardware design-space report: Table 2 plus a sweep over network widths
+//! and TT factorizations — the "which accelerator should I build?" view.
+//!
+//!     cargo run --release --example hardware_report
+
+use anyhow::Result;
+use photon_pinn::photonics::perf::{Design, NetworkDims, PerfModel, TrainingEfficiency};
+use photon_pinn::tensor::TtShape;
+use photon_pinn::util::bench::Table;
+use photon_pinn::util::stats::sci;
+
+fn main() -> Result<()> {
+    let model = PerfModel::default();
+
+    // ---- Table 2 at paper scale -----------------------------------------
+    let mut t2 = Table::new(
+        "Table 2 — paper scale (n=1024, TT [4,8,4,8]x[8,4,8,4], ranks [1,2,1,2,1])",
+        &["Design", "Params", "#MZIs", "Energy/inf", "Latency/inf", "Footprint", "Cycles", "Link loss"],
+    );
+    for (design, dims) in [
+        (Design::Onn, NetworkDims::paper_onn()),
+        (Design::Tonn1, NetworkDims::paper_tonn()),
+        (Design::Tonn2, NetworkDims::paper_tonn()),
+    ] {
+        let r = model.report(design, &dims);
+        t2.row(&[
+            r.design.to_string(),
+            sci(r.params as f64),
+            sci(r.mzis as f64),
+            r.energy_per_inference_j
+                .map(|e| format!("{} J", sci(e)))
+                .unwrap_or_else(|| "infeasible".into()),
+            format!("{:.0} ns", r.latency_per_inference_ns),
+            format!("{} mm2", sci(r.footprint_mm2)),
+            r.cycles.to_string(),
+            format!("{:.1} dB", r.link_loss_db),
+        ]);
+    }
+    t2.print();
+
+    // ---- width sweep: where does the dense ONN become infeasible? -------
+    let mut sweep = Table::new(
+        "Design-space sweep — dense ONN vs TONN-1 across hidden widths",
+        &["hidden", "ONN #MZIs", "ONN link", "TONN #MZIs", "TONN energy/inf", "MZI reduction"],
+    );
+    for hidden in [64usize, 256, 1024] {
+        let onn = NetworkDims { hidden, tt: None, wavelengths: 32 };
+        let tt = match hidden {
+            64 => TtShape::new(&[4, 4, 4], &[4, 4, 4], &[1, 2, 2, 1]).unwrap(),
+            256 => TtShape::new(&[4, 8, 8], &[8, 8, 4], &[1, 2, 2, 1]).unwrap(),
+            _ => TtShape::paper_layer(),
+        };
+        let tonn = NetworkDims { hidden, tt: Some(tt), wavelengths: 32 };
+        let onn_mzi = model.mzi_count(Design::Onn, &onn);
+        let tonn_mzi = model.mzi_count(Design::Tonn1, &tonn);
+        sweep.row(&[
+            hidden.to_string(),
+            sci(onn_mzi as f64),
+            if model.energy_j(Design::Onn, &onn).is_some() { "ok".into() } else { "infeasible".into() },
+            sci(tonn_mzi as f64),
+            model
+                .energy_j(Design::Tonn1, &tonn)
+                .map(|e| format!("{} J", sci(e)))
+                .unwrap_or_else(|| "infeasible".into()),
+            format!("{:.0}x", onn_mzi as f64 / tonn_mzi as f64),
+        ]);
+    }
+    sweep.print();
+
+    // ---- training efficiency (paper §4.2) --------------------------------
+    let te = TrainingEfficiency::paper();
+    let dims = NetworkDims::paper_tonn();
+    println!("\n== Training efficiency (TONN-1, §4.2) ==");
+    for (label, design) in [("TONN-1", Design::Tonn1), ("TONN-2", Design::Tonn2)] {
+        let e_inf = model.energy_j(design, &dims).unwrap();
+        let t_inf = model.latency_ns(design, &dims);
+        let (e, t) = te.totals(e_inf, t_inf);
+        println!(
+            "{label}: {} J/epoch, {} s/epoch -> {:.2} J, {:.2} s for {} epochs",
+            sci(te.energy_per_epoch_j(e_inf)),
+            sci(te.latency_per_epoch_s(t_inf)),
+            e,
+            t,
+            te.epochs
+        );
+    }
+    println!("paper (TONN-1): 2.71e-4 J/epoch, 0.23 ms/epoch, 1.36 J & 1.15 s total");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: BP-free on-chip training of a tensor-compressed optical
+//! PINN on the paper's 20-dim HJB equation, at the CPU-friendly scale.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! What happens: the rust coordinator (the "digital control system")
+//! repeatedly programs a simulated noisy photonic chip (the AOT-compiled
+//! `tonn_small` artifacts), estimates gradients with SPSA from loss
+//! evaluations only (no backprop anywhere), applies ZO-signSGD updates,
+//! and reports the validation MSE against the exact solution
+//! u(x,t) = ‖x‖₁ + 1 − t.
+
+use anyhow::Result;
+use photon_pinn::coordinator::{OnChipTrainer, TrainConfig};
+use photon_pinn::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dir = photon_pinn::resolve_artifacts_dir(None);
+    let rt = Runtime::load(&dir)?;
+    println!("platform: {} | artifacts: {}", rt.platform(), dir.display());
+
+    let mut cfg = TrainConfig::from_manifest(&rt, "tonn_small")?;
+    cfg.epochs = 400; // quick demo; the full run uses the manifest default
+    cfg.verbose = true;
+    cfg.validate_every = 50;
+
+    let pm = rt.manifest.preset("tonn_small")?;
+    println!(
+        "training a TT-compressed optical PINN: {} trainable phase-domain params \
+         ({} MZI angles), 20-dim HJB, batch {}, {} FD inferences per loss eval",
+        pm.layout.param_dim,
+        pm.layout.count_kind(photon_pinn::model::SegmentKind::Angles),
+        rt.manifest.b_residual,
+        pm.pde.n_stencil(),
+    );
+
+    let mut trainer = OnChipTrainer::new(&rt, cfg)?;
+    let result = trainer.train()?;
+
+    println!("\n=== quickstart result ===");
+    println!("final validation MSE (on the noisy chip): {:.3e}", result.final_val);
+    println!(
+        "simulated chip inferences: {} | wall: {:.1}s | skipped epochs: {}",
+        result.metrics.inferences,
+        result.metrics.wall_seconds,
+        result.metrics.skipped_epochs
+    );
+    println!("loss curve (every 50 epochs):");
+    for r in result.metrics.records.iter().filter(|r| r.val.is_some()) {
+        println!(
+            "  epoch {:4}  loss {:.3e}  val {:.3e}",
+            r.epoch,
+            r.loss,
+            r.val.unwrap()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT lowering: jax -> HLO text artifacts + manifest (the build step).
+
+Python runs ONCE, here. The interchange format is **HLO text**, not a
+serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+instruction ids which the image's xla_extension 0.5.1 (behind the rust
+``xla`` crate) rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage (normally via ``make artifacts``):
+
+    cd python && python -m compile.aot --out-dir ../artifacts --group small
+
+Outputs, per preset x entry point: ``<preset>_<entry>.hlo.txt``, plus one
+``manifest.json`` describing every executable's I/O shapes, the flat
+parameter layout (segment kinds + init hints for the rust-side sampler
+and noise model), architecture info for the photonics census, and the
+training hyperparameters.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import mesh, model
+from .pdes import PDES
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for the rust
+    side's ``to_tuple1`` unwrap)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, arg_shapes, use_pallas: bool) -> str:
+    """Trace with f32 ShapeDtypeStructs and emit HLO text.
+
+    ``use_pallas=False`` is required for the ``grad`` entries: the Pallas
+    Givens kernel iterates stages with ``fori_loop``, which has no
+    reverse-mode rule; the pure-jnp ``scan`` path is mathematically
+    identical (tested) and differentiable.
+    """
+    prev = mesh.USE_PALLAS
+    mesh.USE_PALLAS = use_pallas
+    try:
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in arg_shapes]
+        def tupled(*args):
+            out = fn(*args)
+            return out if isinstance(out, tuple) else (out,)
+        lowered = jax.jit(tupled).lower(*specs)
+        return to_hlo_text(lowered)
+    finally:
+        mesh.USE_PALLAS = prev
+
+
+def entry_record(name, fn, arg_shapes, out_shapes, fname):
+    return {
+        "file": fname,
+        "inputs": [{"name": n, "shape": list(s), "dtype": "f32"} for n, s in arg_shapes],
+        "outputs": [{"shape": list(s), "dtype": "f32"} for s in out_shapes],
+    }
+
+
+def infer_out_shapes(fn, arg_shapes):
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in arg_shapes]
+    out = jax.eval_shape(fn, *specs)
+    if not isinstance(out, tuple):
+        out = (out,)
+    return [tuple(o.shape) for o in out]
+
+
+def build_artifacts(out_dir: str, preset_names, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "batch_shapes": {
+            "forward": model.B_FWD, "residual": model.B_RES,
+            "validate": model.B_VAL, "k_multi": model.K_MULTI,
+        },
+        "presets": {},
+    }
+    # Merge with a pre-existing manifest so preset groups can be built
+    # incrementally (`make artifacts` lowers several groups in sequence).
+    prev_path = os.path.join(out_dir, "manifest.json")
+    if os.path.exists(prev_path):
+        try:
+            with open(prev_path) as f:
+                prev = json.load(f)
+            if prev.get("version") == MANIFEST_VERSION:
+                manifest["presets"].update(prev.get("presets", {}))
+        except (OSError, json.JSONDecodeError):
+            pass  # rebuild from scratch
+    for pname in preset_names:
+        t0 = time.time()
+        net, pde, entries, hyper = model.build_preset(pname)
+        prec = {
+            "pde": {
+                "name": pde.name, "dim": pde.dim, "in_dim": pde.in_dim,
+                "has_time": bool(pde.has_time), "n_stencil": int(pde.n_stencil),
+            },
+            "param_dim": int(net.param_dim),
+            "segments": net.layout.segments,
+            "arch": net.arch_info(),
+            "hyper": hyper,
+            "entries": {},
+        }
+        for ename, (fn, arg_shapes) in entries.items():
+            # Pallas kernels are exercised end-to-end through the `forward`
+            # artifact. Training-path entries lower through the identical
+            # (differentially-tested) jnp path: interpret-mode Pallas costs
+            # ~45x inside the FD fan-out (250 ms vs 5.5 ms per loss eval,
+            # EXPERIMENTS.md §Perf), and `grad` additionally cannot
+            # reverse-differentiate the kernel's fori_loop.
+            use_pallas = ename == "forward"
+            fname = f"{pname}_{ename}.hlo.txt"
+            if verbose:
+                print(f"[aot] lowering {pname}.{ename} ...", flush=True)
+            text = lower_entry(fn, arg_shapes, use_pallas)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            prev = mesh.USE_PALLAS
+            mesh.USE_PALLAS = use_pallas
+            try:
+                out_shapes = infer_out_shapes(fn, arg_shapes)
+            finally:
+                mesh.USE_PALLAS = prev
+            prec["entries"][ename] = entry_record(
+                ename, fn, arg_shapes, out_shapes, fname)
+        manifest["presets"][pname] = prec
+        if verbose:
+            print(f"[aot] {pname}: d={net.param_dim} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--group", default="small",
+                    choices=sorted(model.GROUPS.keys()))
+    ap.add_argument("--presets", default=None,
+                    help="comma-separated preset names (overrides --group)")
+    args = ap.parse_args()
+    names = (args.presets.split(",") if args.presets
+             else model.GROUPS[args.group])
+    for n in names:
+        if n not in model.PRESETS:
+            print(f"unknown preset {n}", file=sys.stderr)
+            return 2
+    build_artifacts(args.out_dir, names)
+    print(f"[aot] wrote manifest for {len(names)} preset(s) to {args.out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

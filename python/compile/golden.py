@@ -1,0 +1,89 @@
+"""Golden-value generator: python-side truth for the rust integration
+tests (`rust/tests/artifact_numerics.rs`).
+
+Run as part of `make artifacts`. Evaluates every entry point of a preset
+in-process (same functions the artifacts were lowered from) on fixed
+seeded inputs and dumps inputs + outputs to
+``artifacts/golden_<preset>.json``. The rust runtime must reproduce these
+through the AOT artifacts — this is the cross-language, cross-XLA-version
+correctness contract (it caught the XLA-0.5.1 scatter/gather miscompile;
+see mesh.pad_angles).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import mesh, model
+from .pdes import PDES
+
+
+def build_golden(preset: str, seed: int = 12345) -> dict:
+    prev = mesh.USE_PALLAS
+    mesh.USE_PALLAS = False  # the training-path artifacts' lowering mode
+    try:
+        net, pde, entries, hyper = model.build_preset(preset)
+        rng = np.random.default_rng(seed)
+        phi = mesh.init_vector(net.layout.segments, rng)
+        x = pde.sample_domain(rng, model.B_FWD)
+        xr = pde.sample_domain(rng, model.B_RES)
+        xv = pde.sample_domain(rng, model.B_VAL)
+        uv = np.asarray(pde.exact(jnp.asarray(xv)))
+        jp = jnp.asarray(phi)
+        out = {
+            "preset": preset,
+            "phi": phi.tolist(),
+            "x": x.flatten().tolist(),
+            "xr": xr.flatten().tolist(),
+            "xv": xv.flatten().tolist(),
+            "uv": uv.tolist(),
+        }
+        if "forward" in entries:
+            # forward artifacts lower WITH pallas; interpret-mode pallas is
+            # numerically identical to the ref path (L1 tests), so one
+            # golden serves both.
+            out["u"] = np.asarray(
+                entries["forward"][0](jp, jnp.asarray(x))).tolist()
+        if "loss" in entries:
+            out["loss"] = float(entries["loss"][0](jp, jnp.asarray(xr)))
+        if "loss_multi" in entries:
+            phis = np.stack(
+                [phi * (1.0 + 0.001 * k) for k in range(model.K_MULTI)])
+            out["phis"] = phis.flatten().tolist()
+            out["loss_multi"] = np.asarray(
+                entries["loss_multi"][0](jnp.asarray(phis), jnp.asarray(xr))
+            ).tolist()
+        if "grad" in entries:
+            lv, gv = entries["grad"][0](jp, jnp.asarray(xr))
+            out["grad_loss"] = float(lv)
+            out["grad_norm"] = float(jnp.linalg.norm(gv))
+            out["grad_head"] = np.asarray(gv)[:8].tolist()
+        if "validate" in entries:
+            out["val"] = float(
+                entries["validate"][0](jp, jnp.asarray(xv), jnp.asarray(uv)))
+        return out
+    finally:
+        mesh.USE_PALLAS = prev
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tonn_small,tonn_poisson")
+    args = ap.parse_args()
+    for preset in args.presets.split(","):
+        g = build_golden(preset)
+        path = f"{args.out_dir}/golden_{preset}.json"
+        with open(path, "w") as f:
+            json.dump(g, f)
+        print(f"[golden] wrote {path} (loss={g.get('loss'):.6g})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+"""Pallas kernel: Clements/Givens mesh application (Layer 1).
+
+The MZI mesh is the photonic primitive of the paper: a programmable
+unitary realized as ``n`` stages of parallel 2x2 interferometers. This
+kernel applies the whole mesh to a batch of activation rows.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): a GPU port would assign
+thread blocks per channel pair and synchronize between stages; on TPU we
+instead keep a ``(block_b, n)`` activation tile resident in VMEM and apply
+each stage as a vectorized reshape/rotate, with a sequential
+``fori_loop`` over stages (stages have a data dependency and cannot be
+gridded). The grid tiles the batch dimension — that is the HBM->VMEM
+schedule that threadblocks provided in the GPU formulation.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated structurally in
+DESIGN.md/EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget note: a block holds block_b * n f32 activations plus the
+# (n, n/2) angle table. For the paper-scale n=1024 and block_b=256 this is
+# 256*1024*4 + 1024*512*4 = 3.1 MiB — comfortably inside a 16 MiB VMEM.
+DEFAULT_BLOCK_B = 256
+
+
+def _givens_kernel(x_ref, theta_ref, o_ref, *, n: int, reverse: bool):
+    """Apply all mesh stages to one batch tile held in VMEM."""
+    x = x_ref[...]  # (block_b, n)
+    theta = theta_ref[...]  # (n, n/2) padded angles
+    s_count = theta.shape[0]
+    b, m = x.shape[0], n // 2
+
+    def stage(i, xc):
+        # stage index in application order; under reverse we walk the
+        # stages backwards with negated angles (U^T).
+        s = jnp.where(reverse, s_count - 1 - i, i)
+        ang = jnp.where(reverse, -theta[s], theta[s])
+        parity = s % 2
+        xr = jnp.where(parity > 0, jnp.roll(xc, -1, axis=-1), xc)
+        xp = xr.reshape(b, m, 2)
+        c = jnp.cos(ang)[None, :]
+        sn = jnp.sin(ang)[None, :]
+        x0 = c * xp[..., 0] - sn * xp[..., 1]
+        x1 = sn * xp[..., 0] + c * xp[..., 1]
+        xr = jnp.stack([x0, x1], axis=-1).reshape(b, n)
+        return jnp.where(parity > 0, jnp.roll(xr, 1, axis=-1), xr)
+
+    o_ref[...] = jax.lax.fori_loop(0, s_count, stage, x)
+
+
+@functools.partial(jax.jit, static_argnames=("reverse", "block_b"))
+def givens_apply(
+    x: jnp.ndarray,
+    theta: jnp.ndarray,
+    reverse: bool = False,
+    block_b: int = DEFAULT_BLOCK_B,
+) -> jnp.ndarray:
+    """Apply a Givens mesh to a batch via the Pallas kernel.
+
+    ``x``: (B, n); ``theta``: padded angles (n, n//2).
+    Returns ``x @ U.T`` (or ``x @ U`` when ``reverse``).
+    B must be a multiple of the batch tile; callers pad (see
+    ``compile.mesh.mesh_apply`` which handles padding and the flat->padded
+    angle scatter).
+    """
+    b, n = x.shape
+    bb = min(block_b, b)
+    assert b % bb == 0, f"batch {b} not a multiple of block {bb}"
+    grid = (b // bb,)
+    kernel = functools.partial(_givens_kernel, n=n, reverse=reverse)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n // 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n), x.dtype),
+        interpret=True,
+    )(x, theta)

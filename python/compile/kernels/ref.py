@@ -1,0 +1,157 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness signal for Layer 1: every Pallas kernel in
+this package is checked against the functions here by ``python/tests``.
+They are also used directly by the model when ``USE_PALLAS=0`` (env var),
+which keeps a pure-XLA fallback path alive for debugging.
+
+Conventions
+-----------
+* Activations are row vectors: ``x`` has shape ``(B, n)`` and a mesh /
+  matrix ``W`` acts as ``y = x @ W.T`` (out-dim major).
+* A Givens mesh over ``n`` (even) channels follows the Clements layout:
+  ``n`` stages; even stages rotate pairs ``(0,1),(2,3),...``; odd stages
+  rotate pairs ``(1,2),(3,4),...`` (channels ``0`` and ``n-1`` pass
+  through). Angles are stored *padded* as ``(n, n//2)`` with the unused
+  last slot of odd stages fixed at ``0`` (see ``compile.mesh`` for the
+  flat<->padded scatter).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rotate_pairs(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """Apply independent 2x2 rotations to adjacent pairs of ``x``.
+
+    ``x``: (B, n) with n even, ``angles``: (n//2,).
+    Pair ``i`` covers channels ``(2i, 2i+1)`` and is rotated by
+    ``[[c, -s], [s, c]]``.
+    """
+    b, n = x.shape
+    xp = x.reshape(b, n // 2, 2)
+    c = jnp.cos(angles)[None, :]
+    s = jnp.sin(angles)[None, :]
+    x0 = c * xp[..., 0] - s * xp[..., 1]
+    x1 = s * xp[..., 0] + c * xp[..., 1]
+    return jnp.stack([x0, x1], axis=-1).reshape(b, n)
+
+
+def givens_stage(x: jnp.ndarray, angles: jnp.ndarray, parity: jnp.ndarray) -> jnp.ndarray:
+    """One Clements stage. ``parity`` 0: pairs (0,1),(2,3),...;
+    parity 1: pairs (1,2),(3,4),... via the roll trick (the padded last
+    angle of odd stages must be 0 so the wrapped pair (n-1, 0) is identity).
+    """
+    xr = jnp.where(parity > 0, jnp.roll(x, -1, axis=-1), x)
+    xr = rotate_pairs(xr, angles)
+    return jnp.where(parity > 0, jnp.roll(xr, 1, axis=-1), xr)
+
+
+def givens_ref(x: jnp.ndarray, theta: jnp.ndarray, reverse: bool = False) -> jnp.ndarray:
+    """Reference Clements/Givens mesh application.
+
+    ``x``: (B, n); ``theta``: padded angles (S, n//2) with S == n.
+    Returns ``x @ U.T`` where ``U = S_{n-1} ... S_1 S_0`` (stage 0 applied
+    first). ``reverse=True`` applies ``U^{-1} = U.T`` instead (reversed
+    stage order, negated angles).
+    """
+    s_count = theta.shape[0]
+    parities = jnp.arange(s_count) % 2
+    if reverse:
+        theta = -theta[::-1]
+        parities = parities[::-1]
+
+    def body(xc, sp):
+        ang, par = sp
+        return givens_stage(xc, ang, par), None
+
+    out, _ = jax.lax.scan(body, x, (theta, parities))
+    return out
+
+
+def mesh_unitary_ref(theta: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Materialize the mesh unitary ``U`` (n, n) from padded angles."""
+    eye = jnp.eye(n, dtype=theta.dtype)
+    # givens_ref treats rows as vectors: row_i -> U @ e_i laid out as
+    # (I @ U.T); transposing gives U.
+    return givens_ref(eye, theta).T
+
+
+def tt_dense_ref(cores: list) -> jnp.ndarray:
+    """Reconstruct the dense (M, N) matrix encoded by TT cores.
+
+    ``cores[k]``: (r_{k-1}, m_k, n_k, r_k), r_0 = r_L = 1.
+    ``W[(i_1..i_L),(j_1..j_L)] = G_1(i_1,j_1) @ ... @ G_L(i_L,j_L)``.
+    Row index is i_1-major, column index is j_1-major.
+    """
+    l = len(cores)
+    w = cores[0][0]  # (m_1, n_1, r_1)
+    for k in range(1, l):
+        w = jnp.tensordot(w, cores[k], axes=[[-1], [0]])
+        nd = w.ndim
+        # current order: m_1..m_k, n_1..n_k, m_{k+1}, n_{k+1}, r_{k+1}
+        m_dims = list(range(k))
+        n_dims = list(range(k, 2 * k))
+        perm = m_dims + [nd - 3] + n_dims + [nd - 2, nd - 1]
+        w = jnp.transpose(w, perm)
+    w = w[..., 0]  # r_L == 1
+    ms = w.shape[:l]
+    ns = w.shape[l:]
+    m = 1
+    for v in ms:
+        m *= int(v)
+    n = 1
+    for v in ns:
+        n *= int(v)
+    return w.reshape(m, n)
+
+
+def tt_matvec_ref(x: jnp.ndarray, cores: list) -> jnp.ndarray:
+    """Reference TT-matrix times batch-of-vectors: ``y = x @ W.T``."""
+    w = tt_dense_ref(cores)
+    return x @ w.T
+
+
+def tt_forward_ref(x: jnp.ndarray, cores: list) -> jnp.ndarray:
+    """Sequential-contraction TT forward (no dense reconstruction).
+
+    Mirrors the photonic tensor-core dataflow: one small GEMM per core,
+    left to right. Mathematically equals ``tt_matvec_ref`` (checked in
+    tests); this is the contraction schedule the Pallas ``tt_layer``
+    kernel implements.
+
+    Shapes: ``x`` (B, N=prod n_k)  ->  (B, M=prod m_k).
+    """
+    b = x.shape[0]
+    l = len(cores)
+    ns = [c.shape[2] for c in cores]
+    ms = [c.shape[1] for c in cores]
+    # t: (B, r_0=1, n_1, rest) where rest = n_2*...*n_L (n_2-major)
+    t = x.reshape(b, 1, ns[0], -1)
+    for k, g in enumerate(cores):
+        r_in, m_k, n_k, r_out = g.shape
+        rest = t.shape[-1]
+        # (B, r_in, n_k, rest) -> (B*rest, r_in*n_k)
+        t2 = jnp.moveaxis(t, -1, 1).reshape(b * rest, r_in * n_k)
+        gm = jnp.transpose(g, (0, 2, 1, 3)).reshape(r_in * n_k, m_k * r_out)
+        y = (t2 @ gm).reshape(b, rest, m_k, r_out)
+        if k + 1 < l:
+            n_next = ns[k + 1]
+            rest_next = rest // n_next
+            # rest is n_{k+1}-major: (n_{k+1}, rest_next)
+            y = y.reshape(b, n_next, rest_next, m_k, r_out)
+            # fold produced m_k into the tail of rest, expose n_{k+1};
+            # new rest layout: (rest_next, m_k) i.e. earlier cores' m's
+            # appended at the tail as they are produced.
+            y = jnp.transpose(y, (0, 4, 1, 2, 3))  # (B, r_out, n_next, rest', m_k)
+            t = y.reshape(b, r_out, n_next, rest_next * m_k)
+        else:
+            t = y  # (B, rest, m_L, 1); rest = (m_1, ..., m_{L-1}) m_1-major
+    out = t.reshape(b, -1)
+    m_total = 1
+    for v in ms:
+        m_total *= v
+    assert out.shape[1] == m_total
+    return out

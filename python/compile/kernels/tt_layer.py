@@ -1,0 +1,98 @@
+"""Pallas kernel: TT-core chain contraction (Layer 1 hot-spot).
+
+This is the photonic tensor core's compute: a TT-compressed matrix-vector
+multiply, executed as one small GEMM per TT-core. The paper's TONN
+realizes each core as an MZI mesh and cascades them in space (TONN-1) or
+time (TONN-2); numerically both compute the same contraction schedule,
+which is what this kernel implements.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): each per-core GEMM is a
+``(tile_b*rest, r_in*n_k) x (r_in*n_k, m_k*r_out)`` matmul — an MXU-shaped
+operation once the batch tile is chosen. The batch dimension is gridded
+via BlockSpec (HBM->VMEM schedule); the K dimension (r*n <= 64 for the
+paper's factorizations) stays VMEM-resident.
+
+``interpret=True``: see givens.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 512
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One batch-tile GEMM, accumulating in f32 on the MXU."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def tt_core_matmul(
+    a: jnp.ndarray, b: jnp.ndarray, block_rows: int = DEFAULT_BLOCK_ROWS
+) -> jnp.ndarray:
+    """Batch-tiled Pallas GEMM ``a @ b`` with ``a`` (R, K), ``b`` (K, C).
+
+    R is the (batch x rest) dimension of a TT contraction step; it is
+    tiled; K and C are core-sized (small) and stay resident.
+    """
+    r, k = a.shape
+    k2, c = b.shape
+    assert k == k2
+    br = min(block_rows, r)
+    # pad rows so the grid divides evenly
+    pad = (-r) % br
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad, k), a.dtype)], axis=0)
+    rp = a.shape[0]
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, c), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:r] if pad else out
+
+
+def tt_forward(x: jnp.ndarray, cores: list) -> jnp.ndarray:
+    """TT forward pass ``y = x @ W.T`` using the Pallas GEMM per core.
+
+    Identical contraction schedule to ``ref.tt_forward_ref`` (the oracle);
+    shapes: ``x`` (B, N=prod n_k) -> (B, M=prod m_k).
+    """
+    b = x.shape[0]
+    l = len(cores)
+    ns = [g.shape[2] for g in cores]
+    ms = [g.shape[1] for g in cores]
+    t = x.reshape(b, 1, ns[0], -1)
+    for k, g in enumerate(cores):
+        r_in, m_k, n_k, r_out = g.shape
+        rest = t.shape[-1]
+        t2 = jnp.moveaxis(t, -1, 1).reshape(b * rest, r_in * n_k)
+        gm = jnp.transpose(g, (0, 2, 1, 3)).reshape(r_in * n_k, m_k * r_out)
+        y = tt_core_matmul(t2, gm).reshape(b, rest, m_k, r_out)
+        if k + 1 < l:
+            n_next = ns[k + 1]
+            rest_next = rest // n_next
+            y = y.reshape(b, n_next, rest_next, m_k, r_out)
+            y = jnp.transpose(y, (0, 4, 1, 2, 3))
+            t = y.reshape(b, r_out, n_next, rest_next * m_k)
+        else:
+            t = y
+    out = t.reshape(b, -1)
+    m_total = 1
+    for v in ms:
+        m_total *= v
+    assert out.shape[1] == m_total
+    return out

@@ -1,0 +1,195 @@
+"""Phase-domain parametrization of photonic matrix blocks (Layer 2).
+
+Every programmable photonic block in this repo is one of:
+
+* a **Givens/Clements mesh** over ``n`` channels — ``n(n-1)/2`` MZI
+  rotation angles (the real-valued simplification of the 2-phase MZI;
+  see DESIGN.md §Substitutions);
+* an **SVD block** ``W = U(θ_U) · Σ · V(θ_V)^T`` (the paper's §2.1
+  parametrization) — two meshes plus ``min(M,N)`` singular amplitudes;
+* a **modulator row** — plain weights (MRR attenuator bank), used for the
+  final ``hidden -> 1`` readout, matching the paper's TONN parameter count.
+
+The *flat parameter vector* Φ concatenates all segments; its layout is
+shared with the rust coordinator through ``artifacts/manifest.json`` so
+the digital control system can apply per-kind hardware noise
+(Φ_eff = Ω(Γ⊙Φ) + Φ_b on angles, multiplicative drift elsewhere).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.givens import givens_apply
+from .kernels.tt_layer import tt_core_matmul
+
+# Pure-XLA fallback (debugging / differential testing): USE_PALLAS=0.
+USE_PALLAS = os.environ.get("USE_PALLAS", "1") != "0"
+
+
+def mesh_angle_count(n: int) -> int:
+    """Number of MZIs (= rotation angles) in a depth-n Clements mesh."""
+    assert n % 2 == 0 and n >= 2, f"mesh size must be even >= 2, got {n}"
+    return n * (n - 1) // 2
+
+
+def _scatter_indices(n: int) -> np.ndarray:
+    """Map flat angle index -> slot in the padded (n, n//2) stage table.
+
+    Even stages use all n/2 slots; odd stages use the first n/2 - 1 (the
+    last slot is the zero pad that makes the roll-trick pair (n-1, 0) an
+    identity).
+    """
+    m = n // 2
+    idx = []
+    for s in range(n):
+        used = m if s % 2 == 0 else m - 1
+        for j in range(used):
+            idx.append(s * m + j)
+    out = np.asarray(idx, dtype=np.int32)
+    assert out.shape[0] == mesh_angle_count(n)
+    return out
+
+
+def pad_angles(theta_flat: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Arrange a flat angle vector into the padded (n, n//2) stage table.
+
+    IMPORTANT: built from static slices + concat/stack, NOT
+    ``zeros().at[idx].set()`` — jax >= 0.8's HLO-text printer elides the
+    scatter's constant index array as ``{...}``, which the deployment XLA
+    (xla_extension 0.5.1 behind the rust ``xla`` crate) reads back as
+    zeros, landing every angle in the wrong slot (verified by
+    differential probes; see DESIGN.md §Gotchas). Slicing and
+    concatenation round-trip correctly.
+    """
+    m = n // 2
+    zero = jnp.zeros((1,), theta_flat.dtype)
+    rows = []
+    off = 0
+    for s in range(n):
+        used = m if s % 2 == 0 else m - 1
+        row = theta_flat[off:off + used]
+        off += used
+        if used < m:
+            row = jnp.concatenate([row, zero])
+        rows.append(row)
+    return jnp.stack(rows)
+
+
+def mesh_apply(x: jnp.ndarray, theta_flat: jnp.ndarray, n: int, reverse: bool = False) -> jnp.ndarray:
+    """Apply the mesh unitary to activation rows: ``x @ U.T``.
+
+    Handles flat->padded angle scatter and batch padding for the Pallas
+    kernel's tile constraint.
+    """
+    theta = pad_angles(theta_flat, n)
+    if not USE_PALLAS:
+        return ref.givens_ref(x, theta, reverse=reverse)
+    b = x.shape[0]
+    bb = min(256, b)
+    pad = (-b) % bb
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, n), x.dtype)], axis=0)
+    y = givens_apply(x, theta, reverse=reverse, block_b=bb)
+    return y[:b] if pad else y
+
+
+def mesh_unitary(theta_flat: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Materialize the (n, n) orthogonal matrix of a mesh."""
+    eye = jnp.eye(n, dtype=theta_flat.dtype)
+    return mesh_apply(eye, theta_flat, n).T
+
+
+def svd_matrix(theta_u: jnp.ndarray, sigma: jnp.ndarray, theta_v: jnp.ndarray, m: int, n: int) -> jnp.ndarray:
+    """Build ``W (m, n) = U[:, :k] · diag(sigma) · V[:, :k]^T``.
+
+    ``theta_u``: flat angles for the m-mesh, ``theta_v``: for the n-mesh,
+    ``sigma``: (min(m, n),) singular amplitudes.
+    """
+    k = min(m, n)
+    u = mesh_unitary(theta_u, m)
+    v = mesh_unitary(theta_v, n)
+    return (u[:, :k] * sigma[None, :]) @ v[:, :k].T
+
+
+def dense_apply(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """``y = x @ w.T`` through the Pallas GEMM (the activation hot path)."""
+    if not USE_PALLAS:
+        return x @ w.T
+    return tt_core_matmul(x, w.T)
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout bookkeeping (mirrored in rust::model).
+# ---------------------------------------------------------------------------
+
+class LayoutBuilder:
+    """Accumulates named parameter segments into one flat vector layout."""
+
+    def __init__(self):
+        self.segments = []
+        self.total = 0
+
+    def add(self, name: str, kind: str, length: int, init: dict) -> dict:
+        """kind: 'angles' | 'sigma' | 'weights'. Returns the segment."""
+        seg = {
+            "name": name,
+            "kind": kind,
+            "offset": self.total,
+            "len": int(length),
+            "init": init,
+        }
+        self.segments.append(seg)
+        self.total += int(length)
+        return seg
+
+    def add_mesh(self, name: str, n: int, init_scale: float = np.pi) -> dict:
+        return self.add(
+            name, "angles", mesh_angle_count(n),
+            {"dist": "uniform", "lo": -init_scale, "hi": init_scale},
+        )
+
+    def add_sigma(self, name: str, k: int, value: float) -> dict:
+        return self.add(name, "sigma", k, {"dist": "const", "val": float(value)})
+
+    def add_weights(self, name: str, length: int, std: float) -> dict:
+        return self.add(name, "weights", length, {"dist": "normal", "std": float(std)})
+
+    def add_svd_block(self, name: str, m: int, n: int, sigma0: float) -> tuple:
+        """A full SVD block; returns (seg_u, seg_s, seg_v)."""
+        su = self.add_mesh(f"{name}.theta_u", m)
+        ss = self.add_sigma(f"{name}.sigma", min(m, n), sigma0)
+        sv = self.add_mesh(f"{name}.theta_v", n)
+        return su, ss, sv
+
+
+def slice_seg(phi: jnp.ndarray, seg: dict) -> jnp.ndarray:
+    """Extract one segment from the flat parameter vector."""
+    return phi[seg["offset"]: seg["offset"] + seg["len"]]
+
+
+def init_vector(segments: list, rng: np.random.Generator) -> np.ndarray:
+    """Sample an initial flat parameter vector from the layout's init hints.
+
+    The rust coordinator implements the identical sampler (kind + init
+    hints travel in the manifest); this python version is used by tests
+    and the AOT smoke checks.
+    """
+    total = sum(s["len"] for s in segments)
+    out = np.zeros((total,), dtype=np.float32)
+    for s in segments:
+        sl = slice(s["offset"], s["offset"] + s["len"])
+        init = s["init"]
+        if init["dist"] == "uniform":
+            out[sl] = rng.uniform(init["lo"], init["hi"], size=s["len"])
+        elif init["dist"] == "const":
+            out[sl] = init["val"]
+        elif init["dist"] == "normal":
+            out[sl] = rng.normal(0.0, init["std"], size=s["len"])
+        else:  # pragma: no cover
+            raise ValueError(f"unknown init dist {init['dist']}")
+    return out

@@ -1,0 +1,158 @@
+"""Preset registry + entry-point assembly (Layer 2 top).
+
+A *preset* is a named (network x PDE x batch-shape x hyperparameter)
+bundle. ``aot.py`` lowers each preset's entry points to HLO text; the rust
+coordinator discovers them through ``artifacts/manifest.json`` and never
+re-traces anything.
+
+Entry points (all pure, all phase-vector-first):
+
+    forward(phi[d], x[Bf, in])           -> u[Bf]
+    loss(phi[d], xr[Br, in])             -> scalar     (BP-free FD loss)
+    loss_multi(phis[K, d], xr[Br, in])   -> [K]        (SPSA batch)
+    loss_stein(phi[d], xr[Br, in])       -> scalar     (Stein estimator)
+    grad(phi[d], xr[Br, in])             -> (scalar, [d])  (off-chip BP)
+    validate(phi[d], xv[V, in], uv[V])   -> scalar mse
+"""
+
+from __future__ import annotations
+
+from . import mesh, pinn
+from .networks import OnnMlp, TonnMlp
+from .pdes import PDES
+
+# Batch shapes shared by all presets (static in the artifacts).
+B_FWD = 128      # forward entry batch
+B_RES = 100      # collocation minibatch (paper §4.2)
+B_VAL = 1024     # validation batch
+K_MULTI = 11     # SPSA batch: base + N=10 perturbations (paper §4.2)
+
+# Default training hyperparameters (tuned on the small preset; the rust
+# coordinator reads them from the manifest and every one is overridable
+# on the CLI).
+HYPER_DEFAULT = {
+    "fd_h": 0.05,        # FD step; f32-safe (see DESIGN.md)
+    "stein_sigma": 0.05,
+    "stein_q": 20,
+    "spsa_mu": 0.02,     # SPSA sampling radius
+    "spsa_n": 10,        # perturbations per gradient estimate
+    "lr": 0.02,          # ZO-signSGD step size
+    "lr_decay": 0.3,     # multiplicative decay factor...
+    "lr_decay_every": 600,   # ...applied every this many epochs
+    "epochs": 1500,
+    "batch": B_RES,
+    "k_multi": K_MULTI,
+}
+
+
+def _make_net(cfg):
+    if cfg["kind"] == "onn":
+        return OnnMlp(cfg["in_dim"], cfg["hidden"], omega0=cfg.get("omega0", 6.0))
+    if cfg["kind"] == "tonn":
+        return TonnMlp(
+            cfg["in_dim"], cfg["factors_m"], cfg["factors_n"], cfg["ranks"],
+            omega0=cfg.get("omega0", 6.0),
+        )
+    raise ValueError(cfg["kind"])
+
+
+PRESETS = {
+    # -- default reproduction scale (CPU-tractable Table-1 runs) ---------
+    "tonn_small": {
+        "kind": "tonn", "pde": "hjb20", "in_dim": 21,
+        "factors_m": [4, 4, 4], "factors_n": [4, 4, 4], "ranks": [1, 2, 2, 1],
+        "omega0": 6.0,
+        "entries": ["forward", "loss", "loss_multi", "loss_stein", "grad", "validate"],
+    },
+    "onn_small": {
+        "kind": "onn", "pde": "hjb20", "in_dim": 21, "hidden": 64,
+        "omega0": 6.0,
+        "entries": ["forward", "loss", "loss_multi", "grad", "validate"],
+    },
+    # -- paper scale (n=1024; Table-2 census + runnable-with-patience) ---
+    "tonn_paper": {
+        "kind": "tonn", "pde": "hjb20", "in_dim": 21,
+        "factors_m": [4, 8, 4, 8], "factors_n": [8, 4, 8, 4],
+        "ranks": [1, 2, 1, 2, 1],
+        "omega0": 6.0,
+        "entries": ["forward", "loss", "loss_multi", "validate"],
+    },
+    "onn_paper": {
+        # forward/validate only: phase-domain BP/ZO training of the 1024
+        # dense mesh is impractical on the CPU testbed (DESIGN.md §Scale).
+        "kind": "onn", "pde": "hjb20", "in_dim": 21, "hidden": 1024,
+        "omega0": 6.0,
+        "entries": ["forward", "validate"],
+    },
+    # -- TT-rank ablation (A3): params vs ZO convergence ------------------
+    "tonn_rank1": {
+        "kind": "tonn", "pde": "hjb20", "in_dim": 21,
+        "factors_m": [4, 4, 4], "factors_n": [4, 4, 4], "ranks": [1, 1, 1, 1],
+        "omega0": 6.0,
+        "entries": ["forward", "loss", "loss_multi", "validate"],
+    },
+    "tonn_rank4": {
+        "kind": "tonn", "pde": "hjb20", "in_dim": 21,
+        "factors_m": [4, 4, 4], "factors_n": [4, 4, 4], "ranks": [1, 4, 4, 1],
+        "omega0": 6.0,
+        "entries": ["forward", "loss", "loss_multi", "validate"],
+    },
+    # -- extension problems ----------------------------------------------
+    "tonn_poisson": {
+        "kind": "tonn", "pde": "poisson2", "in_dim": 2,
+        "factors_m": [4, 4, 4], "factors_n": [4, 4, 4], "ranks": [1, 2, 2, 1],
+        "omega0": 6.0,
+        "entries": ["forward", "loss", "loss_multi", "grad", "validate"],
+    },
+    "tonn_heat": {
+        "kind": "tonn", "pde": "heat2", "in_dim": 3,
+        "factors_m": [4, 4, 4], "factors_n": [4, 4, 4], "ranks": [1, 2, 2, 1],
+        "omega0": 6.0,
+        "entries": ["forward", "loss", "loss_multi", "grad", "validate"],
+    },
+}
+
+# Preset groups selectable from aot.py / the Makefile.
+GROUPS = {
+    "small": ["tonn_small", "onn_small", "tonn_poisson", "tonn_heat",
+              "tonn_rank1", "tonn_rank4"],
+    "paper": ["tonn_paper", "onn_paper"],
+    "all": list(PRESETS.keys()),
+}
+
+
+def build_preset(name: str):
+    """Instantiate (net, pde, entry_fns, hyper) for a preset."""
+    cfg = PRESETS[name]
+    pde = PDES[cfg["pde"]]
+    assert pde.in_dim == cfg["in_dim"]
+    net = _make_net(cfg)
+    hyper = dict(HYPER_DEFAULT)
+    hyper.update(cfg.get("hyper", {}))
+
+    loss_fd = pinn.make_loss_fd(net, pde, hyper["fd_h"])
+    entries = {}
+    if "forward" in cfg["entries"]:
+        entries["forward"] = (pinn.make_u_fn(net, pde),
+                              [("phi", (net.param_dim,)), ("x", (B_FWD, pde.in_dim))])
+    if "loss" in cfg["entries"]:
+        entries["loss"] = (loss_fd,
+                           [("phi", (net.param_dim,)), ("xr", (B_RES, pde.in_dim))])
+    if "loss_multi" in cfg["entries"]:
+        entries["loss_multi"] = (
+            pinn.make_loss_multi(loss_fd, K_MULTI),
+            [("phis", (K_MULTI, net.param_dim)), ("xr", (B_RES, pde.in_dim))])
+    if "loss_stein" in cfg["entries"]:
+        entries["loss_stein"] = (
+            pinn.make_loss_stein(net, pde, hyper["stein_sigma"], hyper["stein_q"]),
+            [("phi", (net.param_dim,)), ("xr", (B_RES, pde.in_dim)),
+             ("z", (hyper["stein_q"], pde.in_dim))])
+    if "grad" in cfg["entries"]:
+        entries["grad"] = (
+            pinn.make_grad(pinn.make_loss_autodiff(net, pde)),
+            [("phi", (net.param_dim,)), ("xr", (B_RES, pde.in_dim))])
+    if "validate" in cfg["entries"]:
+        entries["validate"] = (
+            pinn.make_validate(net, pde),
+            [("phi", (net.param_dim,)), ("xv", (B_VAL, pde.in_dim)), ("uv", (B_VAL,))])
+    return net, pde, entries, hyper

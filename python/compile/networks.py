@@ -1,0 +1,189 @@
+"""Phase-domain ONN / TONN network definitions (Layer 2).
+
+Mirrors the paper's §4 baseline: a 3-layer MLP ``(D+1 x n, n x n, n x 1)``
+with sine activation, either dense ("ONN": each weight matrix is one big
+SVD/Clements block) or TT-compressed ("TONN": the two square layers are
+TT-factorized, one small SVD mesh per TT-core — the photonic tensor core).
+
+The input (D spatial dims + time) is zero-padded to the layer fan-in,
+matching the paper's mapping of a 21-dim input onto a 1024-channel
+photonic mesh.
+
+Everything is parametrized by ONE flat vector Φ (see ``mesh.LayoutBuilder``)
+— Φ is the on-chip trainable state the rust coordinator perturbs (SPSA) and
+programs through the hardware-noise path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import mesh
+from .kernels.tt_layer import tt_forward
+from .kernels import ref
+
+
+def _prod(xs):
+    p = 1
+    for v in xs:
+        p *= int(v)
+    return p
+
+
+class OnnMlp:
+    """Dense phase-domain 3-layer MLP: two SVD blocks + modulator readout."""
+
+    def __init__(self, in_dim: int, hidden: int, omega0: float = 6.0,
+                 sigma0_first: float = None, sigma0_hidden: float = None):
+        assert hidden >= in_dim, "input is zero-padded UP to the fan-in"
+        self.in_dim = in_dim
+        self.hidden = hidden
+        self.omega0 = omega0
+        # SIREN-flavoured gains: orthogonal U,V make the singular amplitudes
+        # the sole scale knob; \sqrt(6/n) mirrors the SIREN fan-in rule.
+        s1 = sigma0_first if sigma0_first is not None else float(np.sqrt(6.0 / hidden))
+        s2 = sigma0_hidden if sigma0_hidden is not None else float(np.sqrt(6.0 / hidden))
+        lb = mesh.LayoutBuilder()
+        self.l1 = lb.add_svd_block("l1", hidden, hidden, s1)
+        self.b1 = lb.add_weights("l1.bias", hidden, 0.1)
+        self.l2 = lb.add_svd_block("l2", hidden, hidden, s2)
+        self.b2 = lb.add_weights("l2.bias", hidden, 0.1)
+        self.w3 = lb.add_weights("l3.w", hidden, float(1.0 / np.sqrt(hidden)))
+        self.b3 = lb.add_weights("l3.bias", 1, 0.0)
+        self.layout = lb
+        self.param_dim = lb.total
+
+    def arch_info(self) -> dict:
+        return {
+            "type": "onn",
+            "in_dim": self.in_dim,
+            "hidden": self.hidden,
+            "omega0": self.omega0,
+            # mesh channel counts, used by rust photonics::perf MZI census
+            "mesh_sizes": [self.hidden] * 4,
+            "modulator_weights": self.hidden + 1 + 2 * self.hidden,
+        }
+
+    def _svd_w(self, phi, block, m, n):
+        su, ss, sv = block
+        return mesh.svd_matrix(
+            mesh.slice_seg(phi, su), mesh.slice_seg(phi, ss),
+            mesh.slice_seg(phi, sv), m, n,
+        )
+
+    def apply(self, phi: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        """``x`` (B, in_dim) -> scalar outputs (B,).
+
+        The two mesh unitaries per layer are built ONCE per Φ and reused
+        for the whole batch (see DESIGN.md §Perf — this is what makes the
+        42-inference FD fan-out cheap).
+        """
+        b = x.shape[0]
+        h = self.hidden
+        xp = jnp.concatenate(
+            [x, jnp.zeros((b, h - self.in_dim), x.dtype)], axis=1)
+        w1 = self._svd_w(phi, self.l1, h, h)
+        w2 = self._svd_w(phi, self.l2, h, h)
+        z = mesh.dense_apply(xp, w1) + mesh.slice_seg(phi, self.b1)[None, :]
+        a1 = jnp.sin(self.omega0 * z)
+        z2 = mesh.dense_apply(a1, w2) + mesh.slice_seg(phi, self.b2)[None, :]
+        a2 = jnp.sin(z2)
+        w3 = mesh.slice_seg(phi, self.w3)
+        b3 = mesh.slice_seg(phi, self.b3)
+        return a2 @ w3 + b3[0]
+
+
+class TonnMlp:
+    """TT-compressed phase-domain 3-layer MLP.
+
+    The two square ``hidden x hidden`` layers are TT matrices; TT-core k
+    is the unfolding ``(r_{k-1} n_k) x (m_k r_out)`` realized as a small
+    SVD mesh (the photonic tensor core of TONN-1/TONN-2). The readout is a
+    modulator row, so the parameter census matches the paper's Table 1
+    (512 TT parameters + 1024 readout for the paper-scale preset — our
+    phase-domain census is reported alongside in the manifest).
+    """
+
+    def __init__(self, in_dim: int, factors_m, factors_n, ranks,
+                 omega0: float = 6.0, sigma0: float = None):
+        assert _prod(factors_m) == _prod(factors_n), "square TT layers only"
+        self.in_dim = in_dim
+        self.factors_m = [int(v) for v in factors_m]
+        self.factors_n = [int(v) for v in factors_n]
+        self.ranks = [int(v) for v in ranks]
+        self.hidden = _prod(factors_m)
+        self.omega0 = omega0
+        l = len(factors_m)
+        assert len(ranks) == l + 1 and ranks[0] == 1 and ranks[-1] == 1
+        # per-core gain: the dense TT product multiplies L core gains, so
+        # take the L-th root of the target layer gain.
+        target = sigma0 if sigma0 is not None else float(np.sqrt(6.0 / self.hidden))
+        core_gain = float(target ** (1.0 / l))
+        lb = mesh.LayoutBuilder()
+        self.layers = []
+        self.core_mesh_sizes = []
+        for li in range(2):
+            cores = []
+            for k in range(l):
+                a = ranks[k] * self.factors_n[k]      # mesh rows  (r_in * n_k)
+                b = self.factors_m[k] * ranks[k + 1]  # mesh cols  (m_k * r_out)
+                blk = lb.add_svd_block(f"tt{li}.core{k}", a, b, core_gain)
+                cores.append((blk, a, b, ranks[k], self.factors_m[k],
+                              self.factors_n[k], ranks[k + 1]))
+                if li == 0:
+                    self.core_mesh_sizes.append((a, b))
+            bias = lb.add_weights(f"tt{li}.bias", self.hidden, 0.1)
+            self.layers.append((cores, bias))
+        self.w3 = lb.add_weights("l3.w", self.hidden, float(1.0 / np.sqrt(self.hidden)))
+        self.b3 = lb.add_weights("l3.bias", 1, 0.0)
+        self.layout = lb
+        self.param_dim = lb.total
+        # paper-style parameter census (TT entries + readout, no phases)
+        self.tt_entry_count = 2 * sum(
+            ranks[k] * self.factors_m[k] * self.factors_n[k] * ranks[k + 1]
+            for k in range(l)
+        ) + self.hidden
+
+    def arch_info(self) -> dict:
+        return {
+            "type": "tonn",
+            "in_dim": self.in_dim,
+            "hidden": self.hidden,
+            "omega0": self.omega0,
+            "factors_m": self.factors_m,
+            "factors_n": self.factors_n,
+            "ranks": self.ranks,
+            "core_mesh_sizes": [list(s) for s in self.core_mesh_sizes],
+            "tt_entry_count": self.tt_entry_count,
+        }
+
+    def _cores(self, phi: jnp.ndarray, layer_idx: int) -> list:
+        """Materialize TT-core tensors (r_in, m, n, r_out) from mesh phases."""
+        cores, _ = self.layers[layer_idx]
+        out = []
+        for blk, a, b, r_in, m_k, n_k, r_out in cores:
+            su, ss, sv = blk
+            gm = mesh.svd_matrix(
+                mesh.slice_seg(phi, su), mesh.slice_seg(phi, ss),
+                mesh.slice_seg(phi, sv), a, b,
+            )  # (r_in*n_k, m_k*r_out) — the GEMM operand of tt_forward
+            g = gm.reshape(r_in, n_k, m_k, r_out).transpose(0, 2, 1, 3)
+            out.append(g)
+        return out
+
+    def apply(self, phi: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        b = x.shape[0]
+        h = self.hidden
+        xp = jnp.concatenate(
+            [x, jnp.zeros((b, h - self.in_dim), x.dtype)], axis=1)
+        tt_fwd = tt_forward if mesh.USE_PALLAS else ref.tt_forward_ref
+        act = xp
+        for li in range(2):
+            cores = self._cores(phi, li)
+            _, bias = self.layers[li]
+            z = tt_fwd(act, cores) + mesh.slice_seg(phi, bias)[None, :]
+            act = jnp.sin(self.omega0 * z) if li == 0 else jnp.sin(z)
+        w3 = mesh.slice_seg(phi, self.w3)
+        b3 = mesh.slice_seg(phi, self.b3)
+        return act @ w3 + b3[0]

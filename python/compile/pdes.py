@@ -1,0 +1,246 @@
+"""PDE problem definitions (Layer 2).
+
+Each PDE bundles:
+
+* the **transform** that hard-codes the terminal/boundary condition
+  (paper §4: u = (1−t)·f + ‖x‖₁), so the condition loss L_0 ≡ 0;
+* the **FD stencil** the BP-free loss applies to the *raw network* f;
+* ``assemble_derivs`` — the PDE residual assembled from derivative
+  *estimates of f* plus the transform's **analytic** derivatives.
+
+Why FD-on-f rather than FD-on-u: the transform contains ‖x‖₁, whose
+second difference explodes (O(1/h)) whenever a coordinate lies within h
+of a kink (≥1 coordinate does for ~64% of U[0,1]^20 samples at h=0.05).
+The transform is *digital post-processing* — the photonic chip computes
+f — so its derivatives are known in closed form and only f needs
+estimating. Inference counts are unchanged (42 per collocation point for
+the 20-dim HJB, the paper's §4.2 census).
+
+Exact solutions are provided for validation (Table 1's MSE metric).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def stencil_jnp(dim: int, in_dim: int, h: float, time_idx: int = None) -> jnp.ndarray:
+    """FD stencil built from iota arithmetic — deliberately NO dense
+    constant array: jax >= 0.8's ``as_hlo_text()`` elides large dense
+    constants as ``{...}``, which the deployment XLA 0.5.1 text parser
+    silently reads back as zeros (this nulled every FD derivative until
+    the golden tests caught it — DESIGN.md §Gotchas)."""
+    s = 1 + 2 * dim + (1 if time_idx is not None else 0)
+    r = jnp.arange(s)[:, None]
+    c = jnp.arange(in_dim)[None, :]
+    is_spatial = (r >= 1) & (r <= 2 * dim)
+    target = (r - 1) // 2
+    sign = jnp.where(r % 2 == 1, jnp.float32(1.0), jnp.float32(-1.0))
+    p = jnp.where(is_spatial & (c == target), sign * jnp.float32(h), jnp.float32(0.0))
+    if time_idx is not None:
+        p = p + jnp.where((r == s - 1) & (c == time_idx), jnp.float32(h), jnp.float32(0.0))
+    return p.astype(jnp.float32)
+
+
+def _central_stencil(dim: int, in_dim: int, h: float, time_idx: int = None) -> np.ndarray:
+    """Rows: base; ±h per spatial dim; optionally +h in time (forward)."""
+    n = 1 + 2 * dim + (1 if time_idx is not None else 0)
+    p = np.zeros((n, in_dim), dtype=np.float32)
+    for i in range(dim):
+        p[1 + 2 * i, i] = h
+        p[2 + 2 * i, i] = -h
+    if time_idx is not None:
+        p[-1, time_idx] = h
+    return p
+
+
+def fd_derivs(f: jnp.ndarray, dim: int, h: float, has_time: bool):
+    """Derivative estimates of f from stencil evaluations.
+
+    ``f``: (B, n_stencil) ordered as the stencil. Returns
+    (f0 (B,), df (B, dim[+1]) first derivatives, lap (B,) spatial
+    Laplacian). When ``has_time`` the last df column is the forward-
+    difference time derivative.
+    """
+    f0 = f[:, 0]
+    fp = f[:, 1:1 + 2 * dim:2]
+    fm = f[:, 2:2 + 2 * dim:2]
+    dfx = (fp - fm) / (2.0 * h)
+    lap = jnp.sum(fp - 2.0 * f0[:, None] + fm, axis=1) / (h * h)
+    if has_time:
+        dft = (f[:, -1] - f0) / h
+        df = jnp.concatenate([dfx, dft[:, None]], axis=1)
+    else:
+        df = dfx
+    return f0, df, lap
+
+
+class Hjb20:
+    """The paper's 20-dim HJB problem (Eq. 7). Input layout (x_1..x_20, t).
+
+        u_t + Δu − 0.05‖∇_x u‖² = −2,  u(x,1) = ‖x‖₁
+        exact: u = ‖x‖₁ + 1 − t
+    """
+
+    name = "hjb20"
+    dim = 20
+    in_dim = 21
+    has_time = True
+    n_stencil = 2 * dim + 2  # 42 — the paper's inference census
+
+    @staticmethod
+    def exact(xt: jnp.ndarray) -> jnp.ndarray:
+        x, t = xt[:, :20], xt[:, 20]
+        return jnp.sum(jnp.abs(x), axis=1) + 1.0 - t
+
+    @staticmethod
+    def transform(f: jnp.ndarray, xt: jnp.ndarray) -> jnp.ndarray:
+        """u = (1−t)·f + ‖x‖₁ — exact terminal condition u(x,1)=‖x‖₁."""
+        x, t = xt[:, :20], xt[:, 20]
+        return (1.0 - t) * f + jnp.sum(jnp.abs(x), axis=1)
+
+    @staticmethod
+    def stencil(h: float) -> np.ndarray:
+        return _central_stencil(Hjb20.dim, Hjb20.in_dim, h, time_idx=20)
+
+    @staticmethod
+    def stencil_traced(h: float) -> jnp.ndarray:
+        """Stencil built in-graph (no dense constant; see stencil_jnp)."""
+        return stencil_jnp(Hjb20.dim, Hjb20.in_dim, h, time_idx=20)
+
+    @staticmethod
+    def assemble_derivs(f0, df, lap_f, xr):
+        """Residual from estimates of f; transform derivatives analytic:
+        u_t = −f + (1−t)f_t;  ∇_x u = (1−t)∇f + sign(x);  Δu = (1−t)Δf.
+        """
+        x, t = xr[:, :20], xr[:, 20]
+        omt = 1.0 - t
+        u_t = -f0 + omt * df[:, 20]
+        gx = omt[:, None] * df[:, :20] + jnp.sign(x)
+        lap_u = omt * lap_f
+        return u_t + lap_u - 0.05 * jnp.sum(gx * gx, axis=1) + 2.0
+
+    @staticmethod
+    def residual_autodiff(grad21: jnp.ndarray, lap: jnp.ndarray) -> jnp.ndarray:
+        """Residual from exact autodiff derivatives *of u* (off-chip BP)."""
+        gx = grad21[:, :20]
+        ut = grad21[:, 20]
+        return ut + lap - 0.05 * jnp.sum(gx * gx, axis=1) + 2.0
+
+    @staticmethod
+    def sample_domain(rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.uniform(0.0, 1.0, size=(n, Hjb20.in_dim)).astype(np.float32)
+
+
+class Poisson2:
+    """−Δu = f_rhs on [0,1]², u|∂Ω = 0; exact u* = sin(πx)sin(πy)."""
+
+    name = "poisson2"
+    dim = 2
+    in_dim = 2
+    has_time = False
+    n_stencil = 2 * dim + 1
+
+    @staticmethod
+    def exact(x: jnp.ndarray) -> jnp.ndarray:
+        return jnp.sin(jnp.pi * x[:, 0]) * jnp.sin(jnp.pi * x[:, 1])
+
+    @staticmethod
+    def _g(x):
+        return x[:, 0] * (1.0 - x[:, 0]) * x[:, 1] * (1.0 - x[:, 1])
+
+    @staticmethod
+    def transform(f: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+        """u = x(1−x)y(1−y)·f — exact zero Dirichlet boundary."""
+        return Poisson2._g(x) * f
+
+    @staticmethod
+    def rhs(x: jnp.ndarray) -> jnp.ndarray:
+        return 2.0 * (jnp.pi ** 2) * jnp.sin(jnp.pi * x[:, 0]) * jnp.sin(jnp.pi * x[:, 1])
+
+    @staticmethod
+    def stencil(h: float) -> np.ndarray:
+        return _central_stencil(2, 2, h)
+
+    @staticmethod
+    def stencil_traced(h: float) -> jnp.ndarray:
+        return stencil_jnp(Poisson2.dim, Poisson2.in_dim, h)
+
+    @staticmethod
+    def assemble_derivs(f0, df, lap_f, xr):
+        """Δ(g·f) = Δg·f + 2∇g·∇f + g·Δf, all of g analytic."""
+        x, y = xr[:, 0], xr[:, 1]
+        gx_ = x * (1.0 - x)
+        gy_ = y * (1.0 - y)
+        g = gx_ * gy_
+        dg = jnp.stack([(1.0 - 2.0 * x) * gy_, gx_ * (1.0 - 2.0 * y)], axis=1)
+        lap_g = -2.0 * gy_ - 2.0 * gx_
+        lap_u = lap_g * f0 + 2.0 * jnp.sum(dg * df, axis=1) + g * lap_f
+        return lap_u + Poisson2.rhs(xr)
+
+    @staticmethod
+    def residual_autodiff(grad2, lap, x):
+        return lap + Poisson2.rhs(x)
+
+    @staticmethod
+    def sample_domain(rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.uniform(0.0, 1.0, size=(n, 2)).astype(np.float32)
+
+
+class Heat2:
+    """u_t = α Δu on [0,1]², u(x,0) = sin(πx)sin(πy), zero boundary.
+
+    Exact: u = exp(−2π²αt)·sin(πx)sin(πy). Input layout (x, y, t).
+    """
+
+    name = "heat2"
+    dim = 2
+    in_dim = 3
+    has_time = True
+    alpha = 0.1
+    n_stencil = 2 * dim + 2
+
+    @staticmethod
+    def exact(xt: jnp.ndarray) -> jnp.ndarray:
+        decay = jnp.exp(-2.0 * jnp.pi ** 2 * Heat2.alpha * xt[:, 2])
+        return decay * jnp.sin(jnp.pi * xt[:, 0]) * jnp.sin(jnp.pi * xt[:, 1])
+
+    @staticmethod
+    def _ic(xt):
+        return jnp.sin(jnp.pi * xt[:, 0]) * jnp.sin(jnp.pi * xt[:, 1])
+
+    @staticmethod
+    def transform(f: jnp.ndarray, xt: jnp.ndarray) -> jnp.ndarray:
+        """u = t·g(x,y)·f + ic(x,y): exact initial condition at t = 0."""
+        g = xt[:, 0] * (1.0 - xt[:, 0]) * xt[:, 1] * (1.0 - xt[:, 1])
+        return xt[:, 2] * g * f + Heat2._ic(xt)
+
+    @staticmethod
+    def stencil(h: float) -> np.ndarray:
+        return _central_stencil(2, 3, h, time_idx=2)
+
+    @staticmethod
+    def stencil_traced(h: float) -> jnp.ndarray:
+        return stencil_jnp(Heat2.dim, Heat2.in_dim, h, time_idx=2)
+
+    @staticmethod
+    def assemble_derivs(f0, df, lap_f, xr):
+        x, y, t = xr[:, 0], xr[:, 1], xr[:, 2]
+        gx_ = x * (1.0 - x)
+        gy_ = y * (1.0 - y)
+        g = gx_ * gy_
+        dg = jnp.stack([(1.0 - 2.0 * x) * gy_, gx_ * (1.0 - 2.0 * y)], axis=1)
+        lap_g = -2.0 * gy_ - 2.0 * gx_
+        ic = Heat2._ic(xr)
+        u_t = g * f0 + t * g * df[:, 2]
+        lap_u = t * (lap_g * f0 + 2.0 * jnp.sum(dg * df[:, :2], axis=1)
+                     + g * lap_f) - 2.0 * (jnp.pi ** 2) * ic
+        return u_t - Heat2.alpha * lap_u
+
+    @staticmethod
+    def sample_domain(rng: np.random.Generator, n: int) -> np.ndarray:
+        return rng.uniform(0.0, 1.0, size=(n, 3)).astype(np.float32)
+
+
+PDES = {p.name: p for p in (Hjb20, Poisson2, Heat2)}

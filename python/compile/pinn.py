@@ -1,0 +1,175 @@
+"""BP-free PINN losses (Layer 2) — the paper's §3.3.
+
+On-chip, the photonic accelerator can only run *forward passes*. Both
+derivative estimation (w.r.t. PDE inputs) and gradient estimation
+(w.r.t. phases) must therefore be built from inferences:
+
+* ``make_loss_fd``    — finite-difference stencil loss: each collocation
+  point is expanded to ``n_stencil`` perturbed inputs (42 for the 20-dim
+  HJB, the paper's §4.2 census), ONE batched forward of the raw network
+  f, residual assembled from FD estimates of f plus the analytic
+  transform derivatives (see ``pdes``). MZIs are NOT re-programmed inside
+  a loss evaluation (Φ is constant across the stencil) — mirrored here by
+  building the mesh unitaries once per Φ.
+* ``make_loss_stein`` — the alternative Stein-style estimator (paper §3.3
+  method 2): Gaussian-smoothed derivatives from antithetic samples.
+* ``make_loss_autodiff`` + ``make_grad`` — the *off-chip* baseline: exact
+  autodiff derivatives of u and BP gradients (what a GPU pre-training run
+  computes). Never used on the simulated chip; lowered into its own
+  artifact for the Table-1 off-chip rows.
+* ``make_loss_multi`` — K phase settings -> K losses in one executable
+  (the SPSA batch Φ, Φ+μξ_1, ..., Φ+μξ_N). Sequential ``lax.map`` matches
+  the chip's sequential reprogramming semantics while amortizing host
+  dispatch (DESIGN.md §Perf L3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .pdes import fd_derivs
+
+
+def make_u_fn(net, pde):
+    """Transformed solution u(Φ, xt): network + hard constraint."""
+
+    def u_fn(phi, xt):
+        f = net.apply(phi, xt)
+        return pde.transform(f, xt)
+
+    return u_fn
+
+
+def make_loss_fd(net, pde, h: float):
+    """BP-free loss: FD stencil on f + analytic transform assembly."""
+
+    def loss(phi, xr):
+        # built INSIDE the traced function: a closed-over concrete array
+        # would be embedded as a dense constant, which jax's HLO-text
+        # printer elides ("{...}") and the deployment XLA reads as zeros
+        # (see pdes.stencil_jnp).
+        stencil = pde.stencil_traced(h)  # (S, in_dim)
+        b = xr.shape[0]
+        s = stencil.shape[0]
+        x_all = (xr[:, None, :] + stencil[None, :, :]).reshape(b * s, -1)
+        f = net.apply(phi, x_all).reshape(b, s)
+        f0, df, lap_f = fd_derivs(f, pde.dim, h, pde.has_time)
+        r = pde.assemble_derivs(f0, df, lap_f, xr)
+        return jnp.mean(r * r)
+
+    return loss
+
+
+def make_loss_stein(net, pde, sigma: float, q: int):
+    """Gaussian-Stein derivative estimator loss (antithetic + control
+    variate): ``2q+1`` isotropic samples instead of ``2·dim+2`` axis
+    perturbations. Same assembly as FD — only the estimates of f differ.
+
+    ``z`` (q, in_dim) is a runtime INPUT (the digital control system
+    draws the smoothing directions), not a baked constant — both because
+    that matches the hardware story and because a dense (q, in_dim)
+    constant would be elided from the HLO text (see pdes.stencil_jnp).
+    """
+    d_spatial = pde.dim
+
+    def loss(phi, xr, z):
+        z_sq = jnp.sum(z[:, :d_spatial] ** 2, axis=1)  # (q,)
+        b = xr.shape[0]
+        xp = xr[:, None, :] + sigma * z[None, :, :]
+        xm = xr[:, None, :] - sigma * z[None, :, :]
+        x_all = jnp.concatenate(
+            [xr[:, None, :], xp, xm], axis=1).reshape(b * (2 * q + 1), -1)
+        f = net.apply(phi, x_all).reshape(b, 2 * q + 1)
+        f0, fp, fm = f[:, 0], f[:, 1:1 + q], f[:, 1 + q:]
+        # ∇f ≈ E[(f+ − f−)/(2σ) z]
+        df = jnp.einsum("bq,qd->bd", (fp - fm) / (2.0 * sigma), z) / q
+        # Δ_x f ≈ E[(f+ + f− − 2f0)(‖z_x‖² − D)] / (2σ²)
+        lap_f = jnp.mean(
+            (fp + fm - 2.0 * f0[:, None]) * (z_sq[None, :] - d_spatial),
+            axis=1,
+        ) / (2.0 * sigma * sigma)
+        r = pde.assemble_derivs(f0, df, lap_f, xr)
+        return jnp.mean(r * r)
+
+    return loss
+
+
+def make_loss_multi(loss_fn, k: int):
+    """K phase settings -> K losses (the SPSA batch) in one executable."""
+
+    def loss_multi(phis, xr):
+        return jax.lax.map(lambda p: loss_fn(p, xr), phis)
+
+    return loss_multi
+
+
+def make_validate(net, pde):
+    """Validation MSE vs the exact solution (paper Table 1 metric)."""
+    u_fn = make_u_fn(net, pde)
+
+    def validate(phi, xv, uv):
+        d = u_fn(phi, xv) - uv
+        return jnp.mean(d * d)
+
+    return validate
+
+
+def make_loss_autodiff(net, pde):
+    """Exact-derivative loss (off-chip BP baseline).
+
+    ∇u and u_t via one reverse-mode gradient of u; the spatial Laplacian
+    via ``dim`` forward-over-reverse Hessian-vector products.
+    """
+    u_fn = make_u_fn(net, pde)
+    d_spatial = pde.dim
+    in_dim = pde.in_dim
+
+    def _basis():
+        # built in-graph (iota comparison), never as a concrete closed-over
+        # array: dense constants are elided from the HLO text and read back
+        # as zeros by the deployment XLA (see pdes.stencil_jnp). The same
+        # mask replaces jnp.trace (diagonal extraction lowers to a gather,
+        # which XLA 0.5.1 miscompiles — see mesh.pad_angles).
+        r = jnp.arange(d_spatial)[:, None]
+        c = jnp.arange(in_dim)[None, :]
+        return jnp.where(r == c, jnp.float32(1.0), jnp.float32(0.0))
+
+    def u_single(phi, xt):
+        return u_fn(phi, xt[None, :])[0]
+
+    du = jax.grad(u_single, argnums=1)
+
+    def lap_single(phi, xt):
+        basis = _basis()
+
+        def hvp(v):
+            return jax.jvp(lambda z: du(phi, z), (xt,), (v,))[1]
+
+        hcols = jax.vmap(hvp)(basis)  # (d_spatial, in_dim)
+        return jnp.sum(hcols * basis)
+
+    def loss(phi, xr):
+        grads = jax.vmap(du, in_axes=(None, 0))(phi, xr)
+        laps = jax.vmap(lap_single, in_axes=(None, 0))(phi, xr)
+        if pde.name == "hjb20":
+            r = pde.residual_autodiff(grads, laps)
+        elif pde.name == "poisson2":
+            r = pde.residual_autodiff(grads, laps, xr)
+        elif pde.name == "heat2":
+            r = grads[:, 2] - pde.alpha * laps
+        else:  # pragma: no cover
+            raise ValueError(pde.name)
+        return jnp.mean(r * r)
+
+    return loss
+
+
+def make_grad(loss_fn):
+    """(loss, dL/dΦ) — the off-chip BP training step's compute."""
+
+    def grad_fn(phi, xr):
+        return jax.value_and_grad(loss_fn)(phi, xr)
+
+    return grad_fn

@@ -1,0 +1,73 @@
+"""Golden pipeline + the XLA-version-skew regression guards.
+
+These encode the two deployment-XLA (0.5.1) pitfalls as *source-level*
+invariants: no elided dense constants, no scatter/gather in the lowered
+training-path HLO (see DESIGN.md §Gotchas).
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax._src.lib import xla_client as xc
+
+from compile import golden, mesh, model
+from compile.pdes import PDES, stencil_jnp
+
+
+def hlo_text_of(fn, *specs):
+    lowered = jax.jit(fn).lower(*specs)
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(lowered.compiler_ir("stablehlo")),
+        use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def test_stencil_jnp_matches_np_stencils():
+    for pde, args in [
+        (PDES["hjb20"], (20, 21, 0.05, 20)),
+        (PDES["poisson2"], (2, 2, 0.05, None)),
+        (PDES["heat2"], (2, 3, 0.05, 2)),
+    ]:
+        a = pde.stencil(0.05)
+        b = np.asarray(stencil_jnp(*args))
+        np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+@pytest.mark.parametrize("entry", ["loss", "loss_multi", "grad", "validate"])
+def test_training_hlo_has_no_elided_constants(entry):
+    """The contract with xla_extension 0.5.1: jax's HLO-text printer
+    elides any large constant as ``constant({...})``, which the old text
+    parser materializes as ZEROS (DESIGN.md §Gotchas). No lowered entry
+    may contain one. (Gathers with *iota-computed* indices are fine —
+    the ones that broke were constant-index arrays, i.e. the same
+    elision bug.)"""
+    prev = mesh.USE_PALLAS
+    mesh.USE_PALLAS = False
+    try:
+        net, pde, entries, hyper = model.build_preset("tonn_small")
+        if entry not in entries:
+            pytest.skip(f"no {entry}")
+        fn, arg_shapes = entries[entry]
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in arg_shapes]
+        text = hlo_text_of(fn, *specs)
+    finally:
+        mesh.USE_PALLAS = prev
+    assert "constant({...})" not in text, f"elided dense constant in {entry}!"
+
+
+def test_golden_builder_is_deterministic():
+    a = golden.build_golden("tonn_poisson", seed=1)
+    b = golden.build_golden("tonn_poisson", seed=1)
+    assert a["loss"] == b["loss"]
+    assert a["phi"] == b["phi"]
+    assert a["val"] == b["val"]
+
+
+def test_golden_builder_has_all_sections():
+    g = golden.build_golden("tonn_poisson", seed=2)
+    for key in ("phi", "x", "u", "xr", "loss", "loss_multi", "grad_loss",
+                "grad_norm", "xv", "uv", "val"):
+        assert key in g, key
+    assert len(g["phi"]) == model.build_preset("tonn_poisson")[0].param_dim
+    assert len(g["loss_multi"]) == model.K_MULTI

@@ -1,0 +1,190 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (the CORE signal).
+
+Hypothesis sweeps shapes/dtypes/seeds; assert_allclose against ref.py.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.givens import givens_apply
+from compile.kernels.tt_layer import tt_core_matmul, tt_forward
+
+
+def padded_angles(rng, n):
+    theta = rng.normal(size=(n, n // 2)).astype(np.float32)
+    theta[1::2, -1] = 0.0  # odd-stage pad slot must be identity
+    return jnp.asarray(theta)
+
+
+# ---------------------------------------------------------------------------
+# rotate_pairs / givens_stage primitives
+# ---------------------------------------------------------------------------
+
+def test_rotate_pairs_identity():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 8)).astype(np.float32))
+    y = ref.rotate_pairs(x, jnp.zeros((4,), jnp.float32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+
+
+def test_rotate_pairs_quarter_turn():
+    # θ=π/2 maps (x0, x1) -> (-x1, x0)
+    x = jnp.asarray([[1.0, 2.0]], dtype=jnp.float32)
+    y = ref.rotate_pairs(x, jnp.asarray([np.pi / 2], dtype=jnp.float32))
+    np.testing.assert_allclose(np.asarray(y), [[-2.0, 1.0]], atol=1e-6)
+
+
+def test_rotate_pairs_norm_preserving():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(5, 16)).astype(np.float32))
+    a = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+    y = ref.rotate_pairs(x, a)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=1),
+        np.linalg.norm(np.asarray(x), axis=1), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Givens mesh kernel vs reference
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(
+    n=st.sampled_from([4, 8, 16, 32]),
+    b=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    reverse=st.booleans(),
+)
+def test_givens_kernel_matches_ref(n, b, seed, reverse):
+    rng = np.random.default_rng(seed)
+    theta = padded_angles(rng, n)
+    x = jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+    y_ref = ref.givens_ref(x, theta, reverse=reverse)
+    y_pl = givens_apply(x, theta, reverse=reverse, block_b=b)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_givens_kernel_batch_tiling():
+    """Gridded batch (multiple tiles) must equal the single-tile result."""
+    rng = np.random.default_rng(3)
+    n = 8
+    theta = padded_angles(rng, n)
+    x = jnp.asarray(rng.normal(size=(12, n)).astype(np.float32))
+    y1 = givens_apply(x, theta, block_b=12)
+    y2 = givens_apply(x, theta, block_b=4)  # 3 grid steps
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-6)
+
+
+def test_givens_orthogonality():
+    rng = np.random.default_rng(4)
+    for n in (4, 16, 64):
+        theta = padded_angles(rng, n)
+        u = ref.mesh_unitary_ref(theta, n)
+        np.testing.assert_allclose(
+            np.asarray(u @ u.T), np.eye(n), atol=1e-4)
+
+
+def test_givens_reverse_is_inverse():
+    rng = np.random.default_rng(5)
+    n = 16
+    theta = padded_angles(rng, n)
+    x = jnp.asarray(rng.normal(size=(6, n)).astype(np.float32))
+    y = givens_apply(x, theta, block_b=6)
+    back = givens_apply(y, theta, reverse=True, block_b=6)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-5)
+
+
+def test_givens_zero_angles_identity():
+    n = 8
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, n)).astype(np.float32))
+    y = givens_apply(x, jnp.zeros((n, n // 2), jnp.float32), block_b=2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# TT kernels vs reference
+# ---------------------------------------------------------------------------
+
+tt_cases = st.sampled_from([
+    # (factors_m, factors_n, ranks)
+    ([4, 4], [4, 4], [1, 2, 1]),
+    ([4, 4, 4], [4, 4, 4], [1, 2, 2, 1]),
+    ([2, 4, 8], [4, 4, 4], [1, 3, 2, 1]),
+    ([4, 8, 4, 8], [8, 4, 8, 4], [1, 2, 1, 2, 1]),  # the paper's factorization
+    ([2, 2], [8, 2], [1, 4, 1]),
+])
+
+
+def make_cores(rng, fm, fn, ranks):
+    return [
+        jnp.asarray(rng.normal(size=(ranks[k], fm[k], fn[k], ranks[k + 1]))
+                    .astype(np.float32) / np.sqrt(fn[k]))
+        for k in range(len(fm))
+    ]
+
+
+@settings(max_examples=10, deadline=None)
+@given(case=tt_cases, b=st.integers(min_value=1, max_value=7),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_tt_forward_ref_matches_dense(case, b, seed):
+    fm, fn, ranks = case
+    rng = np.random.default_rng(seed)
+    cores = make_cores(rng, fm, fn, ranks)
+    x = jnp.asarray(rng.normal(size=(b, int(np.prod(fn)))).astype(np.float32))
+    y_dense = ref.tt_matvec_ref(x, cores)
+    y_seq = ref.tt_forward_ref(x, cores)
+    np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(case=tt_cases, b=st.integers(min_value=1, max_value=7),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_tt_pallas_matches_ref(case, b, seed):
+    fm, fn, ranks = case
+    rng = np.random.default_rng(seed)
+    cores = make_cores(rng, fm, fn, ranks)
+    x = jnp.asarray(rng.normal(size=(b, int(np.prod(fn)))).astype(np.float32))
+    y_ref = ref.tt_forward_ref(x, cores)
+    y_pl = tt_forward(x, cores)
+    np.testing.assert_allclose(np.asarray(y_pl), np.asarray(y_ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_tt_core_matmul_padding():
+    """Row counts that don't divide the tile must be padded and truncated."""
+    rng = np.random.default_rng(9)
+    a = jnp.asarray(rng.normal(size=(513, 8)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(8, 16)).astype(np.float32))
+    y = tt_core_matmul(a, b, block_rows=512)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(a) @ np.asarray(b),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_tt_identity_cores():
+    """Rank-1 cores with identity slices realize a permutation-free identity."""
+    fm = [4, 4]
+    cores = [
+        jnp.eye(4, dtype=jnp.float32).reshape(1, 4, 4, 1),
+        jnp.eye(4, dtype=jnp.float32).reshape(1, 4, 4, 1),
+    ]
+    # W = kron(I4, I4) = I16
+    w = ref.tt_dense_ref(cores)
+    np.testing.assert_allclose(np.asarray(w), np.eye(16), atol=1e-6)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, 16)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(tt_forward(x, cores)),
+                               np.asarray(x), atol=1e-5)
+
+
+def test_tt_dense_kron_structure():
+    """Rank-1 TT == Kronecker product (i_1-major convention check)."""
+    rng = np.random.default_rng(11)
+    a = rng.normal(size=(3, 2)).astype(np.float32)
+    b = rng.normal(size=(2, 4)).astype(np.float32)
+    cores = [jnp.asarray(a).reshape(1, 3, 2, 1), jnp.asarray(b).reshape(1, 2, 4, 1)]
+    w = ref.tt_dense_ref(cores)
+    np.testing.assert_allclose(np.asarray(w), np.kron(a, b), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,119 @@
+"""L2 mesh parametrization: layouts, scatter, SVD blocks, init sampling."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import mesh
+
+
+def test_mesh_angle_count():
+    assert mesh.mesh_angle_count(2) == 1
+    assert mesh.mesh_angle_count(4) == 6
+    assert mesh.mesh_angle_count(64) == 2016
+    assert mesh.mesh_angle_count(1024) == 523776  # paper-scale unitary
+
+
+def test_mesh_angle_count_rejects_odd():
+    with pytest.raises(AssertionError):
+        mesh.mesh_angle_count(5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([4, 8, 16, 32, 64]))
+def test_scatter_indices_cover_exactly_used_slots(n):
+    idx = mesh._scatter_indices(n)
+    assert len(idx) == mesh.mesh_angle_count(n)
+    assert len(set(idx.tolist())) == len(idx)  # injective
+    m = n // 2
+    for flat in idx:
+        s, j = divmod(int(flat), m)
+        if s % 2 == 1:
+            assert j < m - 1  # odd stages never touch the pad slot
+
+
+def test_pad_angles_roundtrip():
+    n = 8
+    k = mesh.mesh_angle_count(n)
+    theta = jnp.arange(1, k + 1, dtype=jnp.float32)
+    padded = mesh.pad_angles(theta, n)
+    assert padded.shape == (n, n // 2)
+    # odd-stage last slot is zero
+    np.testing.assert_allclose(np.asarray(padded)[1::2, -1], 0.0)
+    # all original values present
+    vals = sorted(v for v in np.asarray(padded).ravel().tolist() if v != 0)
+    assert vals == list(range(1, k + 1))
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.sampled_from([4, 8, 16]),
+       seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_mesh_unitary_is_orthogonal(n, seed):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.uniform(-np.pi, np.pi,
+                        size=(mesh.mesh_angle_count(n),)).astype(np.float32))
+    u = mesh.mesh_unitary(theta, n)
+    np.testing.assert_allclose(np.asarray(u @ u.T), np.eye(n), atol=1e-4)
+
+
+def test_mesh_apply_batch_padding():
+    """Batch sizes not divisible by the pallas tile are padded internally."""
+    rng = np.random.default_rng(0)
+    n = 8
+    theta = jnp.asarray(rng.uniform(-1, 1, size=(mesh.mesh_angle_count(n),))
+                        .astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(300, n)).astype(np.float32))  # 300 % 256 != 0
+    y = mesh.mesh_apply(x, theta, n)
+    u = mesh.mesh_unitary(theta, n)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ u.T),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_svd_matrix_singular_values():
+    """svd_matrix realizes exactly the programmed singular amplitudes."""
+    rng = np.random.default_rng(1)
+    m, n = 8, 16
+    tu = jnp.asarray(rng.uniform(-np.pi, np.pi, size=(mesh.mesh_angle_count(m),)).astype(np.float32))
+    tv = jnp.asarray(rng.uniform(-np.pi, np.pi, size=(mesh.mesh_angle_count(n),)).astype(np.float32))
+    s = jnp.asarray(np.linspace(0.5, 2.0, m).astype(np.float32))
+    w = mesh.svd_matrix(tu, s, tv, m, n)
+    assert w.shape == (m, n)
+    sv = np.linalg.svd(np.asarray(w), compute_uv=False)
+    np.testing.assert_allclose(sorted(sv), sorted(np.asarray(s)), atol=1e-4)
+
+
+def test_layout_builder_contiguous():
+    lb = mesh.LayoutBuilder()
+    lb.add_mesh("a", 8)
+    lb.add_sigma("s", 4, 0.5)
+    lb.add_weights("w", 10, 0.1)
+    offs = [s["offset"] for s in lb.segments]
+    lens = [s["len"] for s in lb.segments]
+    assert offs == [0, 28, 32]
+    assert lb.total == 42
+    for i in range(1, len(offs)):
+        assert offs[i] == offs[i - 1] + lens[i - 1]
+
+
+def test_init_vector_respects_hints():
+    lb = mesh.LayoutBuilder()
+    lb.add_mesh("a", 16)                      # uniform(-pi, pi)
+    lb.add_sigma("s", 8, 0.25)                # const
+    lb.add_weights("w", 1000, 0.1)            # normal(0, 0.1)
+    v = mesh.init_vector(lb.segments, np.random.default_rng(0))
+    a = v[:mesh.mesh_angle_count(16)]
+    assert np.all(np.abs(a) <= np.pi)
+    s = v[lb.segments[1]["offset"]: lb.segments[1]["offset"] + 8]
+    np.testing.assert_allclose(s, 0.25)
+    w = v[lb.segments[2]["offset"]:]
+    assert abs(float(w.std()) - 0.1) < 0.02
+
+
+def test_slice_seg():
+    lb = mesh.LayoutBuilder()
+    s1 = lb.add_weights("w1", 3, 0.1)
+    s2 = lb.add_weights("w2", 2, 0.1)
+    phi = jnp.asarray([1.0, 2.0, 3.0, 4.0, 5.0], dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(mesh.slice_seg(phi, s1)), [1, 2, 3])
+    np.testing.assert_allclose(np.asarray(mesh.slice_seg(phi, s2)), [4, 5])

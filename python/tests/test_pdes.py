@@ -1,0 +1,217 @@
+"""PDE definitions: exact solutions, transforms, stencils, assembly."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.pdes import Hjb20, Poisson2, Heat2, fd_derivs, PDES
+
+
+def test_registry():
+    assert set(PDES) == {"hjb20", "poisson2", "heat2"}
+
+
+# ---------------------------------------------------------------------------
+# Exact solutions satisfy their PDEs (autodiff check)
+# ---------------------------------------------------------------------------
+
+def test_hjb_exact_satisfies_pde():
+    """u = ‖x‖₁ + 1 − t: u_t = −1, Δu = 0, ‖∇u‖² = 20 ->
+    −1 + 0 − 0.05·20 = −2. ✓"""
+    rng = np.random.default_rng(0)
+    xt = jnp.asarray(rng.uniform(0.1, 0.9, size=(50, 21)).astype(np.float32))
+
+    def u(z):
+        return jnp.sum(jnp.abs(z[:20])) + 1.0 - z[20]
+
+    g = jax.vmap(jax.grad(u))(xt)
+    # residual with Δu = 0 away from kinks
+    r = g[:, 20] + 0.0 - 0.05 * jnp.sum(g[:, :20] ** 2, axis=1) + 2.0
+    np.testing.assert_allclose(np.asarray(r), 0.0, atol=1e-5)
+
+
+def test_poisson_exact_satisfies_pde():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(0.05, 0.95, size=(50, 2)).astype(np.float32))
+
+    def u(z):
+        return jnp.sin(jnp.pi * z[0]) * jnp.sin(jnp.pi * z[1])
+
+    def lap(z):
+        h = jax.hessian(u)(z)
+        return h[0, 0] + h[1, 1]
+
+    r = jax.vmap(lap)(x) + Poisson2.rhs(x)
+    np.testing.assert_allclose(np.asarray(r), 0.0, atol=1e-3)
+
+
+def test_heat_exact_satisfies_pde():
+    rng = np.random.default_rng(2)
+    xt = jnp.asarray(rng.uniform(0.05, 0.95, size=(50, 3)).astype(np.float32))
+
+    def u(z):
+        return (jnp.exp(-2.0 * jnp.pi ** 2 * Heat2.alpha * z[2])
+                * jnp.sin(jnp.pi * z[0]) * jnp.sin(jnp.pi * z[1]))
+
+    def res(z):
+        g = jax.grad(u)(z)
+        h = jax.hessian(u)(z)
+        return g[2] - Heat2.alpha * (h[0, 0] + h[1, 1])
+
+    np.testing.assert_allclose(np.asarray(jax.vmap(res)(xt)), 0.0, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Transforms hard-satisfy their conditions
+# ---------------------------------------------------------------------------
+
+def test_hjb_transform_terminal_condition():
+    rng = np.random.default_rng(3)
+    x = rng.uniform(size=(20, 21)).astype(np.float32)
+    x[:, 20] = 1.0  # t = 1
+    xt = jnp.asarray(x)
+    f = jnp.asarray(rng.normal(size=(20,)).astype(np.float32))
+    u = Hjb20.transform(f, xt)
+    np.testing.assert_allclose(
+        np.asarray(u), np.abs(x[:, :20]).sum(axis=1), rtol=1e-6)
+
+
+def test_hjb_transform_exact_when_f_is_one():
+    """f ≡ 1 gives the exact solution — the learning target."""
+    rng = np.random.default_rng(4)
+    xt = jnp.asarray(rng.uniform(size=(30, 21)).astype(np.float32))
+    u = Hjb20.transform(jnp.ones((30,), jnp.float32), xt)
+    np.testing.assert_allclose(np.asarray(u), np.asarray(Hjb20.exact(xt)),
+                               rtol=1e-6)
+
+
+def test_poisson_transform_boundary():
+    for col, val in ((0, 0.0), (0, 1.0), (1, 0.0), (1, 1.0)):
+        x = np.random.default_rng(5).uniform(size=(10, 2)).astype(np.float32)
+        x[:, col] = val
+        u = Poisson2.transform(jnp.ones((10,), jnp.float32), jnp.asarray(x))
+        np.testing.assert_allclose(np.asarray(u), 0.0, atol=1e-7)
+
+
+def test_heat_transform_initial_condition():
+    x = np.random.default_rng(6).uniform(size=(10, 3)).astype(np.float32)
+    x[:, 2] = 0.0
+    xt = jnp.asarray(x)
+    u = Heat2.transform(jnp.full((10,), 3.33, jnp.float32), xt)
+    np.testing.assert_allclose(
+        np.asarray(u),
+        np.sin(np.pi * x[:, 0]) * np.sin(np.pi * x[:, 1]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Stencils + fd_derivs
+# ---------------------------------------------------------------------------
+
+def test_stencil_shapes_and_census():
+    assert Hjb20.stencil(0.05).shape == (42, 21)   # the paper's 42
+    assert Poisson2.stencil(0.05).shape == (5, 2)
+    assert Heat2.stencil(0.05).shape == (6, 3)
+
+
+def test_stencil_rows():
+    h = 0.1
+    p = Hjb20.stencil(h)
+    assert np.all(p[0] == 0)
+    np.testing.assert_allclose(p[1], np.eye(21, dtype=np.float32)[0] * h)
+    np.testing.assert_allclose(p[2], -np.eye(21, dtype=np.float32)[0] * h)
+    np.testing.assert_allclose(p[-1], np.eye(21, dtype=np.float32)[20] * h)
+
+
+def test_fd_derivs_on_quadratic():
+    """FD estimates are exact (to roundoff) on quadratics."""
+    h = 0.05
+    dim = 3
+    # f(x, t) = sum(a_i x_i^2) + b t with analytic derivatives
+    a = np.asarray([1.0, -2.0, 0.5], dtype=np.float32)
+    b_coef = 0.7
+    stencil = np.zeros((2 * dim + 2, dim + 1), dtype=np.float32)
+    for i in range(dim):
+        stencil[1 + 2 * i, i] = h
+        stencil[2 + 2 * i, i] = -h
+    stencil[-1, dim] = h
+    x0 = np.asarray([[0.3, 0.4, 0.5, 0.2]], dtype=np.float32)
+    pts = x0[:, None, :] + stencil[None]
+    f = (np.sum(a * pts[..., :dim] ** 2, axis=-1) + b_coef * pts[..., dim])
+    f0, df, lap = fd_derivs(jnp.asarray(f), dim, h, True)
+    np.testing.assert_allclose(np.asarray(df)[0, :dim], 2 * a * x0[0, :dim],
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(df[0, dim]), b_coef, rtol=1e-3)
+    np.testing.assert_allclose(float(lap[0]), 2 * float(a.sum()),
+                               rtol=1e-2, atol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# assemble_derivs: residual -> 0 at the exact solution
+# ---------------------------------------------------------------------------
+
+def test_hjb_assembly_zero_residual_at_exact_f():
+    """With f ≡ 1 (exact), all f-derivative estimates are 0 and the
+    assembled residual must vanish identically."""
+    rng = np.random.default_rng(7)
+    xr = jnp.asarray(rng.uniform(0.1, 0.9, size=(40, 21)).astype(np.float32))
+    z = jnp.zeros((40,), jnp.float32)
+    f0 = jnp.ones((40,), jnp.float32)
+    df = jnp.zeros((40, 21), jnp.float32)
+    r = Hjb20.assemble_derivs(f0, df, z, xr)
+    np.testing.assert_allclose(np.asarray(r), 0.0, atol=1e-5)
+
+
+def test_poisson_assembly_matches_autodiff():
+    """Assembled residual with *exact* f-derivatives == autodiff residual
+    of u = g·f for a smooth test f."""
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.uniform(0.1, 0.9, size=(25, 2)).astype(np.float32))
+
+    def f_fn(z):
+        return jnp.sin(z[0] + 2.0 * z[1])
+
+    def u_fn(z):
+        g = z[0] * (1 - z[0]) * z[1] * (1 - z[1])
+        return g * f_fn(z)
+
+    f0 = jax.vmap(f_fn)(x)
+    df = jax.vmap(jax.grad(f_fn))(x)
+    lap_f = jax.vmap(lambda z: jnp.trace(jax.hessian(f_fn)(z)))(x)
+    r_asm = Poisson2.assemble_derivs(f0, df, lap_f, x)
+    lap_u = jax.vmap(lambda z: jnp.trace(jax.hessian(u_fn)(z)))(x)
+    r_ad = lap_u + Poisson2.rhs(x)
+    np.testing.assert_allclose(np.asarray(r_asm), np.asarray(r_ad),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_hjb_assembly_matches_autodiff():
+    rng = np.random.default_rng(9)
+    xt = jnp.asarray(rng.uniform(0.1, 0.9, size=(25, 21)).astype(np.float32))
+
+    def f_fn(z):
+        return jnp.sin(jnp.sum(z[:5])) * 0.3 + 1.0
+
+    def u_fn(z):
+        return (1 - z[20]) * f_fn(z) + jnp.sum(jnp.abs(z[:20]))
+
+    f0 = jax.vmap(f_fn)(xt)
+    df = jax.vmap(jax.grad(f_fn))(xt)
+    lap_f = jax.vmap(
+        lambda z: jnp.trace(jax.hessian(f_fn)(z)[:20, :20]))(xt)
+    r_asm = Hjb20.assemble_derivs(f0, df, lap_f, xt)
+
+    g = jax.vmap(jax.grad(u_fn))(xt)
+    lap_u = jax.vmap(lambda z: jnp.trace(jax.hessian(u_fn)(z)[:20, :20]))(xt)
+    r_ad = Hjb20.residual_autodiff(g, lap_u)
+    np.testing.assert_allclose(np.asarray(r_asm), np.asarray(r_ad),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sample_domain_bounds():
+    rng = np.random.default_rng(10)
+    for pde in (Hjb20, Poisson2, Heat2):
+        s = pde.sample_domain(rng, 100)
+        assert s.shape == (100, pde.in_dim)
+        assert s.dtype == np.float32
+        assert np.all(s >= 0.0) and np.all(s <= 1.0)

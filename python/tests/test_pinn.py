@@ -1,0 +1,152 @@
+"""PINN loss machinery: FD vs autodiff, Stein, multi-loss, validation."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import mesh, pinn, model
+from compile.networks import TonnMlp
+from compile.pdes import Hjb20, Poisson2
+
+
+@pytest.fixture(autouse=True)
+def no_pallas():
+    """Loss-path tests run the jnp path (what the loss artifacts lower)."""
+    prev = mesh.USE_PALLAS
+    mesh.USE_PALLAS = False
+    yield
+    mesh.USE_PALLAS = prev
+
+
+@pytest.fixture(scope="module")
+def tonn():
+    net = TonnMlp(21, [4, 4, 4], [4, 4, 4], [1, 2, 2, 1])
+    phi = jnp.asarray(mesh.init_vector(net.layout.segments,
+                                       np.random.default_rng(0)))
+    return net, phi
+
+
+def test_fd_loss_close_to_autodiff(tonn):
+    """The BP-free FD loss must approximate the exact-derivative loss."""
+    net, phi = tonn
+    rng = np.random.default_rng(1)
+    xr = jnp.asarray(rng.uniform(0.1, 0.9, size=(64, 21)).astype(np.float32))
+    l_fd = pinn.make_loss_fd(net, Hjb20, h=0.05)(phi, xr)
+    l_ad = pinn.make_loss_autodiff(net, Hjb20)(phi, xr)
+    assert abs(float(l_fd) - float(l_ad)) / (abs(float(l_ad)) + 1e-9) < 0.15, \
+        (float(l_fd), float(l_ad))
+
+
+def test_fd_loss_h_convergence(tonn):
+    """FD loss converges towards the autodiff loss as h shrinks
+    (until f32 roundoff; we stay in the truncation-dominated regime)."""
+    net, phi = tonn
+    rng = np.random.default_rng(2)
+    xr = jnp.asarray(rng.uniform(0.1, 0.9, size=(64, 21)).astype(np.float32))
+    l_ad = float(pinn.make_loss_autodiff(net, Hjb20)(phi, xr))
+    errs = [abs(float(pinn.make_loss_fd(net, Hjb20, h)(phi, xr)) - l_ad)
+            for h in (0.2, 0.1, 0.05)]
+    assert errs[2] < errs[0], errs
+
+
+def test_loss_zero_at_exact_solution():
+    """A network that outputs exactly f=1 solves the HJB — loss must be ~0."""
+
+    class ConstNet:
+        param_dim = 1
+
+        def apply(self, phi, x):
+            return jnp.ones((x.shape[0],), jnp.float32) * phi[0]
+
+    net = ConstNet()
+    phi = jnp.asarray([1.0], dtype=jnp.float32)
+    rng = np.random.default_rng(3)
+    xr = jnp.asarray(rng.uniform(size=(100, 21)).astype(np.float32))
+    l = pinn.make_loss_fd(net, Hjb20, 0.05)(phi, xr)
+    assert float(l) < 1e-8, float(l)
+
+
+def test_stein_loss_tracks_fd(tonn):
+    """Stein and FD estimate the same residual; with many samples they
+    should land in the same ballpark (it's a noisier estimator)."""
+    net, phi = tonn
+    rng = np.random.default_rng(4)
+    xr = jnp.asarray(rng.uniform(0.1, 0.9, size=(64, 21)).astype(np.float32))
+    l_fd = float(pinn.make_loss_fd(net, Hjb20, 0.05)(phi, xr))
+    z = jnp.asarray(np.random.default_rng(7).normal(size=(64, 21)).astype(np.float32))
+    l_st = float(pinn.make_loss_stein(net, Hjb20, sigma=0.05, q=64)(phi, xr, z))
+    assert l_st > 0 and np.isfinite(l_st)
+    assert 0.2 < l_st / l_fd < 5.0, (l_st, l_fd)
+
+
+def test_loss_multi_matches_single(tonn):
+    net, phi = tonn
+    rng = np.random.default_rng(5)
+    xr = jnp.asarray(rng.uniform(size=(32, 21)).astype(np.float32))
+    loss = pinn.make_loss_fd(net, Hjb20, 0.05)
+    lm = pinn.make_loss_multi(loss, 3)
+    phis = jnp.stack([phi, phi * 1.01, phi * 0.99])
+    ls = lm(phis, xr)
+    singles = [float(loss(p, xr)) for p in phis]
+    # f32 + different fusion order under lax.map: ~1e-4 relative slack
+    np.testing.assert_allclose(np.asarray(ls), singles, rtol=3e-4)
+
+
+def test_validate_zero_on_exact(tonn):
+    net, phi = tonn
+    rng = np.random.default_rng(6)
+    xv = jnp.asarray(rng.uniform(size=(100, 21)).astype(np.float32))
+    uv = Hjb20.exact(xv)
+    v = pinn.make_validate(net, Hjb20)
+    # not zero for a random net...
+    assert float(v(phi, xv, uv)) > 1e-6
+    # ...but exactly the MSE definition:
+    u_fn = pinn.make_u_fn(net, Hjb20)
+    expect = float(jnp.mean((u_fn(phi, xv) - uv) ** 2))
+    np.testing.assert_allclose(float(v(phi, xv, uv)), expect, rtol=1e-6)
+
+
+def test_grad_is_correct_fd_check(tonn):
+    """BP gradient vs central-difference of the loss along a random dir."""
+    net, phi = tonn
+    rng = np.random.default_rng(7)
+    xr = jnp.asarray(rng.uniform(0.1, 0.9, size=(16, 21)).astype(np.float32))
+    loss = pinn.make_loss_autodiff(net, Hjb20)
+    gfn = pinn.make_grad(loss)
+    l0, g = gfn(phi, xr)
+    v = jnp.asarray(rng.normal(size=g.shape).astype(np.float32))
+    v = v / jnp.linalg.norm(v)
+    eps = 1e-2
+    lp = float(loss(phi + eps * v, xr))
+    lm = float(loss(phi - eps * v, xr))
+    dd_fd = (lp - lm) / (2 * eps)
+    dd_ad = float(jnp.dot(g, v))
+    assert abs(dd_fd - dd_ad) < 0.1 * (abs(dd_ad) + 1e-2), (dd_fd, dd_ad)
+
+
+def test_poisson_fd_loss_runs():
+    net = TonnMlp(2, [4, 4, 4], [4, 4, 4], [1, 2, 2, 1])
+    phi = jnp.asarray(mesh.init_vector(net.layout.segments,
+                                       np.random.default_rng(8)))
+    rng = np.random.default_rng(9)
+    xr = jnp.asarray(rng.uniform(size=(50, 2)).astype(np.float32))
+    l = pinn.make_loss_fd(net, Poisson2, 0.05)(phi, xr)
+    assert np.isfinite(float(l)) and float(l) > 0
+
+
+def test_spsa_direction_agrees_with_gradient(tonn):
+    """SPSA estimate (the paper's Eq. 5) correlates with the true BP
+    gradient — the property the whole on-chip trainer rests on."""
+    net, phi = tonn
+    rng = np.random.default_rng(10)
+    xr = jnp.asarray(rng.uniform(0.1, 0.9, size=(32, 21)).astype(np.float32))
+    loss = pinn.make_loss_fd(net, Hjb20, 0.05)
+    _, g = pinn.make_grad(pinn.make_loss_autodiff(net, Hjb20))(phi, xr)
+    mu, n = 0.02, 64
+    xi = jnp.asarray(rng.normal(size=(n, net.param_dim)).astype(np.float32))
+    l0 = loss(phi, xr)
+    ls = jnp.asarray([loss(phi + mu * xi[i], xr) for i in range(n)])
+    ghat = jnp.mean((ls - l0)[:, None] / mu * xi, axis=0)
+    cos = float(jnp.dot(ghat, g) / (jnp.linalg.norm(ghat) * jnp.linalg.norm(g)))
+    assert cos > 0.3, cos

@@ -1,0 +1,49 @@
+//! Bench A4: BP-free derivative estimator — finite differences vs the
+//! Stein (Gaussian-smoothing) estimator (paper §3.3 lists both).
+//!
+//!     cargo bench --bench ablation_deriv
+
+mod common;
+
+use photon_pinn::coordinator::trainer::{LossKind, OnChipTrainer, TrainConfig};
+use photon_pinn::util::bench::Table;
+use photon_pinn::util::stats::sci;
+
+fn main() {
+    let rt = common::runtime();
+    let epochs = common::epochs(400);
+    let pm = rt.manifest.preset("tonn_small").unwrap();
+    let stein_q = pm
+        .entries
+        .get("loss_stein")
+        .map(|e| e.inputs[2].1[0])
+        .unwrap_or(0);
+    let mut t = Table::new(
+        "A4 — derivative estimator ablation (tonn_small)",
+        &["estimator", "inferences/loss-eval", "final val", "best val", "wall s"],
+    );
+    for (kind, label, cost) in [
+        (LossKind::Fd, "finite difference", pm.pde.n_stencil()),
+        (LossKind::Stein, "Stein (antithetic)", 2 * stein_q + 1),
+    ] {
+        let mut cfg = TrainConfig::from_manifest(&rt, "tonn_small").unwrap();
+        cfg.epochs = epochs;
+        cfg.loss_kind = kind;
+        cfg.validate_every = 50;
+        let res = OnChipTrainer::new(&rt, cfg).unwrap().train().unwrap();
+        t.row(&[
+            label.into(),
+            cost.to_string(),
+            sci(res.final_val as f64),
+            sci(res.metrics.best_val().unwrap_or(f32::NAN) as f64),
+            format!("{:.0}", res.metrics.wall_seconds),
+        ]);
+    }
+    t.print();
+    println!(
+        "\npaper §3.3: both estimators are viable BP-free loss evaluations; \
+         FD costs 2D+2 = {} inferences, Stein costs 2q+1 = {} here",
+        pm.pde.n_stencil(),
+        2 * stein_q + 1
+    );
+}

@@ -1,0 +1,58 @@
+//! Bench A3: TT-rank sweep — trainable parameter count vs ZO-training
+//! quality. The paper's variance argument (§3.3): "the tensor-compressed
+//! format can dramatically reduce the gradient estimation variance and
+//! improve the convergence of the ZO training framework" — so *smaller*
+//! ranks should train better under SPSA until expressivity runs out.
+//!
+//!     cargo bench --bench ablation_rank
+
+mod common;
+
+use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
+use photon_pinn::util::bench::Table;
+use photon_pinn::util::stats::sci;
+
+fn main() {
+    let rt = common::runtime();
+    let epochs = common::epochs(600);
+    let mut t = Table::new(
+        "A3 — TT-rank ablation (20-dim HJB, ZO on-chip, noisy chip)",
+        &["preset", "ranks", "Φ dim", "final val", "best val"],
+    );
+    let mut csv = String::from("preset,param_dim,final,best\n");
+    for (preset, ranks) in [
+        ("tonn_rank1", "[1,1,1,1]"),
+        ("tonn_small", "[1,2,2,1]"),
+        ("tonn_rank4", "[1,4,4,1]"),
+        ("onn_small", "dense"),
+    ] {
+        if rt.manifest.preset(preset).is_err() {
+            eprintln!("skipping {preset} (not in manifest)");
+            continue;
+        }
+        let mut cfg = TrainConfig::from_manifest(&rt, preset).unwrap();
+        cfg.epochs = epochs;
+        cfg.validate_every = 50;
+        let d = rt.manifest.preset(preset).unwrap().layout.param_dim;
+        let t0 = std::time::Instant::now();
+        let res = OnChipTrainer::new(&rt, cfg).unwrap().train().unwrap();
+        eprintln!("  {preset} done in {:.0}s", t0.elapsed().as_secs_f64());
+        t.row(&[
+            preset.into(),
+            ranks.into(),
+            d.to_string(),
+            sci(res.final_val as f64),
+            sci(res.metrics.best_val().unwrap_or(f32::NAN) as f64),
+        ]);
+        csv.push_str(&format!(
+            "{preset},{d},{},{}\n",
+            res.final_val,
+            res.metrics.best_val().unwrap_or(f32::NAN)
+        ));
+    }
+    t.print();
+    let path = common::out_dir().join("ablation_rank.csv");
+    std::fs::write(&path, csv).unwrap();
+    println!("\nshape check: low-rank TONN should beat the dense ONN under equal-epoch ZO training");
+    println!("csv: {}", path.display());
+}

@@ -1,0 +1,38 @@
+//! Shared plumbing for the paper-table benches (harness = false).
+
+use std::path::PathBuf;
+
+use photon_pinn::runtime::Runtime;
+
+/// Load the runtime or exit gracefully when artifacts are missing (so
+/// `cargo bench` in a fresh checkout fails with a clear message).
+#[allow(dead_code)]
+pub fn runtime() -> Runtime {
+    let dir = photon_pinn::resolve_artifacts_dir(None);
+    match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot load artifacts from {}: {e:#}\nrun `make artifacts` first", dir.display());
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Epoch budget knob: full paper-shaped runs by default, fast smoke runs
+/// with PHOTON_BENCH_FAST=1 (used by CI-style checks).
+#[allow(dead_code)]
+pub fn epochs(full: usize) -> usize {
+    if std::env::var("PHOTON_BENCH_FAST").as_deref() == Ok("1") {
+        (full / 10).max(20)
+    } else {
+        full
+    }
+}
+
+/// Output directory for CSV artifacts of figure benches.
+#[allow(dead_code)]
+pub fn out_dir() -> PathBuf {
+    let d = PathBuf::from("bench_out");
+    std::fs::create_dir_all(&d).ok();
+    d
+}

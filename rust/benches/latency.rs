@@ -1,0 +1,96 @@
+//! Bench P1: simulator hot-path latency — what the rust coordinator pays
+//! per artifact dispatch (NOT photonic latency; that is Table 2's model).
+//! Used by the §Perf optimization loop to find the bottleneck layer.
+//!
+//!     cargo bench --bench latency
+
+mod common;
+
+use photon_pinn::optim::Spsa;
+use photon_pinn::pde::Sampler;
+use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
+use photon_pinn::util::bench::{bench, report};
+use photon_pinn::util::rng::Rng;
+
+fn main() {
+    let rt = common::runtime();
+    let mut results = Vec::new();
+
+    for preset in ["tonn_small", "onn_small", "tonn_paper"] {
+        let Ok(pm) = rt.manifest.preset(preset) else { continue };
+        let _d = pm.layout.param_dim;
+        let mut rng = Rng::new(0);
+        let phi = pm.layout.init_vector(&mut rng);
+        let mut sampler = Sampler::new(pm.pde, 1);
+        let mut xr = Vec::new();
+        sampler.batch(rt.manifest.b_residual, &mut xr);
+        let mut xf = Vec::new();
+        sampler.batch(rt.manifest.b_forward, &mut xf);
+        let (xv, uv) = sampler.validation(rt.manifest.b_validate);
+
+        if let Ok(fwd) = rt.entry(preset, "forward") {
+            results.push(bench(&format!("{preset}/forward (B=128, pallas path)"), 3, 20, || {
+                fwd.run1(&[&phi, &xf]).unwrap();
+            }));
+        }
+        if let Ok(loss) = rt.entry(preset, "loss") {
+            results.push(bench(&format!("{preset}/loss (42xB FD fan-out)"), 3, 20, || {
+                loss.run_scalar(&[&phi, &xr]).unwrap();
+            }));
+        }
+        if let Ok(lm) = rt.entry(preset, "loss_multi") {
+            let k = rt.manifest.k_multi;
+            let phis: Vec<f32> = (0..k).flat_map(|_| phi.iter().copied()).collect();
+            results.push(bench(&format!("{preset}/loss_multi (K=11 SPSA batch)"), 2, 10, || {
+                lm.run1(&[&phis, &xr]).unwrap();
+            }));
+        }
+        if let Ok(val) = rt.entry(preset, "validate") {
+            results.push(bench(&format!("{preset}/validate (B=1024)"), 3, 20, || {
+                val.run_scalar(&[&phi, &xv, &uv]).unwrap();
+            }));
+        }
+    }
+
+    // L3-side costs: everything the coordinator does *around* a dispatch
+    {
+        let pm = rt.manifest.preset("tonn_small").unwrap();
+        let d = pm.layout.param_dim;
+        let chip = ChipRealization::sample(&pm.layout, &NoiseConfig::default_chip(), 1);
+        let spsa = Spsa::new(0.02, 10);
+        let mut rng = Rng::new(2);
+        let phi = pm.layout.init_vector(&mut rng);
+        let (mut xi, mut settings, mut eff, mut eff_all, mut grad) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        results.push(bench("L3/perturb+program (K=11, d=473)", 10, 200, || {
+            spsa.sample_perturbations(d, &mut rng, &mut xi);
+            spsa.build_settings(&phi, &xi, &mut settings);
+            eff_all.clear();
+            for i in 0..11 {
+                chip.program(&settings[i * d..(i + 1) * d], &mut eff);
+                eff_all.extend_from_slice(&eff);
+            }
+            std::hint::black_box(&eff_all);
+        }));
+        let losses = vec![0.5f32; 11];
+        let xi2 = {
+            let mut v = vec![0.0f32; 10 * d];
+            Rng::new(3).fill_normal(&mut v);
+            v
+        };
+        results.push(bench("L3/spsa estimate + sign step", 10, 500, || {
+            spsa.estimate(&losses, &xi2, &mut grad);
+            std::hint::black_box(&grad);
+        }));
+        let mut sampler = Sampler::new(pm.pde, 9);
+        let mut xr = Vec::new();
+        results.push(bench("L3/sample collocation batch (100x21)", 10, 500, || {
+            sampler.batch(100, &mut xr);
+            std::hint::black_box(&xr);
+        }));
+    }
+
+    report(&results);
+    println!("\nL3 overhead per training step = perturb+program + estimate + sampling;");
+    println!("compare against the loss_multi dispatch above (DESIGN.md §Perf target: <10%).");
+}

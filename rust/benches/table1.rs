@@ -1,0 +1,84 @@
+//! Bench T1: regenerate the paper's Table 1 — validation loss of
+//! {ONN, TONN} x {off-chip w/o noise, off-chip w/ noise, on-chip (ours)}
+//! on the 20-dim HJB PDE, at the CPU reproduction scale (DESIGN.md
+//! §Scale: n=64 instead of 1024, proportionally fewer epochs; the
+//! qualitative shape is the claim under test).
+//!
+//!     cargo bench --bench table1
+//!     PHOTON_BENCH_FAST=1 cargo bench --bench table1   (smoke)
+
+mod common;
+
+use photon_pinn::coordinator::experiment::{Table1Config, Table1Runner};
+use photon_pinn::photonics::noise::NoiseConfig;
+use photon_pinn::util::bench::Table;
+use photon_pinn::util::stats::sci;
+
+fn main() {
+    let rt = common::runtime();
+    let cfg = Table1Config {
+        zo_epochs: common::epochs(1500),
+        bp_epochs: common::epochs(400),
+        noise: NoiseConfig::default_chip(),
+        chip_seed: 11,
+        aware_seed: 177,
+        seed: 0,
+        verbose: false,
+    };
+    println!(
+        "running Table 1 matrix (zo_epochs={}, bp_epochs={}) ...",
+        cfg.zo_epochs, cfg.bp_epochs
+    );
+    let runner = Table1Runner { rt: &rt, cfg };
+
+    let mut t = Table::new(
+        "Table 1 — paper vs measured (reproduction scale n=64)",
+        &["Network", "Params(Φ)", "Off. w/o noise", "Off. w/ noise", "On. w/ noise (ours)"],
+    );
+    // the paper's full-scale numbers, for the side-by-side
+    t.row(&["ONN (paper n=1024)".into(), "608257".into(),
+            "3.10e-1 (7.63e-3)".into(), "3.07e-1 (7.81e-3)".into(), "1.43e-2".into()]);
+    t.row(&["TONN (paper n=1024)".into(), "1536".into(),
+            "3.73e-1 (1.46e-2)".into(), "2.97e-1 (1.35e-2)".into(), "5.53e-3".into()]);
+
+    let mut rows = Vec::new();
+    for preset in ["onn_small", "tonn_small"] {
+        let t0 = std::time::Instant::now();
+        let row = runner.run_preset(preset).expect("experiment failed");
+        eprintln!("  {preset} done in {:.0}s", t0.elapsed().as_secs_f64());
+        t.row(&[
+            format!("{} (measured)", row.network),
+            row.params.to_string(),
+            format!("{} ({})", sci(row.off_no_noise.0 as f64), sci(row.off_no_noise.1 as f64)),
+            format!("{} ({})", sci(row.off_with_noise.0 as f64), sci(row.off_with_noise.1 as f64)),
+            sci(row.on_with_noise as f64),
+        ]);
+        rows.push(row);
+    }
+    t.print();
+
+    println!("\nshape checks (the paper's qualitative claims):");
+    for row in &rows {
+        let mapped = row.off_no_noise.0;
+        let ideal = row.off_no_noise.1;
+        let on = row.on_with_noise;
+        println!(
+            "  {}: mapping degrades off-chip by {:.0}x (paper ~40x) | on-chip beats mapped by {:.0}x",
+            row.network,
+            mapped / ideal.max(1e-9),
+            mapped / on.max(1e-9)
+        );
+    }
+    if rows.len() == 2 {
+        println!(
+            "  TONN on-chip {} ONN on-chip ({} vs {}) — paper: TONN wins (5.53e-3 vs 1.43e-2)",
+            if rows[1].on_with_noise < rows[0].on_with_noise { "beats" } else { "does NOT beat" },
+            sci(rows[1].on_with_noise as f64),
+            sci(rows[0].on_with_noise as f64),
+        );
+        println!(
+            "  parameter reduction TONN vs ONN: {:.0}x (paper: 396x at n=1024)",
+            rows[0].params as f64 / rows[1].params as f64
+        );
+    }
+}

@@ -1,0 +1,86 @@
+//! Bench T2: regenerate the paper's Table 2 (#MZIs, energy, latency,
+//! footprint for ONN / TONN-1 / TONN-2) and the §4.2 training-efficiency
+//! paragraph, printing paper-vs-measured side by side.
+//!
+//!     cargo bench --bench table2
+
+use photon_pinn::photonics::perf::{Design, NetworkDims, PerfModel, TrainingEfficiency};
+use photon_pinn::util::bench::Table;
+use photon_pinn::util::stats::sci;
+
+struct PaperRow {
+    design: &'static str,
+    params: f64,
+    mzis: f64,
+    energy: Option<f64>,
+    latency: f64,
+    footprint: f64,
+}
+
+const PAPER: [PaperRow; 3] = [
+    PaperRow { design: "ONN", params: 6.08e5, mzis: 2.10e6, energy: None, latency: 600.0, footprint: 2.62e5 },
+    PaperRow { design: "TONN-1", params: 1.53e3, mzis: 1.79e3, energy: Some(6.45e-9), latency: 550.0, footprint: 648.0 },
+    PaperRow { design: "TONN-2", params: 1.53e3, mzis: 28.0, energy: Some(5.05e-9), latency: 3604.0, footprint: 26.0 },
+];
+
+fn ratio(ours: f64, paper: f64) -> String {
+    format!("{:.2}x", ours / paper)
+}
+
+fn main() {
+    let model = PerfModel::default();
+    let mut t = Table::new(
+        "Table 2 — paper vs measured",
+        &["Design", "metric", "paper", "measured", "ratio"],
+    );
+    for (row, (design, dims)) in PAPER.iter().zip([
+        (Design::Onn, NetworkDims::paper_onn()),
+        (Design::Tonn1, NetworkDims::paper_tonn()),
+        (Design::Tonn2, NetworkDims::paper_tonn()),
+    ]) {
+        let r = model.report(design, &dims);
+        t.row(&[row.design.into(), "params".into(), sci(row.params), sci(r.params as f64),
+                ratio(r.params as f64, row.params)]);
+        t.row(&[row.design.into(), "#MZIs".into(), sci(row.mzis), sci(r.mzis as f64),
+                ratio(r.mzis as f64, row.mzis)]);
+        t.row(&[
+            row.design.into(),
+            "energy/inf (J)".into(),
+            row.energy.map(sci).unwrap_or_else(|| "-".into()),
+            r.energy_per_inference_j.map(sci).unwrap_or_else(|| "infeasible".into()),
+            match (row.energy, r.energy_per_inference_j) {
+                (Some(p), Some(m)) => ratio(m, p),
+                (None, None) => "both infeasible".into(),
+                _ => "MISMATCH".into(),
+            },
+        ]);
+        t.row(&[row.design.into(), "latency/inf (ns)".into(), format!("{:.0}", row.latency),
+                format!("{:.0}", r.latency_per_inference_ns),
+                ratio(r.latency_per_inference_ns, row.latency)]);
+        t.row(&[row.design.into(), "footprint (mm2)".into(), sci(row.footprint),
+                sci(r.footprint_mm2), ratio(r.footprint_mm2, row.footprint)]);
+    }
+    t.print();
+
+    // headline: 1.17e3x MZI reduction
+    let onn = model.mzi_count(Design::Onn, &NetworkDims::paper_onn()) as f64;
+    let t1 = model.mzi_count(Design::Tonn1, &NetworkDims::paper_tonn()) as f64;
+    println!("\nheadline MZI reduction: measured {:.3e}x (paper 1.17e3x)", onn / t1);
+
+    // §4.2 training efficiency
+    let te = TrainingEfficiency::paper();
+    let dims = NetworkDims::paper_tonn();
+    let e_inf = model.energy_j(Design::Tonn1, &dims).unwrap();
+    let t_inf = model.latency_ns(Design::Tonn1, &dims);
+    let (e_tot, t_tot) = te.totals(e_inf, t_inf);
+    let mut t3 = Table::new(
+        "§4.2 training efficiency — paper vs measured (TONN-1)",
+        &["quantity", "paper", "measured"],
+    );
+    t3.row(&["inferences/epoch".into(), "4.20e4".into(), sci(te.inferences_per_epoch() as f64)]);
+    t3.row(&["energy/epoch (J)".into(), "2.71e-4".into(), sci(te.energy_per_epoch_j(e_inf))]);
+    t3.row(&["latency/epoch (s)".into(), "2.3e-4".into(), sci(te.latency_per_epoch_s(t_inf))]);
+    t3.row(&["total energy (J)".into(), "1.36".into(), format!("{e_tot:.3}")]);
+    t3.row(&["total time (s)".into(), "1.15".into(), format!("{t_tot:.3}")]);
+    t3.print();
+}

@@ -1,0 +1,96 @@
+//! Checkpointing: commanded parameters + run metadata as JSON.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::{self, Value};
+
+/// A saved training state.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub preset: String,
+    pub epoch: usize,
+    pub seed: u64,
+    pub phi: Vec<f32>,
+    pub final_val: Option<f32>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let v = Value::obj(vec![
+            ("preset", Value::Str(self.preset.clone())),
+            ("epoch", Value::Num(self.epoch as f64)),
+            ("seed", Value::Num(self.seed as f64)),
+            (
+                "final_val",
+                self.final_val
+                    .map(|v| Value::Num(v as f64))
+                    .unwrap_or(Value::Null),
+            ),
+            ("phi", Value::arr_f32(&self.phi)),
+        ]);
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, v.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let v = json::parse_file(path)?;
+        let phi = v
+            .req("phi")
+            .map_err(|e| anyhow::anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("phi must be an array"))?
+            .iter()
+            .map(|x| x.as_f64().unwrap_or(0.0) as f32)
+            .collect();
+        Ok(Checkpoint {
+            preset: v
+                .req("preset")
+                .map_err(|e| anyhow::anyhow!("{e}"))?
+                .as_str()
+                .unwrap_or_default()
+                .to_string(),
+            epoch: v.get("epoch").and_then(|x| x.as_usize()).unwrap_or(0),
+            seed: v.get("seed").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            final_val: v.get("final_val").and_then(|x| x.as_f64()).map(|f| f as f32),
+            phi,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let ck = Checkpoint {
+            preset: "tonn_small".into(),
+            epoch: 1500,
+            seed: 42,
+            phi: vec![0.25, -1.5, 3.0e-4],
+            final_val: Some(5.5e-3),
+        };
+        let dir = std::env::temp_dir().join(format!("pp_ck_{}", std::process::id()));
+        let path = dir.join("ck.json");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.preset, ck.preset);
+        assert_eq!(back.epoch, ck.epoch);
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.phi.len(), 3);
+        for (a, b) in back.phi.iter().zip(&ck.phi) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_missing_fails() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/ck.json")).is_err());
+    }
+}

@@ -1,0 +1,115 @@
+//! Table-1 experiment matrix: {ONN, TONN} x {off-chip w/o noise, off-chip
+//! w/ noise, on-chip w/ noise (proposed)}.
+//!
+//! Off-chip rows report "mapped-to-hardware (original ideal)" — exactly
+//! the paper's presentation: loss after mapping to a noisy chip, with the
+//! pristine pre-mapping loss in parentheses.
+
+use anyhow::Result;
+
+use super::offchip::{OffChipConfig, OffChipTrainer};
+use super::trainer::{LossKind, OnChipTrainer, TrainConfig, UpdateRule};
+use crate::photonics::noise::{ChipRealization, NoiseConfig};
+use crate::runtime::Runtime;
+
+/// One Table-1 row.
+#[derive(Clone, Debug)]
+pub struct ExperimentRow {
+    pub network: String,
+    pub params: usize,
+    /// off-chip hardware-unaware: (mapped val, ideal val)
+    pub off_no_noise: (f32, f32),
+    /// off-chip hardware-aware: (mapped val, ideal val)
+    pub off_with_noise: (f32, f32),
+    /// on-chip ZO training on the noisy chip
+    pub on_with_noise: f32,
+}
+
+/// Experiment configuration shared across the matrix.
+#[derive(Clone, Debug)]
+pub struct Table1Config {
+    pub zo_epochs: usize,
+    pub bp_epochs: usize,
+    pub noise: NoiseConfig,
+    /// deployment chip (the "fabricated hardware")
+    pub chip_seed: u64,
+    /// hardware-aware training uses a DIFFERENT simulated chip
+    pub aware_seed: u64,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for Table1Config {
+    fn default() -> Self {
+        Table1Config {
+            zo_epochs: 1500,
+            bp_epochs: 400,
+            noise: NoiseConfig::default_chip(),
+            chip_seed: 11,
+            aware_seed: 22,
+            seed: 0,
+            verbose: false,
+        }
+    }
+}
+
+/// Runs the matrix for a list of presets.
+pub struct Table1Runner<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: Table1Config,
+}
+
+impl<'rt> Table1Runner<'rt> {
+    pub fn run_preset(&self, preset: &str) -> Result<ExperimentRow> {
+        let pm = self.rt.manifest.preset(preset)?;
+        let deploy_chip =
+            ChipRealization::sample(&pm.layout, &self.cfg.noise, self.cfg.chip_seed);
+
+        // --- off-chip, hardware-unaware ---------------------------------
+        let mut off = OffChipTrainer::new(
+            self.rt,
+            OffChipConfig {
+                epochs: self.cfg.bp_epochs,
+                seed: self.cfg.seed,
+                verbose: self.cfg.verbose,
+                ..OffChipConfig::new(preset, self.cfg.bp_epochs)
+            },
+        )?;
+        let (phi_unaware, ideal_unaware, _) = off.train()?;
+        let mapped_unaware = off.score_mapped(&phi_unaware, &deploy_chip)?;
+
+        // --- off-chip, hardware-aware (mismatched noise model) ----------
+        let mut off_aware = OffChipTrainer::new(
+            self.rt,
+            OffChipConfig {
+                epochs: self.cfg.bp_epochs,
+                seed: self.cfg.seed ^ 1,
+                aware: Some((self.cfg.noise.clone(), self.cfg.aware_seed)),
+                verbose: self.cfg.verbose,
+                ..OffChipConfig::new(preset, self.cfg.bp_epochs)
+            },
+        )?;
+        let (phi_aware, ideal_aware, _) = off_aware.train()?;
+        let mapped_aware = off_aware.score_mapped(&phi_aware, &deploy_chip)?;
+
+        // --- on-chip ZO (proposed) ---------------------------------------
+        let mut tc = TrainConfig::from_manifest(self.rt, preset)?;
+        tc.epochs = self.cfg.zo_epochs;
+        tc.seed = self.cfg.seed;
+        tc.noise = self.cfg.noise.clone();
+        tc.chip_seed = self.cfg.chip_seed;
+        tc.update_rule = UpdateRule::SignSgd;
+        tc.loss_kind = LossKind::Fd;
+        tc.verbose = self.cfg.verbose;
+        let mut on = OnChipTrainer::new(self.rt, tc)?;
+        let on_result = on.train()?;
+
+        Ok(ExperimentRow {
+            network: preset.to_string(),
+            params: pm.layout.param_dim,
+            off_no_noise: (mapped_unaware, ideal_unaware),
+            off_with_noise: (mapped_aware, ideal_aware),
+            on_with_noise: on_result.final_val,
+        })
+    }
+}

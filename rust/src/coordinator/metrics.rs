@@ -1,0 +1,112 @@
+//! Per-epoch training records + export.
+
+use crate::util::json::Value;
+
+/// One epoch's observables.
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    /// training loss at the base setting L(Φ)
+    pub loss: f32,
+    /// validation MSE (only on validation epochs)
+    pub val: Option<f32>,
+    pub lr: f64,
+}
+
+/// Accumulates records + derived counters for a run.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    pub records: Vec<EpochRecord>,
+    /// total simulated single-sample chip inferences
+    pub inferences: u64,
+    /// total distinct chip (re)programming events
+    pub programmings: u64,
+    /// epochs whose SPSA batch contained a non-finite loss (skipped)
+    pub skipped_epochs: u64,
+    pub wall_seconds: f64,
+}
+
+impl RunMetrics {
+    pub fn push(&mut self, r: EpochRecord) {
+        self.records.push(r);
+    }
+
+    pub fn final_loss(&self) -> Option<f32> {
+        self.records.last().map(|r| r.loss)
+    }
+
+    pub fn best_val(&self) -> Option<f32> {
+        self.records
+            .iter()
+            .filter_map(|r| r.val)
+            .fold(None, |acc, v| Some(acc.map_or(v, |a: f32| a.min(v))))
+    }
+
+    pub fn last_val(&self) -> Option<f32> {
+        self.records.iter().rev().find_map(|r| r.val)
+    }
+
+    /// CSV of the loss curve (the convergence-figure bench consumes this).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("epoch,loss,val,lr\n");
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{},{}\n",
+                r.epoch,
+                r.loss,
+                r.val.map(|v| v.to_string()).unwrap_or_default(),
+                r.lr
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("inferences", Value::Num(self.inferences as f64)),
+            ("programmings", Value::Num(self.programmings as f64)),
+            ("skipped_epochs", Value::Num(self.skipped_epochs as f64)),
+            ("wall_seconds", Value::Num(self.wall_seconds)),
+            (
+                "records",
+                Value::Arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Value::obj(vec![
+                                ("epoch", Value::Num(r.epoch as f64)),
+                                ("loss", Value::Num(r.loss as f64)),
+                                (
+                                    "val",
+                                    r.val.map(|v| Value::Num(v as f64)).unwrap_or(Value::Null),
+                                ),
+                                ("lr", Value::Num(r.lr)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_aggregates() {
+        let mut m = RunMetrics::default();
+        m.push(EpochRecord { epoch: 0, loss: 1.0, val: Some(0.5), lr: 0.1 });
+        m.push(EpochRecord { epoch: 1, loss: 0.5, val: None, lr: 0.1 });
+        m.push(EpochRecord { epoch: 2, loss: 0.2, val: Some(0.1), lr: 0.05 });
+        assert_eq!(m.final_loss(), Some(0.2));
+        assert_eq!(m.best_val(), Some(0.1));
+        assert_eq!(m.last_val(), Some(0.1));
+        let csv = m.to_csv();
+        assert!(csv.starts_with("epoch,loss,val,lr\n"));
+        assert_eq!(csv.lines().count(), 4);
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"records\""));
+    }
+}

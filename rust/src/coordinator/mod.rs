@@ -1,0 +1,28 @@
+//! The digital control system (Layer 3) — the paper's Fig. 1 box around
+//! the photonic accelerator.
+//!
+//! * [`trainer`] — BP-free on-chip training: SPSA perturbation batches,
+//!   noisy phase programming, ZO-signSGD updates. The photonic chip (=
+//!   the AOT artifacts) only ever evaluates losses.
+//! * [`offchip`] — the Table-1 baseline: exact-BP Adam training on the
+//!   ideal software model, then mapping to a noisy chip.
+//! * [`validator`] — validation MSE vs the exact PDE solution.
+//! * [`experiment`] — Table-1 experiment matrix runner.
+//! * [`metrics`] — per-epoch records + CSV/JSON export.
+//! * [`checkpoint`] — save/restore of commanded parameters.
+//! * [`service`] — threaded real-time PDE solve service (repeated
+//!   re-solves as "sensor data updates" — the paper's motivating loop).
+
+pub mod checkpoint;
+pub mod experiment;
+pub mod metrics;
+pub mod offchip;
+pub mod service;
+pub mod trainer;
+pub mod validator;
+
+pub use experiment::{ExperimentRow, Table1Runner};
+pub use offchip::{OffChipConfig, OffChipTrainer};
+pub use service::{SolveRequest, SolveResult, SolverService};
+pub use trainer::{OnChipTrainer, TrainConfig, TrainResult};
+pub use validator::Validator;

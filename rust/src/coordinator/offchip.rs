@@ -1,0 +1,156 @@
+//! Off-chip (BP) training baseline — Table 1's first two columns.
+//!
+//! "Off-chip training" pre-trains on an *electrical digital platform*
+//! with exact autodiff gradients (the `grad` artifact = jax.value_and_grad
+//! of the exact-derivative PINN loss, Adam updates here), then maps the
+//! trained parameters onto photonic hardware.
+//!
+//! * **w/o noise** (hardware-unaware): trains on the ideal model.
+//! * **w/ noise** (hardware-aware): trains against a *simulated*
+//!   imperfection model — a chip realization with a different seed than
+//!   the deployment chip, reproducing the paper's observation that "the
+//!   imperfection model in software is not identical to real hardware",
+//!   which is why hardware-aware training helps only marginally.
+//!
+//! Deployment evaluation (mapping) happens on the caller's chip via
+//! [`crate::coordinator::trainer::OnChipTrainer::score_on_this_chip`] or a
+//! [`super::validator::Validator`].
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::{EpochRecord, RunMetrics};
+use super::validator::Validator;
+use crate::optim::Adam;
+use crate::photonics::noise::{ChipRealization, NoiseConfig};
+use crate::pde::Sampler;
+use crate::runtime::{Executable, Runtime};
+
+/// Off-chip trainer configuration.
+#[derive(Clone, Debug)]
+pub struct OffChipConfig {
+    pub preset: String,
+    pub epochs: usize,
+    pub lr: f64,
+    pub seed: u64,
+    /// None = hardware-unaware; Some = hardware-aware training against a
+    /// simulated chip with this (noise, seed)
+    pub aware: Option<(NoiseConfig, u64)>,
+    pub validate_every: usize,
+    pub verbose: bool,
+}
+
+impl OffChipConfig {
+    pub fn new(preset: &str, epochs: usize) -> Self {
+        OffChipConfig {
+            preset: preset.to_string(),
+            epochs,
+            lr: 2e-3,
+            seed: 0,
+            aware: None,
+            validate_every: 100,
+            verbose: false,
+        }
+    }
+}
+
+/// BP/Adam trainer over the `grad` artifact.
+pub struct OffChipTrainer<'rt> {
+    rt: &'rt Runtime,
+    cfg: OffChipConfig,
+    grad: Arc<Executable>,
+    validator: Validator,
+    sampler: Sampler,
+    /// simulated training-time chip for hardware-aware mode
+    train_chip: Option<ChipRealization>,
+}
+
+impl<'rt> OffChipTrainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: OffChipConfig) -> Result<Self> {
+        let pm = rt.manifest.preset(&cfg.preset)?;
+        let grad = rt.entry(&cfg.preset, "grad")?;
+        let validator = Validator::new(rt, &cfg.preset, cfg.seed)?;
+        let sampler = Sampler::new(pm.pde, cfg.seed ^ 0x0FF_C41);
+        let train_chip = cfg
+            .aware
+            .as_ref()
+            .map(|(noise, seed)| ChipRealization::sample(&pm.layout, noise, *seed));
+        Ok(OffChipTrainer {
+            rt,
+            cfg,
+            grad,
+            validator,
+            sampler,
+            train_chip,
+        })
+    }
+
+    /// Run BP training; returns (trained params, ideal-hardware val MSE,
+    /// metrics). Mapping onto a *real* chip is the caller's step.
+    pub fn train(&mut self) -> Result<(Vec<f32>, f32, RunMetrics)> {
+        let pm = self.rt.manifest.preset(&self.cfg.preset)?;
+        let mut rng = crate::util::rng::Rng::new(self.cfg.seed);
+        let mut phi = pm.layout.init_vector(&mut rng);
+        let mut adam = Adam::new(phi.len(), self.cfg.lr);
+        let mut metrics = RunMetrics::default();
+        let mut xr = Vec::new();
+        let mut eff = Vec::new();
+        let batch = self.rt.manifest.b_residual;
+        let t0 = Instant::now();
+
+        for epoch in 0..self.cfg.epochs {
+            self.sampler.batch(batch, &mut xr);
+            // Hardware-aware mode evaluates the gradient at the *simulated*
+            // effective parameters (straight-through estimator onto the
+            // commanded ones) — the practical scheme for
+            // argmin_Φ L(W(ΩΓΦ + Φ_b)) when Ω,Γ,Φ_b are only modelled.
+            let out = match &self.train_chip {
+                Some(chip) => {
+                    chip.program(&phi, &mut eff);
+                    self.grad.run(&[eff.as_slice(), &xr])?
+                }
+                None => self.grad.run(&[phi.as_slice(), &xr])?,
+            };
+            let loss = out[0][0];
+            let g = &out[1];
+            if !loss.is_finite() || g.iter().any(|v| !v.is_finite()) {
+                metrics.skipped_epochs += 1;
+                continue;
+            }
+            adam.step(&mut phi, g);
+            metrics.inferences += batch as u64; // one BP pass per sample
+            let validate_now = self.cfg.validate_every != 0
+                && (epoch % self.cfg.validate_every == 0 || epoch + 1 == self.cfg.epochs);
+            let val = if validate_now {
+                Some(self.validator.mse_ideal(&phi)?)
+            } else {
+                None
+            };
+            if self.cfg.verbose && validate_now {
+                crate::info!(
+                    "[offchip {}] epoch {:5} loss {:.4e} val {}",
+                    self.cfg.preset,
+                    epoch,
+                    loss,
+                    val.map(|v| format!("{v:.4e}")).unwrap_or_default()
+                );
+            }
+            metrics.push(EpochRecord {
+                epoch,
+                loss,
+                val,
+                lr: self.cfg.lr,
+            });
+        }
+        metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        let final_ideal = self.validator.mse_ideal(&phi)?;
+        Ok((phi, final_ideal, metrics))
+    }
+
+    /// Score trained params mapped onto a given deployment chip.
+    pub fn score_mapped(&mut self, phi: &[f32], chip: &ChipRealization) -> Result<f32> {
+        self.validator.mse_on_chip(phi, chip)
+    }
+}

@@ -1,0 +1,143 @@
+//! Real-time PDE solver service — the paper's motivating deployment loop
+//! ("a HJB/HJI PDE has to be solved repeatedly as the sensor data and
+//! avoidance specification updates").
+//!
+//! A bounded job queue feeds worker threads; results stream back over a
+//! channel. This is the tokio-free event loop substrate (DESIGN.md
+//! §Substitutions): std threads + mpsc + a bounded queue for
+//! backpressure.
+//!
+//! PJRT handles are not `Send` (the `xla` crate wraps raw pointers in
+//! `Rc`), so each worker owns a full [`Runtime`] — its own PJRT client
+//! and compiled executables. Physically faithful: one photonic
+//! accelerator per worker; the coordinator only moves requests/results.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::trainer::{OnChipTrainer, TrainConfig};
+use crate::runtime::Runtime;
+
+/// One solve job.
+#[derive(Clone, Debug)]
+pub struct SolveRequest {
+    pub id: u64,
+    pub config: TrainConfig,
+}
+
+/// Completed solve.
+#[derive(Debug)]
+pub struct SolveResult {
+    pub id: u64,
+    pub final_val: Result<f32>,
+    pub phi: Vec<f32>,
+    pub queue_seconds: f64,
+    pub solve_seconds: f64,
+    pub worker: usize,
+}
+
+enum Job {
+    Solve(SolveRequest, Instant),
+    Shutdown,
+}
+
+/// Threaded solver service with a bounded queue (backpressure: `submit`
+/// blocks when `queue_cap` jobs are in flight).
+pub struct SolverService {
+    tx: SyncSender<Job>,
+    results: Receiver<SolveResult>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl SolverService {
+    /// Spin up `workers` threads, each loading its own [`Runtime`] from
+    /// `artifacts_dir` and optionally pre-compiling `warmup_preset`'s
+    /// training entries.
+    pub fn start(
+        artifacts_dir: PathBuf,
+        workers: usize,
+        queue_cap: usize,
+        warmup_preset: Option<String>,
+    ) -> SolverService {
+        let (tx, rx) = sync_channel::<Job>(queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+        let (res_tx, results) = sync_channel::<SolveResult>(queue_cap.max(16));
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let rx = rx.clone();
+            let res_tx = res_tx.clone();
+            let dir = artifacts_dir.clone();
+            let warm = warmup_preset.clone();
+            handles.push(std::thread::spawn(move || {
+                let rt = match Runtime::load(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        crate::warn_!("worker {w}: runtime load failed: {e:#}");
+                        return;
+                    }
+                };
+                if let Some(p) = warm {
+                    let _ = rt.warmup(&p, &["loss_multi", "validate"]);
+                }
+                loop {
+                    let job = { rx.lock().unwrap().recv() };
+                    match job {
+                        Ok(Job::Solve(req, submitted)) => {
+                            let queue_seconds = submitted.elapsed().as_secs_f64();
+                            let t0 = Instant::now();
+                            let outcome = OnChipTrainer::new(&rt, req.config.clone())
+                                .and_then(|mut t| t.train());
+                            let (final_val, phi) = match outcome {
+                                Ok(r) => (Ok(r.final_val), r.phi),
+                                Err(e) => (Err(e), Vec::new()),
+                            };
+                            let _ = res_tx.send(SolveResult {
+                                id: req.id,
+                                final_val,
+                                phi,
+                                queue_seconds,
+                                solve_seconds: t0.elapsed().as_secs_f64(),
+                                worker: w,
+                            });
+                        }
+                        Ok(Job::Shutdown) | Err(_) => break,
+                    }
+                }
+            }));
+        }
+        SolverService {
+            tx,
+            results,
+            workers: handles,
+        }
+    }
+
+    /// Submit a solve; blocks when the queue is full (backpressure).
+    pub fn submit(&self, req: SolveRequest) -> Result<()> {
+        self.tx
+            .send(Job::Solve(req, Instant::now()))
+            .map_err(|_| anyhow::anyhow!("service is shut down"))
+    }
+
+    /// Receive the next completed solve (blocking).
+    pub fn recv(&self) -> Result<SolveResult> {
+        self.results
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service is shut down"))
+    }
+
+    /// Graceful shutdown: drain workers.
+    pub fn shutdown(self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+        for h in self.workers {
+            let _ = h.join();
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! BP-free on-chip training (the paper's §3.3, end to end).
+//!
+//! Per epoch, the digital control system:
+//!
+//! 1. samples a collocation minibatch (the "training data shed into the
+//!    inference accelerator");
+//! 2. samples N SPSA perturbations ξ_i and builds the K = N+1 commanded
+//!    phase settings [Φ, Φ+μξ_1, ..., Φ+μξ_N];
+//! 3. programs each setting through the chip's noise path
+//!    (Φ_eff = Ω(ΓΦ)+Φ_b) and dispatches ONE `loss_multi` executable —
+//!    K sequential on-chip loss evaluations, each internally performing
+//!    the 42-inference FD fan-out;
+//! 4. forms the SPSA estimate (Eq. 5) and applies the ZO-signSGD update
+//!    (Eq. 6) to the *commanded* parameters.
+//!
+//! The optimizer therefore adapts to the chip's realized imperfection —
+//! exactly the robustness mechanism Table 1 credits on-chip training for.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::metrics::{EpochRecord, RunMetrics};
+use super::validator::Validator;
+use crate::optim::{LrSchedule, Spsa, ZoSgd, ZoSignSgd};
+use crate::photonics::noise::{ChipRealization, NoiseConfig};
+use crate::pde::Sampler;
+use crate::runtime::{Executable, Runtime};
+
+/// Update rule variant (ablation A1: sign de-noising on/off).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateRule {
+    SignSgd,
+    RawSgd,
+}
+
+/// Loss estimator variant (ablation A4: FD vs Stein).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossKind {
+    Fd,
+    Stein,
+}
+
+/// On-chip training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub epochs: usize,
+    pub spsa_n: usize,
+    pub spsa_mu: f64,
+    pub lr: f64,
+    pub lr_decay: f64,
+    pub lr_decay_every: usize,
+    /// master seed: init, batches, perturbations all derive from it
+    pub seed: u64,
+    /// hardware imperfection severity
+    pub noise: NoiseConfig,
+    /// which fabricated chip we run on (fixed noise realization)
+    pub chip_seed: u64,
+    /// validate every this many epochs (0 = only at the end)
+    pub validate_every: usize,
+    pub update_rule: UpdateRule,
+    pub loss_kind: LossKind,
+    /// print progress lines
+    pub verbose: bool,
+}
+
+impl TrainConfig {
+    /// Defaults from the manifest's tuned hyperparameters.
+    pub fn from_manifest(rt: &Runtime, preset: &str) -> Result<TrainConfig> {
+        let h = &rt.manifest.preset(preset)?.hyper;
+        Ok(TrainConfig {
+            preset: preset.to_string(),
+            epochs: h.epochs,
+            spsa_n: h.spsa_n,
+            spsa_mu: h.spsa_mu,
+            lr: h.lr,
+            lr_decay: h.lr_decay,
+            lr_decay_every: h.lr_decay_every,
+            seed: 0,
+            noise: NoiseConfig::default_chip(),
+            chip_seed: 1,
+            validate_every: 100,
+            update_rule: UpdateRule::SignSgd,
+            loss_kind: LossKind::Fd,
+            verbose: false,
+        })
+    }
+}
+
+/// Outcome of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    /// final commanded parameters
+    pub phi: Vec<f32>,
+    /// final validation MSE on the (noisy) chip
+    pub final_val: f32,
+    pub metrics: RunMetrics,
+}
+
+/// The on-chip ZO trainer.
+pub struct OnChipTrainer<'rt> {
+    rt: &'rt Runtime,
+    cfg: TrainConfig,
+    chip: ChipRealization,
+    spsa: Spsa,
+    loss_multi: Arc<Executable>,
+    loss_single: Option<Arc<Executable>>,
+    validator: Validator,
+    sampler: Sampler,
+    /// stencil inferences per loss evaluation (accounting)
+    n_stencil: usize,
+    batch: usize,
+    k_multi: usize,
+    /// Stein smoothing directions (fixed per run; runtime input of the
+    /// `loss_stein` artifact)
+    stein_z: Vec<f32>,
+}
+
+impl<'rt> OnChipTrainer<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Self> {
+        let pm = rt.manifest.preset(&cfg.preset)?;
+        anyhow::ensure!(
+            cfg.spsa_n + 1 == rt.manifest.k_multi,
+            "spsa_n {} must equal k_multi-1 = {} (static artifact shape)",
+            cfg.spsa_n,
+            rt.manifest.k_multi - 1
+        );
+        let loss_multi = rt.entry(&cfg.preset, "loss_multi")?;
+        let (loss_single, stein_z) = match cfg.loss_kind {
+            LossKind::Stein => {
+                let exec = rt.entry(&cfg.preset, "loss_stein")?;
+                // z is the third input: (stein_q, in_dim)
+                let len = exec.meta.input_len(2);
+                let mut z = vec![0.0f32; len];
+                crate::util::rng::Rng::new(cfg.seed ^ 0x57E1).fill_normal(&mut z);
+                (Some(exec), z)
+            }
+            LossKind::Fd => (None, Vec::new()),
+        };
+        let validator = Validator::new(rt, &cfg.preset, cfg.seed)?;
+        let sampler = Sampler::new(pm.pde, cfg.seed ^ 0xBA7C4);
+        let n_stencil = pm.pde.n_stencil();
+        let batch = rt.manifest.b_residual;
+        let k_multi = rt.manifest.k_multi;
+        let spsa = Spsa::new(cfg.spsa_mu, cfg.spsa_n);
+        Ok(OnChipTrainer {
+            chip: ChipRealization::sample(&pm.layout, &cfg.noise, cfg.chip_seed),
+            rt,
+            cfg,
+            spsa,
+            loss_multi,
+            loss_single,
+            validator,
+            sampler,
+            n_stencil,
+            batch,
+            k_multi,
+            stein_z,
+        })
+    }
+
+    /// Access the chip realization (for evaluating other params on the
+    /// same hardware, e.g. the off-chip comparison).
+    pub fn chip(&self) -> &ChipRealization {
+        &self.chip
+    }
+
+    /// Evaluate the K losses for the commanded settings.
+    ///
+    /// FD mode: one `loss_multi` dispatch (K sequential evals inside the
+    /// executable — the chip reprograms K times either way; batching the
+    /// dispatch is a simulator optimization, DESIGN.md §Perf L3).
+    /// Stein mode: K single dispatches of `loss_stein`.
+    fn eval_losses(
+        &self,
+        settings_cmd: &[f32],
+        xr: &[f32],
+        eff: &mut Vec<f32>,
+        eff_all: &mut Vec<f32>,
+    ) -> Result<Vec<f32>> {
+        let d = self.chip.dim();
+        let k = self.k_multi;
+        match self.cfg.loss_kind {
+            LossKind::Fd => {
+                eff_all.clear();
+                eff_all.reserve(k * d);
+                for i in 0..k {
+                    self.chip.program(&settings_cmd[i * d..(i + 1) * d], eff);
+                    eff_all.extend_from_slice(eff);
+                }
+                self.loss_multi.run1(&[eff_all.as_slice(), xr])
+            }
+            LossKind::Stein => {
+                let exec = self.loss_single.as_ref().unwrap();
+                let mut out = Vec::with_capacity(k);
+                for i in 0..k {
+                    self.chip.program(&settings_cmd[i * d..(i + 1) * d], eff);
+                    out.push(exec.run_scalar(&[eff.as_slice(), xr, &self.stein_z])?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Run the full training loop.
+    pub fn train(&mut self) -> Result<TrainResult> {
+        let pm = self.rt.manifest.preset(&self.cfg.preset)?;
+        let d = pm.layout.param_dim;
+        let mut rng = crate::util::rng::Rng::new(self.cfg.seed);
+        let mut phi = pm.layout.init_vector(&mut rng);
+        let mut spsa_rng = rng.substream(0x5b5a);
+
+        let schedule = LrSchedule {
+            base: self.cfg.lr,
+            decay: self.cfg.lr_decay,
+            every: self.cfg.lr_decay_every,
+        };
+        let sign_opt = ZoSignSgd { schedule: schedule.clone() };
+        let raw_opt = ZoSgd { schedule };
+
+        let mut metrics = RunMetrics::default();
+        let mut xr = Vec::new();
+        let mut xi = Vec::new();
+        let mut settings = Vec::new();
+        let mut grad = Vec::new();
+        let mut eff = Vec::with_capacity(d);
+        let mut eff_all = Vec::with_capacity(self.k_multi * d);
+        let t0 = Instant::now();
+
+        for epoch in 0..self.cfg.epochs {
+            self.sampler.batch(self.batch, &mut xr);
+            self.spsa.sample_perturbations(d, &mut spsa_rng, &mut xi);
+            self.spsa.build_settings(&phi, &xi, &mut settings);
+            let losses = self.eval_losses(&settings, &xr, &mut eff, &mut eff_all)?;
+            metrics.inferences += (self.n_stencil * self.batch * self.k_multi) as u64;
+            metrics.programmings += self.k_multi as u64;
+
+            if losses.iter().any(|l| !l.is_finite()) {
+                metrics.skipped_epochs += 1;
+                continue;
+            }
+            self.spsa.estimate(&losses, &xi, &mut grad);
+            match self.cfg.update_rule {
+                UpdateRule::SignSgd => sign_opt.step(&mut phi, &grad, epoch),
+                UpdateRule::RawSgd => raw_opt.step(&mut phi, &grad, epoch),
+            }
+
+            let validate_now = self.cfg.validate_every != 0
+                && (epoch % self.cfg.validate_every == 0 || epoch + 1 == self.cfg.epochs);
+            let val = if validate_now {
+                Some(self.validator.mse_on_chip(&phi, &self.chip)?)
+            } else {
+                None
+            };
+            let lr_now = match self.cfg.update_rule {
+                UpdateRule::SignSgd => sign_opt.schedule.at(epoch),
+                UpdateRule::RawSgd => raw_opt.schedule.at(epoch),
+            };
+            if self.cfg.verbose && (validate_now || epoch % 100 == 0) {
+                crate::info!(
+                    "[{}] epoch {:5} loss {:.4e} val {} lr {:.4}",
+                    self.cfg.preset,
+                    epoch,
+                    losses[0],
+                    val.map(|v| format!("{v:.4e}")).unwrap_or_else(|| "-".into()),
+                    lr_now
+                );
+            }
+            metrics.push(EpochRecord {
+                epoch,
+                loss: losses[0],
+                val,
+                lr: lr_now,
+            });
+        }
+        metrics.wall_seconds = t0.elapsed().as_secs_f64();
+        let final_val = self.validator.mse_on_chip(&phi, &self.chip)?;
+        Ok(TrainResult {
+            phi,
+            final_val,
+            metrics,
+        })
+    }
+
+    /// Validation MSE of arbitrary commanded params on THIS chip (used to
+    /// score off-chip-trained weights mapped onto the same hardware).
+    pub fn score_on_this_chip(&mut self, phi_cmd: &[f32]) -> Result<f32> {
+        self.validator.mse_on_chip(phi_cmd, &self.chip)
+    }
+}

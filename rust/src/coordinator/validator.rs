@@ -1,0 +1,45 @@
+//! Validation against the exact PDE solution (Table 1's metric).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::pde::Sampler;
+use crate::photonics::noise::ChipRealization;
+use crate::runtime::{Executable, Runtime};
+
+/// Holds the `validate` executable plus a fixed validation set.
+pub struct Validator {
+    exec: Arc<Executable>,
+    xv: Vec<f32>,
+    uv: Vec<f32>,
+    /// scratch for the programmed (effective) parameter vector
+    eff: Vec<f32>,
+}
+
+impl Validator {
+    /// Build with a deterministic validation set of the manifest's size.
+    pub fn new(rt: &Runtime, preset: &str, seed: u64) -> Result<Validator> {
+        let pm = rt.manifest.preset(preset)?;
+        let exec = rt.entry(preset, "validate")?;
+        let mut sampler = Sampler::new(pm.pde, seed ^ 0x7A11_DA7E);
+        let (xv, uv) = sampler.validation(rt.manifest.b_validate);
+        Ok(Validator {
+            exec,
+            xv,
+            uv,
+            eff: Vec::new(),
+        })
+    }
+
+    /// Validation MSE of *commanded* parameters as realized on `chip`.
+    pub fn mse_on_chip(&mut self, phi_cmd: &[f32], chip: &ChipRealization) -> Result<f32> {
+        chip.program(phi_cmd, &mut self.eff);
+        self.exec.run_scalar(&[&self.eff, &self.xv, &self.uv])
+    }
+
+    /// Validation MSE of parameters taken at face value (ideal hardware).
+    pub fn mse_ideal(&self, phi: &[f32]) -> Result<f32> {
+        self.exec.run_scalar(&[phi, &self.xv, &self.uv])
+    }
+}

@@ -1,0 +1,68 @@
+//! # photon-pinn
+//!
+//! Reproduction of *"Real-Time fJ/MAC PDE Solvers via Tensorized,
+//! Back-Propagation-Free Optical PINN Training"* (Zhao et al., 2023) as a
+//! three-layer rust + JAX + Pallas system:
+//!
+//! * **Layer 1/2** (build-time python, `python/compile/`): the phase-domain
+//!   ONN/TONN PINN model and its Pallas kernels, AOT-lowered to HLO-text
+//!   artifacts. Python never runs at request time.
+//! * **Layer 3** (this crate): the *digital control system* of the paper —
+//!   the BP-free on-chip trainer (SPSA + ZO-signSGD), the hardware-noise
+//!   programming path, the off-chip BP baseline, the photonic device /
+//!   energy / latency model (Table 2), benches for every table and figure,
+//!   and a threaded real-time PDE solver service.
+//!
+//! Entry points: [`runtime::Runtime`] loads artifacts; [`coordinator`]
+//! drives training; `examples/` are runnable end-to-end drivers.
+//!
+//! The crate is dependency-free beyond the `xla` PJRT bindings (and
+//! `anyhow`): the RNG, JSON codec, CLI parser, thread-pool service and
+//! bench harness are all first-class substrates in [`util`]
+//! (see DESIGN.md §Substitutions).
+
+pub mod coordinator;
+pub mod model;
+pub mod optim;
+pub mod pde;
+pub mod photonics;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Canonical location of the AOT artifacts directory, relative to the
+/// repository root. Overridable everywhere via `--artifacts` / env.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: explicit arg > `PHOTON_ARTIFACTS` env
+/// > nearest `artifacts/` with a manifest, walking up from cwd (so
+/// examples and tests work from any subdirectory).
+pub fn resolve_artifacts_dir(explicit: Option<&str>) -> std::path::PathBuf {
+    if let Some(p) = explicit {
+        return p.into();
+    }
+    if let Ok(p) = std::env::var("PHOTON_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(DEFAULT_ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return DEFAULT_ARTIFACTS_DIR.into();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn resolve_falls_back_to_default() {
+        // From a tempdir with no artifacts anywhere up the tree, the
+        // default relative path comes back.
+        let p = super::resolve_artifacts_dir(Some("/x/y"));
+        assert_eq!(p, std::path::PathBuf::from("/x/y"));
+    }
+}

@@ -1,0 +1,249 @@
+//! photon-pinn CLI — train / validate / report from the command line.
+//!
+//! Subcommands:
+//!   train     on-chip BP-free training (the paper's proposed method)
+//!   offchip   BP/Adam baseline + mapping to a noisy chip
+//!   table1    the full Table-1 experiment matrix
+//!   hardware  Table-2 hardware report
+//!   presets   list available presets from the manifest
+//!
+//! Examples:
+//!   photon-pinn train --preset tonn_small --epochs 1500
+//!   photon-pinn table1 --zo-epochs 800 --bp-epochs 300
+//!   photon-pinn hardware
+
+
+use anyhow::Result;
+use photon_pinn::coordinator::{OffChipConfig, OffChipTrainer, OnChipTrainer, TrainConfig};
+use photon_pinn::coordinator::checkpoint::Checkpoint;
+use photon_pinn::coordinator::experiment::{Table1Config, Table1Runner};
+use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
+use photon_pinn::photonics::perf::{Design, NetworkDims, PerfModel, TrainingEfficiency};
+use photon_pinn::runtime::Runtime;
+use photon_pinn::util::bench::Table;
+use photon_pinn::util::cli::Args;
+use photon_pinn::util::stats::sci;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn args_for(cmd: &str) -> Args {
+    Args::new(&format!("photon-pinn {cmd}"), "optical PINN training (paper reproduction)")
+        .flag("artifacts", None, "artifacts directory (default: auto-discover)")
+        .flag("preset", Some("tonn_small"), "network preset from the manifest")
+        .flag("epochs", None, "override training epochs")
+        .flag("seed", Some("0"), "master seed")
+        .flag("chip-seed", Some("11"), "fabricated-chip noise realization")
+        .flag("noise-scale", Some("1.0"), "hardware noise severity multiplier")
+        .flag("lr", None, "override learning rate")
+        .flag("zo-epochs", Some("1500"), "on-chip epochs (table1)")
+        .flag("bp-epochs", Some("400"), "off-chip epochs (table1)")
+        .flag("checkpoint", None, "write final parameters to this path")
+        .switch("stein", "use the Stein derivative estimator instead of FD")
+        .switch("raw-sgd", "disable the signSGD de-noising (ablation)")
+        .switch("quiet", "suppress progress lines")
+}
+
+fn load_runtime(a: &Args) -> Result<Runtime> {
+    let dir = photon_pinn::resolve_artifacts_dir(a.get_str("artifacts").as_deref());
+    let rt = Runtime::load(&dir)?;
+    eprintln!(
+        "loaded {} presets from {} (platform: {})",
+        rt.manifest.presets.len(),
+        dir.display(),
+        rt.platform()
+    );
+    Ok(rt)
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    match cmd.as_str() {
+        "train" => cmd_train(argv),
+        "offchip" => cmd_offchip(argv),
+        "table1" => cmd_table1(argv),
+        "hardware" => cmd_hardware(argv),
+        "presets" => cmd_presets(argv),
+        _ => {
+            eprintln!(
+                "usage: photon-pinn <train|offchip|table1|hardware|presets> [flags]\n\
+                 run a subcommand with --help for its flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_presets(argv: Vec<String>) -> Result<()> {
+    let a = args_for("presets").parse(argv)?;
+    let rt = load_runtime(&a)?;
+    let mut names: Vec<_> = rt.manifest.presets.keys().cloned().collect();
+    names.sort();
+    let mut t = Table::new("presets", &["preset", "pde", "param_dim", "entries"]);
+    for n in names {
+        let p = &rt.manifest.presets[&n];
+        let mut es: Vec<_> = p.entries.keys().cloned().collect();
+        es.sort();
+        t.row(&[
+            n.clone(),
+            p.pde.name().to_string(),
+            p.layout.param_dim.to_string(),
+            es.join(","),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_train(argv: Vec<String>) -> Result<()> {
+    let a = args_for("train").parse(argv)?;
+    let rt = load_runtime(&a)?;
+    let preset = a.get_str("preset").unwrap();
+    let mut cfg = TrainConfig::from_manifest(&rt, &preset)?;
+    if let Some(e) = a.get_usize("epochs")? {
+        cfg.epochs = e;
+    }
+    if let Some(lr) = a.get_f64("lr")? {
+        cfg.lr = lr;
+    }
+    cfg.seed = a.get_u64("seed")?.unwrap();
+    cfg.chip_seed = a.get_u64("chip-seed")?.unwrap();
+    cfg.noise = NoiseConfig::default_chip().scaled(a.get_f64("noise-scale")?.unwrap());
+    cfg.verbose = !a.get_bool("quiet");
+    if a.get_bool("stein") {
+        cfg.loss_kind = photon_pinn::coordinator::trainer::LossKind::Stein;
+    }
+    if a.get_bool("raw-sgd") {
+        cfg.update_rule = photon_pinn::coordinator::trainer::UpdateRule::RawSgd;
+    }
+    let epochs = cfg.epochs;
+    let seed = cfg.seed;
+    let mut trainer = OnChipTrainer::new(&rt, cfg)?;
+    let result = trainer.train()?;
+    println!(
+        "final on-chip validation MSE: {:.4e}  ({} epochs, {:.1}s wall, {} simulated inferences)",
+        result.final_val, epochs, result.metrics.wall_seconds, result.metrics.inferences
+    );
+    if let Some(path) = a.get_str("checkpoint") {
+        Checkpoint {
+            preset: preset.clone(),
+            epoch: epochs,
+            seed,
+            phi: result.phi.clone(),
+            final_val: Some(result.final_val),
+        }
+        .save(std::path::Path::new(&path))?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_offchip(argv: Vec<String>) -> Result<()> {
+    let a = args_for("offchip").parse(argv)?;
+    let rt = load_runtime(&a)?;
+    let preset = a.get_str("preset").unwrap();
+    let mut cfg = OffChipConfig::new(&preset, a.get_usize("epochs")?.unwrap_or(400));
+    cfg.seed = a.get_u64("seed")?.unwrap();
+    cfg.verbose = !a.get_bool("quiet");
+    let mut tr = OffChipTrainer::new(&rt, cfg)?;
+    let (phi, ideal, _) = tr.train()?;
+    let pm = rt.manifest.preset(&preset)?;
+    let noise = NoiseConfig::default_chip().scaled(a.get_f64("noise-scale")?.unwrap());
+    let chip = ChipRealization::sample(&pm.layout, &noise, a.get_u64("chip-seed")?.unwrap());
+    let mapped = tr.score_mapped(&phi, &chip)?;
+    println!("off-chip val MSE: ideal {ideal:.4e}  mapped-to-chip {mapped:.4e}");
+    if let Some(path) = a.get_str("checkpoint") {
+        Checkpoint {
+            preset: preset.clone(),
+            epoch: a.get_usize("epochs")?.unwrap_or(400),
+            seed: a.get_u64("seed")?.unwrap(),
+            phi,
+            final_val: Some(ideal),
+        }
+        .save(std::path::Path::new(&path))?;
+        println!("checkpoint written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_table1(argv: Vec<String>) -> Result<()> {
+    let a = args_for("table1").parse(argv)?;
+    let rt = load_runtime(&a)?;
+    let cfg = Table1Config {
+        zo_epochs: a.get_usize("zo-epochs")?.unwrap(),
+        bp_epochs: a.get_usize("bp-epochs")?.unwrap(),
+        noise: NoiseConfig::default_chip().scaled(a.get_f64("noise-scale")?.unwrap()),
+        chip_seed: a.get_u64("chip-seed")?.unwrap(),
+        aware_seed: a.get_u64("chip-seed")?.unwrap() ^ 0xAA,
+        seed: a.get_u64("seed")?.unwrap(),
+        verbose: !a.get_bool("quiet"),
+    };
+    let runner = Table1Runner { rt: &rt, cfg };
+    let mut t = Table::new(
+        "Table 1 (reproduction)",
+        &["Network", "Params(Φ)", "Off. w/o noise", "Off. w/ noise", "On. w/ noise (proposed)"],
+    );
+    for preset in ["onn_small", "tonn_small"] {
+        if rt.manifest.preset(preset).is_err() {
+            continue;
+        }
+        let row = runner.run_preset(preset)?;
+        t.row(&[
+            row.network.clone(),
+            row.params.to_string(),
+            format!("{} ({})", sci(row.off_no_noise.0 as f64), sci(row.off_no_noise.1 as f64)),
+            format!("{} ({})", sci(row.off_with_noise.0 as f64), sci(row.off_with_noise.1 as f64)),
+            sci(row.on_with_noise as f64),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_hardware(argv: Vec<String>) -> Result<()> {
+    let _a = args_for("hardware").parse(argv)?;
+    let model = PerfModel::default();
+    let mut t = Table::new(
+        "Table 2 (reproduction)",
+        &["Network", "Params", "# of MZIs", "Energy/inf (J)", "Latency/inf (ns)", "Footprint (mm^2)"],
+    );
+    for (design, dims) in [
+        (Design::Onn, NetworkDims::paper_onn()),
+        (Design::Tonn1, NetworkDims::paper_tonn()),
+        (Design::Tonn2, NetworkDims::paper_tonn()),
+    ] {
+        let r = model.report(design, &dims);
+        t.row(&[
+            r.design.to_string(),
+            sci(r.params as f64),
+            sci(r.mzis as f64),
+            r.energy_per_inference_j.map(sci).unwrap_or_else(|| "- (loss budget exceeded)".into()),
+            format!("{:.0}", r.latency_per_inference_ns),
+            sci(r.footprint_mm2),
+        ]);
+    }
+    t.print();
+
+    let te = TrainingEfficiency::paper();
+    let dims = NetworkDims::paper_tonn();
+    let e_inf = model.energy_j(Design::Tonn1, &dims).unwrap();
+    let t_inf = model.latency_ns(Design::Tonn1, &dims);
+    let (e_tot, t_tot) = te.totals(e_inf, t_inf);
+    println!(
+        "\nTraining efficiency (TONN-1, paper §4.2): {} inf/epoch, {} J/epoch, {} s/epoch;\n\
+         {} epochs -> {:.2} J and {:.2} s to solve the 20-dim HJB PDE \
+         (paper: 1.36 J, 1.15 s)",
+        te.inferences_per_epoch(),
+        sci(te.energy_per_epoch_j(e_inf)),
+        sci(te.latency_per_epoch_s(t_inf)),
+        te.epochs,
+        e_tot,
+        t_tot
+    );
+    Ok(())
+}

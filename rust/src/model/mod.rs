@@ -1,0 +1,263 @@
+//! Flat parameter-vector layout + preset metadata, mirrored from
+//! `artifacts/manifest.json` (the contract with `python/compile/mesh.py`).
+//!
+//! The coordinator treats the model as an opaque Φ ∈ R^d plus this layout:
+//! segment *kinds* drive the hardware-noise model, init *hints* drive the
+//! (rust-side) parameter initialization — identical distributions to the
+//! python `mesh.init_vector` used in tests.
+
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// What a parameter segment physically is on the chip.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SegmentKind {
+    /// MZI rotation angles (phase-domain; full noise path)
+    Angles,
+    /// singular amplitudes of an SVD block (attenuation levels)
+    Sigma,
+    /// modulator-row weights / biases
+    Weights,
+}
+
+impl SegmentKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "angles" => Ok(SegmentKind::Angles),
+            "sigma" => Ok(SegmentKind::Sigma),
+            "weights" => Ok(SegmentKind::Weights),
+            other => anyhow::bail!("unknown segment kind '{other}'"),
+        }
+    }
+}
+
+/// Initialization distribution hint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitHint {
+    Uniform { lo: f64, hi: f64 },
+    Const { val: f64 },
+    Normal { std: f64 },
+}
+
+impl InitHint {
+    pub fn parse(v: &Value) -> anyhow::Result<Self> {
+        let dist = v
+            .req("dist")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("init.dist must be a string"))?;
+        match dist {
+            "uniform" => Ok(InitHint::Uniform {
+                lo: v.req("lo")?.as_f64().unwrap_or(0.0),
+                hi: v.req("hi")?.as_f64().unwrap_or(0.0),
+            }),
+            "const" => Ok(InitHint::Const {
+                val: v.req("val")?.as_f64().unwrap_or(0.0),
+            }),
+            "normal" => Ok(InitHint::Normal {
+                std: v.req("std")?.as_f64().unwrap_or(0.0),
+            }),
+            other => anyhow::bail!("unknown init dist '{other}'"),
+        }
+    }
+}
+
+/// One named span of the flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    pub name: String,
+    pub kind: SegmentKind,
+    pub offset: usize,
+    pub len: usize,
+    pub init: InitHint,
+}
+
+/// The full layout of Φ.
+#[derive(Clone, Debug)]
+pub struct Layout {
+    pub param_dim: usize,
+    pub segments: Vec<Segment>,
+}
+
+impl Layout {
+    /// Parse from the manifest's `segments` array + `param_dim`.
+    pub fn parse(param_dim: usize, segments: &Value) -> anyhow::Result<Self> {
+        let arr = segments
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("segments must be an array"))?;
+        let mut segs = Vec::with_capacity(arr.len());
+        let mut expected_offset = 0usize;
+        for v in arr {
+            let seg = Segment {
+                name: v
+                    .req("name")?
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("segment name"))?
+                    .to_string(),
+                kind: SegmentKind::parse(
+                    v.req("kind")?.as_str().unwrap_or_default(),
+                )?,
+                offset: v.req("offset")?.as_usize().unwrap_or(0),
+                len: v.req("len")?.as_usize().unwrap_or(0),
+                init: InitHint::parse(v.req("init")?)?,
+            };
+            if seg.offset != expected_offset {
+                anyhow::bail!(
+                    "segment '{}' offset {} != expected {} (gaps/overlaps)",
+                    seg.name, seg.offset, expected_offset
+                );
+            }
+            expected_offset += seg.len;
+            segs.push(seg);
+        }
+        if expected_offset != param_dim {
+            anyhow::bail!("segments cover {expected_offset} of {param_dim} params");
+        }
+        Ok(Layout {
+            param_dim,
+            segments: segs,
+        })
+    }
+
+    /// Sample an initial Φ (same distributions as python's init_vector).
+    pub fn init_vector(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.param_dim];
+        for seg in &self.segments {
+            let span = &mut out[seg.offset..seg.offset + seg.len];
+            match seg.init {
+                InitHint::Uniform { lo, hi } => {
+                    for v in span.iter_mut() {
+                        *v = rng.uniform(lo, hi) as f32;
+                    }
+                }
+                InitHint::Const { val } => span.fill(val as f32),
+                InitHint::Normal { std } => {
+                    for v in span.iter_mut() {
+                        *v = rng.normal_scaled(0.0, std) as f32;
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Count of parameters of a given kind (noise bookkeeping / reports).
+    pub fn count_kind(&self, kind: SegmentKind) -> usize {
+        self.segments
+            .iter()
+            .filter(|s| s.kind == kind)
+            .map(|s| s.len)
+            .sum()
+    }
+}
+
+/// Training hyperparameters (manifest `hyper` block + CLI overrides).
+#[derive(Clone, Debug)]
+pub struct Hyper {
+    pub fd_h: f64,
+    pub spsa_mu: f64,
+    pub spsa_n: usize,
+    pub lr: f64,
+    pub lr_decay: f64,
+    pub lr_decay_every: usize,
+    pub epochs: usize,
+    pub batch: usize,
+    pub k_multi: usize,
+}
+
+impl Hyper {
+    pub fn parse(v: &Value) -> anyhow::Result<Self> {
+        let f = |k: &str| -> anyhow::Result<f64> {
+            v.req(k)?
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("hyper.{k} must be a number"))
+        };
+        Ok(Hyper {
+            fd_h: f("fd_h")?,
+            spsa_mu: f("spsa_mu")?,
+            spsa_n: f("spsa_n")? as usize,
+            lr: f("lr")?,
+            lr_decay: f("lr_decay")?,
+            lr_decay_every: f("lr_decay_every")? as usize,
+            epochs: f("epochs")? as usize,
+            batch: f("batch")? as usize,
+            k_multi: f("k_multi")? as usize,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    fn seg_json() -> Value {
+        json::parse(
+            r#"[
+            {"name":"m","kind":"angles","offset":0,"len":6,
+             "init":{"dist":"uniform","lo":-1.0,"hi":1.0}},
+            {"name":"s","kind":"sigma","offset":6,"len":2,
+             "init":{"dist":"const","val":0.3}},
+            {"name":"w","kind":"weights","offset":8,"len":4,
+             "init":{"dist":"normal","std":0.5}}
+        ]"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_layout() {
+        let l = Layout::parse(12, &seg_json()).unwrap();
+        assert_eq!(l.segments.len(), 3);
+        assert_eq!(l.count_kind(SegmentKind::Angles), 6);
+        assert_eq!(l.count_kind(SegmentKind::Sigma), 2);
+        assert_eq!(l.count_kind(SegmentKind::Weights), 4);
+    }
+
+    #[test]
+    fn rejects_gap() {
+        let v = json::parse(
+            r#"[{"name":"m","kind":"angles","offset":3,"len":6,
+                 "init":{"dist":"const","val":0}}]"#,
+        )
+        .unwrap();
+        assert!(Layout::parse(9, &v).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_total() {
+        assert!(Layout::parse(13, &seg_json()).is_err());
+    }
+
+    #[test]
+    fn init_vector_distributions() {
+        let l = Layout::parse(12, &seg_json()).unwrap();
+        let mut rng = Rng::new(0);
+        let v = l.init_vector(&mut rng);
+        assert!(v[..6].iter().all(|&x| (-1.0..1.0).contains(&x)));
+        assert!(v[6..8].iter().all(|&x| x == 0.3));
+        assert!(v[8..].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn init_deterministic() {
+        let l = Layout::parse(12, &seg_json()).unwrap();
+        let a = l.init_vector(&mut Rng::new(9));
+        let b = l.init_vector(&mut Rng::new(9));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn hyper_parse() {
+        let v = json::parse(
+            r#"{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":10,"lr":0.02,
+                "lr_decay":0.3,"lr_decay_every":600,"epochs":1500,
+                "batch":100,"k_multi":11,
+                "stein_sigma":0.05,"stein_q":20}"#,
+        )
+        .unwrap();
+        let h = Hyper::parse(&v).unwrap();
+        assert_eq!(h.spsa_n, 10);
+        assert_eq!(h.epochs, 1500);
+        assert!((h.lr - 0.02).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,253 @@
+//! Optimizers of the digital control system.
+//!
+//! * [`Spsa`] — the paper's Eq. (5) zeroth-order gradient estimator:
+//!   `ĝ = (1/Nμ) Σ [L(Φ+μξ_i) − L(Φ)] ξ_i`, ξ ~ N(0, I).
+//! * [`ZoSignSgd`] — Eq. (6): `Φ ← Φ − α·sign(ĝ)` (ZO-signSGD
+//!   de-noising), with a step-decay schedule.
+//! * [`Adam`] — for the *off-chip* BP baseline trainer.
+
+use crate::util::rng::Rng;
+
+/// SPSA perturbation batch + gradient estimator (paper Eq. 5).
+pub struct Spsa {
+    /// sampling radius μ
+    pub mu: f64,
+    /// number of perturbations N
+    pub n: usize,
+}
+
+impl Spsa {
+    pub fn new(mu: f64, n: usize) -> Self {
+        assert!(mu > 0.0 && n > 0);
+        Spsa { mu, n }
+    }
+
+    /// Sample N gaussian perturbations; returns a flat (N, d) buffer.
+    pub fn sample_perturbations(&self, d: usize, rng: &mut Rng, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(self.n * d, 0.0);
+        rng.fill_normal(out);
+    }
+
+    /// Build the K = N+1 phase settings [Φ; Φ+μξ_1; ...; Φ+μξ_N] that the
+    /// `loss_multi` artifact consumes, into a flat (N+1, d) buffer.
+    pub fn build_settings(&self, phi: &[f32], xi: &[f32], out: &mut Vec<f32>) {
+        let d = phi.len();
+        assert_eq!(xi.len(), self.n * d);
+        out.clear();
+        out.reserve((self.n + 1) * d);
+        out.extend_from_slice(phi);
+        let mu = self.mu as f32;
+        for i in 0..self.n {
+            let row = &xi[i * d..(i + 1) * d];
+            out.extend(phi.iter().zip(row).map(|(p, x)| p + mu * x));
+        }
+    }
+
+    /// Gradient estimate from the K losses [L(Φ), L(Φ+μξ_1), ...].
+    pub fn estimate(&self, losses: &[f32], xi: &[f32], grad: &mut Vec<f32>) {
+        assert_eq!(losses.len(), self.n + 1);
+        let d = xi.len() / self.n;
+        grad.clear();
+        grad.resize(d, 0.0);
+        let l0 = losses[0];
+        let scale = 1.0 / (self.n as f32 * self.mu as f32);
+        for i in 0..self.n {
+            let w = (losses[i + 1] - l0) * scale;
+            let row = &xi[i * d..(i + 1) * d];
+            for (g, x) in grad.iter_mut().zip(row) {
+                *g += w * x;
+            }
+        }
+    }
+}
+
+/// Step-decay learning-rate schedule: `lr · decay^(epoch / every)`.
+#[derive(Clone, Debug)]
+pub struct LrSchedule {
+    pub base: f64,
+    pub decay: f64,
+    pub every: usize,
+}
+
+impl LrSchedule {
+    pub fn at(&self, epoch: usize) -> f64 {
+        if self.every == 0 {
+            return self.base;
+        }
+        self.base * self.decay.powi((epoch / self.every) as i32)
+    }
+}
+
+/// ZO-signSGD update (paper Eq. 6).
+pub struct ZoSignSgd {
+    pub schedule: LrSchedule,
+}
+
+impl ZoSignSgd {
+    pub fn step(&self, phi: &mut [f32], grad: &[f32], epoch: usize) {
+        let lr = self.schedule.at(epoch) as f32;
+        for (p, g) in phi.iter_mut().zip(grad) {
+            // sign(0) = 0: no update where the estimator is silent
+            *p -= lr * g.signum() * (if *g == 0.0 { 0.0 } else { 1.0 });
+        }
+    }
+}
+
+/// Plain SGD on the raw SPSA estimate (ablation: sign vs no-sign).
+pub struct ZoSgd {
+    pub schedule: LrSchedule,
+}
+
+impl ZoSgd {
+    pub fn step(&self, phi: &mut [f32], grad: &[f32], epoch: usize) {
+        let lr = self.schedule.at(epoch) as f32;
+        for (p, g) in phi.iter_mut().zip(grad) {
+            *p -= lr * g;
+        }
+    }
+}
+
+/// Adam (off-chip BP baseline).
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl Adam {
+    pub fn new(d: usize, lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            t: 0,
+        }
+    }
+
+    pub fn step(&mut self, phi: &mut [f32], grad: &[f32]) {
+        self.t += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - (self.beta1.powi(self.t as i32)) as f32;
+        let bc2 = 1.0 - (self.beta2.powi(self.t as i32)) as f32;
+        let lr = self.lr as f32;
+        let eps = self.eps as f32;
+        for i in 0..phi.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * grad[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * grad[i] * grad[i];
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            phi[i] -= lr * mh / (vh.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// L(x) = ||x - c||^2 — convex test objective.
+    fn quad(c: &[f32]) -> impl Fn(&[f32]) -> f32 + '_ {
+        move |x: &[f32]| x.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum()
+    }
+
+    #[test]
+    fn spsa_settings_layout() {
+        let s = Spsa::new(0.1, 2);
+        let phi = vec![1.0f32, 2.0];
+        let xi = vec![1.0f32, 0.0, 0.0, 1.0];
+        let mut out = Vec::new();
+        s.build_settings(&phi, &xi, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 1.1, 2.0, 1.0, 2.1]);
+    }
+
+    #[test]
+    fn spsa_estimates_quadratic_gradient() {
+        // E[ĝ] = ∇L for quadratics up to O(μ) bias; with many samples the
+        // direction must align
+        let c = vec![0.5f32, -1.0, 2.0, 0.0];
+        let loss = quad(&c);
+        let phi = vec![1.0f32, 1.0, 1.0, 1.0];
+        let s = Spsa::new(0.01, 512);
+        let mut rng = Rng::new(1);
+        let mut xi = Vec::new();
+        s.sample_perturbations(4, &mut rng, &mut xi);
+        let mut settings = Vec::new();
+        s.build_settings(&phi, &xi, &mut settings);
+        let losses: Vec<f32> = (0..=s.n)
+            .map(|k| loss(&settings[k * 4..(k + 1) * 4]))
+            .collect();
+        let mut g = Vec::new();
+        s.estimate(&losses, &xi, &mut g);
+        let true_g: Vec<f32> = phi.iter().zip(&c).map(|(p, c)| 2.0 * (p - c)).collect();
+        let dot: f32 = g.iter().zip(&true_g).map(|(a, b)| a * b).sum();
+        let ng: f32 = g.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let nt: f32 = true_g.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let cos = dot / (ng * nt);
+        assert!(cos > 0.9, "cos={cos}");
+    }
+
+    #[test]
+    fn zo_signsgd_converges_on_quadratic() {
+        let c = vec![0.3f32, -0.7, 1.5, 0.0, 0.9];
+        let loss = quad(&c);
+        let mut phi = vec![0.0f32; 5];
+        let spsa = Spsa::new(0.05, 8);
+        let opt = ZoSignSgd {
+            schedule: LrSchedule { base: 0.05, decay: 0.5, every: 100 },
+        };
+        let mut rng = Rng::new(2);
+        let (mut xi, mut settings, mut g) = (Vec::new(), Vec::new(), Vec::new());
+        for epoch in 0..400 {
+            spsa.sample_perturbations(5, &mut rng, &mut xi);
+            spsa.build_settings(&phi, &xi, &mut settings);
+            let losses: Vec<f32> = (0..=spsa.n)
+                .map(|k| loss(&settings[k * 5..(k + 1) * 5]))
+                .collect();
+            spsa.estimate(&losses, &xi, &mut g);
+            opt.step(&mut phi, &g, epoch);
+        }
+        assert!(loss(&phi) < 0.01, "final loss {}", loss(&phi));
+    }
+
+    #[test]
+    fn lr_schedule_decays() {
+        let s = LrSchedule { base: 0.1, decay: 0.5, every: 10 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(9), 0.1);
+        assert!((s.at(10) - 0.05).abs() < 1e-12);
+        assert!((s.at(25) - 0.025).abs() < 1e-12);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        let c = vec![1.0f32, -2.0, 0.5];
+        let mut phi = vec![0.0f32; 3];
+        let mut adam = Adam::new(3, 0.05);
+        for _ in 0..500 {
+            let g: Vec<f32> = phi.iter().zip(&c).map(|(p, c)| 2.0 * (p - c)).collect();
+            adam.step(&mut phi, &g);
+        }
+        for (p, c) in phi.iter().zip(&c) {
+            assert!((p - c).abs() < 0.01, "{p} vs {c}");
+        }
+    }
+
+    #[test]
+    fn sign_update_magnitude_is_lr() {
+        let opt = ZoSignSgd {
+            schedule: LrSchedule { base: 0.1, decay: 1.0, every: 0 },
+        };
+        let mut phi = vec![0.0f32; 3];
+        opt.step(&mut phi, &[0.5, -2.0, 0.0], 0);
+        assert_eq!(phi, vec![-0.1, 0.1, 0.0]);
+    }
+}

@@ -1,0 +1,181 @@
+//! PDE descriptors on the rust side: domains, exact solutions, and
+//! collocation/validation samplers.
+//!
+//! Mirrors `python/compile/pdes.py` — the exact solutions are re-implemented
+//! here (not imported) so validation data generation is independent of the
+//! artifacts under test, and so the solver service can score solutions
+//! without python.
+
+use crate::util::rng::Rng;
+
+/// Which PDE a preset solves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pde {
+    /// 20-dim HJB (paper Eq. 7); input (x_1..x_20, t)
+    Hjb20,
+    /// 2-D Poisson, zero Dirichlet; input (x, y)
+    Poisson2,
+    /// 2-D heat; input (x, y, t)
+    Heat2,
+}
+
+impl Pde {
+    pub fn parse(name: &str) -> anyhow::Result<Self> {
+        match name {
+            "hjb20" => Ok(Pde::Hjb20),
+            "poisson2" => Ok(Pde::Poisson2),
+            "heat2" => Ok(Pde::Heat2),
+            other => anyhow::bail!("unknown pde '{other}'"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Pde::Hjb20 => "hjb20",
+            Pde::Poisson2 => "poisson2",
+            Pde::Heat2 => "heat2",
+        }
+    }
+
+    /// Network input dimension (spatial dims + time if present).
+    pub fn in_dim(&self) -> usize {
+        match self {
+            Pde::Hjb20 => 21,
+            Pde::Poisson2 => 2,
+            Pde::Heat2 => 3,
+        }
+    }
+
+    /// Spatial dimension.
+    pub fn dim(&self) -> usize {
+        match self {
+            Pde::Hjb20 => 20,
+            Pde::Poisson2 | Pde::Heat2 => 2,
+        }
+    }
+
+    /// FD stencil size = inferences per collocation point (42 for HJB —
+    /// the paper's §4.2 census).
+    pub fn n_stencil(&self) -> usize {
+        match self {
+            Pde::Hjb20 => 42,
+            Pde::Poisson2 => 5,
+            Pde::Heat2 => 6,
+        }
+    }
+
+    /// Exact solution at one input point (for validation data).
+    pub fn exact(&self, x: &[f32]) -> f32 {
+        match self {
+            Pde::Hjb20 => {
+                let l1: f32 = x[..20].iter().map(|v| v.abs()).sum();
+                l1 + 1.0 - x[20]
+            }
+            Pde::Poisson2 => {
+                (std::f32::consts::PI * x[0]).sin() * (std::f32::consts::PI * x[1]).sin()
+            }
+            Pde::Heat2 => {
+                let alpha = 0.1f32;
+                let pi = std::f32::consts::PI;
+                (-2.0 * pi * pi * alpha * x[2]).exp() * (pi * x[0]).sin() * (pi * x[1]).sin()
+            }
+        }
+    }
+}
+
+/// Uniform collocation sampler over [0,1]^in_dim, batched row-major.
+pub struct Sampler {
+    pub pde: Pde,
+    rng: Rng,
+}
+
+impl Sampler {
+    pub fn new(pde: Pde, seed: u64) -> Self {
+        Sampler {
+            pde,
+            rng: Rng::new(seed ^ 0x5A3C_71B2),
+        }
+    }
+
+    /// Sample `n` collocation points into a flat (n, in_dim) buffer.
+    pub fn batch(&mut self, n: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(n * self.pde.in_dim());
+        for _ in 0..n * self.pde.in_dim() {
+            out.push(self.rng.f32());
+        }
+    }
+
+    /// Validation set: points + exact values.
+    pub fn validation(&mut self, n: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut pts = Vec::new();
+        self.batch(n, &mut pts);
+        let d = self.pde.in_dim();
+        let vals = (0..n).map(|i| self.pde.exact(&pts[i * d..(i + 1) * d])).collect();
+        (pts, vals)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [Pde::Hjb20, Pde::Poisson2, Pde::Heat2] {
+            assert_eq!(Pde::parse(p.name()).unwrap(), p);
+        }
+        assert!(Pde::parse("nope").is_err());
+    }
+
+    #[test]
+    fn hjb_exact_values() {
+        let mut x = vec![0.5f32; 21];
+        x[20] = 0.25; // t
+        // ||x||_1 = 10, u = 10 + 1 - 0.25
+        assert!((Pde::Hjb20.exact(&x) - 10.75).abs() < 1e-5);
+    }
+
+    #[test]
+    fn poisson_exact_peak_and_boundary() {
+        assert!((Pde::Poisson2.exact(&[0.5, 0.5]) - 1.0).abs() < 1e-6);
+        assert!(Pde::Poisson2.exact(&[0.0, 0.7]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn heat_exact_decays() {
+        let u0 = Pde::Heat2.exact(&[0.5, 0.5, 0.0]);
+        let u1 = Pde::Heat2.exact(&[0.5, 0.5, 1.0]);
+        assert!(u0 > u1 && u1 > 0.0);
+        assert!((u0 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stencil_census_matches_paper() {
+        assert_eq!(Pde::Hjb20.n_stencil(), 42); // "42 inferences" (§4.2)
+        assert_eq!(Pde::Hjb20.n_stencil(), 2 * Pde::Hjb20.dim() + 2);
+    }
+
+    #[test]
+    fn sampler_bounds_shape_determinism() {
+        let mut s1 = Sampler::new(Pde::Hjb20, 7);
+        let mut s2 = Sampler::new(Pde::Hjb20, 7);
+        let mut b1 = Vec::new();
+        let mut b2 = Vec::new();
+        s1.batch(50, &mut b1);
+        s2.batch(50, &mut b2);
+        assert_eq!(b1.len(), 50 * 21);
+        assert_eq!(b1, b2);
+        assert!(b1.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn validation_values_match_exact() {
+        let mut s = Sampler::new(Pde::Poisson2, 3);
+        let (pts, vals) = s.validation(20);
+        for i in 0..20 {
+            let expect = Pde::Poisson2.exact(&pts[i * 2..i * 2 + 2]);
+            assert_eq!(vals[i], expect);
+        }
+    }
+}

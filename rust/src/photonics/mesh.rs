@@ -1,0 +1,187 @@
+//! Clements-mesh structure: stage/pair layout, MZI census, and a rust-side
+//! mesh application (the independent oracle for the artifacts' numerics).
+//!
+//! Convention (shared bit-for-bit with `python/compile/mesh.py`): a mesh
+//! over `n` (even) channels has `n` stages; even stages rotate pairs
+//! `(0,1),(2,3),...`; odd stages rotate `(1,2),(3,4),...` (channels 0 and
+//! n-1 pass through). Angles are stored *flat*, stage-major, skipping the
+//! odd-stage pad slot — exactly `n(n-1)/2` angles, one per MZI.
+
+/// Number of MZIs (= flat angles) in a depth-n Clements mesh.
+pub fn mzi_count(n: usize) -> usize {
+    assert!(n >= 2 && n % 2 == 0, "mesh size must be even >= 2, got {n}");
+    n * (n - 1) / 2
+}
+
+/// Clements mesh depth in stages (optical path length driver).
+pub fn depth(n: usize) -> usize {
+    n
+}
+
+/// Iterate the (stage, channel_lo) positions of every MZI, flat order.
+pub fn mzi_positions(n: usize) -> Vec<(usize, usize)> {
+    let m = n / 2;
+    let mut out = Vec::with_capacity(mzi_count(n));
+    for s in 0..n {
+        let (start, count) = if s % 2 == 0 { (0, m) } else { (1, m - 1) };
+        for j in 0..count {
+            out.push((s, start + 2 * j));
+        }
+    }
+    out
+}
+
+/// Apply the mesh to a vector: `y = U x` with `U = S_{n-1}...S_0`.
+///
+/// `theta`: flat angles (stage-major). `reverse` applies `U^T`.
+pub fn apply(theta: &[f32], x: &[f32], reverse: bool) -> Vec<f32> {
+    let n = x.len();
+    assert_eq!(theta.len(), mzi_count(n), "angle count mismatch");
+    let pos = mzi_positions(n);
+    let mut y = x.to_vec();
+    let rotate = |y: &mut Vec<f32>, lo: usize, ang: f32| {
+        let (c, s) = (ang.cos(), ang.sin());
+        let (a, b) = (y[lo], y[lo + 1]);
+        y[lo] = c * a - s * b;
+        y[lo + 1] = s * a + c * b;
+    };
+    if reverse {
+        for (k, &(_, lo)) in pos.iter().enumerate().rev() {
+            rotate(&mut y, lo, -theta[k]);
+        }
+    } else {
+        for (k, &(_, lo)) in pos.iter().enumerate() {
+            rotate(&mut y, lo, theta[k]);
+        }
+    }
+    y
+}
+
+/// Materialize the (n, n) orthogonal mesh matrix.
+pub fn unitary(theta: &[f32], n: usize) -> crate::tensor::Mat {
+    let mut u = crate::tensor::Mat::zeros(n, n);
+    for j in 0..n {
+        let mut e = vec![0.0f32; n];
+        e[j] = 1.0;
+        let col = apply(theta, &e, false);
+        for i in 0..n {
+            u.set(i, j, col[i]);
+        }
+    }
+    u
+}
+
+/// Build `W (m x n) = U[:, :k] · diag(sigma) · V[:, :k]^T` from flat
+/// angle segments — the rust mirror of `mesh.svd_matrix`.
+pub fn svd_matrix(theta_u: &[f32], sigma: &[f32], theta_v: &[f32], m: usize, n: usize) -> crate::tensor::Mat {
+    let k = m.min(n);
+    assert_eq!(sigma.len(), k);
+    let u = unitary(theta_u, m);
+    let v = unitary(theta_v, n);
+    let mut w = crate::tensor::Mat::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for (l, &s) in sigma.iter().enumerate() {
+                acc += u.at(i, l) * s * v.at(j, l);
+            }
+            w.set(i, j, acc);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn census_matches_formula() {
+        assert_eq!(mzi_count(4), 6);
+        assert_eq!(mzi_count(8), 28);
+        assert_eq!(mzi_count(64), 2016);
+        assert_eq!(mzi_count(1024), 523_776);
+    }
+
+    #[test]
+    fn positions_count_and_bounds() {
+        for n in [4usize, 8, 16] {
+            let pos = mzi_positions(n);
+            assert_eq!(pos.len(), mzi_count(n));
+            for &(s, lo) in &pos {
+                assert!(s < n);
+                assert!(lo + 1 < n);
+                // parity discipline
+                assert_eq!(lo % 2, s % 2);
+            }
+        }
+    }
+
+    #[test]
+    fn apply_preserves_norm() {
+        prop::check(25, |r| {
+            let n = [4usize, 8, 16][r.below(3)];
+            let mut theta = vec![0.0f32; mzi_count(n)];
+            r.fill_uniform(&mut theta, -3.14, 3.14);
+            let mut x = vec![0.0f32; n];
+            r.fill_normal(&mut x);
+            let y = apply(&theta, &x, false);
+            let nx: f32 = x.iter().map(|v| v * v).sum();
+            let ny: f32 = y.iter().map(|v| v * v).sum();
+            assert!((nx.sqrt() - ny.sqrt()).abs() < 1e-3, "{nx} vs {ny}");
+        });
+    }
+
+    #[test]
+    fn reverse_inverts() {
+        prop::check(25, |r| {
+            let n = 8;
+            let mut theta = vec![0.0f32; mzi_count(n)];
+            r.fill_uniform(&mut theta, -3.14, 3.14);
+            let mut x = vec![0.0f32; n];
+            r.fill_normal(&mut x);
+            let y = apply(&theta, &x, false);
+            let back = apply(&theta, &y, true);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn unitary_is_orthogonal() {
+        let mut r = Rng::new(2);
+        let n = 16;
+        let mut theta = vec![0.0f32; mzi_count(n)];
+        r.fill_uniform(&mut theta, -3.14, 3.14);
+        let u = unitary(&theta, n);
+        let id = u.matmul(&u.transpose());
+        assert!(id.max_abs_diff(&crate::tensor::Mat::eye(n)) < 1e-4);
+    }
+
+    #[test]
+    fn zero_angles_identity() {
+        let n = 8;
+        let theta = vec![0.0f32; mzi_count(n)];
+        let u = unitary(&theta, n);
+        assert!(u.max_abs_diff(&crate::tensor::Mat::eye(n)) < 1e-7);
+    }
+
+    #[test]
+    fn svd_matrix_singular_values() {
+        let mut r = Rng::new(3);
+        let (m, n) = (4usize, 8usize);
+        let mut tu = vec![0.0f32; mzi_count(m)];
+        let mut tv = vec![0.0f32; mzi_count(n)];
+        r.fill_uniform(&mut tu, -3.0, 3.0);
+        r.fill_uniform(&mut tv, -3.0, 3.0);
+        let sigma: Vec<f32> = (0..m).map(|i| 0.5 + 0.25 * i as f32).collect();
+        let w = svd_matrix(&tu, &sigma, &tv, m, n);
+        // W W^T has eigenvalues sigma^2 -> check trace and Frobenius norm
+        let wwt = w.matmul(&w.transpose());
+        let trace: f32 = (0..m).map(|i| wwt.at(i, i)).sum();
+        let expect: f32 = sigma.iter().map(|s| s * s).sum();
+        assert!((trace - expect).abs() < 1e-3, "{trace} vs {expect}");
+    }
+}

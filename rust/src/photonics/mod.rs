@@ -1,0 +1,8 @@
+//! Photonic hardware model: MZI meshes, fabrication/thermal noise, device
+//! constants, and the energy/latency/footprint model behind the paper's
+//! Table 2 and §4.2 training-efficiency numbers.
+
+pub mod devices;
+pub mod mesh;
+pub mod noise;
+pub mod perf;

@@ -1,0 +1,381 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the rust hot path. This module *is* the "photonic chip" of the
+//! simulation — everything it can compute is a forward pass of the
+//! lowered model (no autodiff exists in the on-chip artifacts).
+//!
+//! Flow: `manifest.json` -> [`Manifest`] -> [`Runtime::load`] (compile
+//! each HLO once, cache the executable) -> [`Executable::run`] with flat
+//! f32 buffers.
+//!
+//! The interchange format is HLO **text** (jax >= 0.5 serialized protos
+//! use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids — /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::model::{Hyper, Layout};
+use crate::pde::Pde;
+use crate::util::json::{self, Value};
+
+/// I/O shape of one artifact entry point.
+#[derive(Clone, Debug)]
+pub struct EntryMeta {
+    pub name: String,
+    pub file: String,
+    /// input shapes, row-major (empty shape = scalar)
+    pub inputs: Vec<(String, Vec<usize>)>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl EntryMeta {
+    pub fn input_len(&self, i: usize) -> usize {
+        self.inputs[i].1.iter().product()
+    }
+
+    pub fn output_len(&self, i: usize) -> usize {
+        self.outputs[i].iter().product()
+    }
+}
+
+/// One preset (network x PDE bundle) from the manifest.
+#[derive(Clone, Debug)]
+pub struct PresetMeta {
+    pub name: String,
+    pub pde: Pde,
+    pub layout: Layout,
+    pub hyper: Hyper,
+    pub entries: HashMap<String, EntryMeta>,
+    /// raw arch block (factors/ranks/hidden) for the photonics census
+    pub arch: Value,
+}
+
+/// Parsed manifest.json.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub presets: HashMap<String, PresetMeta>,
+    pub k_multi: usize,
+    pub b_forward: usize,
+    pub b_residual: usize,
+    pub b_validate: usize,
+}
+
+fn parse_shape(v: &Value) -> Result<Vec<usize>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("shape must be an array"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("shape dim")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let root = json::parse_file(&dir.join("manifest.json"))?;
+        let bs = root.req("batch_shapes").map_err(|e| anyhow!("{e}"))?;
+        let presets_v = root.req("presets").map_err(|e| anyhow!("{e}"))?;
+        let mut presets = HashMap::new();
+        for (pname, pv) in presets_v.as_obj().unwrap_or(&[]) {
+            let pde = Pde::parse(
+                pv.req("pde")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .req("name")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_str()
+                    .unwrap_or_default(),
+            )?;
+            let param_dim = pv
+                .req("param_dim")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("param_dim"))?;
+            let layout = Layout::parse(
+                param_dim,
+                pv.req("segments").map_err(|e| anyhow!("{e}"))?,
+            )
+            .with_context(|| format!("preset {pname}"))?;
+            let hyper = Hyper::parse(pv.req("hyper").map_err(|e| anyhow!("{e}"))?)?;
+            let mut entries = HashMap::new();
+            for (ename, ev) in pv
+                .req("entries")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_obj()
+                .unwrap_or(&[])
+            {
+                let inputs = ev
+                    .req("inputs")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|iv| {
+                        Ok((
+                            iv.req("name")
+                                .map_err(|e| anyhow!("{e}"))?
+                                .as_str()
+                                .unwrap_or_default()
+                                .to_string(),
+                            parse_shape(iv.req("shape").map_err(|e| anyhow!("{e}"))?)?,
+                        ))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let outputs = ev
+                    .req("outputs")
+                    .map_err(|e| anyhow!("{e}"))?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|ov| parse_shape(ov.req("shape").map_err(|e| anyhow!("{e}"))?))
+                    .collect::<Result<Vec<_>>>()?;
+                entries.insert(
+                    ename.clone(),
+                    EntryMeta {
+                        name: ename.clone(),
+                        file: ev
+                            .req("file")
+                            .map_err(|e| anyhow!("{e}"))?
+                            .as_str()
+                            .unwrap_or_default()
+                            .to_string(),
+                        inputs,
+                        outputs,
+                    },
+                );
+            }
+            presets.insert(
+                pname.clone(),
+                PresetMeta {
+                    name: pname.clone(),
+                    pde,
+                    layout,
+                    hyper,
+                    entries,
+                    arch: pv.req("arch").map_err(|e| anyhow!("{e}"))?.clone(),
+                },
+            );
+        }
+        let get_bs = |k: &str| -> Result<usize> {
+            bs.req(k)
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("batch_shapes.{k}"))
+        };
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            presets,
+            k_multi: get_bs("k_multi")?,
+            b_forward: get_bs("forward")?,
+            b_residual: get_bs("residual")?,
+            b_validate: get_bs("validate")?,
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetMeta> {
+        self.presets.get(name).ok_or_else(|| {
+            let mut names: Vec<_> = self.presets.keys().cloned().collect();
+            names.sort();
+            anyhow!("unknown preset '{name}' (have: {})", names.join(", "))
+        })
+    }
+}
+
+/// A compiled artifact entry point.
+pub struct Executable {
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// dispatch counter (metrics / perf accounting)
+    pub dispatches: std::sync::atomic::AtomicU64,
+}
+
+impl Executable {
+    /// Execute with flat f32 input buffers (shapes from the manifest).
+    /// Returns one flat f32 vector per output.
+    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.meta.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.meta.name,
+            self.meta.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, buf) in inputs.iter().enumerate() {
+            let (name, shape) = &self.meta.inputs[i];
+            let want: usize = shape.iter().product();
+            anyhow::ensure!(
+                buf.len() == want,
+                "{}: input '{}' expects {:?} = {} elems, got {}",
+                self.meta.name,
+                name,
+                shape,
+                want,
+                buf.len()
+            );
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(if shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {name}: {e:?}"))?
+            });
+        }
+        self.dispatches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.meta.name))?;
+        // entries are lowered with return_tuple=True
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.meta.name))?;
+        anyhow::ensure!(
+            parts.len() == self.meta.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.meta.name,
+            self.meta.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output: {e:?}")))
+            .collect()
+    }
+
+    /// Single-output convenience.
+    pub fn run1(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        let mut out = self.run(inputs)?;
+        anyhow::ensure!(out.len() == 1, "{}: multi-output", self.meta.name);
+        Ok(out.pop().unwrap())
+    }
+
+    /// Scalar-output convenience.
+    pub fn run_scalar(&self, inputs: &[&[f32]]) -> Result<f32> {
+        let v = self.run1(inputs)?;
+        anyhow::ensure!(v.len() == 1, "{}: not scalar", self.meta.name);
+        Ok(v[0])
+    }
+}
+
+/// The PJRT client + compiled-executable cache for one artifacts dir.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<(String, String), std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and parse the manifest. Compilation is
+    /// lazy, per entry point, cached for the process lifetime.
+    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Get (compiling on first use) an entry point of a preset.
+    pub fn entry(&self, preset: &str, entry: &str) -> Result<std::sync::Arc<Executable>> {
+        let key = (preset.to_string(), entry.to_string());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let pm = self.manifest.preset(preset)?;
+        let em = pm
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("preset '{preset}' has no entry '{entry}'"))?
+            .clone();
+        let path = self.manifest.dir.join(&em.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        let wrapped = std::sync::Arc::new(Executable {
+            meta: em,
+            exe,
+            dispatches: std::sync::atomic::AtomicU64::new(0),
+        });
+        self.cache.lock().unwrap().insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+
+    /// Pre-compile a set of entries (avoids first-dispatch latency spikes).
+    pub fn warmup(&self, preset: &str, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            self.entry(preset, e)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that need real artifacts live in rust/tests/;
+    // here we only test manifest parsing against a synthetic manifest.
+
+    fn synthetic_manifest(dir: &Path) {
+        let text = r#"{
+ "version": 1,
+ "batch_shapes": {"forward": 128, "residual": 100, "validate": 1024, "k_multi": 11},
+ "presets": {
+  "p1": {
+   "pde": {"name": "poisson2", "dim": 2, "in_dim": 2, "has_time": false, "n_stencil": 5},
+   "param_dim": 3,
+   "segments": [{"name": "w", "kind": "weights", "offset": 0, "len": 3,
+                 "init": {"dist": "normal", "std": 0.1}}],
+   "arch": {"type": "tonn", "hidden": 64},
+   "hyper": {"fd_h": 0.05, "spsa_mu": 0.02, "spsa_n": 10, "lr": 0.02,
+             "lr_decay": 0.3, "lr_decay_every": 600, "epochs": 10,
+             "batch": 100, "k_multi": 11},
+   "entries": {
+    "loss": {"file": "p1_loss.hlo.txt",
+             "inputs": [{"name": "phi", "shape": [3], "dtype": "f32"},
+                        {"name": "xr", "shape": [100, 2], "dtype": "f32"}],
+             "outputs": [{"shape": [], "dtype": "f32"}]}
+   }
+  }
+ }
+}"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join(format!("pp_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        synthetic_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.k_multi, 11);
+        let p = m.preset("p1").unwrap();
+        assert_eq!(p.pde, Pde::Poisson2);
+        assert_eq!(p.layout.param_dim, 3);
+        let e = &p.entries["loss"];
+        assert_eq!(e.inputs[1].1, vec![100, 2]);
+        assert_eq!(e.input_len(1), 200);
+        assert_eq!(e.outputs[0].len(), 0); // scalar
+        assert_eq!(e.output_len(0), 1);
+        assert!(m.preset("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

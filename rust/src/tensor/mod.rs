@@ -1,0 +1,417 @@
+//! Tensor-train shape algebra + small dense linear algebra.
+//!
+//! The rust side never *trains* through these (all heavy math lives in
+//! the AOT artifacts); they exist as (a) the shape/parameter bookkeeping
+//! the photonics census and coordinator need, and (b) independent oracles
+//! for integration tests against the artifacts' numerics.
+
+/// A TT-matrix shape: `W (M x N)` with `M = prod(factors_m)`,
+/// `N = prod(factors_n)`, carried ranks `r_0..r_L` (r_0 = r_L = 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TtShape {
+    pub factors_m: Vec<usize>,
+    pub factors_n: Vec<usize>,
+    pub ranks: Vec<usize>,
+}
+
+impl TtShape {
+    pub fn new(factors_m: &[usize], factors_n: &[usize], ranks: &[usize]) -> anyhow::Result<Self> {
+        if factors_m.len() != factors_n.len() {
+            anyhow::bail!("factor lists must have equal length");
+        }
+        if ranks.len() != factors_m.len() + 1 {
+            anyhow::bail!("need L+1 ranks for L cores");
+        }
+        if ranks.first() != Some(&1) || ranks.last() != Some(&1) {
+            anyhow::bail!("boundary ranks must be 1");
+        }
+        Ok(TtShape {
+            factors_m: factors_m.to_vec(),
+            factors_n: factors_n.to_vec(),
+            ranks: ranks.to_vec(),
+        })
+    }
+
+    pub fn cores(&self) -> usize {
+        self.factors_m.len()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.factors_m.iter().product()
+    }
+
+    pub fn cols(&self) -> usize {
+        self.factors_n.iter().product()
+    }
+
+    /// TT entry count: Σ r_{k-1} m_k n_k r_k — the paper's "Params" census.
+    pub fn entry_count(&self) -> usize {
+        (0..self.cores())
+            .map(|k| self.ranks[k] * self.factors_m[k] * self.factors_n[k] * self.ranks[k + 1])
+            .sum()
+    }
+
+    /// Dense entry count the TT replaces.
+    pub fn dense_count(&self) -> usize {
+        self.rows() * self.cols()
+    }
+
+    /// Compression ratio dense/TT.
+    pub fn compression(&self) -> f64 {
+        self.dense_count() as f64 / self.entry_count() as f64
+    }
+
+    /// Unfolding of core k as realized by its photonic mesh:
+    /// `(r_{k-1} * n_k) x (m_k * r_k)` (rows = contraction dim).
+    pub fn core_unfolding(&self, k: usize) -> (usize, usize) {
+        (
+            self.ranks[k] * self.factors_n[k],
+            self.factors_m[k] * self.ranks[k + 1],
+        )
+    }
+
+    /// Core tensor shape (r_in, m, n, r_out).
+    pub fn core_shape(&self, k: usize) -> (usize, usize, usize, usize) {
+        (
+            self.ranks[k],
+            self.factors_m[k],
+            self.factors_n[k],
+            self.ranks[k + 1],
+        )
+    }
+
+    /// The paper's TONN layer factorization: 1024x1024 = [4,8,4,8]x[8,4,8,4],
+    /// ranks [1,2,1,2,1].
+    pub fn paper_layer() -> TtShape {
+        TtShape::new(&[4, 8, 4, 8], &[8, 4, 8, 4], &[1, 2, 1, 2, 1]).unwrap()
+    }
+}
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map(|x| x.len()).unwrap_or(0);
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        for i in 0..self.rows {
+            for k in 0..self.cols {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &other.data[k * other.cols..(k + 1) * other.cols];
+                let dst = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (d, &b) in dst.iter_mut().zip(orow) {
+                    *d += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.set(j, i, self.at(i, j));
+            }
+        }
+        out
+    }
+
+    /// y = self · x (matrix-vector).
+    pub fn matvec(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0f32; self.rows];
+        for i in 0..self.rows {
+            let row = &self.data[i * self.cols..(i + 1) * self.cols];
+            y[i] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+
+    /// Max |a - b| over entries.
+    pub fn max_abs_diff(&self, other: &Mat) -> f32 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Kronecker product (used by TT oracle tests).
+    pub fn kron(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows * other.rows, self.cols * other.cols);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                let a = self.at(i, j);
+                for p in 0..other.rows {
+                    for q in 0..other.cols {
+                        out.set(i * other.rows + p, j * other.cols + q, a * other.at(p, q));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// A dense TT core (r_in, m, n, r_out), row-major over (r_in, m, n, r_out).
+#[derive(Clone, Debug)]
+pub struct TtCore {
+    pub r_in: usize,
+    pub m: usize,
+    pub n: usize,
+    pub r_out: usize,
+    pub data: Vec<f32>,
+}
+
+impl TtCore {
+    pub fn zeros(r_in: usize, m: usize, n: usize, r_out: usize) -> Self {
+        TtCore {
+            r_in,
+            m,
+            n,
+            r_out,
+            data: vec![0.0; r_in * m * n * r_out],
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, ri: usize, i: usize, j: usize, ro: usize) -> f32 {
+        self.data[((ri * self.m + i) * self.n + j) * self.r_out + ro]
+    }
+}
+
+/// Reconstruct the dense matrix from TT cores (i_1-major rows, j_1-major
+/// columns — the convention shared with `python/compile/kernels/ref.py`).
+pub fn tt_dense(cores: &[TtCore]) -> Mat {
+    let l = cores.len();
+    assert!(l >= 1);
+    let m_tot: usize = cores.iter().map(|c| c.m).product();
+    let n_tot: usize = cores.iter().map(|c| c.n).product();
+    let mut out = Mat::zeros(m_tot, n_tot);
+    // iterate all multi-indices; fine for test-sized shapes.
+    let mut i_idx = vec![0usize; l];
+    loop {
+        let mut j_idx = vec![0usize; l];
+        loop {
+            // product of slice matrices G_k(i_k, j_k)
+            let mut acc: Vec<f32> = vec![1.0]; // 1x1
+            let mut acc_rows = 1usize;
+            for k in 0..l {
+                let c = &cores[k];
+                let mut next = vec![0.0f32; acc_rows * c.r_out];
+                for r in 0..acc_rows {
+                    for ri in 0..c.r_in {
+                        let a = acc[r * c.r_in + ri];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        for ro in 0..c.r_out {
+                            next[r * c.r_out + ro] += a * c.at(ri, i_idx[k], j_idx[k], ro);
+                        }
+                    }
+                }
+                acc = next;
+                // acc_rows unchanged (1): boundary ranks are 1
+                acc_rows = 1;
+            }
+            let row = flat_index(&i_idx, &cores.iter().map(|c| c.m).collect::<Vec<_>>());
+            let col = flat_index(&j_idx, &cores.iter().map(|c| c.n).collect::<Vec<_>>());
+            out.set(row, col, acc[0]);
+            if !increment(&mut j_idx, &cores.iter().map(|c| c.n).collect::<Vec<_>>()) {
+                break;
+            }
+        }
+        if !increment(&mut i_idx, &cores.iter().map(|c| c.m).collect::<Vec<_>>()) {
+            break;
+        }
+    }
+    out
+}
+
+fn flat_index(idx: &[usize], dims: &[usize]) -> usize {
+    let mut f = 0;
+    for (i, d) in idx.iter().zip(dims) {
+        f = f * d + i;
+    }
+    f
+}
+
+fn increment(idx: &mut [usize], dims: &[usize]) -> bool {
+    for k in (0..idx.len()).rev() {
+        idx[k] += 1;
+        if idx[k] < dims[k] {
+            return true;
+        }
+        idx[k] = 0;
+    }
+    false
+}
+
+/// TT matvec: y = W x via sequential core contraction (oracle).
+pub fn tt_matvec(cores: &[TtCore], x: &[f32]) -> Vec<f32> {
+    let w = tt_dense(cores);
+    w.matvec(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn tt_shape_paper_census() {
+        let s = TtShape::paper_layer();
+        assert_eq!(s.rows(), 1024);
+        assert_eq!(s.cols(), 1024);
+        assert_eq!(s.entry_count(), 256);
+        // paper: 2 layers x 256 + 1024 readout = 1536 params
+        assert_eq!(2 * s.entry_count() + 1024, 1536);
+        assert!((s.compression() - 4096.0).abs() < 1e-9);
+        // all paper core meshes unfold to 8x8
+        for k in 0..s.cores() {
+            assert_eq!(s.core_unfolding(k), (8, 8));
+        }
+    }
+
+    #[test]
+    fn tt_shape_validation() {
+        assert!(TtShape::new(&[4, 4], &[4], &[1, 1]).is_err());
+        assert!(TtShape::new(&[4], &[4], &[1]).is_err());
+        assert!(TtShape::new(&[4], &[4], &[2, 1]).is_err());
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(0);
+        let mut a = Mat::zeros(5, 7);
+        r.fill_normal(&mut a.data);
+        let i5 = Mat::eye(5);
+        assert!(i5.matmul(&a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop::check(20, |r| {
+            let rows = 1 + r.below(6);
+            let cols = 1 + r.below(6);
+            let mut m = Mat::zeros(rows, cols);
+            r.fill_normal(&mut m.data);
+            assert_eq!(m.transpose().transpose(), m);
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        prop::check(20, |r| {
+            let rows = 1 + r.below(5);
+            let cols = 1 + r.below(5);
+            let mut m = Mat::zeros(rows, cols);
+            r.fill_normal(&mut m.data);
+            let mut x = vec![0.0f32; cols];
+            r.fill_normal(&mut x);
+            let y = m.matvec(&x);
+            let xm = Mat { rows: cols, cols: 1, data: x };
+            let ym = m.matmul(&xm);
+            for i in 0..rows {
+                assert!((y[i] - ym.data[i]).abs() < 1e-4);
+            }
+        });
+    }
+
+    fn random_core(r: &mut Rng, ri: usize, m: usize, n: usize, ro: usize) -> TtCore {
+        let mut c = TtCore::zeros(ri, m, n, ro);
+        r.fill_normal(&mut c.data);
+        c
+    }
+
+    #[test]
+    fn tt_dense_rank1_is_kron() {
+        let mut r = Rng::new(1);
+        let c1 = random_core(&mut r, 1, 3, 2, 1);
+        let c2 = random_core(&mut r, 1, 2, 4, 1);
+        let w = tt_dense(&[c1.clone(), c2.clone()]);
+        let a = Mat { rows: 3, cols: 2, data: c1.data.clone() };
+        let b = Mat { rows: 2, cols: 4, data: c2.data.clone() };
+        assert!(w.max_abs_diff(&a.kron(&b)) < 1e-5);
+    }
+
+    #[test]
+    fn tt_matvec_matches_dense() {
+        prop::check(10, |r| {
+            let c1 = random_core(r, 1, 2, 3, 2);
+            let c2 = random_core(r, 2, 4, 2, 1);
+            let cores = [c1, c2];
+            let mut x = vec![0.0f32; 6];
+            r.fill_normal(&mut x);
+            let y1 = tt_matvec(&cores, &x);
+            let y2 = tt_dense(&cores).matvec(&x);
+            for (a, b) in y1.iter().zip(&y2) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn kron_shape_and_values() {
+        let a = Mat::from_rows(&[&[1.0, 2.0]]);
+        let b = Mat::from_rows(&[&[0.0, 1.0], &[1.0, 0.0]]);
+        let k = a.kron(&b);
+        assert_eq!((k.rows, k.cols), (2, 4));
+        assert_eq!(k.data, vec![0.0, 1.0, 0.0, 2.0, 1.0, 0.0, 2.0, 0.0]);
+    }
+}

@@ -1,0 +1,201 @@
+//! Declarative CLI flag parsing (the `clap` substitute).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, typed getters with defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// One declared flag (for help text + boolean detection).
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_bool: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    specs: Vec<FlagSpec>,
+    program: String,
+    about: String,
+}
+
+impl Args {
+    /// Start a parser declaration.
+    pub fn new(program: &str, about: &str) -> Self {
+        Args {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Declare a value flag.
+    pub fn flag(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Self {
+        self.specs.push(FlagSpec {
+            name,
+            help,
+            default: default.map(|s| s.to_string()),
+            is_bool: false,
+        });
+        self
+    }
+
+    /// Declare a boolean flag (present = true).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(FlagSpec {
+            name,
+            help,
+            default: None,
+            is_bool: true,
+        });
+        self
+    }
+
+    /// Parse from an iterator (normally `std::env::args().skip(1)`).
+    /// Prints help and exits on `--help`/`-h`. Errors on unknown flags.
+    pub fn parse<I: IntoIterator<Item = String>>(mut self, argv: I) -> anyhow::Result<Self> {
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if arg == "--help" || arg == "-h" {
+                eprintln!("{}", self.help_text());
+                std::process::exit(0);
+            }
+            if let Some(body) = arg.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown flag --{name} (try --help)"))?
+                    .clone();
+                let val = if spec.is_bool {
+                    inline_val.unwrap_or_else(|| "true".to_string())
+                } else if let Some(v) = inline_val {
+                    v
+                } else {
+                    it.next()
+                        .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?
+                };
+                self.flags.insert(name, val);
+            } else {
+                self.positional.push(arg);
+            }
+        }
+        Ok(self)
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nFLAGS:\n", self.program, self.about);
+        for f in &self.specs {
+            let d = match (&f.default, f.is_bool) {
+                (_, true) => " (switch)".to_string(),
+                (Some(d), _) => format!(" (default: {d})"),
+                (None, _) => String::new(),
+            };
+            s.push_str(&format!("  --{:<18} {}{}\n", f.name, f.help, d));
+        }
+        s
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        self.flags.get(name).cloned().or_else(|| {
+            self.specs
+                .iter()
+                .find(|s| s.name == name)
+                .and_then(|s| s.default.clone())
+        })
+    }
+
+    pub fn get_str(&self, name: &str) -> Option<String> {
+        self.raw(name)
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<Option<usize>> {
+        self.raw(name)
+            .map(|v| v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        self.raw(name)
+            .map(|v| v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected integer, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<Option<f64>> {
+        self.raw(name)
+            .map(|v| v.parse().map_err(|_| anyhow::anyhow!("--{name}: expected number, got '{v}'")))
+            .transpose()
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.raw(name).map(|v| v == "true" || v == "1").unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    fn base() -> Args {
+        Args::new("t", "test")
+            .flag("epochs", Some("100"), "epoch count")
+            .flag("preset", None, "preset name")
+            .switch("verbose", "chatty")
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = base().parse(argv(&[])).unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), Some(100));
+        assert_eq!(a.get_str("preset"), None);
+        assert!(!a.get_bool("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = base().parse(argv(&["--epochs", "5", "--preset=tonn_small"])).unwrap();
+        assert_eq!(a.get_usize("epochs").unwrap(), Some(5));
+        assert_eq!(a.get_str("preset").as_deref(), Some("tonn_small"));
+    }
+
+    #[test]
+    fn switch_and_positional() {
+        let a = base().parse(argv(&["--verbose", "pos1", "pos2"])).unwrap();
+        assert!(a.get_bool("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(base().parse(argv(&["--nope", "1"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_rejected() {
+        let a = base().parse(argv(&["--epochs", "abc"])).unwrap();
+        assert!(a.get_usize("epochs").is_err());
+    }
+
+    #[test]
+    fn help_mentions_flags() {
+        let h = base().help_text();
+        assert!(h.contains("--epochs") && h.contains("default: 100"));
+    }
+}

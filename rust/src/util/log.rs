@@ -1,0 +1,92 @@
+//! Leveled stderr logger with monotonic timestamps.
+//!
+//! Level from `PHOTON_LOG` (error|warn|info|debug|trace), default info.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn level() -> u8 {
+    let cur = LEVEL.load(Ordering::Relaxed);
+    if cur != u8::MAX {
+        return cur;
+    }
+    let v = match std::env::var("PHOTON_LOG").unwrap_or_default().to_lowercase().as_str() {
+        "error" => 0,
+        "warn" => 1,
+        "debug" => 3,
+        "trace" => 4,
+        _ => 2,
+    };
+    LEVEL.store(v, Ordering::Relaxed);
+    v
+}
+
+/// Override the level programmatically (tests, `--quiet`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Seconds since the first log call (monotonic).
+pub fn uptime() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+pub fn log(l: Level, module: &str, msg: &str) {
+    if (l as u8) <= level() {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{:>9.3}s {tag} {module}] {msg}", uptime());
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Info, module_path!(), &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! warn_ {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Warn, module_path!(), &format!($($t)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), &format!($($t)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uptime_monotonic() {
+        let a = uptime();
+        let b = uptime();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn set_level_silences() {
+        set_level(Level::Error);
+        log(Level::Debug, "test", "should not print");
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dependency-free substrates: RNG, JSON, CLI, stats, logging, bench
+//! harness, and a tiny property-testing helper.
+//!
+//! This environment has no crate registry beyond the `xla` closure
+//! (DESIGN.md §Substitutions), so the pieces that `rand`/`serde`/`clap`/
+//! `criterion` would normally provide are implemented — and tested — here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,60 @@
+//! Tiny property-testing harness (the `proptest` substitute).
+//!
+//! `check(n, f)` runs `f` against `n` independently-seeded [`Rng`]s; on
+//! panic it re-raises with the failing seed so the case can be replayed
+//! with `check_seed`. Deliberately minimal: no shrinking, but failures
+//! are a one-liner to reproduce.
+
+use super::rng::Rng;
+
+/// Run `f` for `n` random cases. Panics with the failing seed embedded.
+pub fn check<F: Fn(&mut Rng) + std::panic::RefUnwindSafe>(n: u64, f: F) {
+    for seed in 0..n {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(0x5EED_0000 ^ seed);
+            f(&mut rng);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at seed {seed}: {msg}\nreplay: prop::check_seed({seed}, f)");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_seed<F: FnOnce(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(0x5EED_0000 ^ seed);
+    f(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(50, |r| {
+            let a = r.f64();
+            assert!((0.0..1.0).contains(&a));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let res = std::panic::catch_unwind(|| {
+            check(20, |r| {
+                // fails whenever first draw > 0.5 — guaranteed within 20 seeds
+                assert!(r.f64() <= 0.5);
+            });
+        });
+        let msg = match res {
+            Err(e) => e.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(()) => panic!("expected failure"),
+        };
+        assert!(msg.contains("property failed at seed"), "{msg}");
+    }
+}

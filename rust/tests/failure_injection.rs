@@ -1,0 +1,121 @@
+//! Failure-injection: the runtime and coordinator must fail loudly and
+//! legibly on corrupted inputs — never proceed with garbage.
+
+use std::fs;
+use std::path::PathBuf;
+
+use photon_pinn::runtime::{Manifest, Runtime};
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("pp_fail_{tag}_{}", std::process::id()));
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_an_error() {
+    let d = tmpdir("missing");
+    let err = format!("{:#}", Manifest::load(&d).unwrap_err());
+    assert!(err.contains("manifest"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn corrupt_json_is_an_error() {
+    let d = tmpdir("corrupt");
+    fs::write(d.join("manifest.json"), "{ not json !!").unwrap();
+    assert!(Manifest::load(&d).is_err());
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn segment_gap_is_an_error() {
+    let d = tmpdir("gap");
+    fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,
+            "batch_shapes":{"forward":8,"residual":8,"validate":8,"k_multi":3},
+            "presets":{"p":{
+              "pde":{"name":"poisson2","dim":2,"in_dim":2,"has_time":false,"n_stencil":5},
+              "param_dim":10,
+              "segments":[{"name":"w","kind":"weights","offset":4,"len":6,
+                           "init":{"dist":"const","val":0}}],
+              "arch":{},
+              "hyper":{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":2,"lr":0.02,
+                       "lr_decay":0.3,"lr_decay_every":10,"epochs":1,
+                       "batch":8,"k_multi":3},
+              "entries":{}}}}"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", Manifest::load(&d).unwrap_err());
+    assert!(err.contains("offset") || err.contains("gap"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn unknown_kind_is_an_error() {
+    let d = tmpdir("kind");
+    fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,
+            "batch_shapes":{"forward":8,"residual":8,"validate":8,"k_multi":3},
+            "presets":{"p":{
+              "pde":{"name":"poisson2","dim":2,"in_dim":2,"has_time":false,"n_stencil":5},
+              "param_dim":4,
+              "segments":[{"name":"w","kind":"voltages","offset":0,"len":4,
+                           "init":{"dist":"const","val":0}}],
+              "arch":{},
+              "hyper":{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":2,"lr":0.02,
+                       "lr_decay":0.3,"lr_decay_every":10,"epochs":1,
+                       "batch":8,"k_multi":3},
+              "entries":{}}}}"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", Manifest::load(&d).unwrap_err());
+    assert!(err.contains("voltages"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn wrong_input_length_is_an_error() {
+    // against real artifacts (skips if absent)
+    let dir = photon_pinn::resolve_artifacts_dir(None);
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let rt = Runtime::load(&dir).unwrap();
+    let exec = rt.entry("tonn_small", "forward").unwrap();
+    let short = vec![0.0f32; 3];
+    let x = vec![0.0f32; exec.meta.input_len(1)];
+    let err = exec.run(&[&short, &x]).unwrap_err().to_string();
+    assert!(err.contains("expects"), "{err}");
+    // wrong arity
+    let err2 = exec.run(&[&x]).unwrap_err().to_string();
+    assert!(err2.contains("inputs"), "{err2}");
+}
+
+#[test]
+fn unknown_entry_is_an_error() {
+    let dir = photon_pinn::resolve_artifacts_dir(None);
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::load(&dir).unwrap();
+    assert!(rt.entry("tonn_small", "backprop").is_err());
+    assert!(rt.entry("no_such_preset", "forward").is_err());
+}
+
+#[test]
+fn missing_hlo_file_is_an_error() {
+    let dir = photon_pinn::resolve_artifacts_dir(None);
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    // copy the manifest to a dir without the .hlo.txt files
+    let d = tmpdir("nohlo");
+    fs::copy(dir.join("manifest.json"), d.join("manifest.json")).unwrap();
+    let rt = Runtime::load(&d).unwrap();
+    assert!(rt.entry("tonn_small", "forward").is_err());
+    fs::remove_dir_all(&d).ok();
+}
