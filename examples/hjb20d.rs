@@ -15,7 +15,7 @@
 use anyhow::Result;
 use photon_pinn::coordinator::{OnChipTrainer, TrainConfig};
 use photon_pinn::photonics::perf::{Design, NetworkDims, PerfModel, TrainingEfficiency};
-use photon_pinn::runtime::Runtime;
+use photon_pinn::runtime::Backend;
 use photon_pinn::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -28,7 +28,7 @@ fn main() -> Result<()> {
         .parse(std::env::args().skip(1))?;
 
     let dir = photon_pinn::resolve_artifacts_dir(None);
-    let rt = Runtime::load(&dir)?;
+    let rt = photon_pinn::runtime::load_backend(&dir)?;
     let preset = a.get_str("preset").unwrap();
 
     let mut cfg = TrainConfig::from_manifest(&rt, &preset)?;
@@ -40,12 +40,12 @@ fn main() -> Result<()> {
     cfg.verbose = true;
     cfg.validate_every = 100;
 
-    let pm = rt.manifest.preset(&preset)?;
+    let pm = rt.manifest().preset(&preset)?;
     println!("=== photon-pinn end-to-end: 20-dim HJB (paper Eq. 7) ===");
     println!(
         "preset {} | Φ dim {} | epochs {} | SPSA N={} μ={} | batch {} | noisy chip (seed {})",
         preset, pm.layout.param_dim, cfg.epochs, cfg.spsa_n, cfg.spsa_mu,
-        rt.manifest.b_residual, cfg.chip_seed
+        rt.manifest().b_residual, cfg.chip_seed
     );
 
     let epochs = cfg.epochs;
@@ -62,8 +62,8 @@ fn main() -> Result<()> {
     let dims = NetworkDims::paper_tonn();
     let te = TrainingEfficiency {
         inferences_per_loss_eval: pm.pde.n_stencil(),
-        loss_evals_per_step: rt.manifest.k_multi - 1,
-        batch: rt.manifest.b_residual,
+        loss_evals_per_step: rt.manifest().k_multi - 1,
+        batch: rt.manifest().b_residual,
         epochs,
     };
     let e_inf = model.energy_j(Design::Tonn1, &dims).unwrap();

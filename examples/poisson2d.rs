@@ -11,11 +11,11 @@
 use anyhow::Result;
 use photon_pinn::coordinator::{OnChipTrainer, TrainConfig};
 use photon_pinn::pde::Pde;
-use photon_pinn::runtime::Runtime;
+use photon_pinn::runtime::{Backend, Entry};
 
 fn main() -> Result<()> {
     let dir = photon_pinn::resolve_artifacts_dir(None);
-    let rt = Runtime::load(&dir)?;
+    let rt = photon_pinn::runtime::load_backend(&dir)?;
 
     let mut cfg = TrainConfig::from_manifest(&rt, "tonn_poisson")?;
     cfg.epochs = 600;
@@ -27,7 +27,7 @@ fn main() -> Result<()> {
 
     // pointwise slice through y = 0.5 using the forward artifact
     let forward = rt.entry("tonn_poisson", "forward")?;
-    let b = rt.manifest.b_forward;
+    let b = rt.manifest().b_forward;
     let mut pts = vec![0.0f32; b * 2];
     for i in 0..b {
         pts[2 * i] = i as f32 / (b - 1) as f32;

@@ -12,11 +12,12 @@
 
 use anyhow::Result;
 use photon_pinn::coordinator::{OnChipTrainer, TrainConfig};
-use photon_pinn::runtime::Runtime;
+use photon_pinn::runtime::Backend;
 
 fn main() -> Result<()> {
     let dir = photon_pinn::resolve_artifacts_dir(None);
-    let rt = Runtime::load(&dir)?;
+    // native backend by default (in-repo presets; AOT manifest if present)
+    let rt = photon_pinn::runtime::load_backend(&dir)?;
     println!("platform: {} | artifacts: {}", rt.platform(), dir.display());
 
     let mut cfg = TrainConfig::from_manifest(&rt, "tonn_small")?;
@@ -24,13 +25,13 @@ fn main() -> Result<()> {
     cfg.verbose = true;
     cfg.validate_every = 50;
 
-    let pm = rt.manifest.preset("tonn_small")?;
+    let pm = rt.manifest().preset("tonn_small")?;
     println!(
         "training a TT-compressed optical PINN: {} trainable phase-domain params \
          ({} MZI angles), 20-dim HJB, batch {}, {} FD inferences per loss eval",
         pm.layout.param_dim,
         pm.layout.count_kind(photon_pinn::model::SegmentKind::Angles),
-        rt.manifest.b_residual,
+        rt.manifest().b_residual,
         pm.pde.n_stencil(),
     );
 

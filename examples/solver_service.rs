@@ -12,7 +12,6 @@
 
 use anyhow::Result;
 use photon_pinn::coordinator::{SolveRequest, SolverService, TrainConfig};
-use photon_pinn::runtime::Runtime;
 use photon_pinn::util::cli::Args;
 use photon_pinn::util::stats;
 
@@ -27,9 +26,9 @@ fn main() -> Result<()> {
     let epochs = a.get_usize("epochs")?.unwrap();
 
     let dir = photon_pinn::resolve_artifacts_dir(None);
-    // template config (workers load their own runtimes; this just
-    // validates the preset exists and pulls the manifest defaults)
-    let rt = Runtime::load(&dir)?;
+    // template config (this just validates the preset exists and pulls
+    // the manifest defaults; native workers will SHARE one backend)
+    let rt = photon_pinn::runtime::load_backend(&dir)?;
     let mut base = TrainConfig::from_manifest(&rt, "tonn_small")?;
     base.epochs = epochs;
     base.validate_every = 0;

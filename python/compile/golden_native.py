@@ -1,0 +1,377 @@
+"""Golden-fixture generator for the rust NativeBackend contract tests.
+
+Produces ``rust/tests/fixtures/golden_native.json``: jax-computed
+reference outputs (forward / FD loss / SPSA loss batch / Stein loss /
+validation MSE) for inputs that the rust tests re-derive from the
+repo's deterministic RNG, plus a full one-epoch SPSA + ZO-signSGD
+golden that locks Eq. 5/6 semantics against refactors.
+
+To make the inputs reproducible on both sides WITHOUT shipping every
+buffer, this module ports the rust ``util::rng::Rng`` (xoshiro256++ +
+splitmix64 + Box-Muller) bit-exactly for integer/uniform draws (f64
+arithmetic is identical IEEE-754 on both sides; normal draws can differ
+by ~1 ulp of libm, far below the fixture tolerances).
+
+Usage (from ``python/``):
+
+    USE_PALLAS=0 python -m compile.golden_native \
+        --out ../rust/tests/fixtures/golden_native.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+
+os.environ.setdefault("USE_PALLAS", "0")
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import pinn
+from .networks import OnnMlp, TonnMlp
+from .pdes import PDES
+
+MASK = (1 << 64) - 1
+
+# Batch shapes — must match rust runtime::native and compile.model.
+B_FWD, B_RES, B_VAL, K_MULTI = 128, 100, 1024, 11
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact port of rust util::rng::Rng
+# ---------------------------------------------------------------------------
+
+def _splitmix64(state: int):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """Mirror of rust ``Rng`` (xoshiro256++, splitmix64 seeding)."""
+
+    def __init__(self, seed: int):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+        self.spare = None
+
+    def substream(self, label: int) -> "Rng":
+        r = Rng.__new__(Rng)
+        sm = (self.s[0] ^ ((label * 0xA24BAED4963EE407) & MASK)) & MASK
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        r.s = s
+        r.spare = None
+        return r
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self) -> float:
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def f32(self) -> np.float32:
+        return np.float32(self.f64())
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.f64()
+
+    def normal(self) -> float:
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        u1 = 1.0 - self.f64()
+        u2 = self.f64()
+        r = math.sqrt(-2.0 * math.log(u1))
+        th = 2.0 * math.pi * u2
+        self.spare = r * math.sin(th)
+        return r * math.cos(th)
+
+    def fill_normal(self, n: int) -> np.ndarray:
+        return np.array([np.float32(self.normal()) for _ in range(n)],
+                        dtype=np.float32)
+
+    def fill_uniform(self, n: int, lo: float, hi: float) -> np.ndarray:
+        return np.array([np.float32(self.uniform(lo, hi)) for _ in range(n)],
+                        dtype=np.float32)
+
+
+def init_vector(segments, rng: Rng) -> np.ndarray:
+    """Mirror of rust ``Layout::init_vector`` (same draw order)."""
+    total = sum(s["len"] for s in segments)
+    out = np.zeros(total, dtype=np.float32)
+    for s in segments:
+        off, ln = s["offset"], s["len"]
+        init = s["init"]
+        if init["dist"] == "uniform":
+            for i in range(ln):
+                out[off + i] = np.float32(rng.uniform(init["lo"], init["hi"]))
+        elif init["dist"] == "const":
+            out[off:off + ln] = np.float32(init["val"])
+        elif init["dist"] == "normal":
+            for i in range(ln):
+                out[off + i] = np.float32(float(init["std"]) * rng.normal())
+        else:  # pragma: no cover
+            raise ValueError(init["dist"])
+    return out
+
+
+def sampler_batch(pde, seed: int, n: int) -> np.ndarray:
+    """Mirror of rust ``pde::Sampler::batch`` (n, in_dim)."""
+    rng = Rng((seed ^ 0x5A3C_71B2) & MASK)
+    return rng.fill_uniform(n * pde.in_dim, 0.0, 1.0).reshape(n, pde.in_dim)
+
+
+def exact_f32(pde, x: np.ndarray) -> np.ndarray:
+    """Mirror of rust ``Pde::exact`` in f32 (per-row, sequential sums)."""
+    out = np.zeros(x.shape[0], dtype=np.float32)
+    pi = np.float32(np.pi)
+    for i, row in enumerate(np.asarray(x, dtype=np.float32)):
+        if pde.name == "hjb20":
+            acc = np.float32(0.0)
+            for v in row[:20]:
+                acc = np.float32(acc + np.float32(abs(v)))
+            out[i] = np.float32(acc + np.float32(1.0) - row[20])
+        elif pde.name == "poisson2":
+            out[i] = np.float32(np.sin(pi * row[0]) * np.sin(pi * row[1]))
+        elif pde.name == "heat2":
+            decay = np.float32(
+                np.exp(np.float32(-2.0) * pi * pi * np.float32(0.1) * row[2]))
+            out[i] = np.float32(
+                decay * np.sin(pi * row[0]) * np.sin(pi * row[1]))
+        else:  # pragma: no cover
+            raise ValueError(pde.name)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Preset nets (mirrors rust runtime::native BUILTIN_PRESETS where tested)
+# ---------------------------------------------------------------------------
+
+def build_preset(name: str):
+    if name == "tonn_small":
+        return TonnMlp(21, [4, 4, 4], [4, 4, 4], [1, 2, 2, 1]), PDES["hjb20"]
+    if name == "onn_small":
+        return OnnMlp(21, 64), PDES["hjb20"]
+    if name == "tonn_micro":
+        return TonnMlp(2, [2, 2], [2, 2], [1, 2, 1]), PDES["poisson2"]
+    if name == "tonn_micro_heat":
+        return TonnMlp(3, [2, 2], [2, 2], [1, 2, 1]), PDES["heat2"]
+    raise ValueError(name)
+
+
+FD_H = 0.05
+STEIN_SIGMA, STEIN_Q = 0.05, 20
+SPSA_MU, SPSA_N, LR = 0.02, 10, 0.02
+
+
+def floats(a) -> list:
+    return [float(v) for v in np.asarray(a, dtype=np.float32).reshape(-1)]
+
+
+def preset_record(name: str, idx: int, entries) -> dict:
+    net, pde = build_preset(name)
+    phi_seed = 1000 + idx
+    x_seed = 2000 + idx
+    xv_seed = 4000 + idx
+    uv_seed = 5000 + idx
+    z_seed = 3000 + idx
+    phi = init_vector(net.layout.segments, Rng(phi_seed))
+    rec = {
+        "param_dim": net.param_dim,
+        "phi_seed": phi_seed,
+        "x_seed": x_seed,
+        "xv_seed": xv_seed,
+        "uv_seed": uv_seed,
+        "z_seed": z_seed,
+        # full vector for small presets, head-64 for big ones — the rust
+        # test checks its own init draw against this
+        "phi_check": floats(phi if net.param_dim <= 512 else phi[:64]),
+        "phi_check_full": bool(net.param_dim <= 512),
+    }
+    phi_j = jnp.asarray(phi)
+    if "forward" in entries:
+        x = Rng(x_seed).fill_uniform(
+            B_FWD * pde.in_dim, 0.0, 1.0).reshape(B_FWD, pde.in_dim)
+        u = pinn.make_u_fn(net, pde)(phi_j, jnp.asarray(x))
+        rec["forward"] = floats(u)
+    xr = Rng(x_seed ^ 0x11).fill_uniform(
+        B_RES * pde.in_dim, 0.0, 1.0).reshape(B_RES, pde.in_dim)
+    xr_j = jnp.asarray(xr)
+    loss_fd = pinn.make_loss_fd(net, pde, FD_H)
+    if "loss" in entries:
+        rec["loss"] = float(loss_fd(phi_j, xr_j))
+    if "loss_multi" in entries:
+        # phis[k] = phi + 0.002·k (f32), deterministic on both sides
+        vals = []
+        for k in range(K_MULTI):
+            pk = (phi + np.float32(0.002) * np.float32(k)).astype(np.float32)
+            vals.append(float(loss_fd(jnp.asarray(pk), xr_j)))
+        rec["loss_multi"] = vals
+    if "loss_stein" in entries:
+        z = Rng(z_seed).fill_normal(
+            STEIN_Q * pde.in_dim).reshape(STEIN_Q, pde.in_dim)
+        stein = pinn.make_loss_stein(net, pde, STEIN_SIGMA, STEIN_Q)
+        rec["loss_stein"] = float(stein(phi_j, xr_j, jnp.asarray(z)))
+    if "validate" in entries:
+        xv = Rng(xv_seed).fill_uniform(
+            B_VAL * pde.in_dim, 0.0, 1.0).reshape(B_VAL, pde.in_dim)
+        uv = Rng(uv_seed).fill_uniform(B_VAL, -1.0, 3.0)
+        val = pinn.make_validate(net, pde)(
+            phi_j, jnp.asarray(xv), jnp.asarray(uv))
+        rec["validate"] = float(val)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# One SPSA + ZO-signSGD epoch (mirror of coordinator::trainer, 1 epoch,
+# ideal chip — the noise path is identity and consumes no master draws)
+# ---------------------------------------------------------------------------
+
+def spsa_epoch(name: str, seed: int):
+    net, pde = build_preset(name)
+    d = net.param_dim
+    loss_fd = pinn.make_loss_fd(net, pde, FD_H)
+
+    rng = Rng(seed)
+    phi0 = init_vector(net.layout.segments, rng)
+    spsa_rng = rng.substream(0x5B5A)
+
+    xr = sampler_batch(pde, (seed ^ 0xBA7C4) & MASK, B_RES)
+    xi = spsa_rng.fill_normal(SPSA_N * d).reshape(SPSA_N, d)
+
+    # settings [Φ; Φ+μξ_i] in f32 (optim::Spsa::build_settings)
+    mu = np.float32(SPSA_MU)
+    settings = [phi0]
+    for i in range(SPSA_N):
+        settings.append((phi0 + mu * xi[i]).astype(np.float32))
+    losses = np.array(
+        [np.float32(loss_fd(jnp.asarray(p), jnp.asarray(xr)))
+         for p in settings],
+        dtype=np.float32)
+
+    # ĝ = (1/Nμ) Σ [L_i − L_0] ξ_i in f32 (optim::Spsa::estimate)
+    scale = np.float32(np.float32(1.0) / (np.float32(SPSA_N) * mu))
+    g = np.zeros(d, dtype=np.float32)
+    for i in range(SPSA_N):
+        w = np.float32((losses[i + 1] - losses[0]) * scale)
+        g = (g + w * xi[i]).astype(np.float32)
+
+    # Φ ← Φ − α·sign(ĝ) (optim::ZoSignSgd, sign(0) = 0)
+    step = np.where(g == 0, np.float32(0.0), np.sign(g)).astype(np.float32)
+    phi1 = (phi0 - np.float32(LR) * step).astype(np.float32)
+
+    # robustness margin: the smallest |ĝ_i| must dwarf cross-backend f32
+    # noise (~1e-5) or the sign could flip between jax and rust
+    margin = float(np.min(np.abs(g)))
+
+    # final validation (Validator: sampler seed ^ 0x7A11_DA7E, exact targets)
+    xv = sampler_batch(pde, (seed ^ 0x7A11_DA7E) & MASK, B_VAL)
+    uv = exact_f32(pde, xv)
+    final_val = float(pinn.make_validate(net, pde)(
+        jnp.asarray(phi1), jnp.asarray(xv), jnp.asarray(uv)))
+
+    rec = {
+        "preset": name,
+        "seed": seed,
+        "losses": floats(losses),
+        "phi_before": floats(phi0),
+        "phi_after": floats(phi1),
+        "final_val": final_val,
+        "margin": margin,
+    }
+    return rec, margin, bool(np.all(np.isfinite(losses)))
+
+
+def pick_epoch_golden(name: str):
+    """Scan seeds for a comfortable sign margin (≥ 60x the expected
+    cross-backend loss noise)."""
+    best, best_margin = None, -1.0
+    for seed in range(40):
+        rec, margin, finite = spsa_epoch(name, seed)
+        if not finite:
+            continue
+        if margin > best_margin:
+            best, best_margin = rec, margin
+        if margin >= 1e-3:
+            break
+    assert best is not None and best_margin >= 5e-4, \
+        f"no robust epoch seed found (best margin {best_margin})"
+    print(f"[golden] epoch preset={name} seed={best['seed']} "
+          f"margin={best_margin:.2e}")
+    return best
+
+
+def rng_record() -> dict:
+    r = Rng(42)
+    u64 = [str(r.next_u64()) for _ in range(8)]
+    r2 = Rng(7)
+    f64s = [r2.f64() for _ in range(4)]
+    r3 = Rng(9)
+    normals = [r3.normal() for _ in range(4)]
+    sub = Rng(7).substream(3)
+    return {
+        "seed": 42,
+        "u64": u64,
+        "f64_seed7": f64s,
+        "normal_seed9": normals,
+        "sub7_3_u64": [str(sub.next_u64()) for _ in range(4)],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../rust/tests/fixtures/golden_native.json")
+    args = ap.parse_args()
+
+    doc = {
+        "comment": "generated by `USE_PALLAS=0 python -m compile.golden_native`"
+                   " — jax reference outputs for the rust NativeBackend",
+        "rng": rng_record(),
+        "presets": {
+            "tonn_micro": preset_record(
+                "tonn_micro", 0,
+                ["forward", "loss", "loss_multi", "loss_stein", "validate"]),
+            "tonn_micro_heat": preset_record(
+                "tonn_micro_heat", 1, ["loss"]),
+            "tonn_small": preset_record(
+                "tonn_small", 2,
+                ["forward", "loss", "loss_stein", "validate"]),
+            "onn_small": preset_record(
+                "onn_small", 3, ["forward", "loss"]),
+        },
+        "epoch": pick_epoch_golden("tonn_micro"),
+    }
+    out = os.path.abspath(args.out)
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"[golden] wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,13 +6,14 @@
 mod common;
 
 use photon_pinn::coordinator::trainer::{LossKind, OnChipTrainer, TrainConfig};
+use photon_pinn::runtime::Backend;
 use photon_pinn::util::bench::Table;
 use photon_pinn::util::stats::sci;
 
 fn main() {
     let rt = common::runtime();
     let epochs = common::epochs(400);
-    let pm = rt.manifest.preset("tonn_small").unwrap();
+    let pm = rt.manifest().preset("tonn_small").unwrap();
     let stein_q = pm
         .entries
         .get("loss_stein")

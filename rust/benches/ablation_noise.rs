@@ -9,6 +9,7 @@ mod common;
 use photon_pinn::coordinator::offchip::{OffChipConfig, OffChipTrainer};
 use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
 use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
+use photon_pinn::runtime::Backend;
 use photon_pinn::util::bench::Table;
 use photon_pinn::util::stats::sci;
 
@@ -18,16 +19,21 @@ fn main() {
     let bp_epochs = common::epochs(300);
 
     // train ONE off-chip model (noise-free), map it onto chips of
-    // increasing imperfection
-    let mut off = OffChipTrainer::new(
+    // increasing imperfection. Needs the `grad` entry (pjrt build).
+    let mut off = match OffChipTrainer::new(
         &rt,
         OffChipConfig::new("tonn_small", bp_epochs),
-    )
-    .unwrap();
+    ) {
+        Ok(off) => off,
+        Err(e) => {
+            eprintln!("A2 needs the off-chip BP baseline: {e:#}");
+            std::process::exit(2);
+        }
+    };
     let (phi_off, ideal, _) = off.train().unwrap();
     println!("off-chip model trained: ideal val {ideal:.3e}");
 
-    let pm = rt.manifest.preset("tonn_small").unwrap();
+    let pm = rt.manifest().preset("tonn_small").unwrap();
     let mut t = Table::new(
         "A2 — noise-severity sweep (tonn_small)",
         &["noise scale", "off-chip mapped", "on-chip trained", "on/off advantage"],

@@ -9,6 +9,7 @@
 mod common;
 
 use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
+use photon_pinn::runtime::Backend;
 use photon_pinn::util::bench::Table;
 use photon_pinn::util::stats::sci;
 
@@ -26,14 +27,14 @@ fn main() {
         ("tonn_rank4", "[1,4,4,1]"),
         ("onn_small", "dense"),
     ] {
-        if rt.manifest.preset(preset).is_err() {
+        if rt.manifest().preset(preset).is_err() {
             eprintln!("skipping {preset} (not in manifest)");
             continue;
         }
         let mut cfg = TrainConfig::from_manifest(&rt, preset).unwrap();
         cfg.epochs = epochs;
         cfg.validate_every = 50;
-        let d = rt.manifest.preset(preset).unwrap().layout.param_dim;
+        let d = rt.manifest().preset(preset).unwrap().layout.param_dim;
         let t0 = std::time::Instant::now();
         let res = OnChipTrainer::new(&rt, cfg).unwrap().train().unwrap();
         eprintln!("  {preset} done in {:.0}s", t0.elapsed().as_secs_f64());

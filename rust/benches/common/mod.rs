@@ -2,17 +2,17 @@
 
 use std::path::PathBuf;
 
-use photon_pinn::runtime::Runtime;
+use photon_pinn::runtime::Backend;
 
-/// Load the runtime or exit gracefully when artifacts are missing (so
-/// `cargo bench` in a fresh checkout fails with a clear message).
+/// Load the default backend (native; AOT manifest when present) or exit
+/// with a clear message if a broken manifest is on disk.
 #[allow(dead_code)]
-pub fn runtime() -> Runtime {
+pub fn runtime() -> Box<dyn Backend> {
     let dir = photon_pinn::resolve_artifacts_dir(None);
-    match Runtime::load(&dir) {
+    match photon_pinn::runtime::load_backend(&dir) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("cannot load artifacts from {}: {e:#}\nrun `make artifacts` first", dir.display());
+            eprintln!("cannot load backend from {}: {e:#}", dir.display());
             std::process::exit(2);
         }
     }

@@ -9,6 +9,7 @@ mod common;
 use photon_pinn::optim::Spsa;
 use photon_pinn::pde::Sampler;
 use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
+use photon_pinn::runtime::{Backend, Entry};
 use photon_pinn::util::bench::{bench, report};
 use photon_pinn::util::rng::Rng;
 
@@ -17,16 +18,16 @@ fn main() {
     let mut results = Vec::new();
 
     for preset in ["tonn_small", "onn_small", "tonn_paper"] {
-        let Ok(pm) = rt.manifest.preset(preset) else { continue };
+        let Ok(pm) = rt.manifest().preset(preset) else { continue };
         let _d = pm.layout.param_dim;
         let mut rng = Rng::new(0);
         let phi = pm.layout.init_vector(&mut rng);
         let mut sampler = Sampler::new(pm.pde, 1);
         let mut xr = Vec::new();
-        sampler.batch(rt.manifest.b_residual, &mut xr);
+        sampler.batch(rt.manifest().b_residual, &mut xr);
         let mut xf = Vec::new();
-        sampler.batch(rt.manifest.b_forward, &mut xf);
-        let (xv, uv) = sampler.validation(rt.manifest.b_validate);
+        sampler.batch(rt.manifest().b_forward, &mut xf);
+        let (xv, uv) = sampler.validation(rt.manifest().b_validate);
 
         if let Ok(fwd) = rt.entry(preset, "forward") {
             results.push(bench(&format!("{preset}/forward (B=128, pallas path)"), 3, 20, || {
@@ -39,7 +40,7 @@ fn main() {
             }));
         }
         if let Ok(lm) = rt.entry(preset, "loss_multi") {
-            let k = rt.manifest.k_multi;
+            let k = rt.manifest().k_multi;
             let phis: Vec<f32> = (0..k).flat_map(|_| phi.iter().copied()).collect();
             results.push(bench(&format!("{preset}/loss_multi (K=11 SPSA batch)"), 2, 10, || {
                 lm.run1(&[&phis, &xr]).unwrap();
@@ -54,7 +55,7 @@ fn main() {
 
     // L3-side costs: everything the coordinator does *around* a dispatch
     {
-        let pm = rt.manifest.preset("tonn_small").unwrap();
+        let pm = rt.manifest().preset("tonn_small").unwrap();
         let d = pm.layout.param_dim;
         let chip = ChipRealization::sample(&pm.layout, &NoiseConfig::default_chip(), 1);
         let spsa = Spsa::new(0.02, 10);

@@ -10,7 +10,7 @@ use anyhow::Result;
 use super::offchip::{OffChipConfig, OffChipTrainer};
 use super::trainer::{LossKind, OnChipTrainer, TrainConfig, UpdateRule};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 /// One Table-1 row.
 #[derive(Clone, Debug)]
@@ -55,13 +55,13 @@ impl Default for Table1Config {
 
 /// Runs the matrix for a list of presets.
 pub struct Table1Runner<'rt> {
-    pub rt: &'rt Runtime,
+    pub rt: &'rt dyn Backend,
     pub cfg: Table1Config,
 }
 
 impl<'rt> Table1Runner<'rt> {
     pub fn run_preset(&self, preset: &str) -> Result<ExperimentRow> {
-        let pm = self.rt.manifest.preset(preset)?;
+        let pm = self.rt.manifest().preset(preset)?;
         let deploy_chip =
             ChipRealization::sample(&pm.layout, &self.cfg.noise, self.cfg.chip_seed);
 

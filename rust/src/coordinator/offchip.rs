@@ -26,7 +26,7 @@ use super::validator::Validator;
 use crate::optim::Adam;
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
 use crate::pde::Sampler;
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{Backend, Entry};
 
 /// Off-chip trainer configuration.
 #[derive(Clone, Debug)]
@@ -56,11 +56,15 @@ impl OffChipConfig {
     }
 }
 
-/// BP/Adam trainer over the `grad` artifact.
+/// BP/Adam trainer over the `grad` entry.
+///
+/// Backend-generic, but the `grad` entry (exact autodiff) only exists in
+/// AOT artifacts today: on the native backend construction fails loudly
+/// with a pointer at the `pjrt` feature.
 pub struct OffChipTrainer<'rt> {
-    rt: &'rt Runtime,
+    rt: &'rt dyn Backend,
     cfg: OffChipConfig,
-    grad: Arc<Executable>,
+    grad: Arc<dyn Entry>,
     validator: Validator,
     sampler: Sampler,
     /// simulated training-time chip for hardware-aware mode
@@ -68,8 +72,8 @@ pub struct OffChipTrainer<'rt> {
 }
 
 impl<'rt> OffChipTrainer<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: OffChipConfig) -> Result<Self> {
-        let pm = rt.manifest.preset(&cfg.preset)?;
+    pub fn new(rt: &'rt dyn Backend, cfg: OffChipConfig) -> Result<Self> {
+        let pm = rt.manifest().preset(&cfg.preset)?;
         let grad = rt.entry(&cfg.preset, "grad")?;
         let validator = Validator::new(rt, &cfg.preset, cfg.seed)?;
         let sampler = Sampler::new(pm.pde, cfg.seed ^ 0x0FF_C41);
@@ -90,14 +94,14 @@ impl<'rt> OffChipTrainer<'rt> {
     /// Run BP training; returns (trained params, ideal-hardware val MSE,
     /// metrics). Mapping onto a *real* chip is the caller's step.
     pub fn train(&mut self) -> Result<(Vec<f32>, f32, RunMetrics)> {
-        let pm = self.rt.manifest.preset(&self.cfg.preset)?;
+        let pm = self.rt.manifest().preset(&self.cfg.preset)?;
         let mut rng = crate::util::rng::Rng::new(self.cfg.seed);
         let mut phi = pm.layout.init_vector(&mut rng);
         let mut adam = Adam::new(phi.len(), self.cfg.lr);
         let mut metrics = RunMetrics::default();
         let mut xr = Vec::new();
         let mut eff = Vec::new();
-        let batch = self.rt.manifest.b_residual;
+        let batch = self.rt.manifest().b_residual;
         let t0 = Instant::now();
 
         for epoch in 0..self.cfg.epochs {

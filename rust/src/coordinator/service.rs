@@ -7,10 +7,18 @@
 //! §Substitutions): std threads + mpsc + a bounded queue for
 //! backpressure.
 //!
-//! PJRT handles are not `Send` (the `xla` crate wraps raw pointers in
-//! `Rc`), so each worker owns a full [`Runtime`] — its own PJRT client
-//! and compiled executables. Physically faithful: one photonic
-//! accelerator per worker; the coordinator only moves requests/results.
+//! Two backend topologies:
+//!
+//! * **Shared** ([`SolverService::start_shared`]): the native backend is
+//!   `Send + Sync`, so every worker borrows ONE backend — no per-worker
+//!   manifest parse, no per-worker executable cache.
+//! * **Per-worker** ([`SolverService::start_per_worker`]): a factory
+//!   builds one backend inside each worker thread. Required for PJRT
+//!   (handles are not `Send` — physically faithful too: one photonic
+//!   accelerator per worker).
+//!
+//! [`SolverService::start`] keeps the original path-based API and picks
+//! the right topology for the compiled feature set.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -21,7 +29,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::trainer::{OnChipTrainer, TrainConfig};
-use crate::runtime::Runtime;
+use crate::runtime::Backend;
 
 /// One solve job.
 #[derive(Clone, Debug)]
@@ -54,66 +62,152 @@ pub struct SolverService {
     workers: Vec<JoinHandle<()>>,
 }
 
+struct Plumbing {
+    rx: Arc<Mutex<Receiver<Job>>>,
+    res_tx: SyncSender<SolveResult>,
+}
+
+/// Drain jobs against a backend until shutdown.
+fn worker_loop(w: usize, rt: &dyn Backend, p: &Plumbing) {
+    loop {
+        let job = { p.rx.lock().unwrap().recv() };
+        match job {
+            Ok(Job::Solve(req, submitted)) => {
+                let queue_seconds = submitted.elapsed().as_secs_f64();
+                let t0 = Instant::now();
+                let outcome =
+                    OnChipTrainer::new(rt, req.config.clone()).and_then(|mut t| t.train());
+                let (final_val, phi) = match outcome {
+                    Ok(r) => (Ok(r.final_val), r.phi),
+                    Err(e) => (Err(e), Vec::new()),
+                };
+                let _ = p.res_tx.send(SolveResult {
+                    id: req.id,
+                    final_val,
+                    phi,
+                    queue_seconds,
+                    solve_seconds: t0.elapsed().as_secs_f64(),
+                    worker: w,
+                });
+            }
+            Ok(Job::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
 impl SolverService {
-    /// Spin up `workers` threads, each loading its own [`Runtime`] from
-    /// `artifacts_dir` and optionally pre-compiling `warmup_preset`'s
-    /// training entries.
-    pub fn start(
-        artifacts_dir: PathBuf,
+    /// Spin up `workers` threads against ONE shared backend (requires a
+    /// thread-safe backend — i.e. the native evaluator).
+    pub fn start_shared(
+        backend: Arc<dyn Backend + Send + Sync>,
         workers: usize,
         queue_cap: usize,
         warmup_preset: Option<String>,
     ) -> SolverService {
+        if let Some(p) = &warmup_preset {
+            let _ = backend.warmup(p, &["loss_multi", "validate"]);
+        }
         let (tx, rx) = sync_channel::<Job>(queue_cap);
         let rx = Arc::new(Mutex::new(rx));
         let (res_tx, results) = sync_channel::<SolveResult>(queue_cap.max(16));
         let mut handles = Vec::new();
         for w in 0..workers {
-            let rx = rx.clone();
-            let res_tx = res_tx.clone();
-            let dir = artifacts_dir.clone();
-            let warm = warmup_preset.clone();
+            let be = backend.clone();
+            let plumbing = Plumbing {
+                rx: rx.clone(),
+                res_tx: res_tx.clone(),
+            };
             handles.push(std::thread::spawn(move || {
-                let rt = match Runtime::load(&dir) {
-                    Ok(rt) => rt,
-                    Err(e) => {
-                        crate::warn_!("worker {w}: runtime load failed: {e:#}");
-                        return;
-                    }
-                };
-                if let Some(p) = warm {
-                    let _ = rt.warmup(&p, &["loss_multi", "validate"]);
-                }
-                loop {
-                    let job = { rx.lock().unwrap().recv() };
-                    match job {
-                        Ok(Job::Solve(req, submitted)) => {
-                            let queue_seconds = submitted.elapsed().as_secs_f64();
-                            let t0 = Instant::now();
-                            let outcome = OnChipTrainer::new(&rt, req.config.clone())
-                                .and_then(|mut t| t.train());
-                            let (final_val, phi) = match outcome {
-                                Ok(r) => (Ok(r.final_val), r.phi),
-                                Err(e) => (Err(e), Vec::new()),
-                            };
-                            let _ = res_tx.send(SolveResult {
-                                id: req.id,
-                                final_val,
-                                phi,
-                                queue_seconds,
-                                solve_seconds: t0.elapsed().as_secs_f64(),
-                                worker: w,
-                            });
-                        }
-                        Ok(Job::Shutdown) | Err(_) => break,
-                    }
-                }
+                worker_loop(w, be.as_ref(), &plumbing);
             }));
         }
         SolverService {
             tx,
             results,
             workers: handles,
+        }
+    }
+
+    /// Spin up `workers` threads, each building its own backend via
+    /// `factory` (PJRT topology: one client/accelerator per worker).
+    pub fn start_per_worker<F>(
+        factory: F,
+        workers: usize,
+        queue_cap: usize,
+        warmup_preset: Option<String>,
+    ) -> SolverService
+    where
+        F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+    {
+        let factory = Arc::new(factory);
+        let (tx, rx) = sync_channel::<Job>(queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+        let (res_tx, results) = sync_channel::<SolveResult>(queue_cap.max(16));
+        let mut handles = Vec::new();
+        for w in 0..workers {
+            let factory = factory.clone();
+            let warm = warmup_preset.clone();
+            let plumbing = Plumbing {
+                rx: rx.clone(),
+                res_tx: res_tx.clone(),
+            };
+            handles.push(std::thread::spawn(move || {
+                let rt = match (*factory)(w) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        crate::warn_!("worker {w}: backend load failed: {e:#}");
+                        return;
+                    }
+                };
+                if let Some(p) = warm {
+                    let _ = rt.warmup(&p, &["loss_multi", "validate"]);
+                }
+                worker_loop(w, rt.as_ref(), &plumbing);
+            }));
+        }
+        SolverService {
+            tx,
+            results,
+            workers: handles,
+        }
+    }
+
+    /// Path-based convenience: native build shares one evaluator across
+    /// all workers; the `pjrt` build loads one PJRT runtime per worker.
+    pub fn start(
+        artifacts_dir: PathBuf,
+        workers: usize,
+        queue_cap: usize,
+        warmup_preset: Option<String>,
+    ) -> SolverService {
+        #[cfg(feature = "pjrt")]
+        {
+            Self::start_per_worker(
+                move |_w| {
+                    crate::runtime::PjrtBackend::load(&artifacts_dir)
+                        .map(|b| Box::new(b) as Box<dyn Backend>)
+                },
+                workers,
+                queue_cap,
+                warmup_preset,
+            )
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            match crate::runtime::NativeBackend::load_or_builtin(&artifacts_dir) {
+                Ok(be) => Self::start_shared(Arc::new(be), workers, queue_cap, warmup_preset),
+                // keep the old per-worker fail-loudly behavior: each
+                // worker logs the load error and exits
+                Err(_) => Self::start_per_worker(
+                    move |_w| {
+                        crate::runtime::NativeBackend::load_or_builtin(&artifacts_dir)
+                            .map(|b| Box::new(b) as Box<dyn Backend>)
+                    },
+                    workers,
+                    queue_cap,
+                    warmup_preset,
+                ),
+            }
         }
     }
 

@@ -26,7 +26,7 @@ use super::validator::Validator;
 use crate::optim::{LrSchedule, Spsa, ZoSgd, ZoSignSgd};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
 use crate::pde::Sampler;
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{Backend, Entry};
 
 /// Update rule variant (ablation A1: sign de-noising on/off).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,8 +68,8 @@ pub struct TrainConfig {
 
 impl TrainConfig {
     /// Defaults from the manifest's tuned hyperparameters.
-    pub fn from_manifest(rt: &Runtime, preset: &str) -> Result<TrainConfig> {
-        let h = &rt.manifest.preset(preset)?.hyper;
+    pub fn from_manifest(rt: &dyn Backend, preset: &str) -> Result<TrainConfig> {
+        let h = &rt.manifest().preset(preset)?.hyper;
         Ok(TrainConfig {
             preset: preset.to_string(),
             epochs: h.epochs,
@@ -99,14 +99,14 @@ pub struct TrainResult {
     pub metrics: RunMetrics,
 }
 
-/// The on-chip ZO trainer.
+/// The on-chip ZO trainer (generic over the execution [`Backend`]).
 pub struct OnChipTrainer<'rt> {
-    rt: &'rt Runtime,
+    rt: &'rt dyn Backend,
     cfg: TrainConfig,
     chip: ChipRealization,
     spsa: Spsa,
-    loss_multi: Arc<Executable>,
-    loss_single: Option<Arc<Executable>>,
+    loss_multi: Arc<dyn Entry>,
+    loss_single: Option<Arc<dyn Entry>>,
     validator: Validator,
     sampler: Sampler,
     /// stencil inferences per loss evaluation (accounting)
@@ -119,20 +119,20 @@ pub struct OnChipTrainer<'rt> {
 }
 
 impl<'rt> OnChipTrainer<'rt> {
-    pub fn new(rt: &'rt Runtime, cfg: TrainConfig) -> Result<Self> {
-        let pm = rt.manifest.preset(&cfg.preset)?;
+    pub fn new(rt: &'rt dyn Backend, cfg: TrainConfig) -> Result<Self> {
+        let pm = rt.manifest().preset(&cfg.preset)?;
         anyhow::ensure!(
-            cfg.spsa_n + 1 == rt.manifest.k_multi,
+            cfg.spsa_n + 1 == rt.manifest().k_multi,
             "spsa_n {} must equal k_multi-1 = {} (static artifact shape)",
             cfg.spsa_n,
-            rt.manifest.k_multi - 1
+            rt.manifest().k_multi - 1
         );
         let loss_multi = rt.entry(&cfg.preset, "loss_multi")?;
         let (loss_single, stein_z) = match cfg.loss_kind {
             LossKind::Stein => {
                 let exec = rt.entry(&cfg.preset, "loss_stein")?;
                 // z is the third input: (stein_q, in_dim)
-                let len = exec.meta.input_len(2);
+                let len = exec.meta().input_len(2);
                 let mut z = vec![0.0f32; len];
                 crate::util::rng::Rng::new(cfg.seed ^ 0x57E1).fill_normal(&mut z);
                 (Some(exec), z)
@@ -142,8 +142,8 @@ impl<'rt> OnChipTrainer<'rt> {
         let validator = Validator::new(rt, &cfg.preset, cfg.seed)?;
         let sampler = Sampler::new(pm.pde, cfg.seed ^ 0xBA7C4);
         let n_stencil = pm.pde.n_stencil();
-        let batch = rt.manifest.b_residual;
-        let k_multi = rt.manifest.k_multi;
+        let batch = rt.manifest().b_residual;
+        let k_multi = rt.manifest().k_multi;
         let spsa = Spsa::new(cfg.spsa_mu, cfg.spsa_n);
         Ok(OnChipTrainer {
             chip: ChipRealization::sample(&pm.layout, &cfg.noise, cfg.chip_seed),
@@ -206,7 +206,7 @@ impl<'rt> OnChipTrainer<'rt> {
 
     /// Run the full training loop.
     pub fn train(&mut self) -> Result<TrainResult> {
-        let pm = self.rt.manifest.preset(&self.cfg.preset)?;
+        let pm = self.rt.manifest().preset(&self.cfg.preset)?;
         let d = pm.layout.param_dim;
         let mut rng = crate::util::rng::Rng::new(self.cfg.seed);
         let mut phi = pm.layout.init_vector(&mut rng);

@@ -6,11 +6,11 @@ use anyhow::Result;
 
 use crate::pde::Sampler;
 use crate::photonics::noise::ChipRealization;
-use crate::runtime::{Executable, Runtime};
+use crate::runtime::{Backend, Entry};
 
-/// Holds the `validate` executable plus a fixed validation set.
+/// Holds the `validate` entry plus a fixed validation set.
 pub struct Validator {
-    exec: Arc<Executable>,
+    exec: Arc<dyn Entry>,
     xv: Vec<f32>,
     uv: Vec<f32>,
     /// scratch for the programmed (effective) parameter vector
@@ -19,11 +19,11 @@ pub struct Validator {
 
 impl Validator {
     /// Build with a deterministic validation set of the manifest's size.
-    pub fn new(rt: &Runtime, preset: &str, seed: u64) -> Result<Validator> {
-        let pm = rt.manifest.preset(preset)?;
+    pub fn new(rt: &dyn Backend, preset: &str, seed: u64) -> Result<Validator> {
+        let pm = rt.manifest().preset(preset)?;
         let exec = rt.entry(preset, "validate")?;
         let mut sampler = Sampler::new(pm.pde, seed ^ 0x7A11_DA7E);
-        let (xv, uv) = sampler.validation(rt.manifest.b_validate);
+        let (xv, uv) = sampler.validation(rt.manifest().b_validate);
         Ok(Validator {
             exec,
             xv,

@@ -1,25 +1,51 @@
 //! # photon-pinn
 //!
 //! Reproduction of *"Real-Time fJ/MAC PDE Solvers via Tensorized,
-//! Back-Propagation-Free Optical PINN Training"* (Zhao et al., 2023) as a
-//! three-layer rust + JAX + Pallas system:
+//! Back-Propagation-Free Optical PINN Training"* (Zhao et al., 2023):
+//! the *digital control system* of the paper — the BP-free on-chip
+//! trainer (SPSA + ZO-signSGD), the hardware-noise programming path, the
+//! off-chip BP baseline, the photonic device / energy / latency model
+//! (Table 2), benches for every table and figure, and a threaded
+//! real-time PDE solver service.
 //!
-//! * **Layer 1/2** (build-time python, `python/compile/`): the phase-domain
-//!   ONN/TONN PINN model and its Pallas kernels, AOT-lowered to HLO-text
-//!   artifacts. Python never runs at request time.
-//! * **Layer 3** (this crate): the *digital control system* of the paper —
-//!   the BP-free on-chip trainer (SPSA + ZO-signSGD), the hardware-noise
-//!   programming path, the off-chip BP baseline, the photonic device /
-//!   energy / latency model (Table 2), benches for every table and figure,
-//!   and a threaded real-time PDE solver service.
+//! ## Execution backends
 //!
-//! Entry points: [`runtime::Runtime`] loads artifacts; [`coordinator`]
-//! drives training; `examples/` are runnable end-to-end drivers.
+//! Everything the coordinator asks the "photonic chip" for goes through
+//! the [`runtime::Backend`] trait; two interchangeable implementations
+//! exist:
 //!
-//! The crate is dependency-free beyond the `xla` PJRT bindings (and
-//! `anyhow`): the RNG, JSON codec, CLI parser, thread-pool service and
-//! bench harness are all first-class substrates in [`util`]
-//! (see DESIGN.md §Substitutions).
+//! * [`runtime::NativeBackend`] — **default**. Pure rust: materializes
+//!   the phase-domain ONN/TONN layers from the Givens/MZI meshes
+//!   ([`photonics::mesh`]) and TT cores ([`tensor`]), and assembles the
+//!   FD/Stein PINN losses from [`pde`]. Presets come from the in-repo
+//!   registry (no build step) or any `manifest.json`. `Send + Sync`:
+//!   solver-service workers share ONE backend. This is the path CI
+//!   exercises (`cargo build --release && cargo test -q`) — every
+//!   integration test runs against it, no artifacts required.
+//! * `runtime::PjrtBackend` — behind the **non-default `pjrt` cargo
+//!   feature**. Executes AOT HLO-text artifacts produced by the
+//!   build-time python layers (`python/compile/`: the jax model + Pallas
+//!   kernels, lowered once by `make artifacts`) through the `xla` PJRT
+//!   bindings. The `grad` entry (exact autodiff for the off-chip BP
+//!   baseline) exists only here.
+//!
+//! Cross-backend equivalence is pinned by golden tests
+//! (`rust/tests/artifact_numerics.rs`): jax-computed fixtures are
+//! checked into `rust/tests/fixtures/` and the native evaluator must
+//! reproduce them to 1e-4/1e-3.
+//!
+//! Entry points: [`runtime::load_backend`] (or `NativeBackend::builtin`)
+//! loads a backend; [`coordinator`] drives training; `examples/` are
+//! runnable end-to-end drivers.
+//!
+//! The default build is dependency-free beyond `anyhow`: the RNG, JSON
+//! codec, CLI parser, thread-pool service and bench harness are all
+//! first-class substrates in [`util`] (see DESIGN.md §Substitutions).
+
+// Index-heavy numeric kernels (mesh rotations, TT contractions, FD
+// stencils) read clearest with explicit index loops; entry-meta builders
+// return shape tuples by design.
+#![allow(clippy::needless_range_loop, clippy::type_complexity)]
 
 pub mod coordinator;
 pub mod model;

@@ -19,7 +19,7 @@ use photon_pinn::coordinator::checkpoint::Checkpoint;
 use photon_pinn::coordinator::experiment::{Table1Config, Table1Runner};
 use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
 use photon_pinn::photonics::perf::{Design, NetworkDims, PerfModel, TrainingEfficiency};
-use photon_pinn::runtime::Runtime;
+use photon_pinn::runtime::Backend;
 use photon_pinn::util::bench::Table;
 use photon_pinn::util::cli::Args;
 use photon_pinn::util::stats::sci;
@@ -34,6 +34,7 @@ fn main() {
 fn args_for(cmd: &str) -> Args {
     Args::new(&format!("photon-pinn {cmd}"), "optical PINN training (paper reproduction)")
         .flag("artifacts", None, "artifacts directory (default: auto-discover)")
+        .flag("backend", Some("native"), "execution backend: native | pjrt (needs --features pjrt)")
         .flag("preset", Some("tonn_small"), "network preset from the manifest")
         .flag("epochs", None, "override training epochs")
         .flag("seed", Some("0"), "master seed")
@@ -48,13 +49,24 @@ fn args_for(cmd: &str) -> Args {
         .switch("quiet", "suppress progress lines")
 }
 
-fn load_runtime(a: &Args) -> Result<Runtime> {
+fn load_runtime(a: &Args) -> Result<Box<dyn Backend>> {
     let dir = photon_pinn::resolve_artifacts_dir(a.get_str("artifacts").as_deref());
-    let rt = Runtime::load(&dir)?;
+    let which = a.get_str("backend").unwrap_or_else(|| "native".into());
+    let rt: Box<dyn Backend> = match which.as_str() {
+        "native" => photon_pinn::runtime::load_backend(&dir)?,
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Box::new(photon_pinn::runtime::PjrtBackend::load(&dir)?),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!(
+            "this build has no PJRT support; add the xla dependency and \
+             rebuild with `--features pjrt` (see rust/Cargo.toml)"
+        ),
+        other => anyhow::bail!("unknown backend '{other}' (native | pjrt)"),
+    };
     eprintln!(
-        "loaded {} presets from {} (platform: {})",
-        rt.manifest.presets.len(),
-        dir.display(),
+        "loaded {} presets ({} backend: {})",
+        rt.manifest().presets.len(),
+        which,
         rt.platform()
     );
     Ok(rt)
@@ -82,11 +94,11 @@ fn run() -> Result<()> {
 fn cmd_presets(argv: Vec<String>) -> Result<()> {
     let a = args_for("presets").parse(argv)?;
     let rt = load_runtime(&a)?;
-    let mut names: Vec<_> = rt.manifest.presets.keys().cloned().collect();
+    let mut names: Vec<_> = rt.manifest().presets.keys().cloned().collect();
     names.sort();
     let mut t = Table::new("presets", &["preset", "pde", "param_dim", "entries"]);
     for n in names {
-        let p = &rt.manifest.presets[&n];
+        let p = &rt.manifest().presets[&n];
         let mut es: Vec<_> = p.entries.keys().cloned().collect();
         es.sort();
         t.row(&[
@@ -152,7 +164,7 @@ fn cmd_offchip(argv: Vec<String>) -> Result<()> {
     cfg.verbose = !a.get_bool("quiet");
     let mut tr = OffChipTrainer::new(&rt, cfg)?;
     let (phi, ideal, _) = tr.train()?;
-    let pm = rt.manifest.preset(&preset)?;
+    let pm = rt.manifest().preset(&preset)?;
     let noise = NoiseConfig::default_chip().scaled(a.get_f64("noise-scale")?.unwrap());
     let chip = ChipRealization::sample(&pm.layout, &noise, a.get_u64("chip-seed")?.unwrap());
     let mapped = tr.score_mapped(&phi, &chip)?;
@@ -189,10 +201,18 @@ fn cmd_table1(argv: Vec<String>) -> Result<()> {
         &["Network", "Params(Φ)", "Off. w/o noise", "Off. w/ noise", "On. w/ noise (proposed)"],
     );
     for preset in ["onn_small", "tonn_small"] {
-        if rt.manifest.preset(preset).is_err() {
+        if rt.manifest().preset(preset).is_err() {
             continue;
         }
-        let row = runner.run_preset(preset)?;
+        // the off-chip BP rows need the `grad` entry (pjrt + artifacts);
+        // on the native backend skip with the reason, don't abort
+        let row = match runner.run_preset(preset) {
+            Ok(row) => row,
+            Err(e) => {
+                eprintln!("{preset}: skipped ({e:#})");
+                continue;
+            }
+        };
         t.row(&[
             row.network.clone(),
             row.params.to_string(),

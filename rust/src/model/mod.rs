@@ -148,6 +148,46 @@ impl Layout {
             .map(|s| s.len)
             .sum()
     }
+
+    /// Manifest `segments` JSON — the single serialization of the layout
+    /// contract shared with `python/compile/mesh.py::LayoutBuilder`
+    /// (inverse of [`Layout::parse`], round-trip-tested).
+    pub fn segments_json(&self) -> Value {
+        Value::Arr(
+            self.segments
+                .iter()
+                .map(|s| {
+                    let kind = match s.kind {
+                        SegmentKind::Angles => "angles",
+                        SegmentKind::Sigma => "sigma",
+                        SegmentKind::Weights => "weights",
+                    };
+                    let init = match s.init {
+                        InitHint::Uniform { lo, hi } => Value::obj(vec![
+                            ("dist", Value::Str("uniform".into())),
+                            ("lo", Value::Num(lo)),
+                            ("hi", Value::Num(hi)),
+                        ]),
+                        InitHint::Const { val } => Value::obj(vec![
+                            ("dist", Value::Str("const".into())),
+                            ("val", Value::Num(val)),
+                        ]),
+                        InitHint::Normal { std } => Value::obj(vec![
+                            ("dist", Value::Str("normal".into())),
+                            ("std", Value::Num(std)),
+                        ]),
+                    };
+                    Value::obj(vec![
+                        ("name", Value::Str(s.name.clone())),
+                        ("kind", Value::Str(kind.into())),
+                        ("offset", Value::Num(s.offset as f64)),
+                        ("len", Value::Num(s.len as f64)),
+                        ("init", init),
+                    ])
+                })
+                .collect(),
+        )
+    }
 }
 
 /// Training hyperparameters (manifest `hyper` block + CLI overrides).
@@ -162,6 +202,10 @@ pub struct Hyper {
     pub epochs: usize,
     pub batch: usize,
     pub k_multi: usize,
+    /// Stein estimator smoothing radius (entry `loss_stein`)
+    pub stein_sigma: f64,
+    /// Stein estimator sample count (the `z` input is (stein_q, in_dim))
+    pub stein_q: usize,
 }
 
 impl Hyper {
@@ -171,6 +215,8 @@ impl Hyper {
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("hyper.{k} must be a number"))
         };
+        // optional with defaults: older manifests omit the Stein knobs
+        let opt = |k: &str, d: f64| v.get(k).and_then(|x| x.as_f64()).unwrap_or(d);
         Ok(Hyper {
             fd_h: f("fd_h")?,
             spsa_mu: f("spsa_mu")?,
@@ -181,7 +227,86 @@ impl Hyper {
             epochs: f("epochs")? as usize,
             batch: f("batch")? as usize,
             k_multi: f("k_multi")? as usize,
+            stein_sigma: opt("stein_sigma", 0.05),
+            stein_q: opt("stein_q", 20.0) as usize,
         })
+    }
+}
+
+/// Accumulates named parameter segments into one flat-vector layout —
+/// the rust mirror of `python/compile/mesh.py::LayoutBuilder`, used by
+/// the native backend's in-repo preset registry. Distributions and
+/// ordering are identical so Φ layouts (and init draws) line up across
+/// backends.
+#[derive(Debug, Default)]
+pub struct LayoutBuilder {
+    segments: Vec<Segment>,
+    total: usize,
+}
+
+impl LayoutBuilder {
+    pub fn new() -> Self {
+        LayoutBuilder::default()
+    }
+
+    /// Append a segment; returns its (offset, len) span.
+    pub fn add(&mut self, name: &str, kind: SegmentKind, len: usize, init: InitHint) -> (usize, usize) {
+        let offset = self.total;
+        self.segments.push(Segment {
+            name: name.to_string(),
+            kind,
+            offset,
+            len,
+            init,
+        });
+        self.total += len;
+        (offset, len)
+    }
+
+    /// A Clements mesh over `n` channels: `n(n-1)/2` angles, U(-π, π).
+    pub fn add_mesh(&mut self, name: &str, n: usize) -> (usize, usize) {
+        let pi = std::f64::consts::PI;
+        self.add(
+            name,
+            SegmentKind::Angles,
+            crate::photonics::mesh::mzi_count(n),
+            InitHint::Uniform { lo: -pi, hi: pi },
+        )
+    }
+
+    /// `min(m, n)` singular amplitudes at a constant value.
+    pub fn add_sigma(&mut self, name: &str, k: usize, value: f64) -> (usize, usize) {
+        self.add(name, SegmentKind::Sigma, k, InitHint::Const { val: value })
+    }
+
+    /// A modulator row: plain weights, N(0, std²).
+    pub fn add_weights(&mut self, name: &str, len: usize, std: f64) -> (usize, usize) {
+        self.add(name, SegmentKind::Weights, len, InitHint::Normal { std })
+    }
+
+    /// A full SVD block `W = U(θ_U)·Σ·V(θ_V)^T`; returns (u, s, v) spans.
+    pub fn add_svd_block(
+        &mut self,
+        name: &str,
+        m: usize,
+        n: usize,
+        sigma0: f64,
+    ) -> ((usize, usize), (usize, usize), (usize, usize)) {
+        let su = self.add_mesh(&format!("{name}.theta_u"), m);
+        let ss = self.add_sigma(&format!("{name}.sigma"), m.min(n), sigma0);
+        let sv = self.add_mesh(&format!("{name}.theta_v"), n);
+        (su, ss, sv)
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    pub fn build(self) -> Layout {
+        Layout {
+            param_dim: self.total,
+            segments: self.segments,
+        }
     }
 }
 
@@ -259,5 +384,27 @@ mod tests {
         assert_eq!(h.spsa_n, 10);
         assert_eq!(h.epochs, 1500);
         assert!((h.lr - 0.02).abs() < 1e-12);
+        assert_eq!(h.stein_q, 20);
+        assert!((h.stein_sigma - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layout_builder_mirrors_python() {
+        // tonn-style block: mesh angles + sigma + mesh angles, then bias
+        let mut lb = LayoutBuilder::new();
+        let (su, ss, sv) = lb.add_svd_block("l1", 4, 8, 0.3);
+        assert_eq!(su, (0, 6)); // mzi_count(4)
+        assert_eq!(ss, (6, 4)); // min(4, 8)
+        assert_eq!(sv, (10, 28)); // mzi_count(8)
+        let b = lb.add_weights("l1.bias", 8, 0.1);
+        assert_eq!(b, (38, 8));
+        assert_eq!(lb.total(), 46);
+        let layout = lb.build();
+        assert_eq!(layout.param_dim, 46);
+        // round-trips through the manifest segment parser
+        let back = Layout::parse(46, &layout.segments_json()).unwrap();
+        assert_eq!(back.segments.len(), layout.segments.len());
+        assert_eq!(back.count_kind(SegmentKind::Angles), 34);
+        assert_eq!(back.count_kind(SegmentKind::Sigma), 4);
     }
 }

@@ -64,6 +64,105 @@ impl Pde {
         }
     }
 
+    /// Whether the input carries a trailing time coordinate.
+    pub fn has_time(&self) -> bool {
+        match self {
+            Pde::Hjb20 | Pde::Heat2 => true,
+            Pde::Poisson2 => false,
+        }
+    }
+
+    /// Hard-constraint transform `u = T(f, x)` (python `pde.transform`):
+    /// the network output f is digital-post-processed so the terminal /
+    /// boundary condition holds exactly.
+    pub fn transform(&self, f: f32, x: &[f32]) -> f32 {
+        match self {
+            Pde::Hjb20 => {
+                let t = x[20];
+                let l1: f32 = x[..20].iter().map(|v| v.abs()).sum();
+                (1.0 - t) * f + l1
+            }
+            Pde::Poisson2 => poisson_g(x) * f,
+            Pde::Heat2 => {
+                let g = x[0] * (1.0 - x[0]) * x[1] * (1.0 - x[1]);
+                x[2] * g * f + heat_ic(x)
+            }
+        }
+    }
+
+    /// Append the FD stencil rows for one collocation point: base, ±h per
+    /// spatial dim, then +h in time when present (python `pde.stencil`).
+    pub fn stencil_rows(&self, x: &[f32], h: f32, out: &mut Vec<f32>) {
+        let d = self.dim();
+        debug_assert_eq!(x.len(), self.in_dim());
+        out.extend_from_slice(x); // base
+        for i in 0..d {
+            out.extend_from_slice(x);
+            let n = out.len();
+            out[n - x.len() + i] += h;
+            out.extend_from_slice(x);
+            let n = out.len();
+            out[n - x.len() + i] -= h;
+        }
+        if self.has_time() {
+            out.extend_from_slice(x);
+            let n = out.len();
+            let ti = self.in_dim() - 1;
+            out[n - x.len() + ti] += h;
+        }
+    }
+
+    /// PDE residual from derivative *estimates of f* plus the transform's
+    /// analytic derivatives (python `pde.assemble_derivs`, per sample).
+    ///
+    /// `df` has `in_dim` entries: spatial first derivatives, then (when
+    /// the PDE has time) the time derivative at index `dim`.
+    pub fn residual(&self, f0: f32, df: &[f32], lap_f: f32, x: &[f32]) -> f32 {
+        match self {
+            Pde::Hjb20 => {
+                let t = x[20];
+                let omt = 1.0 - t;
+                let u_t = -f0 + omt * df[20];
+                let mut gsq = 0.0f32;
+                for i in 0..20 {
+                    let gx = omt * df[i] + sign0(x[i]);
+                    gsq += gx * gx;
+                }
+                let lap_u = omt * lap_f;
+                u_t + lap_u - 0.05 * gsq + 2.0
+            }
+            Pde::Poisson2 => {
+                let (x0, y0) = (x[0], x[1]);
+                let gx_ = x0 * (1.0 - x0);
+                let gy_ = y0 * (1.0 - y0);
+                let g = gx_ * gy_;
+                let dg0 = (1.0 - 2.0 * x0) * gy_;
+                let dg1 = gx_ * (1.0 - 2.0 * y0);
+                let lap_g = -2.0 * gy_ - 2.0 * gx_;
+                let lap_u = lap_g * f0 + 2.0 * (dg0 * df[0] + dg1 * df[1]) + g * lap_f;
+                let pi = std::f32::consts::PI;
+                let rhs = 2.0 * pi * pi * (pi * x0).sin() * (pi * y0).sin();
+                lap_u + rhs
+            }
+            Pde::Heat2 => {
+                let alpha = 0.1f32;
+                let (x0, y0, t) = (x[0], x[1], x[2]);
+                let gx_ = x0 * (1.0 - x0);
+                let gy_ = y0 * (1.0 - y0);
+                let g = gx_ * gy_;
+                let dg0 = (1.0 - 2.0 * x0) * gy_;
+                let dg1 = gx_ * (1.0 - 2.0 * y0);
+                let lap_g = -2.0 * gy_ - 2.0 * gx_;
+                let pi = std::f32::consts::PI;
+                let ic = heat_ic(x);
+                let u_t = g * f0 + t * g * df[2];
+                let lap_u = t * (lap_g * f0 + 2.0 * (dg0 * df[0] + dg1 * df[1]) + g * lap_f)
+                    - 2.0 * pi * pi * ic;
+                u_t - alpha * lap_u
+            }
+        }
+    }
+
     /// Exact solution at one input point (for validation data).
     pub fn exact(&self, x: &[f32]) -> f32 {
         match self {
@@ -81,6 +180,29 @@ impl Pde {
             }
         }
     }
+}
+
+/// `sign` with `sign(0) = 0` (jnp.sign semantics; `f32::signum(0.) = 1.`).
+#[inline]
+fn sign0(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[inline]
+fn poisson_g(x: &[f32]) -> f32 {
+    x[0] * (1.0 - x[0]) * x[1] * (1.0 - x[1])
+}
+
+#[inline]
+fn heat_ic(x: &[f32]) -> f32 {
+    let pi = std::f32::consts::PI;
+    (pi * x[0]).sin() * (pi * x[1]).sin()
 }
 
 /// Uniform collocation sampler over [0,1]^in_dim, batched row-major.
@@ -167,6 +289,74 @@ mod tests {
         assert_eq!(b1.len(), 50 * 21);
         assert_eq!(b1, b2);
         assert!(b1.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn transform_enforces_hard_constraints() {
+        // hjb: u(x, t=1) = ‖x‖₁ regardless of f
+        let mut x = vec![0.3f32; 21];
+        x[20] = 1.0;
+        assert!((Pde::Hjb20.transform(123.0, &x) - 6.0).abs() < 1e-5);
+        // poisson: u = 0 on the boundary regardless of f
+        assert_eq!(Pde::Poisson2.transform(9.0, &[0.0, 0.4]), 0.0);
+        assert_eq!(Pde::Poisson2.transform(9.0, &[0.7, 1.0]), 0.0);
+        // heat: u(x, t=0) = sin(πx)sin(πy) regardless of f
+        let u0 = Pde::Heat2.transform(55.0, &[0.5, 0.5, 0.0]);
+        assert!((u0 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stencil_rows_layout() {
+        let x = [0.25f32, 0.5, 0.75];
+        let mut out = Vec::new();
+        Pde::Heat2.stencil_rows(&x, 0.1, &mut out);
+        assert_eq!(out.len(), Pde::Heat2.n_stencil() * 3);
+        // base row
+        assert_eq!(&out[..3], &x);
+        // +h then -h per spatial dim
+        assert!((out[3] - 0.35).abs() < 1e-6 && out[4] == 0.5);
+        assert!((out[6] - 0.15).abs() < 1e-6);
+        assert!((out[10] - 0.6).abs() < 1e-6);
+        assert!((out[13] - 0.4).abs() < 1e-6);
+        // forward time row last
+        let last = &out[15..18];
+        assert!((last[2] - 0.85).abs() < 1e-6 && last[0] == 0.25);
+    }
+
+    #[test]
+    fn hjb_residual_vanishes_on_exact_solution() {
+        // u* = ‖x‖₁ + 1 − t ⇒ f* ≡ 1 (since u = (1−t)f + ‖x‖₁), so the
+        // residual with f0 = 1, df = 0, lap = 0 must be 0 everywhere:
+        // −1 + 0 − 0.05·Σ sign(x_i)² + 2 = −1 − 1 + 2 = 0
+        let mut x = vec![0.42f32; 21];
+        x[20] = 0.3;
+        let df = vec![0.0f32; 21];
+        let r = Pde::Hjb20.residual(1.0, &df, 0.0, &x);
+        assert!(r.abs() < 1e-5, "residual {r}");
+    }
+
+    #[test]
+    fn poisson_residual_vanishes_on_exact_solution_fd() {
+        // FD-estimate f* = u*/g on the stencil and check the assembled
+        // residual ≈ 0 at an interior point (O(h²) truncation)
+        let h = 0.01f32;
+        let x = [0.4f32, 0.6];
+        let mut rows = Vec::new();
+        Pde::Poisson2.stencil_rows(&x, h, &mut rows);
+        let f: Vec<f32> = (0..5)
+            .map(|i| {
+                let p = &rows[i * 2..i * 2 + 2];
+                let g = p[0] * (1.0 - p[0]) * p[1] * (1.0 - p[1]);
+                Pde::Poisson2.exact(p) / g
+            })
+            .collect();
+        let df = [
+            (f[1] - f[2]) / (2.0 * h),
+            (f[3] - f[4]) / (2.0 * h),
+        ];
+        let lap = (f[1] - 2.0 * f[0] + f[2] + f[3] - 2.0 * f[0] + f[4]) / (h * h);
+        let r = Pde::Poisson2.residual(f[0], &df, lap, &x);
+        assert!(r.abs() < 0.05, "residual {r}");
     }
 
     #[test]

@@ -161,6 +161,53 @@ mod tests {
     }
 
     #[test]
+    fn prop_unitary_reconstruction_is_orthogonal() {
+        // property: for random sizes and angle settings, the materialized
+        // Givens/MZI mesh matrix U satisfies U·Uᵀ = I within f32 tolerance
+        // — the physical "lossless interferometer" invariant every SVD
+        // block relies on
+        prop::check(30, |r| {
+            let n = [2usize, 4, 6, 8, 12][r.below(5)];
+            let mut theta = vec![0.0f32; mzi_count(n)];
+            r.fill_uniform(&mut theta, -6.3, 6.3);
+            let u = unitary(&theta, n);
+            let id = u.matmul(&u.transpose());
+            let err = id.max_abs_diff(&crate::tensor::Mat::eye(n));
+            assert!(err < 2e-4, "n={n}: |U·Uᵀ − I|∞ = {err}");
+            // and the reverse application inverts the forward one
+            let mut x = vec![0.0f32; n];
+            r.fill_normal(&mut x);
+            let y = apply(&theta, &x, false);
+            let back = apply(&theta, &y, true);
+            for (a, b) in back.iter().zip(&x) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_svd_matrix_frobenius_matches_sigma() {
+        // property: ‖W‖²_F = Σσ² for any mesh angles (orthogonal U, V)
+        prop::check(20, |r| {
+            let (m, n) = ([2usize, 4, 8][r.below(3)], [2usize, 4, 8][r.below(3)]);
+            let k = m.min(n);
+            let mut tu = vec![0.0f32; mzi_count(m)];
+            let mut tv = vec![0.0f32; mzi_count(n)];
+            r.fill_uniform(&mut tu, -3.0, 3.0);
+            r.fill_uniform(&mut tv, -3.0, 3.0);
+            let mut sigma = vec![0.0f32; k];
+            r.fill_uniform(&mut sigma, 0.1, 1.5);
+            let w = svd_matrix(&tu, &sigma, &tv, m, n);
+            let frob: f32 = w.data.iter().map(|v| v * v).sum();
+            let expect: f32 = sigma.iter().map(|s| s * s).sum();
+            assert!(
+                (frob - expect).abs() < 1e-3 * expect.max(1.0),
+                "({m},{n}): {frob} vs {expect}"
+            );
+        });
+    }
+
+    #[test]
     fn zero_angles_identity() {
         let n = 8;
         let theta = vec![0.0f32; mzi_count(n)];

@@ -1,19 +1,28 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
-//! the rust hot path. This module *is* the "photonic chip" of the
-//! simulation — everything it can compute is a forward pass of the
-//! lowered model (no autodiff exists in the on-chip artifacts).
+//! Execution backends: the abstraction the digital control system talks
+//! to when it wants the "photonic chip" to compute something.
 //!
-//! Flow: `manifest.json` -> [`Manifest`] -> [`Runtime::load`] (compile
-//! each HLO once, cache the executable) -> [`Executable::run`] with flat
-//! f32 buffers.
+//! Everything the coordinator can ask for is a *forward pass* of a preset
+//! entry point on flat f32 buffers (no autodiff exists on-chip). Two
+//! interchangeable [`Backend`] implementations provide it:
 //!
-//! The interchange format is HLO **text** (jax >= 0.5 serialized protos
-//! use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
-//! parser reassigns ids — /opt/xla-example/README.md).
+//! * [`NativeBackend`] (default, pure rust): evaluates the tensorized
+//!   ONN/TONN model directly from [`crate::photonics::mesh`] and
+//!   [`crate::tensor`], synthesizing its manifest from the in-repo preset
+//!   registry (or a `manifest.json` on disk). `Send + Sync`, no build
+//!   step, no python — this is what CI exercises.
+//! * `PjrtBackend` (behind the non-default `pjrt` cargo feature): loads
+//!   AOT-lowered HLO-text artifacts produced by `python/compile/aot.py`
+//!   and executes them through the `xla` PJRT bindings. Bit-faithful to
+//!   the jax/Pallas model; one client per thread (PJRT handles are not
+//!   `Send`).
+//!
+//! Shared vocabulary: `manifest.json` -> [`Manifest`] (presets, layouts,
+//! hyperparameters, entry I/O shapes) -> [`Backend::entry`] ->
+//! [`Entry::run`] with flat f32 buffers.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -21,10 +30,19 @@ use crate::model::{Hyper, Layout};
 use crate::pde::Pde;
 use crate::util::json::{self, Value};
 
-/// I/O shape of one artifact entry point.
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
+
+/// I/O shape of one entry point.
 #[derive(Clone, Debug)]
 pub struct EntryMeta {
     pub name: String,
+    /// artifact file name (empty for native entries)
     pub file: String,
     /// input shapes, row-major (empty shape = scalar)
     pub inputs: Vec<(String, Vec<usize>)>,
@@ -39,6 +57,32 @@ impl EntryMeta {
     pub fn output_len(&self, i: usize) -> usize {
         self.outputs[i].iter().product()
     }
+
+    /// Validate an input buffer set against the declared shapes (shared
+    /// by every backend so error messages are uniform).
+    pub fn check_inputs(&self, inputs: &[&[f32]]) -> Result<()> {
+        anyhow::ensure!(
+            inputs.len() == self.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.name,
+            self.inputs.len(),
+            inputs.len()
+        );
+        for (i, buf) in inputs.iter().enumerate() {
+            let (name, shape) = &self.inputs[i];
+            let want: usize = shape.iter().product();
+            anyhow::ensure!(
+                buf.len() == want,
+                "{}: input '{}' expects {:?} = {} elems, got {}",
+                self.name,
+                name,
+                shape,
+                want,
+                buf.len()
+            );
+        }
+        Ok(())
+    }
 }
 
 /// One preset (network x PDE bundle) from the manifest.
@@ -50,10 +94,11 @@ pub struct PresetMeta {
     pub hyper: Hyper,
     pub entries: HashMap<String, EntryMeta>,
     /// raw arch block (factors/ranks/hidden) for the photonics census
+    /// and the native evaluator
     pub arch: Value,
 }
 
-/// Parsed manifest.json.
+/// Parsed manifest: presets + global batch shapes.
 #[derive(Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
@@ -75,6 +120,11 @@ fn parse_shape(v: &Value) -> Result<Vec<usize>> {
 impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let root = json::parse_file(&dir.join("manifest.json"))?;
+        Manifest::from_value(dir, &root)
+    }
+
+    /// Parse a manifest document (shared by the file loader and tests).
+    pub fn from_value(dir: &Path, root: &Value) -> Result<Manifest> {
         let bs = root.req("batch_shapes").map_err(|e| anyhow!("{e}"))?;
         let presets_v = root.req("presets").map_err(|e| anyhow!("{e}"))?;
         let mut presets = HashMap::new();
@@ -135,9 +185,8 @@ impl Manifest {
                     EntryMeta {
                         name: ename.clone(),
                         file: ev
-                            .req("file")
-                            .map_err(|e| anyhow!("{e}"))?
-                            .as_str()
+                            .get("file")
+                            .and_then(|f| f.as_str())
                             .unwrap_or_default()
                             .to_string(),
                         inputs,
@@ -182,144 +231,49 @@ impl Manifest {
     }
 }
 
-/// A compiled artifact entry point.
-pub struct Executable {
-    pub meta: EntryMeta,
-    exe: xla::PjRtLoadedExecutable,
-    /// dispatch counter (metrics / perf accounting)
-    pub dispatches: std::sync::atomic::AtomicU64,
-}
+/// One executable entry point of a preset, regardless of backend.
+pub trait Entry {
+    fn meta(&self) -> &EntryMeta;
 
-impl Executable {
     /// Execute with flat f32 input buffers (shapes from the manifest).
     /// Returns one flat f32 vector per output.
-    pub fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
-        anyhow::ensure!(
-            inputs.len() == self.meta.inputs.len(),
-            "{}: expected {} inputs, got {}",
-            self.meta.name,
-            self.meta.inputs.len(),
-            inputs.len()
-        );
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, buf) in inputs.iter().enumerate() {
-            let (name, shape) = &self.meta.inputs[i];
-            let want: usize = shape.iter().product();
-            anyhow::ensure!(
-                buf.len() == want,
-                "{}: input '{}' expects {:?} = {} elems, got {}",
-                self.meta.name,
-                name,
-                shape,
-                want,
-                buf.len()
-            );
-            let lit = xla::Literal::vec1(buf);
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(if shape.len() == 1 {
-                lit
-            } else {
-                lit.reshape(&dims)
-                    .map_err(|e| anyhow!("reshape {name}: {e:?}"))?
-            });
-        }
-        self.dispatches
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e:?}", self.meta.name))?;
-        // entries are lowered with return_tuple=True
-        let parts = lit
-            .to_tuple()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", self.meta.name))?;
-        anyhow::ensure!(
-            parts.len() == self.meta.outputs.len(),
-            "{}: expected {} outputs, got {}",
-            self.meta.name,
-            self.meta.outputs.len(),
-            parts.len()
-        );
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output: {e:?}")))
-            .collect()
-    }
+    fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+
+    /// Dispatch counter (metrics / perf accounting).
+    fn dispatches(&self) -> u64;
 
     /// Single-output convenience.
-    pub fn run1(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+    fn run1(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         let mut out = self.run(inputs)?;
-        anyhow::ensure!(out.len() == 1, "{}: multi-output", self.meta.name);
+        anyhow::ensure!(out.len() == 1, "{}: multi-output", self.meta().name);
         Ok(out.pop().unwrap())
     }
 
     /// Scalar-output convenience.
-    pub fn run_scalar(&self, inputs: &[&[f32]]) -> Result<f32> {
+    fn run_scalar(&self, inputs: &[&[f32]]) -> Result<f32> {
         let v = self.run1(inputs)?;
-        anyhow::ensure!(v.len() == 1, "{}: not scalar", self.meta.name);
+        anyhow::ensure!(v.len() == 1, "{}: not scalar", self.meta().name);
         Ok(v[0])
     }
 }
 
-/// The PJRT client + compiled-executable cache for one artifacts dir.
-pub struct Runtime {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<(String, String), std::sync::Arc<Executable>>>,
-}
+/// An execution backend: a manifest plus the ability to run its entries.
+///
+/// Deliberately NOT `Send`-bound: the PJRT implementation wraps thread-
+/// local client handles. [`NativeBackend`] *is* `Send + Sync` and can be
+/// shared across solver-service workers (see
+/// [`crate::coordinator::SolverService::start_shared`]).
+pub trait Backend {
+    fn manifest(&self) -> &Manifest;
 
-impl Runtime {
-    /// Create a CPU PJRT client and parse the manifest. Compilation is
-    /// lazy, per entry point, cached for the process lifetime.
-    pub fn load(artifacts_dir: &Path) -> Result<Runtime> {
-        let manifest = Manifest::load(artifacts_dir)
-            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        Ok(Runtime {
-            manifest,
-            client,
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
+    /// Human-readable execution platform (e.g. `native-cpu`, `Host`).
+    fn platform(&self) -> String;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    /// Get (building/compiling on first use) an entry point of a preset.
+    fn entry(&self, preset: &str, entry: &str) -> Result<Arc<dyn Entry>>;
 
-    /// Get (compiling on first use) an entry point of a preset.
-    pub fn entry(&self, preset: &str, entry: &str) -> Result<std::sync::Arc<Executable>> {
-        let key = (preset.to_string(), entry.to_string());
-        if let Some(e) = self.cache.lock().unwrap().get(&key) {
-            return Ok(e.clone());
-        }
-        let pm = self.manifest.preset(preset)?;
-        let em = pm
-            .entries
-            .get(entry)
-            .ok_or_else(|| anyhow!("preset '{preset}' has no entry '{entry}'"))?
-            .clone();
-        let path = self.manifest.dir.join(&em.file);
-        let proto = xla::HloModuleProto::from_text_file(&path)
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
-        let wrapped = std::sync::Arc::new(Executable {
-            meta: em,
-            exe,
-            dispatches: std::sync::atomic::AtomicU64::new(0),
-        });
-        self.cache.lock().unwrap().insert(key, wrapped.clone());
-        Ok(wrapped)
-    }
-
-    /// Pre-compile a set of entries (avoids first-dispatch latency spikes).
-    pub fn warmup(&self, preset: &str, entries: &[&str]) -> Result<()> {
+    /// Pre-build a set of entries (avoids first-dispatch latency spikes).
+    fn warmup(&self, preset: &str, entries: &[&str]) -> Result<()> {
         for e in entries {
             self.entry(preset, e)?;
         }
@@ -327,12 +281,16 @@ impl Runtime {
     }
 }
 
+/// Load the default backend for an artifacts directory: the native
+/// evaluator, from `manifest.json` when present (shape/layout source of
+/// truth), else from the built-in preset registry.
+pub fn load_backend(artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::load_or_builtin(artifacts_dir)?))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    // Integration tests that need real artifacts live in rust/tests/;
-    // here we only test manifest parsing against a synthetic manifest.
 
     fn synthetic_manifest(dir: &Path) {
         let text = r#"{
@@ -377,5 +335,26 @@ mod tests {
         assert_eq!(e.output_len(0), 1);
         assert!(m.preset("nope").is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn check_inputs_errors() {
+        let em = EntryMeta {
+            name: "loss".into(),
+            file: String::new(),
+            inputs: vec![
+                ("phi".into(), vec![3]),
+                ("xr".into(), vec![4, 2]),
+            ],
+            outputs: vec![vec![]],
+        };
+        let phi = [0.0f32; 3];
+        let xr = [0.0f32; 8];
+        assert!(em.check_inputs(&[&phi, &xr]).is_ok());
+        let err = em.check_inputs(&[&phi]).unwrap_err().to_string();
+        assert!(err.contains("inputs"), "{err}");
+        let short = [0.0f32; 2];
+        let err = em.check_inputs(&[&short, &xr]).unwrap_err().to_string();
+        assert!(err.contains("expects"), "{err}");
     }
 }

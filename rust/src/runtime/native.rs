@@ -1,0 +1,1021 @@
+//! Native backend: evaluates the tensorized phase-domain ONN/TONN PINN
+//! directly in rust — no python, no AOT artifacts, no XLA runtime.
+//!
+//! The evaluator is the rust mirror of `python/compile/networks.py` +
+//! `python/compile/pinn.py` (checked against jax-computed goldens in
+//! `rust/tests/artifact_numerics.rs`):
+//!
+//! * each SVD block `W = U(θ_U)·Σ·V(θ_V)^T` is materialized from the
+//!   Givens/MZI mesh in [`crate::photonics::mesh`];
+//! * TT layers reshape each block into its core tensor
+//!   ([`TtCore::from_unfolding`]) and reconstruct the dense layer via
+//!   [`crate::tensor::tt_dense`] — once per Φ, reused across the whole
+//!   FD stencil fan-out (the same amortization the artifacts perform);
+//! * the BP-free FD / Stein losses and the validation MSE assemble PDE
+//!   residuals through [`Pde::residual`].
+//!
+//! Presets come from an in-repo registry mirroring
+//! `python/compile/model.py` ([`NativeBackend::builtin`]) or from a
+//! `manifest.json` on disk ([`NativeBackend::load`]); either way the
+//! parameter layout is rebuilt from the arch block and cross-checked.
+//!
+//! Everything here is plain data + atomics, so the backend is
+//! `Send + Sync`: one instance can serve every solver-service worker.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{Backend, Entry, EntryMeta, Manifest, PresetMeta};
+use crate::model::{Hyper, Layout, LayoutBuilder};
+use crate::pde::Pde;
+use crate::photonics::mesh;
+use crate::tensor::{tt_dense, Mat, TtCore};
+use crate::util::json::Value;
+
+/// Batch shapes shared by all presets (mirrors `python/compile/model.py`).
+pub const B_FWD: usize = 128;
+pub const B_RES: usize = 100;
+pub const B_VAL: usize = 1024;
+pub const K_MULTI: usize = 11;
+
+/// (offset, len) span into the flat parameter vector.
+type Span = (usize, usize);
+
+#[derive(Clone, Debug)]
+struct SvdSpec {
+    u: Span,
+    s: Span,
+    v: Span,
+    m: usize,
+    n: usize,
+}
+
+#[derive(Clone, Debug)]
+struct CoreSpec {
+    svd: SvdSpec,
+    r_in: usize,
+    m: usize,
+    n: usize,
+    r_out: usize,
+}
+
+#[derive(Clone, Debug)]
+enum NetSpec {
+    /// dense phase-domain MLP: two SVD blocks
+    Onn {
+        l1: SvdSpec,
+        b1: Span,
+        l2: SvdSpec,
+        b2: Span,
+    },
+    /// TT-compressed MLP: per layer, one small SVD mesh per TT core
+    Tonn {
+        layers: Vec<(Vec<CoreSpec>, Span)>,
+    },
+}
+
+/// Phase-domain network evaluator for one preset.
+#[derive(Clone, Debug)]
+struct NetEval {
+    in_dim: usize,
+    hidden: usize,
+    omega0: f32,
+    spec: NetSpec,
+    w3: Span,
+    b3: Span,
+}
+
+fn slice<'a>(phi: &'a [f32], s: Span) -> &'a [f32] {
+    &phi[s.0..s.0 + s.1]
+}
+
+impl NetEval {
+    fn svd_mat(&self, phi: &[f32], blk: &SvdSpec) -> Mat {
+        mesh::svd_matrix(
+            slice(phi, blk.u),
+            slice(phi, blk.s),
+            slice(phi, blk.v),
+            blk.m,
+            blk.n,
+        )
+    }
+
+    /// Materialize layer `li`'s dense matrix + bias span for Φ.
+    fn layer(&self, phi: &[f32], li: usize) -> (Mat, Span) {
+        match &self.spec {
+            NetSpec::Onn { l1, b1, l2, b2 } => {
+                if li == 0 {
+                    (self.svd_mat(phi, l1), *b1)
+                } else {
+                    (self.svd_mat(phi, l2), *b2)
+                }
+            }
+            NetSpec::Tonn { layers } => {
+                let (cores, bias) = &layers[li];
+                let tt: Vec<TtCore> = cores
+                    .iter()
+                    .map(|c| {
+                        TtCore::from_unfolding(
+                            &self.svd_mat(phi, &c.svd),
+                            c.r_in,
+                            c.m,
+                            c.n,
+                            c.r_out,
+                        )
+                    })
+                    .collect();
+                (tt_dense(&tt), *bias)
+            }
+        }
+    }
+
+    /// Raw network output f for a flat batch of rows (B·in_dim values).
+    /// Layer matrices are built ONCE per call and reused across the batch
+    /// — the FD fan-out never re-programs the meshes within a loss.
+    fn forward_f(&self, phi: &[f32], xs: &[f32]) -> Vec<f32> {
+        let h = self.hidden;
+        let d = self.in_dim;
+        let b = xs.len() / d;
+        // input zero-padded UP to the layer fan-in
+        let mut act = Mat::zeros(b, h);
+        for r in 0..b {
+            act.data[r * h..r * h + d].copy_from_slice(&xs[r * d..(r + 1) * d]);
+        }
+        for li in 0..2 {
+            let (w, bias) = self.layer(phi, li);
+            let wt = w.transpose(); // activations act as y = x @ W^T
+            let mut z = act.matmul(&wt);
+            let bs = slice(phi, bias);
+            for r in 0..b {
+                let row = &mut z.data[r * h..(r + 1) * h];
+                for (v, bb) in row.iter_mut().zip(bs) {
+                    *v += *bb;
+                }
+                if li == 0 {
+                    for v in row.iter_mut() {
+                        *v = (self.omega0 * *v).sin();
+                    }
+                } else {
+                    for v in row.iter_mut() {
+                        *v = v.sin();
+                    }
+                }
+            }
+            act = z;
+        }
+        let w3 = slice(phi, self.w3);
+        let b3 = phi[self.b3.0];
+        (0..b)
+            .map(|r| {
+                let row = &act.data[r * h..(r + 1) * h];
+                row.iter().zip(w3).map(|(a, w)| a * w).sum::<f32>() + b3
+            })
+            .collect()
+    }
+}
+
+/// Build the evaluator + parameter layout from a manifest `arch` block
+/// (the rust mirror of `OnnMlp.__init__` / `TonnMlp.__init__`).
+fn build_net(arch: &Value) -> Result<(NetEval, Layout)> {
+    let ty = arch
+        .req("type")
+        .map_err(|e| anyhow!("{e}"))?
+        .as_str()
+        .ok_or_else(|| anyhow!("arch.type must be a string"))?;
+    let in_dim = arch
+        .req("in_dim")
+        .map_err(|e| anyhow!("{e}"))?
+        .as_usize()
+        .ok_or_else(|| anyhow!("arch.in_dim"))?;
+    let omega0 = arch.get("omega0").and_then(|v| v.as_f64()).unwrap_or(6.0) as f32;
+    let usizes = |key: &str| -> Result<Vec<usize>> {
+        arch.req(key)
+            .map_err(|e| anyhow!("{e}"))?
+            .as_arr()
+            .ok_or_else(|| anyhow!("arch.{key} must be an array"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("arch.{key} entry")))
+            .collect()
+    };
+    match ty {
+        "onn" => {
+            let hidden = arch
+                .req("hidden")
+                .map_err(|e| anyhow!("{e}"))?
+                .as_usize()
+                .ok_or_else(|| anyhow!("arch.hidden"))?;
+            anyhow::ensure!(hidden >= in_dim, "input is zero-padded UP to the fan-in");
+            anyhow::ensure!(
+                hidden >= 2 && hidden % 2 == 0,
+                "mesh size must be even >= 2, got hidden = {hidden}"
+            );
+            let s0 = (6.0f64 / hidden as f64).sqrt();
+            let mut lb = LayoutBuilder::new();
+            let (u1, s1, v1) = lb.add_svd_block("l1", hidden, hidden, s0);
+            let b1 = lb.add_weights("l1.bias", hidden, 0.1);
+            let (u2, s2, v2) = lb.add_svd_block("l2", hidden, hidden, s0);
+            let b2 = lb.add_weights("l2.bias", hidden, 0.1);
+            let w3 = lb.add_weights("l3.w", hidden, 1.0 / (hidden as f64).sqrt());
+            let b3 = lb.add_weights("l3.bias", 1, 0.0);
+            let net = NetEval {
+                in_dim,
+                hidden,
+                omega0,
+                spec: NetSpec::Onn {
+                    l1: SvdSpec { u: u1, s: s1, v: v1, m: hidden, n: hidden },
+                    b1,
+                    l2: SvdSpec { u: u2, s: s2, v: v2, m: hidden, n: hidden },
+                    b2,
+                },
+                w3,
+                b3,
+            };
+            Ok((net, lb.build()))
+        }
+        "tonn" => {
+            let factors_m = usizes("factors_m")?;
+            let factors_n = usizes("factors_n")?;
+            let ranks = usizes("ranks")?;
+            let l = factors_m.len();
+            anyhow::ensure!(l >= 1 && factors_n.len() == l, "factor lists must match");
+            anyhow::ensure!(
+                ranks.len() == l + 1 && ranks[0] == 1 && ranks[l] == 1,
+                "need L+1 ranks with boundary ranks 1"
+            );
+            let hidden: usize = factors_m.iter().product();
+            let n_total: usize = factors_n.iter().product();
+            anyhow::ensure!(hidden == n_total, "square TT layers only");
+            anyhow::ensure!(hidden >= in_dim, "input is zero-padded UP to the fan-in");
+            // per-core gain: the dense TT product multiplies L core gains
+            let target = (6.0f64 / hidden as f64).sqrt();
+            let core_gain = target.powf(1.0 / l as f64);
+            let mut lb = LayoutBuilder::new();
+            let mut layers = Vec::with_capacity(2);
+            for li in 0..2 {
+                let mut cores = Vec::with_capacity(l);
+                for k in 0..l {
+                    let a = ranks[k] * factors_n[k]; // mesh rows (r_in · n_k)
+                    let b = factors_m[k] * ranks[k + 1]; // mesh cols (m_k · r_out)
+                    anyhow::ensure!(
+                        a >= 2 && a % 2 == 0 && b >= 2 && b % 2 == 0,
+                        "core {k}: mesh unfolding {a}x{b} must have even dims >= 2 \
+                         (r_in·n_k x m_k·r_out)"
+                    );
+                    let (u, s, v) =
+                        lb.add_svd_block(&format!("tt{li}.core{k}"), a, b, core_gain);
+                    cores.push(CoreSpec {
+                        svd: SvdSpec { u, s, v, m: a, n: b },
+                        r_in: ranks[k],
+                        m: factors_m[k],
+                        n: factors_n[k],
+                        r_out: ranks[k + 1],
+                    });
+                }
+                let bias = lb.add_weights(&format!("tt{li}.bias"), hidden, 0.1);
+                layers.push((cores, bias));
+            }
+            let w3 = lb.add_weights("l3.w", hidden, 1.0 / (hidden as f64).sqrt());
+            let b3 = lb.add_weights("l3.bias", 1, 0.0);
+            let net = NetEval {
+                in_dim,
+                hidden,
+                omega0,
+                spec: NetSpec::Tonn { layers },
+                w3,
+                b3,
+            };
+            Ok((net, lb.build()))
+        }
+        other => Err(anyhow!("unknown arch type '{other}'")),
+    }
+}
+
+/// All native evaluation for one preset: network + PDE loss assembly.
+#[derive(Debug)]
+pub struct PresetEval {
+    pde: Pde,
+    net: NetEval,
+    fd_h: f32,
+    stein_sigma: f32,
+    stein_q: usize,
+}
+
+impl PresetEval {
+    /// Transformed solution u(Φ, x) for a flat batch of rows.
+    fn forward_u(&self, phi: &[f32], xs: &[f32]) -> Vec<f32> {
+        let d = self.pde.in_dim();
+        let f = self.net.forward_f(phi, xs);
+        f.iter()
+            .enumerate()
+            .map(|(i, &fv)| self.pde.transform(fv, &xs[i * d..(i + 1) * d]))
+            .collect()
+    }
+
+    /// BP-free FD-stencil loss (python `pinn.make_loss_fd`).
+    fn loss_fd(&self, phi: &[f32], xr: &[f32]) -> f32 {
+        let d = self.pde.in_dim();
+        let s = self.pde.n_stencil();
+        let dim = self.pde.dim();
+        let h = self.fd_h;
+        let b = xr.len() / d;
+        let mut x_all = Vec::with_capacity(b * s * d);
+        for p in 0..b {
+            self.pde.stencil_rows(&xr[p * d..(p + 1) * d], h, &mut x_all);
+        }
+        let f = self.net.forward_f(phi, &x_all);
+        let mut df = vec![0.0f32; d];
+        let mut acc = 0.0f32;
+        for p in 0..b {
+            let fr = &f[p * s..(p + 1) * s];
+            let f0 = fr[0];
+            let mut lap_sum = 0.0f32;
+            for i in 0..dim {
+                let fp = fr[1 + 2 * i];
+                let fm = fr[2 + 2 * i];
+                df[i] = (fp - fm) / (2.0 * h);
+                lap_sum += fp - 2.0 * f0 + fm;
+            }
+            let lap = lap_sum / (h * h);
+            if self.pde.has_time() {
+                df[dim] = (fr[s - 1] - f0) / h;
+            }
+            let r = self.pde.residual(f0, &df, lap, &xr[p * d..(p + 1) * d]);
+            acc += r * r;
+        }
+        acc / b as f32
+    }
+
+    /// Gaussian-Stein estimator loss (python `pinn.make_loss_stein`).
+    fn loss_stein(&self, phi: &[f32], xr: &[f32], z: &[f32]) -> f32 {
+        let d = self.pde.in_dim();
+        let dim = self.pde.dim();
+        let q = self.stein_q;
+        let sigma = self.stein_sigma;
+        let b = xr.len() / d;
+        let rows = 2 * q + 1;
+        let mut x_all = Vec::with_capacity(b * rows * d);
+        for p in 0..b {
+            let x = &xr[p * d..(p + 1) * d];
+            x_all.extend_from_slice(x);
+            for k in 0..q {
+                for j in 0..d {
+                    x_all.push(x[j] + sigma * z[k * d + j]);
+                }
+            }
+            for k in 0..q {
+                for j in 0..d {
+                    x_all.push(x[j] - sigma * z[k * d + j]);
+                }
+            }
+        }
+        let f = self.net.forward_f(phi, &x_all);
+        let z_sq: Vec<f32> = (0..q)
+            .map(|k| z[k * d..k * d + dim].iter().map(|v| v * v).sum())
+            .collect();
+        let mut df = vec![0.0f32; d];
+        let mut acc = 0.0f32;
+        for p in 0..b {
+            let fr = &f[p * rows..(p + 1) * rows];
+            let f0 = fr[0];
+            // ∇f ≈ E[(f+ − f−)/(2σ) z]
+            for j in 0..d {
+                let mut sum = 0.0f32;
+                for k in 0..q {
+                    sum += (fr[1 + k] - fr[1 + q + k]) / (2.0 * sigma) * z[k * d + j];
+                }
+                df[j] = sum / q as f32;
+            }
+            // Δ_x f ≈ E[(f+ + f− − 2f0)(‖z_x‖² − D)] / (2σ²)
+            let mut lsum = 0.0f32;
+            for k in 0..q {
+                lsum += (fr[1 + k] + fr[1 + q + k] - 2.0 * f0) * (z_sq[k] - dim as f32);
+            }
+            let lap = lsum / q as f32 / (2.0 * sigma * sigma);
+            let r = self.pde.residual(f0, &df, lap, &xr[p * d..(p + 1) * d]);
+            acc += r * r;
+        }
+        acc / b as f32
+    }
+
+    /// Validation MSE vs exact-solution targets (python `make_validate`).
+    fn validate(&self, phi: &[f32], xv: &[f32], uv: &[f32]) -> f32 {
+        let u = self.forward_u(phi, xv);
+        let mut acc = 0.0f32;
+        for (a, b) in u.iter().zip(uv) {
+            let e = a - b;
+            acc += e * e;
+        }
+        acc / uv.len() as f32
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum EntryKind {
+    Forward,
+    Loss,
+    LossMulti,
+    LossStein,
+    Validate,
+}
+
+/// A native entry point (the counterpart of a compiled HLO executable).
+pub struct NativeEntry {
+    meta: EntryMeta,
+    kind: EntryKind,
+    eval: Arc<PresetEval>,
+    dispatches: AtomicU64,
+}
+
+impl Entry for NativeEntry {
+    fn meta(&self) -> &EntryMeta {
+        &self.meta
+    }
+
+    fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
+    fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.meta.check_inputs(inputs)?;
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        let out = match self.kind {
+            EntryKind::Forward => self.eval.forward_u(inputs[0], inputs[1]),
+            EntryKind::Loss => vec![self.eval.loss_fd(inputs[0], inputs[1])],
+            EntryKind::LossMulti => {
+                let shape = &self.meta.inputs[0].1; // (K, d)
+                let (k, d) = (shape[0], shape[1]);
+                (0..k)
+                    .map(|i| self.eval.loss_fd(&inputs[0][i * d..(i + 1) * d], inputs[1]))
+                    .collect()
+            }
+            EntryKind::LossStein => {
+                vec![self.eval.loss_stein(inputs[0], inputs[1], inputs[2])]
+            }
+            EntryKind::Validate => {
+                vec![self.eval.validate(inputs[0], inputs[1], inputs[2])]
+            }
+        };
+        Ok(vec![out])
+    }
+}
+
+fn entry_kind(name: &str) -> Result<EntryKind> {
+    match name {
+        "forward" => Ok(EntryKind::Forward),
+        "loss" => Ok(EntryKind::Loss),
+        "loss_multi" => Ok(EntryKind::LossMulti),
+        "loss_stein" => Ok(EntryKind::LossStein),
+        "validate" => Ok(EntryKind::Validate),
+        "grad" => Err(anyhow!(
+            "entry 'grad' needs the pjrt backend (exact-BP autodiff is not \
+             implemented natively; build with --features pjrt + artifacts)"
+        )),
+        other => Err(anyhow!("unknown entry '{other}'")),
+    }
+}
+
+/// The pure-rust execution backend. `Send + Sync`: share one instance
+/// across threads instead of one PJRT client per worker.
+pub struct NativeBackend {
+    manifest: Manifest,
+    evals: HashMap<String, Arc<PresetEval>>,
+    cache: Mutex<HashMap<(String, String), Arc<NativeEntry>>>,
+}
+
+impl NativeBackend {
+    /// Build evaluators for every preset of a parsed manifest. The
+    /// parameter layout is re-derived from each arch block and checked
+    /// against the manifest's `param_dim` (catching drift between the
+    /// python lowering and this evaluator).
+    pub fn from_manifest(manifest: Manifest) -> Result<NativeBackend> {
+        let mut evals = HashMap::new();
+        for (name, pm) in &manifest.presets {
+            let (net, layout) = build_net(&pm.arch)
+                .with_context(|| format!("building native evaluator for preset '{name}'"))?;
+            anyhow::ensure!(
+                layout.param_dim == pm.layout.param_dim,
+                "preset '{}': arch implies {} params but manifest says {}",
+                name,
+                layout.param_dim,
+                pm.layout.param_dim
+            );
+            anyhow::ensure!(
+                net.in_dim == pm.pde.in_dim(),
+                "preset '{}': arch in_dim {} != pde in_dim {}",
+                name,
+                net.in_dim,
+                pm.pde.in_dim()
+            );
+            // shape contracts the evaluator indexes by (panic-free later):
+            // loss_multi phis is (k_multi, d); loss_stein z is (stein_q, in)
+            if let Some(em) = pm.entries.get("loss_multi") {
+                let want = vec![manifest.k_multi, pm.layout.param_dim];
+                let got = em.inputs.first().map(|(_, s)| s.clone()).unwrap_or_default();
+                anyhow::ensure!(
+                    got == want,
+                    "preset '{name}': loss_multi phis shape {got:?} != (k_multi, d) {want:?}"
+                );
+            }
+            if let Some(em) = pm.entries.get("loss_stein") {
+                let want = vec![pm.hyper.stein_q, pm.pde.in_dim()];
+                let got = em.inputs.get(2).map(|(_, s)| s.clone()).unwrap_or_default();
+                anyhow::ensure!(
+                    got == want,
+                    "preset '{name}': loss_stein z shape {got:?} != (stein_q, in_dim) {want:?}"
+                );
+            }
+            evals.insert(
+                name.clone(),
+                Arc::new(PresetEval {
+                    pde: pm.pde,
+                    net,
+                    fd_h: pm.hyper.fd_h as f32,
+                    stein_sigma: pm.hyper.stein_sigma as f32,
+                    stein_q: pm.hyper.stein_q,
+                }),
+            );
+        }
+        Ok(NativeBackend {
+            manifest,
+            evals,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Load from a `manifest.json` directory (artifact files not needed).
+    pub fn load(artifacts_dir: &Path) -> Result<NativeBackend> {
+        let manifest = Manifest::load(artifacts_dir).with_context(|| {
+            format!("loading manifest from {}", artifacts_dir.display())
+        })?;
+        NativeBackend::from_manifest(manifest)
+    }
+
+    /// The in-repo preset registry (no files needed at all).
+    pub fn builtin() -> NativeBackend {
+        NativeBackend::from_manifest(builtin_manifest())
+            .expect("builtin manifest is well-formed")
+    }
+
+    /// `load` when a manifest exists at `dir`, else [`Self::builtin`].
+    pub fn load_or_builtin(dir: &Path) -> Result<NativeBackend> {
+        if dir.join("manifest.json").exists() {
+            NativeBackend::load(dir)
+        } else {
+            Ok(NativeBackend::builtin())
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn entry(&self, preset: &str, entry: &str) -> Result<Arc<dyn Entry>> {
+        let key = (preset.to_string(), entry.to_string());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let pm = self.manifest.preset(preset)?;
+        let em = match pm.entries.get(entry) {
+            Some(em) => em.clone(),
+            None => {
+                // distinguish "a known kind this backend cannot run"
+                // (grad -> curated pjrt pointer) from a plain miss
+                entry_kind(entry).with_context(|| format!("preset '{preset}'"))?;
+                anyhow::bail!("preset '{preset}' has no entry '{entry}'");
+            }
+        };
+        let kind = entry_kind(entry)
+            .with_context(|| format!("preset '{preset}', entry '{entry}'"))?;
+        let eval = self
+            .evals
+            .get(preset)
+            .ok_or_else(|| anyhow!("no evaluator for preset '{preset}'"))?
+            .clone();
+        let wrapped = Arc::new(NativeEntry {
+            meta: em,
+            kind,
+            eval,
+            dispatches: AtomicU64::new(0),
+        });
+        self.cache.lock().unwrap().insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in preset registry (mirrors python/compile/model.py PRESETS, plus
+// micro presets sized for fast default-build tests).
+// ---------------------------------------------------------------------------
+
+struct BuiltinPreset {
+    name: &'static str,
+    pde: Pde,
+    /// (factors_m, factors_n, ranks) for tonn; hidden for onn
+    tonn: Option<(&'static [usize], &'static [usize], &'static [usize])>,
+    hidden: usize,
+    entries: &'static [&'static str],
+}
+
+const BUILTIN_PRESETS: &[BuiltinPreset] = &[
+    // -- default reproduction scale (Table-1 runs) -----------------------
+    BuiltinPreset {
+        name: "tonn_small",
+        pde: Pde::Hjb20,
+        tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 2, 2, 1])),
+        hidden: 64,
+        entries: &["forward", "loss", "loss_multi", "loss_stein", "validate"],
+    },
+    BuiltinPreset {
+        name: "onn_small",
+        pde: Pde::Hjb20,
+        tonn: None,
+        hidden: 64,
+        entries: &["forward", "loss", "loss_multi", "validate"],
+    },
+    // -- paper scale (n=1024; Table-2 census) ----------------------------
+    BuiltinPreset {
+        name: "tonn_paper",
+        pde: Pde::Hjb20,
+        tonn: Some((&[4, 8, 4, 8], &[8, 4, 8, 4], &[1, 2, 1, 2, 1])),
+        hidden: 1024,
+        entries: &["forward", "loss", "loss_multi", "validate"],
+    },
+    BuiltinPreset {
+        name: "onn_paper",
+        pde: Pde::Hjb20,
+        tonn: None,
+        hidden: 1024,
+        entries: &["forward", "validate"],
+    },
+    // -- TT-rank ablation (A3) -------------------------------------------
+    BuiltinPreset {
+        name: "tonn_rank1",
+        pde: Pde::Hjb20,
+        tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 1, 1, 1])),
+        hidden: 64,
+        entries: &["forward", "loss", "loss_multi", "validate"],
+    },
+    BuiltinPreset {
+        name: "tonn_rank4",
+        pde: Pde::Hjb20,
+        tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 4, 4, 1])),
+        hidden: 64,
+        entries: &["forward", "loss", "loss_multi", "validate"],
+    },
+    // -- extension problems ----------------------------------------------
+    BuiltinPreset {
+        name: "tonn_poisson",
+        pde: Pde::Poisson2,
+        tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 2, 2, 1])),
+        hidden: 64,
+        entries: &["forward", "loss", "loss_multi", "validate"],
+    },
+    BuiltinPreset {
+        name: "tonn_heat",
+        pde: Pde::Heat2,
+        tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 2, 2, 1])),
+        hidden: 64,
+        entries: &["forward", "loss", "loss_multi", "validate"],
+    },
+    // -- micro presets (native-only; sized for fast CI tests) ------------
+    BuiltinPreset {
+        name: "tonn_micro",
+        pde: Pde::Poisson2,
+        tonn: Some((&[2, 2], &[2, 2], &[1, 2, 1])),
+        hidden: 4,
+        entries: &["forward", "loss", "loss_multi", "loss_stein", "validate"],
+    },
+    BuiltinPreset {
+        name: "tonn_micro_heat",
+        pde: Pde::Heat2,
+        tonn: Some((&[2, 2], &[2, 2], &[1, 2, 1])),
+        hidden: 4,
+        entries: &["forward", "loss", "loss_multi", "validate"],
+    },
+];
+
+fn arr_usize(xs: &[usize]) -> Value {
+    Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
+}
+
+fn builtin_arch(p: &BuiltinPreset) -> Value {
+    match p.tonn {
+        Some((fm, fn_, ranks)) => Value::obj(vec![
+            ("type", Value::Str("tonn".into())),
+            ("in_dim", Value::Num(p.pde.in_dim() as f64)),
+            ("hidden", Value::Num(p.hidden as f64)),
+            ("omega0", Value::Num(6.0)),
+            ("factors_m", arr_usize(fm)),
+            ("factors_n", arr_usize(fn_)),
+            ("ranks", arr_usize(ranks)),
+        ]),
+        None => Value::obj(vec![
+            ("type", Value::Str("onn".into())),
+            ("in_dim", Value::Num(p.pde.in_dim() as f64)),
+            ("hidden", Value::Num(p.hidden as f64)),
+            ("omega0", Value::Num(6.0)),
+        ]),
+    }
+}
+
+fn builtin_hyper() -> Hyper {
+    Hyper {
+        fd_h: 0.05,
+        spsa_mu: 0.02,
+        spsa_n: 10,
+        lr: 0.02,
+        lr_decay: 0.3,
+        lr_decay_every: 600,
+        epochs: 1500,
+        batch: B_RES,
+        k_multi: K_MULTI,
+        stein_sigma: 0.05,
+        stein_q: 20,
+    }
+}
+
+fn builtin_entry_meta(ename: &str, d: usize, pde: Pde, stein_q: usize) -> EntryMeta {
+    let ind = pde.in_dim();
+    let (inputs, outputs): (Vec<(String, Vec<usize>)>, Vec<Vec<usize>>) = match ename {
+        "forward" => (
+            vec![("phi".into(), vec![d]), ("x".into(), vec![B_FWD, ind])],
+            vec![vec![B_FWD]],
+        ),
+        "loss" => (
+            vec![("phi".into(), vec![d]), ("xr".into(), vec![B_RES, ind])],
+            vec![vec![]],
+        ),
+        "loss_multi" => (
+            vec![
+                ("phis".into(), vec![K_MULTI, d]),
+                ("xr".into(), vec![B_RES, ind]),
+            ],
+            vec![vec![K_MULTI]],
+        ),
+        "loss_stein" => (
+            vec![
+                ("phi".into(), vec![d]),
+                ("xr".into(), vec![B_RES, ind]),
+                ("z".into(), vec![stein_q, ind]),
+            ],
+            vec![vec![]],
+        ),
+        "validate" => (
+            vec![
+                ("phi".into(), vec![d]),
+                ("xv".into(), vec![B_VAL, ind]),
+                ("uv".into(), vec![B_VAL]),
+            ],
+            vec![vec![]],
+        ),
+        other => unreachable!("builtin entry {other}"),
+    };
+    EntryMeta {
+        name: ename.to_string(),
+        file: String::new(),
+        inputs,
+        outputs,
+    }
+}
+
+/// Synthesize the in-repo manifest (the native replacement for the AOT
+/// build step's `manifest.json`).
+pub fn builtin_manifest() -> Manifest {
+    let mut presets = HashMap::new();
+    for p in BUILTIN_PRESETS {
+        let arch = builtin_arch(p);
+        let (_, layout) = build_net(&arch).expect("builtin arch is well-formed");
+        let hyper = builtin_hyper();
+        let d = layout.param_dim;
+        let mut entries = HashMap::new();
+        for ename in p.entries {
+            entries.insert(
+                ename.to_string(),
+                builtin_entry_meta(ename, d, p.pde, hyper.stein_q),
+            );
+        }
+        presets.insert(
+            p.name.to_string(),
+            PresetMeta {
+                name: p.name.to_string(),
+                pde: p.pde,
+                layout,
+                hyper,
+                entries,
+                arch,
+            },
+        );
+    }
+    Manifest {
+        dir: PathBuf::from("<builtin>"),
+        presets,
+        k_multi: K_MULTI,
+        b_forward: B_FWD,
+        b_residual: B_RES,
+        b_validate: B_VAL,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn builtin_layout_census() {
+        let be = NativeBackend::builtin();
+        let m = be.manifest();
+        // tonn_small: 2 x (38 + 64 + 38 + 64 bias) + 64 readout + 1 = 473
+        assert_eq!(m.preset("tonn_small").unwrap().layout.param_dim, 473);
+        // onn_small: 2 x (2016 + 64 + 2016 + 64 bias) + 64 + 1 = 8385
+        assert_eq!(m.preset("onn_small").unwrap().layout.param_dim, 8385);
+        assert_eq!(m.k_multi, 11);
+        for (name, pm) in &m.presets {
+            assert!(pm.layout.param_dim > 0, "{name}");
+            assert_eq!(
+                pm.entries["forward"].inputs[0].1,
+                vec![pm.layout.param_dim],
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn micro_forward_and_losses_run() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let mut rng = Rng::new(3);
+        let phi = pm.layout.init_vector(&mut rng);
+        let fwd = be.entry("tonn_micro", "forward").unwrap();
+        let mut x = vec![0.0f32; fwd.meta().input_len(1)];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let u = fwd.run1(&[&phi, &x]).unwrap();
+        assert_eq!(u.len(), B_FWD);
+        assert!(u.iter().all(|v| v.is_finite()));
+        // boundary points map to exactly 0 (hard Dirichlet transform)
+        let mut xb = x.clone();
+        xb[0] = 0.0;
+        let ub = fwd.run1(&[&phi, &xb]).unwrap();
+        assert_eq!(ub[0], 0.0);
+
+        let loss = be.entry("tonn_micro", "loss").unwrap();
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        let l = loss.run_scalar(&[&phi, &xr]).unwrap();
+        assert!(l.is_finite() && l >= 0.0);
+
+        // loss_multi row 0 with phi tiled == loss
+        let lm = be.entry("tonn_micro", "loss_multi").unwrap();
+        let phis: Vec<f32> = (0..K_MULTI).flat_map(|_| phi.iter().copied()).collect();
+        let ls = lm.run1(&[&phis, &xr]).unwrap();
+        assert_eq!(ls.len(), K_MULTI);
+        for v in &ls {
+            assert!((v - l).abs() < 1e-6, "{v} vs {l}");
+        }
+    }
+
+    #[test]
+    fn entry_errors_are_loud() {
+        let be = NativeBackend::builtin();
+        assert!(be.entry("tonn_micro", "backprop").is_err());
+        assert!(be.entry("no_such_preset", "forward").is_err());
+        let err = format!(
+            "{:#}",
+            be.entry("tonn_micro", "grad").unwrap_err()
+        );
+        assert!(err.contains("grad"), "{err}");
+        // wrong input length
+        let fwd = be.entry("tonn_micro", "forward").unwrap();
+        let short = vec![0.0f32; 3];
+        let x = vec![0.0f32; fwd.meta().input_len(1)];
+        let err = fwd.run(&[&short, &x]).unwrap_err().to_string();
+        assert!(err.contains("expects"), "{err}");
+        let err2 = fwd.run(&[&x]).unwrap_err().to_string();
+        assert!(err2.contains("inputs"), "{err2}");
+    }
+
+    #[test]
+    fn forward_is_deterministic_and_phi_sensitive() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let fwd = be.entry("tonn_micro", "forward").unwrap();
+        let mut rng = Rng::new(5);
+        let phi = pm.layout.init_vector(&mut rng);
+        let mut x = vec![0.0f32; fwd.meta().input_len(1)];
+        rng.fill_uniform(&mut x, 0.1, 0.9);
+        let u1 = fwd.run1(&[&phi, &x]).unwrap();
+        let u2 = fwd.run1(&[&phi, &x]).unwrap();
+        assert_eq!(u1, u2);
+        let mut phi2 = phi.clone();
+        phi2[0] += 0.3;
+        let u3 = fwd.run1(&[&phi2, &x]).unwrap();
+        assert_ne!(u1, u3);
+        assert_eq!(fwd.dispatches(), 3);
+    }
+
+    #[test]
+    fn manifest_roundtrip_through_disk() {
+        // builtin presets survive a manifest.json round-trip (the on-disk
+        // path the python AOT build also produces)
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let dir = std::env::temp_dir().join(format!("pp_native_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let (arch, layout) = (pm.arch.clone(), &pm.layout);
+        // minimal manifest for this preset, segments via the one shared
+        // serialization (Layout::segments_json, inverse of Layout::parse)
+        let doc = Value::obj(vec![
+            ("version", Value::Num(1.0)),
+            (
+                "batch_shapes",
+                Value::obj(vec![
+                    ("forward", Value::Num(B_FWD as f64)),
+                    ("residual", Value::Num(B_RES as f64)),
+                    ("validate", Value::Num(B_VAL as f64)),
+                    ("k_multi", Value::Num(K_MULTI as f64)),
+                ]),
+            ),
+            (
+                "presets",
+                Value::obj(vec![(
+                    "tonn_micro",
+                    Value::obj(vec![
+                        (
+                            "pde",
+                            Value::obj(vec![(
+                                "name",
+                                Value::Str("poisson2".into()),
+                            )]),
+                        ),
+                        ("param_dim", Value::Num(layout.param_dim as f64)),
+                        ("segments", layout.segments_json()),
+                        ("arch", arch),
+                        (
+                            "hyper",
+                            Value::obj(vec![
+                                ("fd_h", Value::Num(0.05)),
+                                ("spsa_mu", Value::Num(0.02)),
+                                ("spsa_n", Value::Num(10.0)),
+                                ("lr", Value::Num(0.02)),
+                                ("lr_decay", Value::Num(0.3)),
+                                ("lr_decay_every", Value::Num(600.0)),
+                                ("epochs", Value::Num(10.0)),
+                                ("batch", Value::Num(B_RES as f64)),
+                                ("k_multi", Value::Num(K_MULTI as f64)),
+                            ]),
+                        ),
+                        (
+                            "entries",
+                            Value::obj(vec![(
+                                "loss",
+                                Value::obj(vec![
+                                    (
+                                        "inputs",
+                                        Value::Arr(vec![
+                                            Value::obj(vec![
+                                                ("name", Value::Str("phi".into())),
+                                                (
+                                                    "shape",
+                                                    arr_usize(&[layout.param_dim]),
+                                                ),
+                                            ]),
+                                            Value::obj(vec![
+                                                ("name", Value::Str("xr".into())),
+                                                ("shape", arr_usize(&[B_RES, 2])),
+                                            ]),
+                                        ]),
+                                    ),
+                                    ("outputs", Value::Arr(vec![Value::Arr(vec![])])),
+                                ]),
+                            )]),
+                        ),
+                    ]),
+                )]),
+            ),
+        ]);
+        std::fs::write(dir.join("manifest.json"), doc.to_string()).unwrap();
+        let loaded = NativeBackend::load(&dir).unwrap();
+        assert_eq!(
+            loaded.manifest().preset("tonn_micro").unwrap().layout.param_dim,
+            layout.param_dim
+        );
+        // and it evaluates
+        let loss = loaded.entry("tonn_micro", "loss").unwrap();
+        let mut rng = Rng::new(1);
+        let phi = layout.init_vector(&mut rng);
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.1, 0.9);
+        assert!(loss.run_scalar(&[&phi, &xr]).unwrap().is_finite());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,150 @@
+//! PJRT backend: loads the AOT HLO-text artifacts and executes them from
+//! the rust hot path (behind the non-default `pjrt` cargo feature).
+//!
+//! Flow: `manifest.json` -> [`Manifest`] -> [`PjrtBackend::load`]
+//! (compile each HLO once, cache the executable) -> [`Entry::run`] with
+//! flat f32 buffers.
+//!
+//! The interchange format is HLO **text** (jax >= 0.5 serialized protos
+//! use 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids — /opt/xla-example/README.md).
+//!
+//! PJRT handles wrap thread-local `Rc` pointers, so this backend is not
+//! `Send`: the solver service gives each worker its own client (see
+//! [`crate::coordinator::SolverService::start_per_worker`]).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{Backend, Entry, EntryMeta, Manifest};
+
+/// A compiled artifact entry point.
+pub struct Executable {
+    pub meta: EntryMeta,
+    exe: xla::PjRtLoadedExecutable,
+    /// dispatch counter (metrics / perf accounting)
+    dispatches: std::sync::atomic::AtomicU64,
+}
+
+impl Entry for Executable {
+    fn meta(&self) -> &EntryMeta {
+        &self.meta
+    }
+
+    fn dispatches(&self) -> u64 {
+        self.dispatches.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Execute with flat f32 input buffers (shapes from the manifest).
+    fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.meta.check_inputs(inputs)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, buf) in inputs.iter().enumerate() {
+            let (name, shape) = &self.meta.inputs[i];
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(if shape.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims)
+                    .map_err(|e| anyhow!("reshape {name}: {e:?}"))?
+            });
+        }
+        self.dispatches
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.meta.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", self.meta.name))?;
+        // entries are lowered with return_tuple=True
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.meta.name))?;
+        anyhow::ensure!(
+            parts.len() == self.meta.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            self.meta.name,
+            self.meta.outputs.len(),
+            parts.len()
+        );
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("output: {e:?}")))
+            .collect()
+    }
+}
+
+/// The PJRT client + compiled-executable cache for one artifacts dir.
+pub struct PjrtBackend {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<(String, String), Arc<Executable>>>,
+}
+
+impl PjrtBackend {
+    /// Create a CPU PJRT client and parse the manifest. Compilation is
+    /// lazy, per entry point, cached for the process lifetime.
+    pub fn load(artifacts_dir: &Path) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifacts_dir)
+            .with_context(|| format!("loading manifest from {}", artifacts_dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(PjrtBackend {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    fn compile(&self, preset: &str, entry: &str) -> Result<Arc<Executable>> {
+        let pm = self.manifest.preset(preset)?;
+        let em = pm
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("preset '{preset}' has no entry '{entry}'"))?
+            .clone();
+        anyhow::ensure!(
+            !em.file.is_empty(),
+            "entry '{preset}.{entry}' names no artifact file (native-only \
+             manifest? rebuild with `make artifacts`)"
+        );
+        let path = self.manifest.dir.join(&em.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        Ok(Arc::new(Executable {
+            meta: em,
+            exe,
+            dispatches: std::sync::atomic::AtomicU64::new(0),
+        }))
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn entry(&self, preset: &str, entry: &str) -> Result<Arc<dyn Entry>> {
+        let key = (preset.to_string(), entry.to_string());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let wrapped = self.compile(preset, entry)?;
+        self.cache.lock().unwrap().insert(key, wrapped.clone());
+        Ok(wrapped)
+    }
+}

@@ -225,6 +225,27 @@ impl TtCore {
     pub fn at(&self, ri: usize, i: usize, j: usize, ro: usize) -> f32 {
         self.data[((ri * self.m + i) * self.n + j) * self.r_out + ro]
     }
+
+    /// Build a core from its photonic-mesh unfolding `(r_in·n) x (m·r_out)`
+    /// (rows = contraction dim, the GEMM operand realized by one small SVD
+    /// mesh): `core[ri, i, j, ro] = gm[ri·n + j, i·r_out + ro]` — the rust
+    /// mirror of `networks.TonnMlp._cores`' reshape/transpose.
+    pub fn from_unfolding(gm: &Mat, r_in: usize, m: usize, n: usize, r_out: usize) -> TtCore {
+        assert_eq!(gm.rows, r_in * n, "unfolding rows");
+        assert_eq!(gm.cols, m * r_out, "unfolding cols");
+        let mut c = TtCore::zeros(r_in, m, n, r_out);
+        for ri in 0..r_in {
+            for i in 0..m {
+                for j in 0..n {
+                    for ro in 0..r_out {
+                        c.data[((ri * m + i) * n + j) * r_out + ro] =
+                            gm.at(ri * n + j, i * r_out + ro);
+                    }
+                }
+            }
+        }
+        c
+    }
 }
 
 /// Reconstruct the dense matrix from TT cores (i_1-major rows, j_1-major
@@ -294,10 +315,76 @@ fn increment(idx: &mut [usize], dims: &[usize]) -> bool {
     false
 }
 
-/// TT matvec: y = W x via sequential core contraction (oracle).
+/// TT matvec via dense reconstruction (oracle).
 pub fn tt_matvec(cores: &[TtCore], x: &[f32]) -> Vec<f32> {
     let w = tt_dense(cores);
     w.matvec(x)
+}
+
+/// TT matvec via *sequential core contraction* — the photonic tensor-core
+/// dataflow (one small GEMM per core, left to right; mirrors
+/// `python/compile/kernels/ref.py::tt_forward_ref` for a single vector).
+/// Mathematically equal to [`tt_matvec`] (property-tested) without ever
+/// reconstructing the dense matrix.
+pub fn tt_matvec_seq(cores: &[TtCore], x: &[f32]) -> Vec<f32> {
+    let l = cores.len();
+    assert!(l >= 1);
+    let n_total: usize = cores.iter().map(|c| c.n).product();
+    assert_eq!(x.len(), n_total, "tt_matvec_seq: input length");
+    // t: (r, n_k, rest) row-major; starts as (1, n_1, n_2*...*n_L)
+    // (x is j_1-major, so this reshape is the identity).
+    let mut t = x.to_vec();
+    let mut r_cur = 1usize;
+    let mut rest = n_total / cores[0].n;
+    for (k, c) in cores.iter().enumerate() {
+        assert_eq!(c.r_in, r_cur, "tt_matvec_seq: rank chain");
+        let m_ro = c.m * c.r_out;
+        // y[(rest), (m, r_out)] = Σ_{ri, j} t[ri][j][rest] · G[ri, m, j, r_out]
+        let mut y = vec![0.0f32; rest * m_ro];
+        for rr in 0..rest {
+            let dst = &mut y[rr * m_ro..(rr + 1) * m_ro];
+            for ri in 0..c.r_in {
+                for j in 0..c.n {
+                    let a = t[(ri * c.n + j) * rest + rr];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    for i in 0..c.m {
+                        for ro in 0..c.r_out {
+                            dst[i * c.r_out + ro] += a * c.at(ri, i, j, ro);
+                        }
+                    }
+                }
+            }
+        }
+        if k + 1 < l {
+            // fold the produced m_k into the tail of rest, expose n_{k+1}:
+            // rest = (n_{k+1}, rest'), new rest layout = (rest', m_k).
+            let n_next = cores[k + 1].n;
+            let rest_next = rest / n_next;
+            let new_rest = rest_next * c.m;
+            let mut tn = vec![0.0f32; c.r_out * n_next * new_rest];
+            for jn in 0..n_next {
+                for rr in 0..rest_next {
+                    let yrow = &y[(jn * rest_next + rr) * m_ro..(jn * rest_next + rr + 1) * m_ro];
+                    for i in 0..c.m {
+                        for ro in 0..c.r_out {
+                            tn[(ro * n_next + jn) * new_rest + rr * c.m + i] =
+                                yrow[i * c.r_out + ro];
+                        }
+                    }
+                }
+            }
+            t = tn;
+            r_cur = c.r_out;
+            rest = new_rest;
+        } else {
+            // final: y is (rest = m_1..m_{L-1} m_1-major, m_L, r_L = 1)
+            assert_eq!(c.r_out, 1, "boundary rank");
+            return y;
+        }
+    }
+    unreachable!()
 }
 
 #[cfg(test)]
@@ -402,6 +489,59 @@ mod tests {
             let y2 = tt_dense(&cores).matvec(&x);
             for (a, b) in y1.iter().zip(&y2) {
                 assert!((a - b).abs() < 1e-4);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_tt_matvec_seq_matches_dense() {
+        // property: sequential core contraction ≡ dense reconstruction,
+        // over random core counts, mode sizes and ranks
+        prop::check(40, |r| {
+            let l = 1 + r.below(3); // 1..=3 cores
+            let ms: Vec<usize> = (0..l).map(|_| 1 + r.below(4)).collect();
+            let ns: Vec<usize> = (0..l).map(|_| 1 + r.below(4)).collect();
+            let mut ranks = vec![1usize];
+            for _ in 1..l {
+                ranks.push(1 + r.below(4));
+            }
+            ranks.push(1);
+            let cores: Vec<TtCore> = (0..l)
+                .map(|k| {
+                    let mut c = TtCore::zeros(ranks[k], ms[k], ns[k], ranks[k + 1]);
+                    r.fill_normal(&mut c.data);
+                    c
+                })
+                .collect();
+            let n_total: usize = ns.iter().product();
+            let mut x = vec![0.0f32; n_total];
+            r.fill_normal(&mut x);
+            let dense = tt_dense(&cores).matvec(&x);
+            let seq = tt_matvec_seq(&cores, &x);
+            assert_eq!(dense.len(), seq.len());
+            for (i, (a, b)) in seq.iter().zip(&dense).enumerate() {
+                assert!((a - b).abs() < 1e-3, "y[{i}]: {a} vs {b}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_unfolding_roundtrip() {
+        // property: TtCore::from_unfolding inverts the (r_in·n, m·r_out)
+        // GEMM-operand layout used by the photonic tensor cores
+        prop::check(25, |r| {
+            let (ri, m, n, ro) = (1 + r.below(3), 1 + r.below(4), 1 + r.below(4), 1 + r.below(3));
+            let mut gm = Mat::zeros(ri * n, m * ro);
+            r.fill_normal(&mut gm.data);
+            let c = TtCore::from_unfolding(&gm, ri, m, n, ro);
+            for rii in 0..ri {
+                for i in 0..m {
+                    for j in 0..n {
+                        for roo in 0..ro {
+                            assert_eq!(c.at(rii, i, j, roo), gm.at(rii * n + j, i * ro + roo));
+                        }
+                    }
+                }
             }
         });
     }

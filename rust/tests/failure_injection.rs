@@ -1,10 +1,11 @@
-//! Failure-injection: the runtime and coordinator must fail loudly and
-//! legibly on corrupted inputs — never proceed with garbage.
+//! Failure-injection: manifests and backends must fail loudly and
+//! legibly on corrupted inputs — never proceed with garbage. Runs
+//! entirely against the native backend (no artifacts, no skips).
 
 use std::fs;
 use std::path::PathBuf;
 
-use photon_pinn::runtime::{Manifest, Runtime};
+use photon_pinn::runtime::{Backend, Entry, Manifest, NativeBackend};
 
 fn tmpdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("pp_fail_{tag}_{}", std::process::id()));
@@ -76,18 +77,121 @@ fn unknown_kind_is_an_error() {
     fs::remove_dir_all(&d).ok();
 }
 
+/// A structurally valid manifest whose arch block implies a DIFFERENT
+/// parameter count than `param_dim` claims — the native backend must
+/// refuse to evaluate it (this is the drift guard between the python
+/// lowering and the rust evaluator).
+#[test]
+fn arch_param_dim_mismatch_is_an_error() {
+    let d = tmpdir("mismatch");
+    fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,
+            "batch_shapes":{"forward":8,"residual":8,"validate":8,"k_multi":3},
+            "presets":{"p":{
+              "pde":{"name":"poisson2","dim":2,"in_dim":2,"has_time":false,"n_stencil":5},
+              "param_dim":4,
+              "segments":[{"name":"w","kind":"weights","offset":0,"len":4,
+                           "init":{"dist":"const","val":0}}],
+              "arch":{"type":"tonn","in_dim":2,"hidden":4,
+                      "factors_m":[2,2],"factors_n":[2,2],"ranks":[1,2,1]},
+              "hyper":{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":2,"lr":0.02,
+                       "lr_decay":0.3,"lr_decay_every":10,"epochs":1,
+                       "batch":8,"k_multi":3},
+              "entries":{}}}}"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", NativeBackend::load(&d).unwrap_err());
+    assert!(err.contains("param"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+/// An arch implying an odd mesh size must come back as Err (not the
+/// panic inside photonics::mesh::mzi_count).
+#[test]
+fn odd_mesh_size_is_an_error_not_a_panic() {
+    let d = tmpdir("oddmesh");
+    fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,
+            "batch_shapes":{"forward":8,"residual":8,"validate":8,"k_multi":3},
+            "presets":{"p":{
+              "pde":{"name":"poisson2","dim":2,"in_dim":2,"has_time":false,"n_stencil":5},
+              "param_dim":4,
+              "segments":[{"name":"w","kind":"weights","offset":0,"len":4,
+                           "init":{"dist":"const","val":0}}],
+              "arch":{"type":"onn","in_dim":2,"hidden":5},
+              "hyper":{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":2,"lr":0.02,
+                       "lr_decay":0.3,"lr_decay_every":10,"epochs":1,
+                       "batch":8,"k_multi":3},
+              "entries":{}}}}"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", NativeBackend::load(&d).unwrap_err());
+    assert!(err.contains("even"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+#[test]
+fn unknown_arch_type_is_an_error() {
+    let d = tmpdir("archtype");
+    fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,
+            "batch_shapes":{"forward":8,"residual":8,"validate":8,"k_multi":3},
+            "presets":{"p":{
+              "pde":{"name":"poisson2","dim":2,"in_dim":2,"has_time":false,"n_stencil":5},
+              "param_dim":4,
+              "segments":[{"name":"w","kind":"weights","offset":0,"len":4,
+                           "init":{"dist":"const","val":0}}],
+              "arch":{"type":"quantum","in_dim":2},
+              "hyper":{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":2,"lr":0.02,
+                       "lr_decay":0.3,"lr_decay_every":10,"epochs":1,
+                       "batch":8,"k_multi":3},
+              "entries":{}}}}"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", NativeBackend::load(&d).unwrap_err());
+    assert!(err.contains("quantum"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
+/// A loss_multi entry whose phis shape is not (k_multi, d) must be
+/// rejected at load time (the evaluator indexes that shape later).
+#[test]
+fn bad_loss_multi_shape_is_an_error() {
+    let d = tmpdir("lmshape");
+    fs::write(
+        d.join("manifest.json"),
+        r#"{"version":1,
+            "batch_shapes":{"forward":8,"residual":8,"validate":8,"k_multi":3},
+            "presets":{"p":{
+              "pde":{"name":"poisson2","dim":2,"in_dim":2,"has_time":false,"n_stencil":5},
+              "param_dim":49,
+              "segments":[{"name":"w","kind":"weights","offset":0,"len":49,
+                           "init":{"dist":"const","val":0}}],
+              "arch":{"type":"tonn","in_dim":2,"hidden":4,
+                      "factors_m":[2,2],"factors_n":[2,2],"ranks":[1,2,1]},
+              "hyper":{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":2,"lr":0.02,
+                       "lr_decay":0.3,"lr_decay_every":10,"epochs":1,
+                       "batch":8,"k_multi":3},
+              "entries":{"loss_multi":{
+                "inputs":[{"name":"phis","shape":[49]},
+                          {"name":"xr","shape":[8,2]}],
+                "outputs":[{"shape":[3]}]}}}}}"#,
+    )
+    .unwrap();
+    let err = format!("{:#}", NativeBackend::load(&d).unwrap_err());
+    assert!(err.contains("loss_multi"), "{err}");
+    fs::remove_dir_all(&d).ok();
+}
+
 #[test]
 fn wrong_input_length_is_an_error() {
-    // against real artifacts (skips if absent)
-    let dir = photon_pinn::resolve_artifacts_dir(None);
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts");
-        return;
-    }
-    let rt = Runtime::load(&dir).unwrap();
-    let exec = rt.entry("tonn_small", "forward").unwrap();
+    let be = NativeBackend::builtin();
+    let exec = be.entry("tonn_small", "forward").unwrap();
     let short = vec![0.0f32; 3];
-    let x = vec![0.0f32; exec.meta.input_len(1)];
+    let x = vec![0.0f32; exec.meta().input_len(1)];
     let err = exec.run(&[&short, &x]).unwrap_err().to_string();
     assert!(err.contains("expects"), "{err}");
     // wrong arity
@@ -97,25 +201,10 @@ fn wrong_input_length_is_an_error() {
 
 #[test]
 fn unknown_entry_is_an_error() {
-    let dir = photon_pinn::resolve_artifacts_dir(None);
-    if !dir.join("manifest.json").exists() {
-        return;
-    }
-    let rt = Runtime::load(&dir).unwrap();
-    assert!(rt.entry("tonn_small", "backprop").is_err());
-    assert!(rt.entry("no_such_preset", "forward").is_err());
-}
-
-#[test]
-fn missing_hlo_file_is_an_error() {
-    let dir = photon_pinn::resolve_artifacts_dir(None);
-    if !dir.join("manifest.json").exists() {
-        return;
-    }
-    // copy the manifest to a dir without the .hlo.txt files
-    let d = tmpdir("nohlo");
-    fs::copy(dir.join("manifest.json"), d.join("manifest.json")).unwrap();
-    let rt = Runtime::load(&d).unwrap();
-    assert!(rt.entry("tonn_small", "forward").is_err());
-    fs::remove_dir_all(&d).ok();
+    let be = NativeBackend::builtin();
+    assert!(be.entry("tonn_small", "backprop").is_err());
+    assert!(be.entry("no_such_preset", "forward").is_err());
+    // grad exists as a concept but needs the pjrt backend
+    let err = format!("{:#}", be.entry("tonn_small", "grad").unwrap_err());
+    assert!(err.contains("grad"), "{err}");
 }

@@ -1,0 +1,144 @@
+//! PJRT-only integration: rust-executed AOT artifacts must reproduce
+//! python-computed golden values (the original cross-language contract
+//! against compiled HLO).
+//!
+//! Built only with `--features pjrt`; tests skip with a message when the
+//! artifacts/goldens are absent (run `make artifacts` +
+//! `python -m compile.golden`). The always-on, artifact-free contract
+//! lives in `tests/artifact_numerics.rs` against the native backend.
+#![cfg(feature = "pjrt")]
+
+use std::path::PathBuf;
+
+use photon_pinn::runtime::{Backend, Entry, PjrtBackend};
+use photon_pinn::util::json;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = photon_pinn::resolve_artifacts_dir(None);
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        None
+    }
+}
+
+fn golden(dir: &PathBuf) -> Option<json::Value> {
+    let p = dir.join("golden_tonn_small.json");
+    if !p.exists() {
+        eprintln!("skipping: no golden file");
+        return None;
+    }
+    Some(json::parse_file(&p).unwrap())
+}
+
+fn vecf(v: &json::Value, key: &str) -> Vec<f32> {
+    v.get(key)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap() as f32)
+        .collect()
+}
+
+fn close(a: f32, b: f32, rtol: f32, atol: f32) -> bool {
+    (a - b).abs() <= atol + rtol * b.abs()
+}
+
+#[test]
+fn forward_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(g) = golden(&dir) else { return };
+    let rt = PjrtBackend::load(&dir).unwrap();
+    let exec = rt.entry("tonn_small", "forward").unwrap();
+    let phi = vecf(&g, "phi");
+    let x = vecf(&g, "x");
+    let u_expect = vecf(&g, "u");
+    let u = exec.run1(&[&phi, &x]).unwrap();
+    assert_eq!(u.len(), u_expect.len());
+    for (i, (a, b)) in u.iter().zip(&u_expect).enumerate() {
+        assert!(close(*a, *b, 1e-4, 1e-4), "u[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn loss_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(g) = golden(&dir) else { return };
+    let rt = PjrtBackend::load(&dir).unwrap();
+    let exec = rt.entry("tonn_small", "loss").unwrap();
+    let phi = vecf(&g, "phi");
+    let xr = vecf(&g, "xr");
+    let loss = exec.run_scalar(&[&phi, &xr]).unwrap();
+    let expect = g.get("loss").unwrap().as_f64().unwrap() as f32;
+    assert!(close(loss, expect, 1e-3, 1e-5), "{loss} vs {expect}");
+}
+
+#[test]
+fn loss_multi_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(g) = golden(&dir) else { return };
+    let rt = PjrtBackend::load(&dir).unwrap();
+    let exec = rt.entry("tonn_small", "loss_multi").unwrap();
+    let phis = vecf(&g, "phis");
+    let xr = vecf(&g, "xr");
+    let lm = exec.run1(&[&phis, &xr]).unwrap();
+    let expect = vecf(&g, "loss_multi");
+    assert_eq!(lm.len(), expect.len());
+    for (i, (a, b)) in lm.iter().zip(&expect).enumerate() {
+        assert!(close(*a, *b, 1e-3, 1e-5), "lm[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn grad_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(g) = golden(&dir) else { return };
+    let rt = PjrtBackend::load(&dir).unwrap();
+    let exec = rt.entry("tonn_small", "grad").unwrap();
+    let phi = vecf(&g, "phi");
+    let xr = vecf(&g, "xr");
+    let out = exec.run(&[&phi, &xr]).unwrap();
+    let loss = out[0][0];
+    let grad = &out[1];
+    let expect_loss = g.get("grad_loss").unwrap().as_f64().unwrap() as f32;
+    assert!(close(loss, expect_loss, 1e-3, 1e-5), "{loss} vs {expect_loss}");
+    let gn: f32 = grad.iter().map(|v| v * v).sum::<f32>().sqrt();
+    let expect_gn = g.get("grad_norm").unwrap().as_f64().unwrap() as f32;
+    assert!(close(gn, expect_gn, 1e-2, 1e-4), "|g| {gn} vs {expect_gn}");
+    let head = vecf(&g, "grad_head");
+    for (i, (a, b)) in grad.iter().zip(&head).enumerate() {
+        assert!(close(*a, *b, 1e-2, 1e-4), "g[{i}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn validate_matches_python() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(g) = golden(&dir) else { return };
+    let rt = PjrtBackend::load(&dir).unwrap();
+    let exec = rt.entry("tonn_small", "validate").unwrap();
+    let phi = vecf(&g, "phi");
+    let xv = vecf(&g, "xv");
+    let uv = vecf(&g, "uv");
+    let val = exec.run_scalar(&[&phi, &xv, &uv]).unwrap();
+    let expect = g.get("val").unwrap().as_f64().unwrap() as f32;
+    assert!(close(val, expect, 1e-3, 1e-5), "{val} vs {expect}");
+}
+
+/// Native and PJRT backends must agree on the same artifacts dir.
+#[test]
+fn native_matches_pjrt_on_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let Some(g) = golden(&dir) else { return };
+    let pjrt = PjrtBackend::load(&dir).unwrap();
+    let native = photon_pinn::runtime::NativeBackend::load(&dir).unwrap();
+    let phi = vecf(&g, "phi");
+    let x = vecf(&g, "x");
+    let a = pjrt.entry("tonn_small", "forward").unwrap().run1(&[&phi, &x]).unwrap();
+    let b = native.entry("tonn_small", "forward").unwrap().run1(&[&phi, &x]).unwrap();
+    for (i, (p, n)) in a.iter().zip(&b).enumerate() {
+        assert!(close(*p, *n, 1e-4, 1e-4), "u[{i}]: pjrt {p} vs native {n}");
+    }
+}
