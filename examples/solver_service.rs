@@ -11,7 +11,8 @@
 //! per-request latency, queueing delay, and solution quality.
 
 use anyhow::Result;
-use photon_pinn::coordinator::{SolveRequest, SolverService, TrainConfig};
+use photon_pinn::coordinator::{ServiceConfig, SolveRequest, SolverService, TrainConfig};
+use photon_pinn::runtime::ParallelConfig;
 use photon_pinn::util::cli::Args;
 use photon_pinn::util::stats;
 
@@ -20,6 +21,8 @@ fn main() -> Result<()> {
         .flag("requests", Some("6"), "number of solve requests")
         .flag("workers", Some("2"), "worker threads (one accelerator each)")
         .flag("epochs", Some("200"), "epochs per solve (quality/latency knob)")
+        .flag("threads", None, "evaluation-engine threads per solve (default: backend auto; \
+               total CPU pressure is workers x threads)")
         .parse(std::env::args().skip(1))?;
     let requests = a.get_usize("requests")?.unwrap();
     let workers = a.get_usize("workers")?.unwrap();
@@ -35,7 +38,11 @@ fn main() -> Result<()> {
     drop(rt);
 
     println!("starting service: {workers} workers, {requests} requests, {epochs} epochs/solve");
-    let service = SolverService::start(dir, workers, 8, Some("tonn_small".into()));
+    let mut scfg = ServiceConfig::new(workers, 8).with_warmup("tonn_small");
+    if let Some(t) = a.get_usize("threads")? {
+        scfg = scfg.with_parallel(ParallelConfig::with_threads(t));
+    }
+    let service = SolverService::start(dir, scfg);
 
     let t0 = std::time::Instant::now();
     for i in 0..requests {

@@ -18,11 +18,18 @@ pub fn runtime() -> Box<dyn Backend> {
     }
 }
 
+/// True in CI-smoke mode (`PHOTON_BENCH_FAST=1`): tiny presets, fewer
+/// iterations, reduced epoch budgets.
+#[allow(dead_code)]
+pub fn fast() -> bool {
+    std::env::var("PHOTON_BENCH_FAST").as_deref() == Ok("1")
+}
+
 /// Epoch budget knob: full paper-shaped runs by default, fast smoke runs
 /// with PHOTON_BENCH_FAST=1 (used by CI-style checks).
 #[allow(dead_code)]
 pub fn epochs(full: usize) -> usize {
-    if std::env::var("PHOTON_BENCH_FAST").as_deref() == Ok("1") {
+    if fast() {
         (full / 10).max(20)
     } else {
         full

@@ -1,25 +1,67 @@
 //! Bench P1: simulator hot-path latency — what the rust coordinator pays
-//! per artifact dispatch (NOT photonic latency; that is Table 2's model).
-//! Used by the §Perf optimization loop to find the bottleneck layer.
+//! per entry dispatch — plus the parallel evaluation engine's measured
+//! speedup over (a) its own sequential (1-thread) path and (b) the PR-1
+//! scalar reference path. Every case is merged into the machine-readable
+//! `BENCH_native.json` (see `util::bench::BenchReport` for the schema),
+//! which CI uploads per run so perf is comparable across PRs.
 //!
 //!     cargo bench --bench latency
+//!
+//! Environment knobs:
+//! * `PHOTON_BENCH_FAST=1`    — tiny-preset smoke run (CI)
+//! * `PHOTON_THREADS=N`       — engine threads for the parallel cases
+//! * `PHOTON_BENCH_ENFORCE=1` — exit non-zero if the parallel engine is
+//!   slower than the sequential engine on any sizable (non-micro) preset
+//! * `PHOTON_BENCH_OUT=path`  — report location (default: repo root)
 
 mod common;
 
 use photon_pinn::optim::Spsa;
 use photon_pinn::pde::Sampler;
 use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
-use photon_pinn::runtime::{Backend, Entry};
-use photon_pinn::util::bench::{bench, report};
+use photon_pinn::runtime::{Backend, Entry, NativeBackend, ParallelConfig};
+use photon_pinn::util::bench::{bench, bench_report_path, report, BenchReport, BenchResult};
 use photon_pinn::util::rng::Rng;
 
-fn main() {
-    let rt = common::runtime();
-    let mut results = Vec::new();
+/// One measured entry: sequential engine, parallel engine, optional
+/// PR-1 reference; the recorded speedups use the reference when present,
+/// else the sequential engine.
+struct EntryRuns {
+    seq: BenchResult,
+    par: BenchResult,
+    reference: Option<BenchResult>,
+}
 
-    for preset in ["tonn_small", "onn_small", "tonn_paper"] {
+fn main() {
+    let fast = common::fast();
+    let dir = photon_pinn::resolve_artifacts_dir(None);
+    let rt = match NativeBackend::load_or_builtin(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot load native backend from {}: {e:#}", dir.display());
+            std::process::exit(2);
+        }
+    };
+    let par_cfg = ParallelConfig::auto();
+    let seq_cfg = ParallelConfig::sequential();
+    let presets: &[&str] = if fast {
+        &["tonn_micro", "tonn_small"]
+    } else {
+        &["tonn_small", "onn_small", "tonn_paper"]
+    };
+
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut rep = BenchReport::new("latency", "native-cpu", par_cfg.threads, par_cfg.block_rows);
+    // (case, par_median, seq_median) pairs the enforce gate checks
+    let mut enforced: Vec<(String, f64, f64)> = Vec::new();
+
+    for preset in presets {
         let Ok(pm) = rt.manifest().preset(preset) else { continue };
-        let _d = pm.layout.param_dim;
+        let (warm, iters) = match (fast, *preset) {
+            (true, _) => (1, 5),
+            (false, "tonn_paper") => (1, 5),
+            (false, _) => (3, 20),
+        };
         let mut rng = Rng::new(0);
         let phi = pm.layout.init_vector(&mut rng);
         let mut sampler = Sampler::new(pm.pde, 1);
@@ -29,27 +71,97 @@ fn main() {
         sampler.batch(rt.manifest().b_forward, &mut xf);
         let (xv, uv) = sampler.validation(rt.manifest().b_validate);
 
+        // micro presets have too little work per dispatch for threads to
+        // pay off — record them, but keep them out of the enforce gate
+        let enforceable = !preset.contains("micro");
+
+        let measure = |name: &str,
+                           reference: Option<BenchResult>,
+                           run: &mut dyn FnMut()|
+         -> EntryRuns {
+            rt.set_parallel(seq_cfg);
+            let seq = bench(&format!("{name} engine seq(1T)"), warm, iters, &mut *run);
+            rt.set_parallel(par_cfg);
+            let par = bench(
+                &format!("{name} engine par({}T)", par_cfg.threads),
+                warm,
+                iters,
+                run,
+            );
+            EntryRuns {
+                seq,
+                par,
+                reference,
+            }
+        };
+
+        let mut record = |rep: &mut BenchReport, runs: EntryRuns| {
+            let base = runs.reference.as_ref().unwrap_or(&runs.seq);
+            rep.case_vs(&runs.seq, runs.reference.as_ref());
+            rep.case_vs(&runs.par, Some(base));
+            if enforceable {
+                enforced.push((
+                    runs.par.name.clone(),
+                    runs.par.median_s,
+                    runs.seq.median_s,
+                ));
+            }
+            if let Some(r) = runs.reference {
+                results.push(r);
+            }
+            results.push(runs.seq);
+            results.push(runs.par);
+        };
+
         if let Ok(fwd) = rt.entry(preset, "forward") {
-            results.push(bench(&format!("{preset}/forward (B=128, pallas path)"), 3, 20, || {
+            let reference = bench(
+                &format!("{preset}/forward reference(PR-1)"),
+                warm,
+                iters,
+                || {
+                    rt.forward_reference(preset, &phi, &xf).unwrap();
+                },
+            );
+            let runs = measure(&format!("{preset}/forward (B=128)"), Some(reference), &mut || {
                 fwd.run1(&[&phi, &xf]).unwrap();
-            }));
+            });
+            record(&mut rep, runs);
         }
         if let Ok(loss) = rt.entry(preset, "loss") {
-            results.push(bench(&format!("{preset}/loss (42xB FD fan-out)"), 3, 20, || {
-                loss.run_scalar(&[&phi, &xr]).unwrap();
-            }));
+            let reference = bench(
+                &format!("{preset}/loss reference(PR-1)"),
+                warm,
+                iters,
+                || {
+                    rt.loss_reference(preset, &phi, &xr).unwrap();
+                },
+            );
+            let runs = measure(
+                &format!("{preset}/loss (42xB FD fan-out)"),
+                Some(reference),
+                &mut || {
+                    loss.run_scalar(&[&phi, &xr]).unwrap();
+                },
+            );
+            record(&mut rep, runs);
         }
         if let Ok(lm) = rt.entry(preset, "loss_multi") {
             let k = rt.manifest().k_multi;
             let phis: Vec<f32> = (0..k).flat_map(|_| phi.iter().copied()).collect();
-            results.push(bench(&format!("{preset}/loss_multi (K=11 SPSA batch)"), 2, 10, || {
-                lm.run1(&[&phis, &xr]).unwrap();
-            }));
+            let runs = measure(
+                &format!("{preset}/loss_multi (K=11 SPSA batch)"),
+                None,
+                &mut || {
+                    lm.run1(&[&phis, &xr]).unwrap();
+                },
+            );
+            record(&mut rep, runs);
         }
         if let Ok(val) = rt.entry(preset, "validate") {
-            results.push(bench(&format!("{preset}/validate (B=1024)"), 3, 20, || {
+            let runs = measure(&format!("{preset}/validate (B=1024)"), None, &mut || {
                 val.run_scalar(&[&phi, &xv, &uv]).unwrap();
-            }));
+            });
+            record(&mut rep, runs);
         }
     }
 
@@ -89,9 +201,65 @@ fn main() {
             sampler.batch(100, &mut xr);
             std::hint::black_box(&xr);
         }));
+        let n = results.len();
+        for r in &results[n - 3..] {
+            rep.case(r);
+        }
     }
 
     report(&results);
     println!("\nL3 overhead per training step = perturb+program + estimate + sampling;");
     println!("compare against the loss_multi dispatch above (DESIGN.md §Perf target: <10%).");
+
+    let path = bench_report_path();
+    if let Err(e) = rep.write_merged(&path) {
+        eprintln!("cannot write {}: {e:#}", path.display());
+        std::process::exit(2);
+    }
+    println!(
+        "\nperf report merged into {} ({} cases, engine {}Tx{} rows/block)",
+        path.display(),
+        rep.cases.len(),
+        rep.threads,
+        rep.block_rows
+    );
+    if let Some(s) = rep.min_speedup() {
+        println!("min recorded speedup vs baseline: {s:.2}x");
+    }
+
+    if std::env::var("PHOTON_BENCH_ENFORCE").as_deref() == Ok("1") {
+        // gate only dispatches with enough sequential work to swamp the
+        // per-dispatch thread spawn cost, and give shared CI runners a
+        // 10% noise margin on 5-sample medians
+        const MIN_GATED_SEQ_S: f64 = 1e-3;
+        const NOISE_MARGIN: f64 = 1.10;
+        let mut gated = 0usize;
+        let mut skipped = 0usize;
+        let mut failures: Vec<String> = Vec::new();
+        for (name, p, s) in &enforced {
+            if *s < MIN_GATED_SEQ_S {
+                skipped += 1;
+                continue;
+            }
+            gated += 1;
+            if *p > s * NOISE_MARGIN {
+                failures.push(format!(
+                    "{name}: parallel {:.3}ms > sequential {:.3}ms (+10% margin)",
+                    p * 1e3,
+                    s * 1e3
+                ));
+            }
+        }
+        if failures.is_empty() {
+            println!(
+                "enforce: parallel engine >= sequential on all {gated} gated cases \
+                 ({skipped} below the {MIN_GATED_SEQ_S}s work floor)"
+            );
+        } else {
+            for f in &failures {
+                eprintln!("enforce FAILED: {f}");
+            }
+            std::process::exit(1);
+        }
+    }
 }

@@ -11,7 +11,8 @@ mod common;
 
 use photon_pinn::coordinator::experiment::{Table1Config, Table1Runner};
 use photon_pinn::photonics::noise::NoiseConfig;
-use photon_pinn::util::bench::Table;
+use photon_pinn::runtime::Backend;
+use photon_pinn::util::bench::{bench_report_path, BenchReport, Table};
 use photon_pinn::util::stats::sci;
 
 fn main() {
@@ -41,6 +42,8 @@ fn main() {
     t.row(&["TONN (paper n=1024)".into(), "1536".into(),
             "3.73e-1 (1.46e-2)".into(), "2.97e-1 (1.35e-2)".into(), "5.53e-3".into()]);
 
+    let par = runner.rt.parallel();
+    let mut rep = BenchReport::new("table1", &runner.rt.platform(), par.threads, par.block_rows);
     let mut rows = Vec::new();
     for preset in ["onn_small", "tonn_small"] {
         let t0 = std::time::Instant::now();
@@ -50,10 +53,18 @@ fn main() {
             Ok(row) => row,
             Err(e) => {
                 eprintln!("  {preset}: skipped ({e:#})");
+                rep.case_raw(
+                    &format!("table1/{preset} skipped (no grad entry)"),
+                    t0.elapsed().as_secs_f64(),
+                );
                 continue;
             }
         };
         eprintln!("  {preset} done in {:.0}s", t0.elapsed().as_secs_f64());
+        rep.case_raw(
+            &format!("table1/{preset} wall"),
+            t0.elapsed().as_secs_f64(),
+        );
         t.row(&[
             format!("{} (measured)", row.network),
             row.params.to_string(),
@@ -88,5 +99,11 @@ fn main() {
             "  parameter reduction TONN vs ONN: {:.0}x (paper: 396x at n=1024)",
             rows[0].params as f64 / rows[1].params as f64
         );
+    }
+
+    let path = bench_report_path();
+    match rep.write_merged(&path) {
+        Ok(()) => println!("\nwall-time report merged into {}", path.display()),
+        Err(e) => eprintln!("cannot write {}: {e:#}", path.display()),
     }
 }

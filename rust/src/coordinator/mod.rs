@@ -23,6 +23,6 @@ pub mod validator;
 
 pub use experiment::{ExperimentRow, Table1Runner};
 pub use offchip::{OffChipConfig, OffChipTrainer};
-pub use service::{SolveRequest, SolveResult, SolverService};
+pub use service::{ServiceConfig, SolveRequest, SolveResult, SolverService};
 pub use trainer::{OnChipTrainer, TrainConfig, TrainResult};
 pub use validator::Validator;

@@ -5,7 +5,14 @@
 //! A bounded job queue feeds worker threads; results stream back over a
 //! channel. This is the tokio-free event loop substrate (DESIGN.md
 //! §Substitutions): std threads + mpsc + a bounded queue for
-//! backpressure.
+//! backpressure ([`SolverService::submit`] blocks when full,
+//! [`SolverService::try_submit`] reports `false` instead).
+//!
+//! Topology + engine tuning live in [`ServiceConfig`]: worker count,
+//! queue depth, warmup, and the evaluation-engine [`ParallelConfig`]
+//! applied to the backend(s) at startup (with W workers sharing one
+//! native backend, total CPU pressure is roughly `workers x threads` —
+//! size the two together).
 //!
 //! Two backend topologies:
 //!
@@ -17,11 +24,13 @@
 //!   (handles are not `Send` — physically faithful too: one photonic
 //!   accelerator per worker).
 //!
-//! [`SolverService::start`] keeps the original path-based API and picks
-//! the right topology for the compiled feature set.
+//! [`SolverService::start`] keeps the path-based API and picks the right
+//! topology for the compiled feature set. Shutdown is ordered: every
+//! job queued before [`SolverService::shutdown`] still runs, workers
+//! join, and the results never `recv`'d come back from the drain.
 
 use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -29,7 +38,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::trainer::{OnChipTrainer, TrainConfig};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, ParallelConfig};
 
 /// One solve job.
 #[derive(Clone, Debug)]
@@ -47,6 +56,41 @@ pub struct SolveResult {
     pub queue_seconds: f64,
     pub solve_seconds: f64,
     pub worker: usize,
+}
+
+/// Service topology + engine configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// worker threads draining the job queue
+    pub workers: usize,
+    /// bounded queue depth (the backpressure window)
+    pub queue_cap: usize,
+    /// pre-build this preset's hot entries before accepting jobs
+    pub warmup_preset: Option<String>,
+    /// evaluation-engine parallelism applied to the backend(s) at
+    /// startup; `None` keeps the backend's current setting
+    pub parallel: Option<ParallelConfig>,
+}
+
+impl ServiceConfig {
+    pub fn new(workers: usize, queue_cap: usize) -> ServiceConfig {
+        ServiceConfig {
+            workers: workers.max(1),
+            queue_cap: queue_cap.max(1),
+            warmup_preset: None,
+            parallel: None,
+        }
+    }
+
+    pub fn with_warmup(mut self, preset: &str) -> ServiceConfig {
+        self.warmup_preset = Some(preset.to_string());
+        self
+    }
+
+    pub fn with_parallel(mut self, par: ParallelConfig) -> ServiceConfig {
+        self.parallel = Some(par);
+        self
+    }
 }
 
 enum Job {
@@ -96,22 +140,30 @@ fn worker_loop(w: usize, rt: &dyn Backend, p: &Plumbing) {
 }
 
 impl SolverService {
-    /// Spin up `workers` threads against ONE shared backend (requires a
+    /// Result-channel depth: sized so workers rarely block on a slow
+    /// receiver in steady state (correctness never depends on it —
+    /// [`Self::shutdown`] drains while winding down).
+    fn result_cap(cfg: &ServiceConfig) -> usize {
+        cfg.queue_cap + cfg.workers + 16
+    }
+
+    /// Spin up workers against ONE shared backend (requires a
     /// thread-safe backend — i.e. the native evaluator).
     pub fn start_shared(
         backend: Arc<dyn Backend + Send + Sync>,
-        workers: usize,
-        queue_cap: usize,
-        warmup_preset: Option<String>,
+        cfg: ServiceConfig,
     ) -> SolverService {
-        if let Some(p) = &warmup_preset {
+        if let Some(par) = cfg.parallel {
+            backend.set_parallel(par);
+        }
+        if let Some(p) = &cfg.warmup_preset {
             let _ = backend.warmup(p, &["loss_multi", "validate"]);
         }
-        let (tx, rx) = sync_channel::<Job>(queue_cap);
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
         let rx = Arc::new(Mutex::new(rx));
-        let (res_tx, results) = sync_channel::<SolveResult>(queue_cap.max(16));
+        let (res_tx, results) = sync_channel::<SolveResult>(Self::result_cap(&cfg));
         let mut handles = Vec::new();
-        for w in 0..workers {
+        for w in 0..cfg.workers {
             let be = backend.clone();
             let plumbing = Plumbing {
                 rx: rx.clone(),
@@ -128,25 +180,21 @@ impl SolverService {
         }
     }
 
-    /// Spin up `workers` threads, each building its own backend via
-    /// `factory` (PJRT topology: one client/accelerator per worker).
-    pub fn start_per_worker<F>(
-        factory: F,
-        workers: usize,
-        queue_cap: usize,
-        warmup_preset: Option<String>,
-    ) -> SolverService
+    /// Spin up workers, each building its own backend via `factory`
+    /// (PJRT topology: one client/accelerator per worker).
+    pub fn start_per_worker<F>(factory: F, cfg: ServiceConfig) -> SolverService
     where
         F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
         let factory = Arc::new(factory);
-        let (tx, rx) = sync_channel::<Job>(queue_cap);
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
         let rx = Arc::new(Mutex::new(rx));
-        let (res_tx, results) = sync_channel::<SolveResult>(queue_cap.max(16));
+        let (res_tx, results) = sync_channel::<SolveResult>(Self::result_cap(&cfg));
         let mut handles = Vec::new();
-        for w in 0..workers {
+        for w in 0..cfg.workers {
             let factory = factory.clone();
-            let warm = warmup_preset.clone();
+            let warm = cfg.warmup_preset.clone();
+            let par = cfg.parallel;
             let plumbing = Plumbing {
                 rx: rx.clone(),
                 res_tx: res_tx.clone(),
@@ -159,6 +207,9 @@ impl SolverService {
                         return;
                     }
                 };
+                if let Some(p) = par {
+                    rt.set_parallel(p);
+                }
                 if let Some(p) = warm {
                     let _ = rt.warmup(&p, &["loss_multi", "validate"]);
                 }
@@ -174,12 +225,7 @@ impl SolverService {
 
     /// Path-based convenience: native build shares one evaluator across
     /// all workers; the `pjrt` build loads one PJRT runtime per worker.
-    pub fn start(
-        artifacts_dir: PathBuf,
-        workers: usize,
-        queue_cap: usize,
-        warmup_preset: Option<String>,
-    ) -> SolverService {
+    pub fn start(artifacts_dir: PathBuf, cfg: ServiceConfig) -> SolverService {
         #[cfg(feature = "pjrt")]
         {
             Self::start_per_worker(
@@ -187,15 +233,13 @@ impl SolverService {
                     crate::runtime::PjrtBackend::load(&artifacts_dir)
                         .map(|b| Box::new(b) as Box<dyn Backend>)
                 },
-                workers,
-                queue_cap,
-                warmup_preset,
+                cfg,
             )
         }
         #[cfg(not(feature = "pjrt"))]
         {
             match crate::runtime::NativeBackend::load_or_builtin(&artifacts_dir) {
-                Ok(be) => Self::start_shared(Arc::new(be), workers, queue_cap, warmup_preset),
+                Ok(be) => Self::start_shared(Arc::new(be), cfg),
                 // keep the old per-worker fail-loudly behavior: each
                 // worker logs the load error and exits
                 Err(_) => Self::start_per_worker(
@@ -203,9 +247,7 @@ impl SolverService {
                         crate::runtime::NativeBackend::load_or_builtin(&artifacts_dir)
                             .map(|b| Box::new(b) as Box<dyn Backend>)
                     },
-                    workers,
-                    queue_cap,
-                    warmup_preset,
+                    cfg,
                 ),
             }
         }
@@ -218,6 +260,17 @@ impl SolverService {
             .map_err(|_| anyhow::anyhow!("service is shut down"))
     }
 
+    /// Non-blocking submit: `Ok(true)` when accepted, `Ok(false)` when
+    /// the bounded queue is full (the backpressure signal callers can
+    /// shed load on), `Err` when the service is shut down.
+    pub fn try_submit(&self, req: SolveRequest) -> Result<bool> {
+        match self.tx.try_send(Job::Solve(req, Instant::now())) {
+            Ok(()) => Ok(true),
+            Err(TrySendError::Full(_)) => Ok(false),
+            Err(TrySendError::Disconnected(_)) => Err(anyhow::anyhow!("service is shut down")),
+        }
+    }
+
     /// Receive the next completed solve (blocking).
     pub fn recv(&self) -> Result<SolveResult> {
         self.results
@@ -225,13 +278,42 @@ impl SolverService {
             .map_err(|_| anyhow::anyhow!("service is shut down"))
     }
 
-    /// Graceful shutdown: drain workers.
-    pub fn shutdown(self) {
-        for _ in &self.workers {
-            let _ = self.tx.send(Job::Shutdown);
+    /// Ordered shutdown: every job queued before this call still runs
+    /// (the Shutdown markers sit behind them in the FIFO), workers join,
+    /// and the results never `recv`'d are returned in completion order.
+    ///
+    /// The results channel is drained *while* the markers are sent and
+    /// the workers wind down — a worker blocked mid-`send` on a full
+    /// results channel can therefore never wedge the join, no matter how
+    /// many results were left un-`recv`'d.
+    pub fn shutdown(self) -> Vec<SolveResult> {
+        let mut rest = Vec::new();
+        let drain = |rest: &mut Vec<SolveResult>| {
+            while let Ok(r) = self.results.try_recv() {
+                rest.push(r);
+            }
+        };
+        let mut sent = 0;
+        while sent < self.workers.len() {
+            match self.tx.try_send(Job::Shutdown) {
+                Ok(()) => sent += 1,
+                // queue full: workers are still draining it — free
+                // result capacity so they can make progress
+                Err(TrySendError::Full(_)) => {
+                    drain(&mut rest);
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(TrySendError::Disconnected(_)) => break,
+            }
         }
         for h in self.workers {
+            while !h.is_finished() {
+                drain(&mut rest);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
             let _ = h.join();
         }
+        drain(&mut rest);
+        rest
     }
 }

@@ -26,7 +26,7 @@ use super::validator::Validator;
 use crate::optim::{LrSchedule, Spsa, ZoSgd, ZoSignSgd};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
 use crate::pde::Sampler;
-use crate::runtime::{Backend, Entry};
+use crate::runtime::{Backend, Entry, ParallelConfig};
 
 /// Update rule variant (ablation A1: sign de-noising on/off).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,6 +62,13 @@ pub struct TrainConfig {
     pub validate_every: usize,
     pub update_rule: UpdateRule,
     pub loss_kind: LossKind,
+    /// evaluation-engine parallelism applied to the backend at trainer
+    /// construction; `None` (the default) keeps its current setting.
+    /// NOTE: the engine config lives on the backend, so on a SHARED
+    /// backend (solver-service `start_shared`) a `Some` here
+    /// reconfigures every worker — leave it `None` for service jobs and
+    /// size the engine once via `ServiceConfig.parallel` instead.
+    pub parallel: Option<ParallelConfig>,
     /// print progress lines
     pub verbose: bool,
 }
@@ -84,6 +91,7 @@ impl TrainConfig {
             validate_every: 100,
             update_rule: UpdateRule::SignSgd,
             loss_kind: LossKind::Fd,
+            parallel: None,
             verbose: false,
         })
     }
@@ -120,6 +128,9 @@ pub struct OnChipTrainer<'rt> {
 
 impl<'rt> OnChipTrainer<'rt> {
     pub fn new(rt: &'rt dyn Backend, cfg: TrainConfig) -> Result<Self> {
+        if let Some(par) = cfg.parallel {
+            rt.set_parallel(par);
+        }
         let pm = rt.manifest().preset(&cfg.preset)?;
         anyhow::ensure!(
             cfg.spsa_n + 1 == rt.manifest().k_multi,

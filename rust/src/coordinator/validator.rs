@@ -6,7 +6,7 @@ use anyhow::Result;
 
 use crate::pde::Sampler;
 use crate::photonics::noise::ChipRealization;
-use crate::runtime::{Backend, Entry};
+use crate::runtime::{Backend, Entry, ParallelConfig};
 
 /// Holds the `validate` entry plus a fixed validation set.
 pub struct Validator {
@@ -30,6 +30,20 @@ impl Validator {
             uv,
             eff: Vec::new(),
         })
+    }
+
+    /// [`Validator::new`] with an explicit evaluation-engine config
+    /// applied to `rt` first. Validation batches are the largest row
+    /// blocks the engine sees (B_VAL rows per dispatch), so standalone
+    /// validation sweeps benefit the most from parallel row-blocks.
+    pub fn with_parallel(
+        rt: &dyn Backend,
+        preset: &str,
+        seed: u64,
+        par: ParallelConfig,
+    ) -> Result<Validator> {
+        rt.set_parallel(par);
+        Validator::new(rt, preset, seed)
     }
 
     /// Validation MSE of *commanded* parameters as realized on `chip`.

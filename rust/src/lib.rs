@@ -17,11 +17,15 @@
 //! * [`runtime::NativeBackend`] — **default**. Pure rust: materializes
 //!   the phase-domain ONN/TONN layers from the Givens/MZI meshes
 //!   ([`photonics::mesh`]) and TT cores ([`tensor`]), and assembles the
-//!   FD/Stein PINN losses from [`pde`]. Presets come from the in-repo
-//!   registry (no build step) or any `manifest.json`. `Send + Sync`:
-//!   solver-service workers share ONE backend. This is the path CI
-//!   exercises (`cargo build --release && cargo test -q`) — every
-//!   integration test runs against it, no artifacts required.
+//!   FD/Stein PINN losses from [`pde`]. Batches run through a parallel,
+//!   cache-aware evaluation engine (per-Φ materialization cache, blocked
+//!   GEMM micro-kernel, scoped-thread row-block fan-out) tuned by
+//!   [`runtime::ParallelConfig`] — results are identical for every
+//!   config. Presets come from the in-repo registry (no build step) or
+//!   any `manifest.json`. `Send + Sync`: solver-service workers share
+//!   ONE backend. This is the path CI exercises
+//!   (`cargo build --release && cargo test -q`) — every integration
+//!   test runs against it, no artifacts required.
 //! * `runtime::PjrtBackend` — behind the **non-default `pjrt` cargo
 //!   feature**. Executes AOT HLO-text artifacts produced by the
 //!   build-time python layers (`python/compile/`: the jax model + Pallas

@@ -44,6 +44,8 @@ fn args_for(cmd: &str) -> Args {
         .flag("zo-epochs", Some("1500"), "on-chip epochs (table1)")
         .flag("bp-epochs", Some("400"), "off-chip epochs (table1)")
         .flag("checkpoint", None, "write final parameters to this path")
+        .flag("threads", None, "evaluation-engine worker threads (default: auto / PHOTON_THREADS)")
+        .flag("block-rows", None, "rows per engine work block (default: 32 / PHOTON_BLOCK_ROWS)")
         .switch("stein", "use the Stein derivative estimator instead of FD")
         .switch("raw-sgd", "disable the signSGD de-noising (ablation)")
         .switch("quiet", "suppress progress lines")
@@ -63,11 +65,22 @@ fn load_runtime(a: &Args) -> Result<Box<dyn Backend>> {
         ),
         other => anyhow::bail!("unknown backend '{other}' (native | pjrt)"),
     };
+    let mut par = photon_pinn::runtime::ParallelConfig::auto();
+    if let Some(t) = a.get_usize("threads")? {
+        par.threads = t.max(1);
+    }
+    if let Some(b) = a.get_usize("block-rows")? {
+        par.block_rows = b.max(1);
+    }
+    rt.set_parallel(par);
+    let par = rt.parallel();
     eprintln!(
-        "loaded {} presets ({} backend: {})",
+        "loaded {} presets ({} backend: {}, engine {} thread(s) x {} rows/block)",
         rt.manifest().presets.len(),
         which,
-        rt.platform()
+        rt.platform(),
+        par.threads,
+        par.block_rows
     );
     Ok(rt)
 }

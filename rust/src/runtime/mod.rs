@@ -31,10 +31,14 @@ use crate::pde::Pde;
 use crate::util::json::{self, Value};
 
 pub mod native;
+pub mod parallel;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+#[cfg(all(feature = "pjrt", not(feature = "pjrt-xla")))]
+mod xla_stub;
 
 pub use native::NativeBackend;
+pub use parallel::ParallelConfig;
 #[cfg(feature = "pjrt")]
 pub use pjrt::PjrtBackend;
 
@@ -268,6 +272,20 @@ pub trait Backend {
 
     /// Human-readable execution platform (e.g. `native-cpu`, `Host`).
     fn platform(&self) -> String;
+
+    /// Evaluation-engine parallelism currently in effect. Backends whose
+    /// execution engine is not configurable report the sequential config.
+    fn parallel(&self) -> ParallelConfig {
+        ParallelConfig::sequential()
+    }
+
+    /// Reconfigure evaluation parallelism (worker threads x rows per
+    /// work block). Results never depend on the config — only latency
+    /// does. Returns `false` when the backend ignores the request (PJRT
+    /// executables own their threading).
+    fn set_parallel(&self, _cfg: ParallelConfig) -> bool {
+        false
+    }
 
     /// Get (building/compiling on first use) an entry point of a preset.
     fn entry(&self, preset: &str, entry: &str) -> Result<Arc<dyn Entry>>;

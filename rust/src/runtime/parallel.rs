@@ -1,0 +1,261 @@
+//! Evaluation-engine parallelism: row-block fan-out over scoped threads.
+//!
+//! The native backend evaluates batches row-independently (every network
+//! output depends only on its own input row), so a batch can be cut into
+//! contiguous row-blocks and the blocks distributed across workers with
+//! NO change to the arithmetic: each row is computed by exactly the same
+//! instruction sequence regardless of how the batch is partitioned.
+//! That is the engine's correctness contract — **parallel ≡ sequential,
+//! bit for bit** — and it is what lets the jax golden fixtures run
+//! against the parallel path unchanged (`tests/artifact_numerics.rs`).
+//!
+//! Pieces:
+//!
+//! * [`ParallelConfig`] — the user-facing knob (`threads` x `block_rows`)
+//!   threaded through [`super::Backend`], the trainer, the validator and
+//!   the solver service.
+//! * [`ParallelCtl`] — the atomic cell a backend shares with its cached
+//!   entries so the config is runtime-tunable without rebuilding them.
+//! * [`for_row_blocks`] — the scoped-thread driver (std threads only;
+//!   the repo substrate stays tokio-free, DESIGN.md §Substitutions).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default rows per work block: sized so a block's activations stay
+/// cache-resident for the repro-scale hidden widths while still cutting
+/// the standard batches (100·43 stencil rows, 1024 validation rows) into
+/// enough blocks to feed every worker.
+pub const DEFAULT_BLOCK_ROWS: usize = 32;
+
+/// Evaluation-engine parallelism settings.
+///
+/// `threads == 1` is the sequential engine; results are identical for
+/// every value of both fields (see the module docs), so these trade
+/// latency only.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// scoped worker threads per batch evaluation
+    pub threads: usize,
+    /// contiguous rows per work block
+    pub block_rows: usize,
+}
+
+impl ParallelConfig {
+    /// The sequential engine (single thread, default blocking).
+    pub fn sequential() -> ParallelConfig {
+        ParallelConfig {
+            threads: 1,
+            block_rows: DEFAULT_BLOCK_ROWS,
+        }
+    }
+
+    /// `threads` workers with the default block size.
+    pub fn with_threads(threads: usize) -> ParallelConfig {
+        ParallelConfig {
+            threads: threads.max(1),
+            block_rows: DEFAULT_BLOCK_ROWS,
+        }
+    }
+
+    /// Hardware-sized default: `PHOTON_THREADS` / `PHOTON_BLOCK_ROWS`
+    /// env overrides, else one worker per available core.
+    pub fn auto() -> ParallelConfig {
+        let threads = std::env::var("PHOTON_THREADS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1)
+            });
+        let block_rows = std::env::var("PHOTON_BLOCK_ROWS")
+            .ok()
+            .and_then(|s| s.parse::<usize>().ok())
+            .unwrap_or(DEFAULT_BLOCK_ROWS);
+        ParallelConfig {
+            threads: threads.max(1),
+            block_rows: block_rows.max(1),
+        }
+    }
+}
+
+/// Shared, runtime-tunable parallel settings (plain atomics, so the
+/// backend and every cached entry can share one `Arc<ParallelCtl>` and
+/// stay `Send + Sync`).
+#[derive(Debug)]
+pub struct ParallelCtl {
+    threads: AtomicUsize,
+    block_rows: AtomicUsize,
+}
+
+impl ParallelCtl {
+    pub fn new(cfg: ParallelConfig) -> ParallelCtl {
+        ParallelCtl {
+            threads: AtomicUsize::new(cfg.threads.max(1)),
+            block_rows: AtomicUsize::new(cfg.block_rows.max(1)),
+        }
+    }
+
+    pub fn get(&self) -> ParallelConfig {
+        ParallelConfig {
+            threads: self.threads.load(Ordering::Relaxed),
+            block_rows: self.block_rows.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn set(&self, cfg: ParallelConfig) {
+        self.threads.store(cfg.threads.max(1), Ordering::Relaxed);
+        self.block_rows
+            .store(cfg.block_rows.max(1), Ordering::Relaxed);
+    }
+}
+
+/// Cut `out` (a flat batch of `out.len() / row_len` rows) into blocks of
+/// `cfg.block_rows` rows and run `eval(first_row, block)` on every block,
+/// fanned out across `cfg.threads` scoped workers.
+///
+/// Blocks are assigned round-robin (block `i` -> worker `i % threads`):
+/// a static, deterministic partition — no work queue, no locks — and
+/// because `eval` must compute each row independently of the blocking,
+/// the result is identical for every `ParallelConfig`. Small batches
+/// (one block) and `threads == 1` stay on the calling thread.
+///
+/// Workers are fresh scoped threads per call (tens of µs per dispatch):
+/// negligible against the standard batches (100·43 stencil rows, 1024
+/// validation rows) but real for micro presets — run those with
+/// `threads = 1`. A persistent pool is the natural next optimization if
+/// profiling ever shows the spawn cost on top (the parallel ≡ sequential
+/// contract would carry over unchanged).
+pub fn for_row_blocks<F>(cfg: ParallelConfig, row_len: usize, out: &mut [f32], eval: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    assert!(row_len > 0, "for_row_blocks: row_len must be positive");
+    let rows = out.len() / row_len;
+    assert_eq!(rows * row_len, out.len(), "for_row_blocks: ragged batch");
+    let block = cfg.block_rows.max(1);
+    let threads = cfg.threads.max(1);
+    let chunk = block * row_len;
+    if threads == 1 || rows <= block {
+        let mut row0 = 0;
+        for c in out.chunks_mut(chunk) {
+            let nr = c.len() / row_len;
+            eval(row0, c);
+            row0 += nr;
+        }
+        return;
+    }
+    let n_blocks = rows / block + usize::from(rows % block != 0);
+    let workers = threads.min(n_blocks);
+    let mut assignments: Vec<Vec<(usize, &mut [f32])>> =
+        (0..workers).map(|_| Vec::new()).collect();
+    for (bi, c) in out.chunks_mut(chunk).enumerate() {
+        assignments[bi % workers].push((bi * block, c));
+    }
+    let eval = &eval;
+    std::thread::scope(|s| {
+        for list in assignments {
+            s.spawn(move || {
+                for (row0, c) in list {
+                    eval(row0, c);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_clamps_and_env_free_constructors() {
+        let s = ParallelConfig::sequential();
+        assert_eq!(s.threads, 1);
+        assert_eq!(ParallelConfig::with_threads(0).threads, 1);
+        let ctl = ParallelCtl::new(ParallelConfig {
+            threads: 0,
+            block_rows: 0,
+        });
+        assert_eq!(
+            ctl.get(),
+            ParallelConfig {
+                threads: 1,
+                block_rows: 1
+            }
+        );
+        ctl.set(ParallelConfig {
+            threads: 3,
+            block_rows: 8,
+        });
+        assert_eq!(ctl.get().threads, 3);
+        assert_eq!(ctl.get().block_rows, 8);
+    }
+
+    /// Every (threads, block_rows) partition must visit each row exactly
+    /// once with the right global row index.
+    #[test]
+    fn row_blocks_cover_every_row_once() {
+        for &(threads, block_rows) in
+            &[(1usize, 4usize), (2, 4), (3, 1), (4, 5), (8, 3), (2, 1000)]
+        {
+            for rows in [0usize, 1, 4, 5, 31, 32, 33, 100] {
+                let row_len = 3;
+                let mut out = vec![0.0f32; rows * row_len];
+                for_row_blocks(
+                    ParallelConfig {
+                        threads,
+                        block_rows,
+                    },
+                    row_len,
+                    &mut out,
+                    |row0, block| {
+                        for (r, row) in block.chunks_mut(row_len).enumerate() {
+                            for (j, v) in row.iter_mut().enumerate() {
+                                *v += ((row0 + r) * row_len + j) as f32 + 1.0;
+                            }
+                        }
+                    },
+                );
+                for (i, v) in out.iter().enumerate() {
+                    assert_eq!(
+                        *v,
+                        i as f32 + 1.0,
+                        "threads={threads} block={block_rows} rows={rows} idx={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// Parallel and sequential drivers produce identical buffers for a
+    /// row-independent eval (the engine's core contract).
+    #[test]
+    fn parallel_matches_sequential() {
+        let row_len = 7;
+        let rows = 57;
+        let eval = |row0: usize, block: &mut [f32]| {
+            for (r, row) in block.chunks_mut(row_len).enumerate() {
+                let g = (row0 + r) as f32;
+                for (j, v) in row.iter_mut().enumerate() {
+                    *v = (g * 1.25 + j as f32).sin();
+                }
+            }
+        };
+        let mut seq = vec![0.0f32; rows * row_len];
+        for_row_blocks(ParallelConfig::sequential(), row_len, &mut seq, eval);
+        for threads in [2, 4, 8] {
+            let mut par = vec![0.0f32; rows * row_len];
+            for_row_blocks(
+                ParallelConfig {
+                    threads,
+                    block_rows: 5,
+                },
+                row_len,
+                &mut par,
+                eval,
+            );
+            assert_eq!(seq, par, "threads={threads}");
+        }
+    }
+}

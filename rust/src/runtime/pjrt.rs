@@ -21,6 +21,12 @@ use anyhow::{anyhow, Context, Result};
 
 use super::{Backend, Entry, EntryMeta, Manifest};
 
+// Without the `pjrt-xla` feature the real bindings are absent and the
+// whole module typechecks against the vendored stub (every runtime call
+// errors loudly); with it, `xla::` resolves to the real crate.
+#[cfg(not(feature = "pjrt-xla"))]
+use super::xla_stub as xla;
+
 /// A compiled artifact entry point.
 pub struct Executable {
     pub meta: EntryMeta,

@@ -200,6 +200,66 @@ impl Mat {
     }
 }
 
+/// GEMM micro-kernel for the native evaluation engine:
+/// `out[r][j] = Σ_{k < k_used} a[r][k] · b[k][j]` over the
+/// `out.len() / b.cols` rows of the row-major operand `a` (row stride
+/// `a_cols`).
+///
+/// `k_used <= a_cols` lets callers skip structurally-zero trailing
+/// columns of `a` (the zero-padded network input) without changing the
+/// result. Terms accumulate in ascending `k` independently per output
+/// element — the same evaluation order as [`Mat::matmul`] — so the
+/// output is identical for any row blocking or thread count (the
+/// engine's parallel ≡ sequential contract). Four output rows share each
+/// sweep of `b` (register blocking: one load of a `b` row feeds four
+/// accumulator rows).
+pub fn gemm_rows(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f32]) {
+    let n = b.cols;
+    assert!(k_used <= a_cols && k_used <= b.rows, "gemm_rows: k bounds");
+    assert!(n > 0 && out.len() % n == 0, "gemm_rows: out shape");
+    let rows = out.len() / n;
+    assert!(rows * a_cols <= a.len(), "gemm_rows: a too short");
+    out.fill(0.0);
+    let mut rest = &mut out[..];
+    let mut r0 = 0usize;
+    while rest.len() >= 4 * n {
+        let tmp = std::mem::take(&mut rest);
+        let (quad, tail) = tmp.split_at_mut(4 * n);
+        rest = tail;
+        let (q01, q23) = quad.split_at_mut(2 * n);
+        let (o0, o1) = q01.split_at_mut(n);
+        let (o2, o3) = q23.split_at_mut(n);
+        let a0 = &a[r0 * a_cols..r0 * a_cols + k_used];
+        let a1 = &a[(r0 + 1) * a_cols..(r0 + 1) * a_cols + k_used];
+        let a2 = &a[(r0 + 2) * a_cols..(r0 + 2) * a_cols + k_used];
+        let a3 = &a[(r0 + 3) * a_cols..(r0 + 3) * a_cols + k_used];
+        for k in 0..k_used {
+            let (x0, x1, x2, x3) = (a0[k], a1[k], a2[k], a3[k]);
+            let brow = &b.data[k * n..(k + 1) * n];
+            for (j, &bv) in brow.iter().enumerate() {
+                o0[j] += x0 * bv;
+                o1[j] += x1 * bv;
+                o2[j] += x2 * bv;
+                o3[j] += x3 * bv;
+            }
+        }
+        r0 += 4;
+    }
+    while !rest.is_empty() {
+        let tmp = std::mem::take(&mut rest);
+        let (row, tail) = tmp.split_at_mut(n);
+        rest = tail;
+        let arow = &a[r0 * a_cols..r0 * a_cols + k_used];
+        for (k, &x) in arow.iter().enumerate() {
+            let brow = &b.data[k * n..(k + 1) * n];
+            for (o, &bv) in row.iter_mut().zip(brow) {
+                *o += x * bv;
+            }
+        }
+        r0 += 1;
+    }
+}
+
 /// A dense TT core (r_in, m, n, r_out), row-major over (r_in, m, n, r_out).
 #[derive(Clone, Debug)]
 pub struct TtCore {
@@ -458,6 +518,51 @@ mod tests {
                 assert!((y[i] - ym.data[i]).abs() < 1e-4);
             }
         });
+    }
+
+    #[test]
+    fn prop_gemm_rows_matches_matmul() {
+        // property: the engine micro-kernel == Mat::matmul for any row
+        // count (quad + remainder paths) and any k_used zero-padding
+        prop::check(40, |r| {
+            let rows = 1 + r.below(11);
+            let k_used = 1 + r.below(6);
+            let pad = r.below(4);
+            let a_cols = k_used + pad;
+            let n = 1 + r.below(9);
+            let mut a = Mat::zeros(rows, a_cols);
+            r.fill_normal(&mut a.data);
+            // zero the padded tail columns (the structural-zero contract)
+            for i in 0..rows {
+                for k in k_used..a_cols {
+                    a.data[i * a_cols + k] = 0.0;
+                }
+            }
+            let mut b = Mat::zeros(a_cols, n);
+            r.fill_normal(&mut b.data);
+            let want = a.matmul(&b);
+            let mut got = vec![0.0f32; rows * n];
+            gemm_rows(&a.data, a_cols, k_used, &b, &mut got);
+            for (i, (x, y)) in got.iter().zip(&want.data).enumerate() {
+                assert_eq!(*x, *y, "[{i}] rows={rows} k={k_used} pad={pad} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_rows_known_values() {
+        // 5 rows: one quad + one remainder row
+        let a = Mat::from_rows(&[
+            &[1.0, 2.0],
+            &[3.0, 4.0],
+            &[5.0, 6.0],
+            &[7.0, 8.0],
+            &[9.0, 10.0],
+        ]);
+        let b = Mat::from_rows(&[&[1.0, 0.0, 2.0], &[0.0, 1.0, 3.0]]);
+        let mut out = vec![-1.0f32; 5 * 3];
+        gemm_rows(&a.data, 2, 2, &b, &mut out);
+        assert_eq!(out, a.matmul(&b).data);
     }
 
     fn random_core(r: &mut Rng, ri: usize, m: usize, n: usize, ro: usize) -> TtCore {

@@ -1,11 +1,16 @@
 //! Micro-benchmark harness (the `criterion` substitute).
 //!
 //! Used by `rust/benches/*` (built with `harness = false`): warmup, timed
-//! iterations, median/p10/p90 reporting, and a simple table printer shared
-//! by the paper-table benches.
+//! iterations, median/p10/p90 reporting, a simple table printer shared
+//! by the paper-table benches, and the machine-readable [`BenchReport`]
+//! every bench merges into `BENCH_native.json` — the repo's recorded
+//! perf trajectory (uploaded by CI's bench-smoke job, compared across
+//! PRs; see README §Performance).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
+use super::json::{self, Value};
 use super::stats;
 
 /// Result of one benchmark case.
@@ -133,6 +138,201 @@ impl Table {
     }
 }
 
+/// One serialized benchmark case: the machine-readable mirror of
+/// [`BenchResult`] plus derived single-iteration throughput and, when a
+/// baseline was measured, the speedup against it.
+#[derive(Clone, Debug)]
+pub struct BenchCase {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub p10_s: f64,
+    pub p90_s: f64,
+    pub mean_s: f64,
+    /// iterations per second at the median (single-iteration throughput)
+    pub per_sec: f64,
+    /// median of the baseline this case is compared against (the
+    /// sequential / PR-1 reference path), when one was measured
+    pub baseline_median_s: Option<f64>,
+    /// `baseline_median_s / median_s` (> 1 means faster than baseline)
+    pub speedup: Option<f64>,
+}
+
+/// A named group of bench cases destined for `BENCH_native.json`.
+///
+/// Every bench binary builds one report and [`BenchReport::write_merged`]s
+/// it into the shared file, so one CI run produces a single perf
+/// artifact covering all benches. Schema (versioned, stable key order):
+///
+/// ```json
+/// { "version": 1,
+///   "reports": { "<report>": {
+///     "platform": "native-cpu", "threads": N, "block_rows": N,
+///     "unix_time": secs,
+///     "cases": [ { "name": "...", "iters": N,
+///                  "median_s": s, "p10_s": s, "p90_s": s, "mean_s": s,
+///                  "per_sec": hz,
+///                  "baseline_median_s": s?, "speedup": x? } ] } } }
+/// ```
+#[derive(Clone, Debug)]
+pub struct BenchReport {
+    pub name: String,
+    pub platform: String,
+    pub threads: usize,
+    pub block_rows: usize,
+    pub cases: Vec<BenchCase>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str, platform: &str, threads: usize, block_rows: usize) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            platform: platform.to_string(),
+            threads,
+            block_rows,
+            cases: Vec::new(),
+        }
+    }
+
+    /// Record a result with no baseline.
+    pub fn case(&mut self, r: &BenchResult) {
+        self.case_vs(r, None);
+    }
+
+    /// Record a result plus the baseline it should be compared against;
+    /// `speedup = baseline.median / r.median`.
+    pub fn case_vs(&mut self, r: &BenchResult, baseline: Option<&BenchResult>) {
+        self.cases.push(BenchCase {
+            name: r.name.clone(),
+            iters: r.iters,
+            median_s: r.median_s,
+            p10_s: r.p10_s,
+            p90_s: r.p90_s,
+            mean_s: r.mean_s,
+            per_sec: if r.median_s > 0.0 { 1.0 / r.median_s } else { 0.0 },
+            baseline_median_s: baseline.map(|b| b.median_s),
+            speedup: baseline.map(|b| {
+                if r.median_s > 0.0 {
+                    b.median_s / r.median_s
+                } else {
+                    0.0
+                }
+            }),
+        });
+    }
+
+    /// Record a one-shot wall-time measured outside [`bench`].
+    pub fn case_raw(&mut self, name: &str, seconds: f64) {
+        self.cases.push(BenchCase {
+            name: name.to_string(),
+            iters: 1,
+            median_s: seconds,
+            p10_s: seconds,
+            p90_s: seconds,
+            mean_s: seconds,
+            per_sec: if seconds > 0.0 { 1.0 / seconds } else { 0.0 },
+            baseline_median_s: None,
+            speedup: None,
+        });
+    }
+
+    /// Smallest recorded speedup (None when no case had a baseline).
+    pub fn min_speedup(&self) -> Option<f64> {
+        let m = self
+            .cases
+            .iter()
+            .filter_map(|c| c.speedup)
+            .fold(f64::INFINITY, f64::min);
+        if m.is_finite() {
+            Some(m)
+        } else {
+            None
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let cases: Vec<Value> = self
+            .cases
+            .iter()
+            .map(|c| {
+                let mut pairs = vec![
+                    ("name", Value::Str(c.name.clone())),
+                    ("iters", Value::Num(c.iters as f64)),
+                    ("median_s", Value::Num(c.median_s)),
+                    ("p10_s", Value::Num(c.p10_s)),
+                    ("p90_s", Value::Num(c.p90_s)),
+                    ("mean_s", Value::Num(c.mean_s)),
+                    ("per_sec", Value::Num(c.per_sec)),
+                ];
+                if let Some(b) = c.baseline_median_s {
+                    pairs.push(("baseline_median_s", Value::Num(b)));
+                }
+                if let Some(s) = c.speedup {
+                    pairs.push(("speedup", Value::Num(s)));
+                }
+                Value::obj(pairs)
+            })
+            .collect();
+        Value::obj(vec![
+            ("platform", Value::Str(self.platform.clone())),
+            ("threads", Value::Num(self.threads as f64)),
+            ("block_rows", Value::Num(self.block_rows as f64)),
+            ("unix_time", Value::Num(unix_time())),
+            ("cases", Value::Arr(cases)),
+        ])
+    }
+
+    /// Merge this report into the file at `path`: other reports are
+    /// preserved, the section with this report's name is replaced.
+    pub fn write_merged(&self, path: &Path) -> anyhow::Result<()> {
+        let mut reports: Vec<(String, Value)> = Vec::new();
+        if path.exists() {
+            if let Ok(root) = json::parse_file(path) {
+                if let Some(obj) = root.get("reports").and_then(|r| r.as_obj()) {
+                    reports = obj
+                        .iter()
+                        .filter(|(k, _)| k.as_str() != self.name)
+                        .cloned()
+                        .collect();
+                }
+            }
+        }
+        reports.push((self.name.clone(), self.to_json()));
+        let root = Value::Obj(vec![
+            ("version".to_string(), Value::Num(1.0)),
+            ("reports".to_string(), Value::Obj(reports)),
+        ]);
+        std::fs::write(path, root.to_string())
+            .map_err(|e| anyhow::anyhow!("writing {}: {e}", path.display()))
+    }
+}
+
+fn unix_time() -> f64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs_f64())
+        .unwrap_or(0.0)
+}
+
+/// Where `BENCH_native.json` lives: `$PHOTON_BENCH_OUT` wins; otherwise
+/// the nearest ancestor of the cwd containing `.git` (the repo root, so
+/// every bench binary agrees regardless of cargo's cwd); else the cwd.
+pub fn bench_report_path() -> PathBuf {
+    if let Ok(p) = std::env::var("PHOTON_BENCH_OUT") {
+        return PathBuf::from(p);
+    }
+    let cwd = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    let mut dir = cwd.clone();
+    loop {
+        if dir.join(".git").exists() {
+            return dir.join("BENCH_native.json");
+        }
+        if !dir.pop() {
+            return cwd.join("BENCH_native.json");
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -170,5 +370,59 @@ mod tests {
     fn table_arity_checked() {
         let mut t = Table::new("T", &["a", "b"]);
         t.row(&["1".into()]);
+    }
+
+    fn fake(name: &str, median: f64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 5,
+            median_s: median,
+            p10_s: median * 0.9,
+            p90_s: median * 1.1,
+            mean_s: median,
+        }
+    }
+
+    #[test]
+    fn report_speedup_and_min() {
+        let mut rep = BenchReport::new("r", "native-cpu", 4, 32);
+        // dyadic times so the speedup ratios are exact in f64
+        rep.case(&fake("solo", 0.5));
+        rep.case_vs(&fake("par", 0.25), Some(&fake("seq", 1.0)));
+        rep.case_vs(&fake("par2", 0.5), Some(&fake("seq2", 0.75)));
+        rep.case_raw("wall", 1.25);
+        assert_eq!(rep.cases.len(), 4);
+        assert_eq!(rep.cases[1].speedup, Some(4.0));
+        assert_eq!(rep.min_speedup(), Some(1.5));
+        let j = rep.to_json();
+        assert_eq!(j.get("threads").unwrap().as_usize(), Some(4));
+        let cases = j.get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(cases.len(), 4);
+        assert_eq!(cases[1].get("speedup").unwrap().as_f64(), Some(4.0));
+        assert!(cases[0].get("speedup").is_none());
+    }
+
+    #[test]
+    fn write_merged_preserves_other_reports() {
+        let path = std::env::temp_dir().join(format!("pp_bench_{}.json", std::process::id()));
+        std::fs::remove_file(&path).ok();
+        let mut a = BenchReport::new("latency", "native-cpu", 2, 32);
+        a.case(&fake("x", 0.1));
+        a.write_merged(&path).unwrap();
+        let mut b = BenchReport::new("table1", "native-cpu", 2, 32);
+        b.case_raw("y wall", 3.0);
+        b.write_merged(&path).unwrap();
+        // re-writing a report replaces only its own section
+        let mut a2 = BenchReport::new("latency", "native-cpu", 4, 16);
+        a2.case(&fake("x", 0.05));
+        a2.write_merged(&path).unwrap();
+        let root = json::parse_file(&path).unwrap();
+        assert_eq!(root.get("version").unwrap().as_usize(), Some(1));
+        let reports = root.get("reports").unwrap();
+        assert!(reports.get("table1").is_some());
+        let lat = reports.get("latency").unwrap();
+        assert_eq!(lat.get("threads").unwrap().as_usize(), Some(4));
+        assert_eq!(lat.get("cases").unwrap().as_arr().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
     }
 }

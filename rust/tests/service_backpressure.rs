@@ -1,0 +1,110 @@
+//! SolverService backpressure + shutdown-ordering contract under the
+//! parallel native engine:
+//!
+//! * a full bounded queue rejects `try_submit` and parks blocking
+//!   `submit`s until capacity frees (backpressure);
+//! * `shutdown` is ordered — every job queued before it still runs, and
+//!   the drain returns every result that was never `recv`'d;
+//! * per-worker result counts sum to the number of submitted jobs.
+
+use std::sync::Arc;
+
+use photon_pinn::coordinator::{ServiceConfig, SolveRequest, SolverService, TrainConfig};
+use photon_pinn::runtime::{Backend, NativeBackend, ParallelConfig};
+
+fn cfg(be: &NativeBackend, epochs: usize, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::from_manifest(be, "tonn_micro").unwrap();
+    cfg.epochs = epochs;
+    cfg.validate_every = 0;
+    cfg.verbose = false;
+    cfg.seed = seed;
+    cfg
+}
+
+#[test]
+fn full_queue_backpressure_rejects_and_blocks() {
+    let be = Arc::new(NativeBackend::builtin());
+    let long = cfg(&be, 1500, 1);
+    let quick = cfg(&be, 5, 2);
+    // one worker, queue depth one: the tightest backpressure window
+    let service = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(1, 1)
+            .with_warmup("tonn_micro")
+            .with_parallel(ParallelConfig::sequential()),
+    );
+    service.submit(SolveRequest { id: 0, config: long }).unwrap();
+    // wait until the worker pulled job 0 off the queue (the slot frees),
+    // then occupy the slot with job 1
+    let t0 = std::time::Instant::now();
+    loop {
+        if service
+            .try_submit(SolveRequest {
+                id: 1,
+                config: quick.clone(),
+            })
+            .unwrap()
+        {
+            break;
+        }
+        assert!(t0.elapsed().as_secs() < 120, "worker never started job 0");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    // queue full while the worker is still solving job 0: must reject
+    assert!(
+        !service
+            .try_submit(SolveRequest {
+                id: 2,
+                config: quick.clone(),
+            })
+            .unwrap(),
+        "try_submit must report a full queue"
+    );
+    // blocking submit parks until the worker frees the slot
+    let r0 = service.recv().unwrap();
+    assert_eq!(r0.id, 0);
+    service.submit(SolveRequest { id: 2, config: quick }).unwrap();
+    let mut rest = vec![service.recv().unwrap().id, service.recv().unwrap().id];
+    rest.sort_unstable();
+    assert_eq!(rest, vec![1, 2]);
+    assert!(service.shutdown().is_empty());
+}
+
+#[test]
+fn shutdown_drains_all_results_and_worker_counts_sum() {
+    let be = Arc::new(NativeBackend::builtin());
+    let service = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(2, 8)
+            .with_warmup("tonn_micro")
+            .with_parallel(ParallelConfig {
+                threads: 2,
+                block_rows: 16,
+            }),
+    );
+    assert_eq!(be.parallel().threads, 2, "service must apply ParallelConfig");
+    let n = 6u64;
+    for i in 0..n {
+        service
+            .submit(SolveRequest {
+                id: i,
+                config: cfg(&be, 10, 100 + i),
+            })
+            .unwrap();
+    }
+    // receive two live, leave the rest to the ordered shutdown drain
+    let mut results = vec![service.recv().unwrap(), service.recv().unwrap()];
+    results.extend(service.shutdown());
+    assert_eq!(results.len() as u64, n, "every queued job must complete");
+    let mut ids: Vec<u64> = results.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    assert_eq!(ids, (0..n).collect::<Vec<u64>>());
+    let mut per_worker = std::collections::HashMap::new();
+    for r in &results {
+        assert!(r.final_val.as_ref().unwrap().is_finite());
+        assert!(r.queue_seconds >= 0.0 && r.solve_seconds >= 0.0);
+        *per_worker.entry(r.worker).or_insert(0u64) += 1;
+    }
+    assert_eq!(per_worker.values().sum::<u64>(), n);
+    assert!(per_worker.keys().all(|w| *w < 2), "worker ids out of range");
+}

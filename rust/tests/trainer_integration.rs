@@ -10,7 +10,7 @@ use std::sync::Arc;
 
 use photon_pinn::coordinator::offchip::{OffChipConfig, OffChipTrainer};
 use photon_pinn::coordinator::trainer::{LossKind, OnChipTrainer, TrainConfig, UpdateRule};
-use photon_pinn::coordinator::{SolveRequest, SolverService};
+use photon_pinn::coordinator::{ServiceConfig, SolveRequest, SolverService};
 use photon_pinn::photonics::noise::NoiseConfig;
 use photon_pinn::runtime::{Backend, Entry, NativeBackend};
 
@@ -120,7 +120,7 @@ fn solver_service_end_to_end() {
     let base = quick_cfg(&be, "tonn_micro", 30);
     drop(be);
     let dir = std::env::temp_dir().join(format!("pp_no_artifacts_{}", std::process::id()));
-    let service = SolverService::start(dir, 2, 4, Some("tonn_micro".into()));
+    let service = SolverService::start(dir, ServiceConfig::new(2, 4).with_warmup("tonn_micro"));
     for i in 0..3 {
         let mut cfg = base.clone();
         cfg.seed = i;
@@ -144,8 +144,10 @@ fn solver_service_shares_one_backend() {
     // run against ONE backend instance (no per-worker runtime loads)
     let be: Arc<NativeBackend> = Arc::new(NativeBackend::builtin());
     let base = quick_cfg(&be, "tonn_micro", 20);
-    let service =
-        SolverService::start_shared(be.clone(), 3, 8, Some("tonn_micro".into()));
+    let service = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(3, 8).with_warmup("tonn_micro"),
+    );
     for i in 0..6 {
         let mut cfg = base.clone();
         cfg.seed = 100 + i;
