@@ -14,6 +14,7 @@
 
 use anyhow::Result;
 use photon_pinn::coordinator::{OnChipTrainer, TrainConfig};
+use photon_pinn::pde::Problem;
 use photon_pinn::photonics::perf::{Design, NetworkDims, PerfModel, TrainingEfficiency};
 use photon_pinn::runtime::Backend;
 use photon_pinn::util::cli::Args;

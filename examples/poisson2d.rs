@@ -10,7 +10,7 @@
 
 use anyhow::Result;
 use photon_pinn::coordinator::{OnChipTrainer, TrainConfig};
-use photon_pinn::pde::Pde;
+use photon_pinn::pde::Problem;
 use photon_pinn::runtime::{Backend, Entry};
 
 fn main() -> Result<()> {
@@ -37,10 +37,13 @@ fn main() -> Result<()> {
     let mut eff = Vec::new();
     trainer.chip().program(&result.phi, &mut eff);
     let u = forward.run1(&[&eff, &pts])?;
+    // the exact solution comes from the problem registry — the same
+    // lookup the manifest resolves preset PDE names against
+    let problem = photon_pinn::pde::lookup("poisson2")?;
     println!("\n  x      u(x, 0.5)   exact      |err|");
     for i in (0..b).step_by(b / 8) {
         let x = pts[2 * i];
-        let exact = Pde::Poisson2.exact(&[x, 0.5]);
+        let exact = problem.exact(&[x, 0.5]);
         println!(
             "  {:.3}  {:+.4}     {:+.4}    {:.2e}",
             x,

@@ -12,6 +12,7 @@
 
 use anyhow::Result;
 use photon_pinn::coordinator::{OnChipTrainer, TrainConfig};
+use photon_pinn::pde::Problem;
 use photon_pinn::runtime::Backend;
 
 fn main() -> Result<()> {

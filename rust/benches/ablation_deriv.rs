@@ -6,6 +6,7 @@
 mod common;
 
 use photon_pinn::coordinator::trainer::{LossKind, OnChipTrainer, TrainConfig};
+use photon_pinn::pde::Problem;
 use photon_pinn::runtime::Backend;
 use photon_pinn::util::bench::Table;
 use photon_pinn::util::stats::sci;

@@ -64,7 +64,7 @@ fn main() {
         };
         let mut rng = Rng::new(0);
         let phi = pm.layout.init_vector(&mut rng);
-        let mut sampler = Sampler::new(pm.pde, 1);
+        let mut sampler = Sampler::new(pm.pde.clone(), 1);
         let mut xr = Vec::new();
         sampler.batch(rt.manifest().b_residual, &mut xr);
         let mut xf = Vec::new();
@@ -195,7 +195,7 @@ fn main() {
             spsa.estimate(&losses, &xi2, &mut grad);
             std::hint::black_box(&grad);
         }));
-        let mut sampler = Sampler::new(pm.pde, 9);
+        let mut sampler = Sampler::new(pm.pde.clone(), 9);
         let mut xr = Vec::new();
         results.push(bench("L3/sample collocation batch (100x21)", 10, 500, || {
             sampler.batch(100, &mut xr);

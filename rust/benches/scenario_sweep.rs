@@ -1,0 +1,161 @@
+//! Bench: scenario sweep — train EVERY problem registered in the `pde`
+//! registry for a fixed fast budget, through the shared-backend solver
+//! service, and merge per-problem loss/latency rows into
+//! `BENCH_native.json` (report section `scenario_sweep`). This is the
+//! cross-PR record of how the whole scenario suite behaves as the
+//! registry grows.
+//!
+//!     cargo bench --bench scenario_sweep
+//!
+//! Environment knobs:
+//! * `PHOTON_BENCH_FAST=1` — smoke budget (CI's scenario-suite step)
+//! * `PHOTON_THREADS=N`    — evaluation-engine threads
+//! * `PHOTON_BENCH_OUT`    — report location (default: repo root)
+//!
+//! The bench exits non-zero when a registered problem has no trainable
+//! preset or a solve fails — the registry and the preset table may not
+//! drift apart silently.
+
+mod common;
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use photon_pinn::coordinator::{ServiceConfig, SolveRequest, SolverService, TrainConfig};
+use photon_pinn::pde::Problem;
+use photon_pinn::photonics::noise::NoiseConfig;
+use photon_pinn::runtime::{Backend, NativeBackend, ParallelConfig};
+use photon_pinn::util::bench::{bench_report_path, BenchReport, Table};
+
+fn main() {
+    let fast = common::fast();
+    let epochs = if fast { 15 } else { 200 };
+    let be: Arc<NativeBackend> = Arc::new(NativeBackend::builtin());
+
+    // smallest trainable preset per registered problem (deterministic:
+    // presets scanned in sorted-name order, strict param_dim improvement)
+    let mut preset_names: Vec<&String> = be.manifest().presets.keys().collect();
+    preset_names.sort();
+    let mut pick: HashMap<String, String> = HashMap::new();
+    for pname in preset_names {
+        let pm = &be.manifest().presets[pname];
+        if !pm.entries.contains_key("loss_multi") || !pm.entries.contains_key("validate") {
+            continue;
+        }
+        let prob = pm.pde.name().to_string();
+        let better = match pick.get(&prob) {
+            Some(cur) => pm.layout.param_dim < be.manifest().presets[cur].layout.param_dim,
+            None => true,
+        };
+        if better {
+            pick.insert(prob, pname.clone());
+        }
+    }
+    let uncovered: Vec<String> = photon_pinn::pde::registry()
+        .problems()
+        .filter(|p| !pick.contains_key(p.name()))
+        .map(|p| p.name().to_string())
+        .collect();
+    if !uncovered.is_empty() {
+        eprintln!(
+            "scenario sweep FAILED: registered problems with no trainable preset: {}",
+            uncovered.join(", ")
+        );
+        std::process::exit(1);
+    }
+
+    let par = ParallelConfig::auto();
+    let workers = if fast { 2 } else { 4 };
+    let service = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(workers, 2 * pick.len()).with_parallel(par),
+    );
+
+    let mut jobs: Vec<(u64, String, String)> = Vec::new();
+    let mut sorted: Vec<(String, String)> = pick.into_iter().collect();
+    sorted.sort();
+    for (id, (prob, preset)) in sorted.into_iter().enumerate() {
+        let mut cfg = TrainConfig::from_manifest(be.as_ref(), &preset)
+            .expect("preset has tuned hyperparameters");
+        cfg.epochs = epochs;
+        cfg.seed = 0;
+        cfg.noise = NoiseConfig::default_chip();
+        cfg.validate_every = 0;
+        cfg.verbose = false;
+        service
+            .submit(SolveRequest {
+                id: id as u64,
+                config: cfg,
+            })
+            .expect("service accepts the sweep");
+        jobs.push((id as u64, prob, preset));
+    }
+    let mut results = HashMap::new();
+    for _ in 0..jobs.len() {
+        let r = service.recv().expect("service yields every solve");
+        results.insert(r.id, r);
+    }
+    service.shutdown();
+
+    let par = be.parallel();
+    let mut rep = BenchReport::new("scenario_sweep", "native-cpu", par.threads, par.block_rows);
+    let mut t = Table::new(
+        &format!("scenario sweep ({epochs} epochs, default chip noise, {workers} workers)"),
+        &[
+            "problem",
+            "preset",
+            "params",
+            "dim",
+            "stencil",
+            "final val MSE",
+            "solve (s)",
+            "epoch/s",
+        ],
+    );
+    let mut failures = 0usize;
+    for (id, prob, preset) in &jobs {
+        let r = &results[id];
+        let pm = be.manifest().preset(preset).unwrap();
+        match &r.final_val {
+            Ok(v) => {
+                rep.case_raw_with(
+                    &format!("{prob}/{preset} train({epochs}ep)"),
+                    r.solve_seconds,
+                    &[("final_val", *v as f64), ("epochs", epochs as f64)],
+                );
+                t.row(&[
+                    prob.clone(),
+                    preset.clone(),
+                    pm.layout.param_dim.to_string(),
+                    pm.pde.dim().to_string(),
+                    pm.pde.n_stencil().to_string(),
+                    format!("{v:.3e}"),
+                    format!("{:.2}", r.solve_seconds),
+                    format!("{:.1}", epochs as f64 / r.solve_seconds.max(1e-9)),
+                ]);
+            }
+            Err(e) => {
+                failures += 1;
+                eprintln!("{prob}/{preset}: solve FAILED: {e:#}");
+            }
+        }
+    }
+    t.print();
+
+    let path = bench_report_path();
+    if let Err(e) = rep.write_merged(&path) {
+        eprintln!("cannot write {}: {e:#}", path.display());
+        std::process::exit(2);
+    }
+    println!(
+        "\nscenario_sweep report merged into {} ({} problems, engine {}Tx{} rows/block)",
+        path.display(),
+        rep.cases.len(),
+        rep.threads,
+        rep.block_rows
+    );
+    if failures > 0 {
+        eprintln!("scenario sweep FAILED: {failures} problem(s) did not solve");
+        std::process::exit(1);
+    }
+}

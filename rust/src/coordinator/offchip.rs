@@ -76,7 +76,7 @@ impl<'rt> OffChipTrainer<'rt> {
         let pm = rt.manifest().preset(&cfg.preset)?;
         let grad = rt.entry(&cfg.preset, "grad")?;
         let validator = Validator::new(rt, &cfg.preset, cfg.seed)?;
-        let sampler = Sampler::new(pm.pde, cfg.seed ^ 0x0FF_C41);
+        let sampler = Sampler::new(pm.pde.clone(), cfg.seed ^ 0x0FF_C41);
         let train_chip = cfg
             .aware
             .as_ref()

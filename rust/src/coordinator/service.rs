@@ -14,6 +14,16 @@
 //! native backend, total CPU pressure is roughly `workers x threads` —
 //! size the two together).
 //!
+//! Jobs are problem-agnostic: each [`SolveRequest`] carries a full
+//! `TrainConfig`, so one service instance drains a mixed stream of
+//! scenarios (every problem in the `pde` registry — see
+//! `benches/scenario_sweep.rs`, which sweeps the whole registry through
+//! this service). Note `TrainConfig.bc_weight`, like
+//! `TrainConfig.parallel`, mutates *shared backend* state at trainer
+//! construction: on a shared-backend service it reconfigures that
+//! preset for every worker — set soft-constraint weights once, not
+//! per job.
+//!
 //! Two backend topologies:
 //!
 //! * **Shared** ([`SolverService::start_shared`]): the native backend is

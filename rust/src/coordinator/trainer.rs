@@ -25,7 +25,7 @@ use super::metrics::{EpochRecord, RunMetrics};
 use super::validator::Validator;
 use crate::optim::{LrSchedule, Spsa, ZoSgd, ZoSignSgd};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
-use crate::pde::Sampler;
+use crate::pde::{Problem, Sampler};
 use crate::runtime::{Backend, Entry, ParallelConfig};
 
 /// Update rule variant (ablation A1: sign de-noising on/off).
@@ -69,6 +69,12 @@ pub struct TrainConfig {
     /// reconfigures every worker — leave it `None` for service jobs and
     /// size the engine once via `ServiceConfig.parallel` instead.
     pub parallel: Option<ParallelConfig>,
+    /// soft-constraint boundary-loss weight override applied to the
+    /// backend at trainer construction; `None` keeps the preset's
+    /// manifest / problem default. Only meaningful for problems with
+    /// soft constraints (`Problem::boundary()`); same shared-backend
+    /// caveat as `parallel`.
+    pub bc_weight: Option<f64>,
     /// print progress lines
     pub verbose: bool,
 }
@@ -92,6 +98,7 @@ impl TrainConfig {
             update_rule: UpdateRule::SignSgd,
             loss_kind: LossKind::Fd,
             parallel: None,
+            bc_weight: None,
             verbose: false,
         })
     }
@@ -132,6 +139,14 @@ impl<'rt> OnChipTrainer<'rt> {
             rt.set_parallel(par);
         }
         let pm = rt.manifest().preset(&cfg.preset)?;
+        if let Some(w) = cfg.bc_weight {
+            anyhow::ensure!(
+                rt.set_bc_weight(&cfg.preset, w as f32),
+                "preset '{}' does not take a boundary-loss weight \
+                 (its problem has no soft constraints)",
+                cfg.preset
+            );
+        }
         anyhow::ensure!(
             cfg.spsa_n + 1 == rt.manifest().k_multi,
             "spsa_n {} must equal k_multi-1 = {} (static artifact shape)",
@@ -151,7 +166,7 @@ impl<'rt> OnChipTrainer<'rt> {
             LossKind::Fd => (None, Vec::new()),
         };
         let validator = Validator::new(rt, &cfg.preset, cfg.seed)?;
-        let sampler = Sampler::new(pm.pde, cfg.seed ^ 0xBA7C4);
+        let sampler = Sampler::new(pm.pde.clone(), cfg.seed ^ 0xBA7C4);
         let n_stencil = pm.pde.n_stencil();
         let batch = rt.manifest().b_residual;
         let k_multi = rt.manifest().k_multi;

@@ -22,7 +22,7 @@ impl Validator {
     pub fn new(rt: &dyn Backend, preset: &str, seed: u64) -> Result<Validator> {
         let pm = rt.manifest().preset(preset)?;
         let exec = rt.entry(preset, "validate")?;
-        let mut sampler = Sampler::new(pm.pde, seed ^ 0x7A11_DA7E);
+        let mut sampler = Sampler::new(pm.pde.clone(), seed ^ 0x7A11_DA7E);
         let (xv, uv) = sampler.validation(rt.manifest().b_validate);
         Ok(Validator {
             exec,

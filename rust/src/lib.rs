@@ -33,10 +33,40 @@
 //!   bindings. The `grad` entry (exact autodiff for the off-chip BP
 //!   baseline) exists only here.
 //!
+//! ## PDE scenarios (the `pde::problem` subsystem)
+//!
+//! PDEs are **data, not code paths**: every scenario implements the
+//! [`pde::Problem`] trait (geometry, FD stencil layout, hard-constraint
+//! transform, residual assembly, exact solution, optional
+//! [`pde::SoftBoundary`] spec) and registers into the
+//! [`pde::ProblemRegistry`]; manifests, presets, the trainer, the
+//! validator and the benches resolve problems by name through
+//! [`pde::lookup`]. Registering a new PDE is:
+//!
+//! 1. `impl Problem for MyPde` in [`pde::scenarios`] (or your own
+//!    module) — most geometry methods have defaults;
+//! 2. one `reg.register(Arc::new(MyPde))` line in
+//!    `scenarios::register_builtins`;
+//! 3. a preset entry in `runtime::native::BUILTIN_PRESETS` naming the
+//!    problem, so it is trainable end-to-end and the scenario-sweep
+//!    bench covers it (the registry-wide property tests in
+//!    `rust/tests/problem_properties.rs` pick the problem up from
+//!    step 2 alone).
+//!
+//! The built-in suite spans a dimension-parameterized HJB family
+//! (`hjb5`/`hjb10`/`hjb20`/`hjb50`), 2-D Poisson and heat, a
+//! Black–Scholes basket option (anisotropic diffusion via per-dim
+//! second derivatives), and a soft-constrained Allen–Cahn
+//! reaction–diffusion whose boundary/initial conditions are enforced
+//! through a weighted boundary loss (`--bc-weight`,
+//! [`runtime::Backend::set_bc_weight`]). `photon-pinn pdes` (or
+//! `--list-pdes`) prints the registry.
+//!
 //! Cross-backend equivalence is pinned by golden tests
 //! (`rust/tests/artifact_numerics.rs`): jax-computed fixtures are
 //! checked into `rust/tests/fixtures/` and the native evaluator must
-//! reproduce them to 1e-4/1e-3.
+//! reproduce them to 1e-4/1e-3; the three ported problems reproduce
+//! their enum-era fixtures bit-for-bit.
 //!
 //! Entry points: [`runtime::load_backend`] (or `NativeBackend::builtin`)
 //! loads a backend; [`coordinator`] drives training; `examples/` are

@@ -6,17 +6,23 @@
 //!   table1    the full Table-1 experiment matrix
 //!   hardware  Table-2 hardware report
 //!   presets   list available presets from the manifest
+//!   pdes      list every registered PDE problem (the pde registry)
+//!
+//! `--list-presets` / `--list-pdes` are accepted as top-level aliases.
 //!
 //! Examples:
 //!   photon-pinn train --preset tonn_small --epochs 1500
+//!   photon-pinn train --preset tonn_micro_ac --bc-weight 4.0
 //!   photon-pinn table1 --zo-epochs 800 --bp-epochs 300
 //!   photon-pinn hardware
+//!   photon-pinn pdes
 
 
 use anyhow::Result;
 use photon_pinn::coordinator::{OffChipConfig, OffChipTrainer, OnChipTrainer, TrainConfig};
 use photon_pinn::coordinator::checkpoint::Checkpoint;
 use photon_pinn::coordinator::experiment::{Table1Config, Table1Runner};
+use photon_pinn::pde::Problem;
 use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
 use photon_pinn::photonics::perf::{Design, NetworkDims, PerfModel, TrainingEfficiency};
 use photon_pinn::runtime::Backend;
@@ -46,6 +52,7 @@ fn args_for(cmd: &str) -> Args {
         .flag("checkpoint", None, "write final parameters to this path")
         .flag("threads", None, "evaluation-engine worker threads (default: auto / PHOTON_THREADS)")
         .flag("block-rows", None, "rows per engine work block (default: 32 / PHOTON_BLOCK_ROWS)")
+        .flag("bc-weight", None, "boundary-loss weight override (soft-constraint problems only)")
         .switch("stein", "use the Stein derivative estimator instead of FD")
         .switch("raw-sgd", "disable the signSGD de-noising (ablation)")
         .switch("quiet", "suppress progress lines")
@@ -93,15 +100,42 @@ fn run() -> Result<()> {
         "offchip" => cmd_offchip(argv),
         "table1" => cmd_table1(argv),
         "hardware" => cmd_hardware(argv),
-        "presets" => cmd_presets(argv),
+        "presets" | "--list-presets" => cmd_presets(argv),
+        "pdes" | "--list-pdes" => cmd_pdes(argv),
         _ => {
             eprintln!(
-                "usage: photon-pinn <train|offchip|table1|hardware|presets> [flags]\n\
+                "usage: photon-pinn <train|offchip|table1|hardware|presets|pdes> [flags]\n\
                  run a subcommand with --help for its flags"
             );
             Ok(())
         }
     }
+}
+
+/// List every registered PDE problem (no backend needed: this is the
+/// in-repo `pde` registry that manifests and presets resolve against).
+fn cmd_pdes(argv: Vec<String>) -> Result<()> {
+    let _a = Args::new("photon-pinn pdes", "list registered PDE problems").parse(argv)?;
+    let mut t = Table::new(
+        "registered PDE problems",
+        &["problem", "dim", "in_dim", "stencil", "time", "constraints"],
+    );
+    for p in photon_pinn::pde::registry().problems() {
+        let constraints = match p.boundary() {
+            Some(sb) => format!("soft (default weight {})", sb.default_weight),
+            None => "hard".to_string(),
+        };
+        t.row(&[
+            p.name().to_string(),
+            p.dim().to_string(),
+            p.in_dim().to_string(),
+            p.n_stencil().to_string(),
+            if p.has_time() { "yes" } else { "no" }.to_string(),
+            constraints,
+        ]);
+    }
+    t.print();
+    Ok(())
 }
 
 fn cmd_presets(argv: Vec<String>) -> Result<()> {
@@ -145,6 +179,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     }
     if a.get_bool("raw-sgd") {
         cfg.update_rule = photon_pinn::coordinator::trainer::UpdateRule::RawSgd;
+    }
+    if let Some(w) = a.get_f64("bc-weight")? {
+        cfg.bc_weight = Some(w);
     }
     let epochs = cfg.epochs;
     let seed = cfg.seed;

@@ -206,6 +206,10 @@ pub struct Hyper {
     pub stein_sigma: f64,
     /// Stein estimator sample count (the `z` input is (stein_q, in_dim))
     pub stein_q: usize,
+    /// Soft-constraint boundary-loss weight override; `None` keeps the
+    /// problem's own default (`Problem::boundary().default_weight`).
+    /// Ignored for problems whose constraints are all hard.
+    pub bc_weight: Option<f64>,
 }
 
 impl Hyper {
@@ -229,6 +233,7 @@ impl Hyper {
             k_multi: f("k_multi")? as usize,
             stein_sigma: opt("stein_sigma", 0.05),
             stein_q: opt("stein_q", 20.0) as usize,
+            bc_weight: v.get("bc_weight").and_then(|x| x.as_f64()),
         })
     }
 }
@@ -386,6 +391,19 @@ mod tests {
         assert!((h.lr - 0.02).abs() < 1e-12);
         assert_eq!(h.stein_q, 20);
         assert!((h.stein_sigma - 0.05).abs() < 1e-12);
+        assert_eq!(h.bc_weight, None);
+    }
+
+    #[test]
+    fn hyper_parse_bc_weight() {
+        let v = json::parse(
+            r#"{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":10,"lr":0.02,
+                "lr_decay":0.3,"lr_decay_every":600,"epochs":1500,
+                "batch":100,"k_multi":11,"bc_weight":2.5}"#,
+        )
+        .unwrap();
+        let h = Hyper::parse(&v).unwrap();
+        assert_eq!(h.bc_weight, Some(2.5));
     }
 
     #[test]

@@ -1,220 +1,46 @@
-//! PDE descriptors on the rust side: domains, exact solutions, and
-//! collocation/validation samplers.
+//! PDE problems on the rust side: domains, constraints, residual
+//! assembly, exact solutions, and collocation/validation samplers.
 //!
-//! Mirrors `python/compile/pdes.py` — the exact solutions are re-implemented
-//! here (not imported) so validation data generation is independent of the
-//! artifacts under test, and so the solver service can score solutions
-//! without python.
+//! The subsystem is **open**: every scenario implements the
+//! [`Problem`] trait ([`problem`]) and registers into a
+//! [`ProblemRegistry`] ([`scenarios::register_builtins`]); the runtime,
+//! trainer, validator and benches only ever see `Arc<dyn Problem>`.
+//! Adding a PDE is one `impl Problem` + one `register` call — no enum
+//! to extend, no match arms scattered across the codebase (the old
+//! closed `Pde` enum is gone).
+//!
+//! Exact solutions are implemented here (not imported from
+//! `python/compile/pdes.py`) so validation data generation is
+//! independent of the artifacts under test, and so the solver service
+//! can score solutions without python. The three original equations
+//! reproduce the python/jax golden fixtures bit-for-bit (see
+//! [`scenarios`]).
+
+use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
-/// Which PDE a preset solves.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Pde {
-    /// 20-dim HJB (paper Eq. 7); input (x_1..x_20, t)
-    Hjb20,
-    /// 2-D Poisson, zero Dirichlet; input (x, y)
-    Poisson2,
-    /// 2-D heat; input (x, y, t)
-    Heat2,
-}
+pub mod problem;
+pub mod scenarios;
 
-impl Pde {
-    pub fn parse(name: &str) -> anyhow::Result<Self> {
-        match name {
-            "hjb20" => Ok(Pde::Hjb20),
-            "poisson2" => Ok(Pde::Poisson2),
-            "heat2" => Ok(Pde::Heat2),
-            other => anyhow::bail!("unknown pde '{other}'"),
-        }
-    }
+pub use problem::{global as registry, Problem, ProblemRegistry, SoftBoundary};
 
-    pub fn name(&self) -> &'static str {
-        match self {
-            Pde::Hjb20 => "hjb20",
-            Pde::Poisson2 => "poisson2",
-            Pde::Heat2 => "heat2",
-        }
-    }
-
-    /// Network input dimension (spatial dims + time if present).
-    pub fn in_dim(&self) -> usize {
-        match self {
-            Pde::Hjb20 => 21,
-            Pde::Poisson2 => 2,
-            Pde::Heat2 => 3,
-        }
-    }
-
-    /// Spatial dimension.
-    pub fn dim(&self) -> usize {
-        match self {
-            Pde::Hjb20 => 20,
-            Pde::Poisson2 | Pde::Heat2 => 2,
-        }
-    }
-
-    /// FD stencil size = inferences per collocation point (42 for HJB —
-    /// the paper's §4.2 census).
-    pub fn n_stencil(&self) -> usize {
-        match self {
-            Pde::Hjb20 => 42,
-            Pde::Poisson2 => 5,
-            Pde::Heat2 => 6,
-        }
-    }
-
-    /// Whether the input carries a trailing time coordinate.
-    pub fn has_time(&self) -> bool {
-        match self {
-            Pde::Hjb20 | Pde::Heat2 => true,
-            Pde::Poisson2 => false,
-        }
-    }
-
-    /// Hard-constraint transform `u = T(f, x)` (python `pde.transform`):
-    /// the network output f is digital-post-processed so the terminal /
-    /// boundary condition holds exactly.
-    pub fn transform(&self, f: f32, x: &[f32]) -> f32 {
-        match self {
-            Pde::Hjb20 => {
-                let t = x[20];
-                let l1: f32 = x[..20].iter().map(|v| v.abs()).sum();
-                (1.0 - t) * f + l1
-            }
-            Pde::Poisson2 => poisson_g(x) * f,
-            Pde::Heat2 => {
-                let g = x[0] * (1.0 - x[0]) * x[1] * (1.0 - x[1]);
-                x[2] * g * f + heat_ic(x)
-            }
-        }
-    }
-
-    /// Append the FD stencil rows for one collocation point: base, ±h per
-    /// spatial dim, then +h in time when present (python `pde.stencil`).
-    pub fn stencil_rows(&self, x: &[f32], h: f32, out: &mut Vec<f32>) {
-        let d = self.dim();
-        debug_assert_eq!(x.len(), self.in_dim());
-        out.extend_from_slice(x); // base
-        for i in 0..d {
-            out.extend_from_slice(x);
-            let n = out.len();
-            out[n - x.len() + i] += h;
-            out.extend_from_slice(x);
-            let n = out.len();
-            out[n - x.len() + i] -= h;
-        }
-        if self.has_time() {
-            out.extend_from_slice(x);
-            let n = out.len();
-            let ti = self.in_dim() - 1;
-            out[n - x.len() + ti] += h;
-        }
-    }
-
-    /// PDE residual from derivative *estimates of f* plus the transform's
-    /// analytic derivatives (python `pde.assemble_derivs`, per sample).
-    ///
-    /// `df` has `in_dim` entries: spatial first derivatives, then (when
-    /// the PDE has time) the time derivative at index `dim`.
-    pub fn residual(&self, f0: f32, df: &[f32], lap_f: f32, x: &[f32]) -> f32 {
-        match self {
-            Pde::Hjb20 => {
-                let t = x[20];
-                let omt = 1.0 - t;
-                let u_t = -f0 + omt * df[20];
-                let mut gsq = 0.0f32;
-                for i in 0..20 {
-                    let gx = omt * df[i] + sign0(x[i]);
-                    gsq += gx * gx;
-                }
-                let lap_u = omt * lap_f;
-                u_t + lap_u - 0.05 * gsq + 2.0
-            }
-            Pde::Poisson2 => {
-                let (x0, y0) = (x[0], x[1]);
-                let gx_ = x0 * (1.0 - x0);
-                let gy_ = y0 * (1.0 - y0);
-                let g = gx_ * gy_;
-                let dg0 = (1.0 - 2.0 * x0) * gy_;
-                let dg1 = gx_ * (1.0 - 2.0 * y0);
-                let lap_g = -2.0 * gy_ - 2.0 * gx_;
-                let lap_u = lap_g * f0 + 2.0 * (dg0 * df[0] + dg1 * df[1]) + g * lap_f;
-                let pi = std::f32::consts::PI;
-                let rhs = 2.0 * pi * pi * (pi * x0).sin() * (pi * y0).sin();
-                lap_u + rhs
-            }
-            Pde::Heat2 => {
-                let alpha = 0.1f32;
-                let (x0, y0, t) = (x[0], x[1], x[2]);
-                let gx_ = x0 * (1.0 - x0);
-                let gy_ = y0 * (1.0 - y0);
-                let g = gx_ * gy_;
-                let dg0 = (1.0 - 2.0 * x0) * gy_;
-                let dg1 = gx_ * (1.0 - 2.0 * y0);
-                let lap_g = -2.0 * gy_ - 2.0 * gx_;
-                let pi = std::f32::consts::PI;
-                let ic = heat_ic(x);
-                let u_t = g * f0 + t * g * df[2];
-                let lap_u = t * (lap_g * f0 + 2.0 * (dg0 * df[0] + dg1 * df[1]) + g * lap_f)
-                    - 2.0 * pi * pi * ic;
-                u_t - alpha * lap_u
-            }
-        }
-    }
-
-    /// Exact solution at one input point (for validation data).
-    pub fn exact(&self, x: &[f32]) -> f32 {
-        match self {
-            Pde::Hjb20 => {
-                let l1: f32 = x[..20].iter().map(|v| v.abs()).sum();
-                l1 + 1.0 - x[20]
-            }
-            Pde::Poisson2 => {
-                (std::f32::consts::PI * x[0]).sin() * (std::f32::consts::PI * x[1]).sin()
-            }
-            Pde::Heat2 => {
-                let alpha = 0.1f32;
-                let pi = std::f32::consts::PI;
-                (-2.0 * pi * pi * alpha * x[2]).exp() * (pi * x[0]).sin() * (pi * x[1]).sin()
-            }
-        }
-    }
-}
-
-/// `sign` with `sign(0) = 0` (jnp.sign semantics; `f32::signum(0.) = 1.`).
-#[inline]
-fn sign0(x: f32) -> f32 {
-    if x > 0.0 {
-        1.0
-    } else if x < 0.0 {
-        -1.0
-    } else {
-        0.0
-    }
-}
-
-#[inline]
-fn poisson_g(x: &[f32]) -> f32 {
-    x[0] * (1.0 - x[0]) * x[1] * (1.0 - x[1])
-}
-
-#[inline]
-fn heat_ic(x: &[f32]) -> f32 {
-    let pi = std::f32::consts::PI;
-    (pi * x[0]).sin() * (pi * x[1]).sin()
+/// Resolve a problem name against the global registry (the successor of
+/// the old `Pde::parse`); the error lists every registered name.
+pub fn lookup(name: &str) -> anyhow::Result<Arc<dyn Problem>> {
+    registry().get(name)
 }
 
 /// Uniform collocation sampler over [0,1]^in_dim, batched row-major.
 pub struct Sampler {
-    pub pde: Pde,
+    pub problem: Arc<dyn Problem>,
     rng: Rng,
 }
 
 impl Sampler {
-    pub fn new(pde: Pde, seed: u64) -> Self {
+    pub fn new(problem: Arc<dyn Problem>, seed: u64) -> Self {
         Sampler {
-            pde,
+            problem,
             rng: Rng::new(seed ^ 0x5A3C_71B2),
         }
     }
@@ -222,8 +48,8 @@ impl Sampler {
     /// Sample `n` collocation points into a flat (n, in_dim) buffer.
     pub fn batch(&mut self, n: usize, out: &mut Vec<f32>) {
         out.clear();
-        out.reserve(n * self.pde.in_dim());
-        for _ in 0..n * self.pde.in_dim() {
+        out.reserve(n * self.problem.in_dim());
+        for _ in 0..n * self.problem.in_dim() {
             out.push(self.rng.f32());
         }
     }
@@ -232,8 +58,10 @@ impl Sampler {
     pub fn validation(&mut self, n: usize) -> (Vec<f32>, Vec<f32>) {
         let mut pts = Vec::new();
         self.batch(n, &mut pts);
-        let d = self.pde.in_dim();
-        let vals = (0..n).map(|i| self.pde.exact(&pts[i * d..(i + 1) * d])).collect();
+        let d = self.problem.in_dim();
+        let vals = (0..n)
+            .map(|i| self.problem.exact(&pts[i * d..(i + 1) * d]))
+            .collect();
         (pts, vals)
     }
 }
@@ -243,45 +71,36 @@ mod tests {
     use super::*;
 
     #[test]
-    fn parse_roundtrip() {
-        for p in [Pde::Hjb20, Pde::Poisson2, Pde::Heat2] {
-            assert_eq!(Pde::parse(p.name()).unwrap(), p);
+    fn lookup_roundtrip() {
+        for name in [
+            "hjb5",
+            "hjb10",
+            "hjb20",
+            "hjb50",
+            "poisson2",
+            "heat2",
+            "bs_basket5",
+            "allen_cahn2",
+        ] {
+            assert_eq!(lookup(name).unwrap().name(), name);
         }
-        assert!(Pde::parse("nope").is_err());
+        assert!(registry().len() >= 6);
     }
 
     #[test]
-    fn hjb_exact_values() {
-        let mut x = vec![0.5f32; 21];
-        x[20] = 0.25; // t
-        // ||x||_1 = 10, u = 10 + 1 - 0.25
-        assert!((Pde::Hjb20.exact(&x) - 10.75).abs() < 1e-5);
-    }
-
-    #[test]
-    fn poisson_exact_peak_and_boundary() {
-        assert!((Pde::Poisson2.exact(&[0.5, 0.5]) - 1.0).abs() < 1e-6);
-        assert!(Pde::Poisson2.exact(&[0.0, 0.7]).abs() < 1e-6);
-    }
-
-    #[test]
-    fn heat_exact_decays() {
-        let u0 = Pde::Heat2.exact(&[0.5, 0.5, 0.0]);
-        let u1 = Pde::Heat2.exact(&[0.5, 0.5, 1.0]);
-        assert!(u0 > u1 && u1 > 0.0);
-        assert!((u0 - 1.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn stencil_census_matches_paper() {
-        assert_eq!(Pde::Hjb20.n_stencil(), 42); // "42 inferences" (§4.2)
-        assert_eq!(Pde::Hjb20.n_stencil(), 2 * Pde::Hjb20.dim() + 2);
+    fn lookup_error_lists_registered_names() {
+        let err = lookup("nope").unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+        for name in ["hjb20", "poisson2", "heat2", "allen_cahn2"] {
+            assert!(err.contains(name), "error must list '{name}': {err}");
+        }
     }
 
     #[test]
     fn sampler_bounds_shape_determinism() {
-        let mut s1 = Sampler::new(Pde::Hjb20, 7);
-        let mut s2 = Sampler::new(Pde::Hjb20, 7);
+        let hjb = lookup("hjb20").unwrap();
+        let mut s1 = Sampler::new(hjb.clone(), 7);
+        let mut s2 = Sampler::new(hjb, 7);
         let mut b1 = Vec::new();
         let mut b2 = Vec::new();
         s1.batch(50, &mut b1);
@@ -292,79 +111,12 @@ mod tests {
     }
 
     #[test]
-    fn transform_enforces_hard_constraints() {
-        // hjb: u(x, t=1) = ‖x‖₁ regardless of f
-        let mut x = vec![0.3f32; 21];
-        x[20] = 1.0;
-        assert!((Pde::Hjb20.transform(123.0, &x) - 6.0).abs() < 1e-5);
-        // poisson: u = 0 on the boundary regardless of f
-        assert_eq!(Pde::Poisson2.transform(9.0, &[0.0, 0.4]), 0.0);
-        assert_eq!(Pde::Poisson2.transform(9.0, &[0.7, 1.0]), 0.0);
-        // heat: u(x, t=0) = sin(πx)sin(πy) regardless of f
-        let u0 = Pde::Heat2.transform(55.0, &[0.5, 0.5, 0.0]);
-        assert!((u0 - 1.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn stencil_rows_layout() {
-        let x = [0.25f32, 0.5, 0.75];
-        let mut out = Vec::new();
-        Pde::Heat2.stencil_rows(&x, 0.1, &mut out);
-        assert_eq!(out.len(), Pde::Heat2.n_stencil() * 3);
-        // base row
-        assert_eq!(&out[..3], &x);
-        // +h then -h per spatial dim
-        assert!((out[3] - 0.35).abs() < 1e-6 && out[4] == 0.5);
-        assert!((out[6] - 0.15).abs() < 1e-6);
-        assert!((out[10] - 0.6).abs() < 1e-6);
-        assert!((out[13] - 0.4).abs() < 1e-6);
-        // forward time row last
-        let last = &out[15..18];
-        assert!((last[2] - 0.85).abs() < 1e-6 && last[0] == 0.25);
-    }
-
-    #[test]
-    fn hjb_residual_vanishes_on_exact_solution() {
-        // u* = ‖x‖₁ + 1 − t ⇒ f* ≡ 1 (since u = (1−t)f + ‖x‖₁), so the
-        // residual with f0 = 1, df = 0, lap = 0 must be 0 everywhere:
-        // −1 + 0 − 0.05·Σ sign(x_i)² + 2 = −1 − 1 + 2 = 0
-        let mut x = vec![0.42f32; 21];
-        x[20] = 0.3;
-        let df = vec![0.0f32; 21];
-        let r = Pde::Hjb20.residual(1.0, &df, 0.0, &x);
-        assert!(r.abs() < 1e-5, "residual {r}");
-    }
-
-    #[test]
-    fn poisson_residual_vanishes_on_exact_solution_fd() {
-        // FD-estimate f* = u*/g on the stencil and check the assembled
-        // residual ≈ 0 at an interior point (O(h²) truncation)
-        let h = 0.01f32;
-        let x = [0.4f32, 0.6];
-        let mut rows = Vec::new();
-        Pde::Poisson2.stencil_rows(&x, h, &mut rows);
-        let f: Vec<f32> = (0..5)
-            .map(|i| {
-                let p = &rows[i * 2..i * 2 + 2];
-                let g = p[0] * (1.0 - p[0]) * p[1] * (1.0 - p[1]);
-                Pde::Poisson2.exact(p) / g
-            })
-            .collect();
-        let df = [
-            (f[1] - f[2]) / (2.0 * h),
-            (f[3] - f[4]) / (2.0 * h),
-        ];
-        let lap = (f[1] - 2.0 * f[0] + f[2] + f[3] - 2.0 * f[0] + f[4]) / (h * h);
-        let r = Pde::Poisson2.residual(f[0], &df, lap, &x);
-        assert!(r.abs() < 0.05, "residual {r}");
-    }
-
-    #[test]
     fn validation_values_match_exact() {
-        let mut s = Sampler::new(Pde::Poisson2, 3);
+        let poisson = lookup("poisson2").unwrap();
+        let mut s = Sampler::new(poisson.clone(), 3);
         let (pts, vals) = s.validation(20);
         for i in 0..20 {
-            let expect = Pde::Poisson2.exact(&pts[i * 2..i * 2 + 2]);
+            let expect = poisson.exact(&pts[i * 2..i * 2 + 2]);
             assert_eq!(vals[i], expect);
         }
     }

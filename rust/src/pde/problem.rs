@@ -1,0 +1,290 @@
+//! The open PDE problem abstraction: a [`Problem`] trait every scenario
+//! implements, plus a [`ProblemRegistry`] for lookup by name.
+//!
+//! This replaces the old closed `Pde` enum: the native backend, trainer,
+//! validator, samplers and benches all talk to `Arc<dyn Problem>`, so a
+//! new scenario is one `impl Problem` + one `register` call (see
+//! [`crate::pde::scenarios`]) — no match arms to extend anywhere else.
+//!
+//! A problem describes:
+//!
+//! * geometry — spatial [`Problem::dim`], optional trailing time
+//!   coordinate, and the FD stencil layout ([`Problem::stencil_rows`],
+//!   base row then ±h per spatial dim then +h in time);
+//! * the hard-constraint transform `u = T(f, x)` digitally
+//!   post-processing the raw network output `f` so boundary/terminal
+//!   conditions hold exactly ([`Problem::transform`]);
+//! * residual assembly from derivative estimates of `f`
+//!   ([`Problem::residual`]) — estimates come from the FD stencil or the
+//!   Gaussian-Stein smoothing path in `runtime::native`;
+//! * the exact/reference solution for validation ([`Problem::exact`]);
+//! * optionally, a *soft* constraint spec ([`Problem::boundary`]) for
+//!   problems whose boundary/initial conditions cannot be folded into
+//!   `transform`: the native losses then add a weighted boundary MSE
+//!   over deterministic projections of the collocation batch
+//!   ([`Problem::boundary_project`]).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock};
+
+/// Soft-constraint spec for problems whose boundary/initial conditions
+/// cannot be hard-constrained through [`Problem::transform`].
+///
+/// When present, `NativeBackend`'s FD and Stein losses append one
+/// boundary projection per collocation point and add
+/// `weight · mean_i (u(b_i) − u*(b_i))²` to the residual loss. The
+/// effective weight defaults to `default_weight`, is overridable per
+/// preset via the manifest `hyper.bc_weight`, and at runtime via
+/// `Backend::set_bc_weight` (CLI: `--bc-weight`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SoftBoundary {
+    pub default_weight: f32,
+}
+
+/// One PDE scenario (geometry + constraints + residual + reference
+/// solution). Object-safe; implementations are registered in a
+/// [`ProblemRegistry`] and shared as `Arc<dyn Problem>`.
+pub trait Problem: Send + Sync + std::fmt::Debug {
+    /// Registry name (e.g. `hjb20`, `allen_cahn2`).
+    fn name(&self) -> &str;
+
+    /// Spatial dimension.
+    fn dim(&self) -> usize;
+
+    /// Whether the input carries a trailing time coordinate.
+    fn has_time(&self) -> bool;
+
+    /// Network input dimension (spatial dims + time if present).
+    fn in_dim(&self) -> usize {
+        self.dim() + usize::from(self.has_time())
+    }
+
+    /// FD stencil size = inferences per collocation point (42 for the
+    /// 20-dim HJB — the paper's §4.2 census).
+    fn n_stencil(&self) -> usize {
+        1 + 2 * self.dim() + usize::from(self.has_time())
+    }
+
+    /// Hard-constraint transform `u = T(f, x)`: the raw network output f
+    /// is digitally post-processed so the terminal / boundary condition
+    /// holds exactly. Must be affine in `f` (the losses and tests rely
+    /// on `T(f, x) = a(x)·f + b(x)`); the identity for soft-constraint
+    /// problems.
+    fn transform(&self, f: f32, x: &[f32]) -> f32;
+
+    /// Append the FD stencil rows for one collocation point: base, ±h
+    /// per spatial dim, then +h in time when present.
+    fn stencil_rows(&self, x: &[f32], h: f32, out: &mut Vec<f32>) {
+        let d = self.dim();
+        debug_assert_eq!(x.len(), self.in_dim());
+        out.extend_from_slice(x); // base
+        for i in 0..d {
+            out.extend_from_slice(x);
+            let n = out.len();
+            out[n - x.len() + i] += h;
+            out.extend_from_slice(x);
+            let n = out.len();
+            out[n - x.len() + i] -= h;
+        }
+        if self.has_time() {
+            out.extend_from_slice(x);
+            let n = out.len();
+            let ti = self.in_dim() - 1;
+            out[n - x.len() + ti] += h;
+        }
+    }
+
+    /// PDE residual from derivative *estimates of f* plus the
+    /// transform's analytic derivatives (per sample).
+    ///
+    /// * `df` has `in_dim` entries: spatial first derivatives, then
+    ///   (when the PDE has time) the time derivative at index `dim`;
+    /// * `lap_f` is the total spatial Laplacian estimate Σᵢ ∂²f/∂xᵢ²;
+    /// * `d2f` has `dim` entries of per-dimension second-derivative
+    ///   estimates ∂²f/∂xᵢ² — only problems with anisotropic diffusion
+    ///   (e.g. Black–Scholes, [`Problem::needs_d2`]) read it; isotropic
+    ///   problems use `lap_f`, whose summation order is preserved from
+    ///   the original enum for bit-exact golden reproduction.
+    fn residual(&self, f0: f32, df: &[f32], lap_f: f32, d2f: &[f32], x: &[f32]) -> f32;
+
+    /// Whether [`Problem::residual`] reads the per-dimension second
+    /// derivatives `d2f` (coordinate-weighted diffusion operators).
+    fn needs_d2(&self) -> bool {
+        false
+    }
+
+    /// Exact solution at one input point (for validation data).
+    fn exact(&self, x: &[f32]) -> f32;
+
+    /// Soft-constraint spec; `None` = every constraint is hard (handled
+    /// by [`Problem::transform`]).
+    fn boundary(&self) -> Option<SoftBoundary> {
+        None
+    }
+
+    /// Project collocation point `x` (row `i` of the batch) onto the
+    /// boundary / initial-condition set; writes the projected `in_dim`
+    /// coordinates into `out` and returns the target u value there.
+    ///
+    /// The default cycles deterministically through the `2·dim`
+    /// axis-aligned faces of [0,1]^dim plus (when the PDE has time) the
+    /// t = 0 initial slice, and targets the exact solution — exercising
+    /// every constraint surface uniformly across a batch.
+    fn boundary_project(&self, i: usize, x: &[f32], out: &mut [f32]) -> f32 {
+        debug_assert_eq!(out.len(), self.in_dim());
+        out.copy_from_slice(x);
+        let d = self.dim();
+        let faces = 2 * d + usize::from(self.has_time());
+        let j = i % faces;
+        if j < 2 * d {
+            out[j / 2] = (j % 2) as f32;
+        } else {
+            out[d] = 0.0; // initial-condition slice
+        }
+        self.exact(out)
+    }
+}
+
+/// Name → [`Problem`] lookup table. Insertion is explicit (no inventory
+/// magic); the process-wide table with every built-in scenario is
+/// [`global`].
+#[derive(Debug, Default)]
+pub struct ProblemRegistry {
+    map: BTreeMap<String, Arc<dyn Problem>>,
+}
+
+impl ProblemRegistry {
+    pub fn new() -> Self {
+        ProblemRegistry::default()
+    }
+
+    /// Register a problem under [`Problem::name`]. Panics on duplicate
+    /// names: two scenarios answering to one name is a programming
+    /// error, not a runtime condition.
+    pub fn register(&mut self, p: Arc<dyn Problem>) {
+        let name = p.name().to_string();
+        assert!(
+            self.map.insert(name.clone(), p).is_none(),
+            "duplicate problem registration '{name}'"
+        );
+    }
+
+    /// Look up by name; the error lists every valid name.
+    pub fn get(&self, name: &str) -> anyhow::Result<Arc<dyn Problem>> {
+        self.map.get(name).cloned().ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown pde '{name}' (registered: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    /// Sorted problem names.
+    pub fn names(&self) -> Vec<String> {
+        self.map.keys().cloned().collect()
+    }
+
+    /// Iterate problems in name order.
+    pub fn problems(&self) -> impl Iterator<Item = &Arc<dyn Problem>> {
+        self.map.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// A registry pre-populated with every built-in scenario
+    /// ([`crate::pde::scenarios::register_builtins`]).
+    pub fn builtin() -> Self {
+        let mut reg = ProblemRegistry::new();
+        crate::pde::scenarios::register_builtins(&mut reg);
+        reg
+    }
+}
+
+/// The process-wide registry of built-in problems (what manifests, the
+/// CLI and the benches resolve names against).
+pub fn global() -> &'static ProblemRegistry {
+    static REGISTRY: OnceLock<ProblemRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(ProblemRegistry::builtin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Debug)]
+    struct Toy;
+
+    impl Problem for Toy {
+        fn name(&self) -> &str {
+            "toy1"
+        }
+        fn dim(&self) -> usize {
+            1
+        }
+        fn has_time(&self) -> bool {
+            false
+        }
+        fn transform(&self, f: f32, _x: &[f32]) -> f32 {
+            f
+        }
+        fn residual(&self, f0: f32, _df: &[f32], _lap: f32, _d2: &[f32], _x: &[f32]) -> f32 {
+            f0
+        }
+        fn exact(&self, x: &[f32]) -> f32 {
+            x[0]
+        }
+    }
+
+    #[test]
+    fn default_geometry_derivations() {
+        let t = Toy;
+        assert_eq!(t.in_dim(), 1);
+        assert_eq!(t.n_stencil(), 3); // base + ±h
+        let mut out = Vec::new();
+        t.stencil_rows(&[0.5], 0.1, &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0], 0.5);
+        assert!((out[1] - 0.6).abs() < 1e-6 && (out[2] - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_lookup_and_error_lists_names() {
+        let mut reg = ProblemRegistry::new();
+        reg.register(Arc::new(Toy));
+        assert_eq!(reg.get("toy1").unwrap().name(), "toy1");
+        assert_eq!(reg.names(), vec!["toy1".to_string()]);
+        let err = reg.get("nope").unwrap_err().to_string();
+        assert!(err.contains("toy1"), "{err}");
+        assert!(err.contains("nope"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate problem registration")]
+    fn duplicate_registration_panics() {
+        let mut reg = ProblemRegistry::new();
+        reg.register(Arc::new(Toy));
+        reg.register(Arc::new(Toy));
+    }
+
+    #[test]
+    fn default_boundary_projection_cycles_faces() {
+        let t = Toy;
+        let mut out = [0.0f32; 1];
+        // faces: x0 = 0, x0 = 1 (no time)
+        let g0 = t.boundary_project(0, &[0.5], &mut out);
+        assert_eq!(out[0], 0.0);
+        assert_eq!(g0, t.exact(&[0.0]));
+        let g1 = t.boundary_project(1, &[0.5], &mut out);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(g1, t.exact(&[1.0]));
+        // wraps around
+        t.boundary_project(2, &[0.5], &mut out);
+        assert_eq!(out[0], 0.0);
+    }
+}

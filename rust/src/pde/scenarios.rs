@@ -1,0 +1,618 @@
+//! Built-in PDE scenarios, registered into the [`ProblemRegistry`].
+//!
+//! The three original equations (`hjb20`, `poisson2`, `heat2`) are
+//! ported from the old closed `Pde` enum with float arithmetic kept
+//! operation-for-operation identical — the jax golden fixtures
+//! (`rust/tests/fixtures/golden_native.json`) pin them bit-for-bit.
+//! `hjb20` is served by the dimension-parameterized [`HjbNd`] family
+//! (one impl, many registered instances: d ∈ {5, 10, 20, 50}).
+//!
+//! New scenarios stress different axes of the solver:
+//!
+//! * [`HjbNd`] — the paper's HJB equation at arbitrary spatial
+//!   dimension (hard terminal condition, isotropic Laplacian);
+//! * [`BlackScholesBasket`] — a d-asset basket-option pricing PDE with
+//!   coordinate-weighted diffusion `½σ²Σxᵢ²∂ᵢᵢ` (exercises the per-dim
+//!   second-derivative path, [`Problem::needs_d2`]) and a hard terminal
+//!   payoff;
+//! * [`AllenCahn2`] — reaction–diffusion with a cubic nonlinearity whose
+//!   Dirichlet + initial conditions cannot be hard-constrained (no
+//!   affine lifting absorbs `u³`), exercising the weighted soft
+//!   boundary-loss term in the native FD/Stein losses.
+//!
+//! Every scenario with a non-trivial reference solution is manufactured:
+//! the analytic operator applied to `u*` is subtracted as a source term
+//! so `u*` solves the equation exactly — validation MSE is always
+//! against a closed form, never against a numerical solver.
+
+use super::problem::{Problem, ProblemRegistry, SoftBoundary};
+use std::sync::Arc;
+
+/// `sign` with `sign(0) = 0` (jnp.sign semantics; `f32::signum(0.) = 1.`).
+#[inline]
+fn sign0(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+#[inline]
+fn poisson_g(x: &[f32]) -> f32 {
+    x[0] * (1.0 - x[0]) * x[1] * (1.0 - x[1])
+}
+
+#[inline]
+fn heat_ic(x: &[f32]) -> f32 {
+    let pi = std::f32::consts::PI;
+    (pi * x[0]).sin() * (pi * x[1]).sin()
+}
+
+/// Register every built-in scenario (the table [`crate::pde::lookup`]
+/// resolves against).
+pub fn register_builtins(reg: &mut ProblemRegistry) {
+    for d in [5usize, 10, 20, 50] {
+        reg.register(Arc::new(HjbNd::new(d)));
+    }
+    reg.register(Arc::new(Poisson2));
+    reg.register(Arc::new(Heat2));
+    reg.register(Arc::new(BlackScholesBasket::new(5, 0.05, 0.2)));
+    reg.register(Arc::new(AllenCahn2::new(0.01)));
+}
+
+// ---------------------------------------------------------------------------
+// HJB family (paper Eq. 7, dimension-parameterized)
+// ---------------------------------------------------------------------------
+
+/// d-dim Hamilton–Jacobi–Bellman equation (paper Eq. 7), input
+/// (x_1..x_d, t), exact solution u* = ‖x‖₁ + 1 − t:
+///
+///   u_t + Δu − 0.05‖∇u‖² + (1 + 0.05·d) = 0,  u(x, 1) = ‖x‖₁
+///
+/// The terminal condition is hard: u = (1 − t)·f + ‖x‖₁. For d = 20
+/// this reproduces the original `hjb20` arithmetic bit-for-bit (the
+/// constant is exactly 2.0 in f32).
+#[derive(Debug)]
+pub struct HjbNd {
+    d: usize,
+    /// the residual's constant term `1 + 0.05·d` (2.0 for d = 20)
+    c: f32,
+    name: String,
+}
+
+impl HjbNd {
+    pub fn new(d: usize) -> Self {
+        HjbNd {
+            d,
+            c: 1.0f32 + 0.05f32 * d as f32,
+            name: format!("hjb{d}"),
+        }
+    }
+}
+
+impl Problem for HjbNd {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn has_time(&self) -> bool {
+        true
+    }
+
+    fn transform(&self, f: f32, x: &[f32]) -> f32 {
+        let t = x[self.d];
+        let l1: f32 = x[..self.d].iter().map(|v| v.abs()).sum();
+        (1.0 - t) * f + l1
+    }
+
+    fn residual(&self, f0: f32, df: &[f32], lap_f: f32, _d2f: &[f32], x: &[f32]) -> f32 {
+        let t = x[self.d];
+        let omt = 1.0 - t;
+        let u_t = -f0 + omt * df[self.d];
+        let mut gsq = 0.0f32;
+        for i in 0..self.d {
+            let gx = omt * df[i] + sign0(x[i]);
+            gsq += gx * gx;
+        }
+        let lap_u = omt * lap_f;
+        u_t + lap_u - 0.05 * gsq + self.c
+    }
+
+    fn exact(&self, x: &[f32]) -> f32 {
+        let l1: f32 = x[..self.d].iter().map(|v| v.abs()).sum();
+        l1 + 1.0 - x[self.d]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2-D Poisson (ported)
+// ---------------------------------------------------------------------------
+
+/// 2-D Poisson with zero Dirichlet boundary, input (x, y), exact
+/// solution u* = sin(πx)sin(πy). Hard constraint u = x(1−x)y(1−y)·f.
+#[derive(Debug)]
+pub struct Poisson2;
+
+impl Problem for Poisson2 {
+    fn name(&self) -> &str {
+        "poisson2"
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn has_time(&self) -> bool {
+        false
+    }
+
+    fn transform(&self, f: f32, x: &[f32]) -> f32 {
+        poisson_g(x) * f
+    }
+
+    fn residual(&self, f0: f32, df: &[f32], lap_f: f32, _d2f: &[f32], x: &[f32]) -> f32 {
+        let (x0, y0) = (x[0], x[1]);
+        let gx_ = x0 * (1.0 - x0);
+        let gy_ = y0 * (1.0 - y0);
+        let g = gx_ * gy_;
+        let dg0 = (1.0 - 2.0 * x0) * gy_;
+        let dg1 = gx_ * (1.0 - 2.0 * y0);
+        let lap_g = -2.0 * gy_ - 2.0 * gx_;
+        let lap_u = lap_g * f0 + 2.0 * (dg0 * df[0] + dg1 * df[1]) + g * lap_f;
+        let pi = std::f32::consts::PI;
+        let rhs = 2.0 * pi * pi * (pi * x0).sin() * (pi * y0).sin();
+        lap_u + rhs
+    }
+
+    fn exact(&self, x: &[f32]) -> f32 {
+        (std::f32::consts::PI * x[0]).sin() * (std::f32::consts::PI * x[1]).sin()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 2-D heat (ported)
+// ---------------------------------------------------------------------------
+
+/// 2-D heat equation u_t = αΔu, input (x, y, t), α = 0.1, exact
+/// solution u* = e^(−2π²αt) sin(πx)sin(πy). Hard constraints (boundary
+/// + initial): u = t·x(1−x)y(1−y)·f + sin(πx)sin(πy).
+#[derive(Debug)]
+pub struct Heat2;
+
+impl Problem for Heat2 {
+    fn name(&self) -> &str {
+        "heat2"
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn has_time(&self) -> bool {
+        true
+    }
+
+    fn transform(&self, f: f32, x: &[f32]) -> f32 {
+        let g = x[0] * (1.0 - x[0]) * x[1] * (1.0 - x[1]);
+        x[2] * g * f + heat_ic(x)
+    }
+
+    fn residual(&self, f0: f32, df: &[f32], lap_f: f32, _d2f: &[f32], x: &[f32]) -> f32 {
+        let alpha = 0.1f32;
+        let (x0, y0, t) = (x[0], x[1], x[2]);
+        let gx_ = x0 * (1.0 - x0);
+        let gy_ = y0 * (1.0 - y0);
+        let g = gx_ * gy_;
+        let dg0 = (1.0 - 2.0 * x0) * gy_;
+        let dg1 = gx_ * (1.0 - 2.0 * y0);
+        let lap_g = -2.0 * gy_ - 2.0 * gx_;
+        let pi = std::f32::consts::PI;
+        let ic = heat_ic(x);
+        let u_t = g * f0 + t * g * df[2];
+        let lap_u = t * (lap_g * f0 + 2.0 * (dg0 * df[0] + dg1 * df[1]) + g * lap_f)
+            - 2.0 * pi * pi * ic;
+        u_t - alpha * lap_u
+    }
+
+    fn exact(&self, x: &[f32]) -> f32 {
+        let alpha = 0.1f32;
+        let pi = std::f32::consts::PI;
+        (-2.0 * pi * pi * alpha * x[2]).exp() * (pi * x[0]).sin() * (pi * x[1]).sin()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Black–Scholes basket option (new: anisotropic diffusion, needs_d2)
+// ---------------------------------------------------------------------------
+
+/// d-asset Black–Scholes basket-option PDE on [0,1]^d × [0,1]:
+///
+///   u_t + ½σ² Σᵢ xᵢ² ∂ᵢᵢu + r Σᵢ xᵢ ∂ᵢu − r·u = s(x, t)
+///
+/// with the quadratic basket payoff p(x) = mean(xᵢ²) as a *hard*
+/// terminal condition: u = (1 − t)·f + p(x), so u(x, 1) = p(x) for any
+/// network output. The reference solution is manufactured,
+/// u*(x, t) = e^(r(t−1)) p(x), with the matching source
+/// s = (σ² + 2r)·e^(r(t−1))·p(x) (the BS operator applied to u*).
+///
+/// The coordinate-weighted diffusion Σ xᵢ² ∂ᵢᵢ cannot be assembled from
+/// the total Laplacian alone, so this problem reads the per-dimension
+/// second-derivative estimates (`needs_d2`).
+#[derive(Debug)]
+pub struct BlackScholesBasket {
+    d: usize,
+    rate: f32,
+    sigma: f32,
+    name: String,
+}
+
+impl BlackScholesBasket {
+    pub fn new(d: usize, rate: f32, sigma: f32) -> Self {
+        BlackScholesBasket {
+            d,
+            rate,
+            sigma,
+            name: format!("bs_basket{d}"),
+        }
+    }
+
+    /// Quadratic basket payoff p(x) = mean(xᵢ²).
+    fn payoff(&self, x: &[f32]) -> f32 {
+        let ssq: f32 = x[..self.d].iter().map(|v| v * v).sum();
+        ssq / self.d as f32
+    }
+}
+
+impl Problem for BlackScholesBasket {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn has_time(&self) -> bool {
+        true
+    }
+
+    fn needs_d2(&self) -> bool {
+        true
+    }
+
+    fn transform(&self, f: f32, x: &[f32]) -> f32 {
+        (1.0 - x[self.d]) * f + self.payoff(x)
+    }
+
+    fn residual(&self, f0: f32, df: &[f32], _lap_f: f32, d2f: &[f32], x: &[f32]) -> f32 {
+        let d = self.d;
+        let t = x[d];
+        let omt = 1.0 - t;
+        let p = self.payoff(x);
+        let inv_d = 1.0 / d as f32;
+        // u = (1−t)f + p: analytic transform derivatives fold in
+        let u = omt * f0 + p;
+        let u_t = -f0 + omt * df[d];
+        let mut conv = 0.0f32; // Σ xᵢ ∂ᵢu
+        let mut diff = 0.0f32; // Σ xᵢ² ∂ᵢᵢu
+        for i in 0..d {
+            let u_i = omt * df[i] + 2.0 * x[i] * inv_d;
+            let u_ii = omt * d2f[i] + 2.0 * inv_d;
+            conv += x[i] * u_i;
+            diff += x[i] * x[i] * u_ii;
+        }
+        let src = (self.sigma * self.sigma + 2.0 * self.rate) * p * (self.rate * (t - 1.0)).exp();
+        u_t + 0.5 * self.sigma * self.sigma * diff + self.rate * conv - self.rate * u - src
+    }
+
+    fn exact(&self, x: &[f32]) -> f32 {
+        (self.rate * (x[self.d] - 1.0)).exp() * self.payoff(x)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Allen–Cahn reaction–diffusion (new: soft boundary constraints)
+// ---------------------------------------------------------------------------
+
+/// 2-D Allen–Cahn reaction–diffusion on [0,1]² × [0,1]:
+///
+///   u_t = ε Δu + u − u³ + s(x, t)
+///
+/// with manufactured solution u* = e^(−t) sin(πx)sin(πy) and source
+/// s = (2επ² − 2)·u* + u*³ (so u* solves the equation exactly; note
+/// u*_t = −u* and Δu* = −2π²u*).
+///
+/// The cubic reaction term makes an exact hard-constraint lifting
+/// impractical — an affine `a(x)f + b(x)` cannot absorb `u³` — so the
+/// transform is the **identity** and the Dirichlet boundary + initial
+/// conditions are enforced *softly*: [`Problem::boundary`] returns a
+/// weight and the native losses add a boundary MSE over projected
+/// collocation points.
+#[derive(Debug)]
+pub struct AllenCahn2 {
+    eps: f32,
+}
+
+impl AllenCahn2 {
+    pub fn new(eps: f32) -> Self {
+        AllenCahn2 { eps }
+    }
+}
+
+impl Problem for AllenCahn2 {
+    fn name(&self) -> &str {
+        "allen_cahn2"
+    }
+
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn has_time(&self) -> bool {
+        true
+    }
+
+    fn transform(&self, f: f32, _x: &[f32]) -> f32 {
+        f // no hard constraint: boundary + IC are soft (see boundary())
+    }
+
+    fn residual(&self, f0: f32, df: &[f32], lap_f: f32, _d2f: &[f32], x: &[f32]) -> f32 {
+        let pi = std::f32::consts::PI;
+        let ustar = self.exact(x);
+        let src = (2.0 * self.eps * pi * pi - 2.0) * ustar + ustar * ustar * ustar;
+        // u = f (identity transform)
+        df[2] - self.eps * lap_f - f0 + f0 * f0 * f0 - src
+    }
+
+    fn exact(&self, x: &[f32]) -> f32 {
+        let pi = std::f32::consts::PI;
+        (-x[2]).exp() * (pi * x[0]).sin() * (pi * x[1]).sin()
+    }
+
+    fn boundary(&self) -> Option<SoftBoundary> {
+        Some(SoftBoundary {
+            default_weight: 1.0,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pde::lookup;
+
+    #[test]
+    fn hjb_exact_values() {
+        let hjb20 = lookup("hjb20").unwrap();
+        let mut x = vec![0.5f32; 21];
+        x[20] = 0.25; // t
+        // ‖x‖₁ = 10, u = 10 + 1 − 0.25
+        assert!((hjb20.exact(&x) - 10.75).abs() < 1e-5);
+    }
+
+    #[test]
+    fn hjb_constant_is_exactly_two_at_d20() {
+        // the d-parameterized constant must reproduce the original
+        // enum's literal `+ 2.0` bit-for-bit at d = 20
+        let h = HjbNd::new(20);
+        assert_eq!(h.c.to_bits(), 2.0f32.to_bits());
+    }
+
+    #[test]
+    fn hjb_family_residual_vanishes_on_exact_solution() {
+        // u* = ‖x‖₁ + 1 − t ⇒ f* ≡ 1, so the residual with f0 = 1,
+        // df = 0, lap = 0 must vanish for EVERY registered dimension:
+        // −1 + 0 − 0.05·d + (1 + 0.05·d) = 0
+        for d in [5usize, 10, 20, 50] {
+            let p = lookup(&format!("hjb{d}")).unwrap();
+            let mut x = vec![0.42f32; d + 1];
+            x[d] = 0.3;
+            let df = vec![0.0f32; d + 1];
+            let d2 = vec![0.0f32; d];
+            let r = p.residual(1.0, &df, 0.0, &d2, &x);
+            assert!(r.abs() < 1e-5, "hjb{d}: residual {r}");
+        }
+    }
+
+    #[test]
+    fn poisson_exact_peak_and_boundary() {
+        let p = lookup("poisson2").unwrap();
+        assert!((p.exact(&[0.5, 0.5]) - 1.0).abs() < 1e-6);
+        assert!(p.exact(&[0.0, 0.7]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn heat_exact_decays() {
+        let p = lookup("heat2").unwrap();
+        let u0 = p.exact(&[0.5, 0.5, 0.0]);
+        let u1 = p.exact(&[0.5, 0.5, 1.0]);
+        assert!(u0 > u1 && u1 > 0.0);
+        assert!((u0 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn stencil_census_matches_paper() {
+        let hjb20 = lookup("hjb20").unwrap();
+        assert_eq!(hjb20.n_stencil(), 42); // "42 inferences" (§4.2)
+        assert_eq!(hjb20.n_stencil(), 2 * hjb20.dim() + 2);
+        assert_eq!(lookup("hjb50").unwrap().n_stencil(), 102);
+        assert_eq!(lookup("poisson2").unwrap().n_stencil(), 5);
+        assert_eq!(lookup("heat2").unwrap().n_stencil(), 6);
+        assert_eq!(lookup("bs_basket5").unwrap().n_stencil(), 12);
+        assert_eq!(lookup("allen_cahn2").unwrap().n_stencil(), 6);
+    }
+
+    #[test]
+    fn transform_enforces_hard_constraints() {
+        // hjb: u(x, t=1) = ‖x‖₁ regardless of f
+        let hjb20 = lookup("hjb20").unwrap();
+        let mut x = vec![0.3f32; 21];
+        x[20] = 1.0;
+        assert!((hjb20.transform(123.0, &x) - 6.0).abs() < 1e-5);
+        // poisson: u = 0 on the boundary regardless of f
+        let poisson = lookup("poisson2").unwrap();
+        assert_eq!(poisson.transform(9.0, &[0.0, 0.4]), 0.0);
+        assert_eq!(poisson.transform(9.0, &[0.7, 1.0]), 0.0);
+        // heat: u(x, t=0) = sin(πx)sin(πy) regardless of f
+        let heat = lookup("heat2").unwrap();
+        let u0 = heat.transform(55.0, &[0.5, 0.5, 0.0]);
+        assert!((u0 - 1.0).abs() < 1e-6);
+        // black–scholes: u(x, t=1) = payoff regardless of f
+        let bs = lookup("bs_basket5").unwrap();
+        let mut xb = vec![0.6f32; 6];
+        xb[5] = 1.0;
+        let payoff = 0.36; // mean of five 0.6² entries
+        assert!((bs.transform(77.0, &xb) - payoff).abs() < 1e-5);
+        assert!((bs.exact(&xb) - payoff).abs() < 1e-5);
+    }
+
+    #[test]
+    fn stencil_rows_layout() {
+        let heat = lookup("heat2").unwrap();
+        let x = [0.25f32, 0.5, 0.75];
+        let mut out = Vec::new();
+        heat.stencil_rows(&x, 0.1, &mut out);
+        assert_eq!(out.len(), heat.n_stencil() * 3);
+        // base row
+        assert_eq!(&out[..3], &x);
+        // +h then −h per spatial dim
+        assert!((out[3] - 0.35).abs() < 1e-6 && out[4] == 0.5);
+        assert!((out[6] - 0.15).abs() < 1e-6);
+        assert!((out[10] - 0.6).abs() < 1e-6);
+        assert!((out[13] - 0.4).abs() < 1e-6);
+        // forward time row last
+        let last = &out[15..18];
+        assert!((last[2] - 0.85).abs() < 1e-6 && last[0] == 0.25);
+    }
+
+    #[test]
+    fn poisson_residual_vanishes_on_exact_solution_fd() {
+        // FD-estimate f* = u*/g on the stencil and check the assembled
+        // residual ≈ 0 at an interior point (O(h²) truncation)
+        let p = lookup("poisson2").unwrap();
+        let h = 0.01f32;
+        let x = [0.4f32, 0.6];
+        let mut rows = Vec::new();
+        p.stencil_rows(&x, h, &mut rows);
+        let f: Vec<f32> = (0..5)
+            .map(|i| {
+                let pt = &rows[i * 2..i * 2 + 2];
+                let g = pt[0] * (1.0 - pt[0]) * pt[1] * (1.0 - pt[1]);
+                p.exact(pt) / g
+            })
+            .collect();
+        let df = [(f[1] - f[2]) / (2.0 * h), (f[3] - f[4]) / (2.0 * h)];
+        let lap = (f[1] - 2.0 * f[0] + f[2] + f[3] - 2.0 * f[0] + f[4]) / (h * h);
+        let d2 = [
+            (f[1] - 2.0 * f[0] + f[2]) / (h * h),
+            (f[3] - 2.0 * f[0] + f[4]) / (h * h),
+        ];
+        let r = p.residual(f[0], &df, lap, &d2, &x);
+        assert!(r.abs() < 0.05, "residual {r}");
+    }
+
+    #[test]
+    fn black_scholes_flags_anisotropic_diffusion() {
+        assert!(lookup("bs_basket5").unwrap().needs_d2());
+        for name in ["hjb20", "poisson2", "heat2", "allen_cahn2"] {
+            assert!(!lookup(name).unwrap().needs_d2(), "{name}");
+        }
+    }
+
+    #[test]
+    fn allen_cahn_is_soft_constrained() {
+        let ac = lookup("allen_cahn2").unwrap();
+        let sb = ac.boundary().expect("allen_cahn2 has soft constraints");
+        assert!(sb.default_weight > 0.0);
+        // identity transform: the network output is NOT clamped on the
+        // boundary — that is exactly why the soft term exists
+        assert_eq!(ac.transform(7.5, &[0.0, 0.5, 0.3]), 7.5);
+        // all hard-constrained problems report no soft boundary
+        for name in ["hjb20", "hjb50", "poisson2", "heat2", "bs_basket5"] {
+            assert!(lookup(name).unwrap().boundary().is_none(), "{name}");
+        }
+    }
+
+    #[test]
+    fn allen_cahn_boundary_targets_match_constraints() {
+        let ac = lookup("allen_cahn2").unwrap();
+        let x = [0.4f32, 0.7, 0.5];
+        let mut out = [0.0f32; 3];
+        // spatial faces target the homogeneous Dirichlet value 0
+        for face in 0..4 {
+            let g = ac.boundary_project(face, &x, &mut out);
+            assert!(g.abs() < 1e-6, "face {face}: target {g}");
+            assert!(out[face / 2] == (face % 2) as f32);
+        }
+        // the t = 0 face targets the initial condition sin(πx)sin(πy)
+        let g = ac.boundary_project(4, &x, &mut out);
+        assert_eq!(out[2], 0.0);
+        let pi = std::f32::consts::PI;
+        let want = (pi * 0.4).sin() * (pi * 0.7).sin();
+        assert!((g - want).abs() < 1e-5, "{g} vs {want}");
+    }
+
+    #[test]
+    fn allen_cahn_residual_vanishes_on_exact_solution_fd() {
+        // identity transform ⇒ f* = u*; FD-estimate derivatives of u*
+        // on the stencil and check the assembled residual ≈ 0
+        let ac = lookup("allen_cahn2").unwrap();
+        let h = 0.01f32;
+        let x = [0.35f32, 0.55, 0.4];
+        let mut rows = Vec::new();
+        ac.stencil_rows(&x, h, &mut rows);
+        let f: Vec<f32> = (0..6).map(|i| ac.exact(&rows[i * 3..i * 3 + 3])).collect();
+        let mut df = [0.0f32; 3];
+        let mut d2 = [0.0f32; 2];
+        let mut lap_sum = 0.0f32;
+        for i in 0..2 {
+            let (fp, fm) = (f[1 + 2 * i], f[2 + 2 * i]);
+            df[i] = (fp - fm) / (2.0 * h);
+            lap_sum += fp - 2.0 * f[0] + fm;
+            d2[i] = (fp - 2.0 * f[0] + fm) / (h * h);
+        }
+        let lap = lap_sum / (h * h);
+        df[2] = (f[5] - f[0]) / h; // forward difference in time
+        let r = ac.residual(f[0], &df, lap, &d2, &x);
+        assert!(r.abs() < 0.05, "residual {r}");
+    }
+
+    #[test]
+    fn black_scholes_residual_vanishes_on_exact_solution_fd() {
+        // u* = e^(r(t−1)) p(x) with hard terminal transform
+        // u = (1−t)f + p ⇒ f* = p·(e^(r(t−1)) − 1)/(1−t); FD-estimate
+        // f*'s derivatives and check the assembled residual ≈ 0
+        let bs = lookup("bs_basket5").unwrap();
+        let (d, ind, s) = (bs.dim(), bs.in_dim(), bs.n_stencil());
+        let h = 0.01f32;
+        let x = [0.5f32, 0.3, 0.7, 0.45, 0.6, 0.5];
+        let mut rows = Vec::new();
+        bs.stencil_rows(&x, h, &mut rows);
+        let f_at = |p: &[f32]| -> f32 {
+            let b = bs.transform(0.0, p);
+            let a = bs.transform(1.0, p) - b;
+            (bs.exact(p) - b) / a
+        };
+        let f: Vec<f32> = (0..s).map(|i| f_at(&rows[i * ind..(i + 1) * ind])).collect();
+        let mut df = vec![0.0f32; ind];
+        let mut d2 = vec![0.0f32; d];
+        let mut lap_sum = 0.0f32;
+        for i in 0..d {
+            let (fp, fm) = (f[1 + 2 * i], f[2 + 2 * i]);
+            df[i] = (fp - fm) / (2.0 * h);
+            lap_sum += fp - 2.0 * f[0] + fm;
+            d2[i] = (fp - 2.0 * f[0] + fm) / (h * h);
+        }
+        let lap = lap_sum / (h * h);
+        df[d] = (f[s - 1] - f[0]) / h;
+        let r = bs.residual(f[0], &df, lap, &d2, &x);
+        assert!(r.abs() < 0.05, "residual {r}");
+    }
+}

@@ -27,7 +27,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::model::{Hyper, Layout};
-use crate::pde::Pde;
+use crate::pde::Problem;
 use crate::util::json::{self, Value};
 
 pub mod native;
@@ -93,7 +93,9 @@ impl EntryMeta {
 #[derive(Clone, Debug)]
 pub struct PresetMeta {
     pub name: String,
-    pub pde: Pde,
+    /// the PDE scenario this preset solves, resolved by name against
+    /// the [`crate::pde::registry`]
+    pub pde: Arc<dyn Problem>,
     pub layout: Layout,
     pub hyper: Hyper,
     pub entries: HashMap<String, EntryMeta>,
@@ -133,7 +135,7 @@ impl Manifest {
         let presets_v = root.req("presets").map_err(|e| anyhow!("{e}"))?;
         let mut presets = HashMap::new();
         for (pname, pv) in presets_v.as_obj().unwrap_or(&[]) {
-            let pde = Pde::parse(
+            let pde = crate::pde::lookup(
                 pv.req("pde")
                     .map_err(|e| anyhow!("{e}"))?
                     .req("name")
@@ -287,6 +289,17 @@ pub trait Backend {
         false
     }
 
+    /// Override the soft-constraint boundary-loss weight of `preset`
+    /// (problems with [`crate::pde::SoftBoundary`] constraints only).
+    /// Returns `false` when the backend ignores the request or the
+    /// preset's problem has no soft constraints — the weight would be
+    /// meaningless there. Like [`Backend::set_parallel`], this mutates
+    /// shared backend state: on a solver-service shared backend it
+    /// reconfigures every worker evaluating that preset.
+    fn set_bc_weight(&self, _preset: &str, _weight: f32) -> bool {
+        false
+    }
+
     /// Get (building/compiling on first use) an entry point of a preset.
     fn entry(&self, preset: &str, entry: &str) -> Result<Arc<dyn Entry>>;
 
@@ -344,7 +357,7 @@ mod tests {
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.k_multi, 11);
         let p = m.preset("p1").unwrap();
-        assert_eq!(p.pde, Pde::Poisson2);
+        assert_eq!(p.pde.name(), "poisson2");
         assert_eq!(p.layout.param_dim, 3);
         let e = &p.entries["loss"];
         assert_eq!(e.inputs[1].1, vec![100, 2]);

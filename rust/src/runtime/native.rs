@@ -23,7 +23,13 @@
 //!   ([`NativeBackend::forward_reference`] /
 //!   [`NativeBackend::loss_reference`]);
 //! * the BP-free FD / Stein losses and the validation MSE assemble PDE
-//!   residuals through [`Pde::residual`].
+//!   residuals through [`Problem::residual`]; problems with
+//!   coordinate-weighted diffusion additionally receive per-dimension
+//!   second-derivative estimates ([`Problem::needs_d2`]), and problems
+//!   with soft constraints ([`crate::pde::SoftBoundary`]) get a weighted
+//!   boundary MSE over deterministic projections of the collocation
+//!   batch, evaluated in the same dispatch (weight runtime-tunable via
+//!   [`Backend::set_bc_weight`]).
 //!
 //! Presets come from an in-repo registry mirroring
 //! `python/compile/model.py` ([`NativeBackend::builtin`]) or from a
@@ -35,7 +41,7 @@
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
@@ -43,7 +49,7 @@ use anyhow::{anyhow, Context, Result};
 use super::parallel::{for_row_blocks, ParallelConfig, ParallelCtl};
 use super::{Backend, Entry, EntryMeta, Manifest, PresetMeta};
 use crate::model::{Hyper, Layout, LayoutBuilder};
-use crate::pde::Pde;
+use crate::pde::Problem;
 use crate::photonics::mesh;
 use crate::tensor::{gemm_rows, tt_dense, Mat, TtCore};
 use crate::util::json::Value;
@@ -397,11 +403,15 @@ fn build_net(arch: &Value) -> Result<(NetEval, Layout)> {
 /// All native evaluation for one preset: network + PDE loss assembly.
 #[derive(Debug)]
 pub struct PresetEval {
-    pde: Pde,
+    problem: Arc<dyn Problem>,
     net: NetEval,
     fd_h: f32,
     stein_sigma: f32,
     stein_q: usize,
+    /// soft-constraint boundary-loss weight (f32 bits; 0 disables the
+    /// term). Runtime-tunable through [`Backend::set_bc_weight`] — only
+    /// meaningful for problems with a [`crate::pde::SoftBoundary`].
+    bc_weight: AtomicU32,
     /// engine parallelism, shared with the owning backend (runtime-tunable)
     par: Arc<ParallelCtl>,
     /// MRU materialization cache keyed by exact phase vector: repeated
@@ -446,22 +456,63 @@ impl PresetEval {
 
     /// Transformed solution u(Φ, x) for a flat batch of rows.
     fn forward_u(&self, phi: &[f32], xs: &[f32]) -> Vec<f32> {
-        let d = self.pde.in_dim();
+        let d = self.problem.in_dim();
         let f = self.forward_f(phi, xs);
         f.iter()
             .enumerate()
-            .map(|(i, &fv)| self.pde.transform(fv, &xs[i * d..(i + 1) * d]))
+            .map(|(i, &fv)| self.problem.transform(fv, &xs[i * d..(i + 1) * d]))
             .collect()
     }
 
     /// [`Self::forward_u`] through the PR-1 scalar reference path.
     fn forward_u_reference(&self, phi: &[f32], xs: &[f32]) -> Vec<f32> {
-        let d = self.pde.in_dim();
+        let d = self.problem.in_dim();
         let f = self.net.forward_f_reference(phi, xs);
         f.iter()
             .enumerate()
-            .map(|(i, &fv)| self.pde.transform(fv, &xs[i * d..(i + 1) * d]))
+            .map(|(i, &fv)| self.problem.transform(fv, &xs[i * d..(i + 1) * d]))
             .collect()
+    }
+
+    /// Effective soft-constraint boundary weight: 0 unless the problem
+    /// declares a [`crate::pde::SoftBoundary`] and the weight is > 0.
+    fn bc_weight(&self) -> f32 {
+        if self.problem.boundary().is_some() {
+            f32::from_bits(self.bc_weight.load(Ordering::Relaxed))
+        } else {
+            0.0
+        }
+    }
+
+    /// Append one boundary projection per collocation point of `xr` to
+    /// `x_all` (evaluated in the same dispatch as the stencil/smoothing
+    /// rows) and collect the target u values.
+    fn append_boundary_rows(&self, xr: &[f32], x_all: &mut Vec<f32>, targets: &mut Vec<f32>) {
+        let d = self.problem.in_dim();
+        let b = xr.len() / d;
+        let mut xb = vec![0.0f32; d];
+        for p in 0..b {
+            let t = self
+                .problem
+                .boundary_project(p, &xr[p * d..(p + 1) * d], &mut xb);
+            x_all.extend_from_slice(&xb);
+            targets.push(t);
+        }
+    }
+
+    /// Weighted boundary MSE over the projected rows appended by
+    /// [`Self::append_boundary_rows`] (`rows0` = index of the first
+    /// boundary row in the dispatched batch).
+    fn boundary_mse(&self, f: &[f32], x_all: &[f32], rows0: usize, targets: &[f32]) -> f32 {
+        let d = self.problem.in_dim();
+        let mut acc = 0.0f32;
+        for (p, tgt) in targets.iter().enumerate() {
+            let row = &x_all[(rows0 + p) * d..(rows0 + p + 1) * d];
+            let u = self.problem.transform(f[rows0 + p], row);
+            let e = u - tgt;
+            acc += e * e;
+        }
+        acc / targets.len() as f32
     }
 
     /// BP-free FD-stencil loss (python `pinn.make_loss_fd`).
@@ -475,21 +526,31 @@ impl PresetEval {
     }
 
     fn loss_fd_impl(&self, phi: &[f32], xr: &[f32], reference: bool) -> f32 {
-        let d = self.pde.in_dim();
-        let s = self.pde.n_stencil();
-        let dim = self.pde.dim();
+        let d = self.problem.in_dim();
+        let s = self.problem.n_stencil();
+        let dim = self.problem.dim();
         let h = self.fd_h;
         let b = xr.len() / d;
-        let mut x_all = Vec::with_capacity(b * s * d);
+        let bw = self.bc_weight();
+        let mut x_all = Vec::with_capacity(b * s * d + if bw > 0.0 { b * d } else { 0 });
         for p in 0..b {
-            self.pde.stencil_rows(&xr[p * d..(p + 1) * d], h, &mut x_all);
+            self.problem
+                .stencil_rows(&xr[p * d..(p + 1) * d], h, &mut x_all);
+        }
+        // soft-constraint problems ride their boundary projections along
+        // in the same dispatch (rows b·s ..)
+        let mut targets = Vec::new();
+        if bw > 0.0 {
+            self.append_boundary_rows(xr, &mut x_all, &mut targets);
         }
         let f = if reference {
             self.net.forward_f_reference(phi, &x_all)
         } else {
             self.forward_f(phi, &x_all)
         };
+        let need_d2 = self.problem.needs_d2();
         let mut df = vec![0.0f32; d];
+        let mut d2 = vec![0.0f32; dim];
         let mut acc = 0.0f32;
         for p in 0..b {
             let fr = &f[p * s..(p + 1) * s];
@@ -500,26 +561,37 @@ impl PresetEval {
                 let fm = fr[2 + 2 * i];
                 df[i] = (fp - fm) / (2.0 * h);
                 lap_sum += fp - 2.0 * f0 + fm;
+                if need_d2 {
+                    d2[i] = (fp - 2.0 * f0 + fm) / (h * h);
+                }
             }
             let lap = lap_sum / (h * h);
-            if self.pde.has_time() {
+            if self.problem.has_time() {
                 df[dim] = (fr[s - 1] - f0) / h;
             }
-            let r = self.pde.residual(f0, &df, lap, &xr[p * d..(p + 1) * d]);
+            let r = self
+                .problem
+                .residual(f0, &df, lap, &d2, &xr[p * d..(p + 1) * d]);
             acc += r * r;
         }
-        acc / b as f32
+        let res = acc / b as f32;
+        if bw > 0.0 {
+            res + bw * self.boundary_mse(&f, &x_all, b * s, &targets)
+        } else {
+            res
+        }
     }
 
     /// Gaussian-Stein estimator loss (python `pinn.make_loss_stein`).
     fn loss_stein(&self, phi: &[f32], xr: &[f32], z: &[f32]) -> f32 {
-        let d = self.pde.in_dim();
-        let dim = self.pde.dim();
+        let d = self.problem.in_dim();
+        let dim = self.problem.dim();
         let q = self.stein_q;
         let sigma = self.stein_sigma;
         let b = xr.len() / d;
         let rows = 2 * q + 1;
-        let mut x_all = Vec::with_capacity(b * rows * d);
+        let bw = self.bc_weight();
+        let mut x_all = Vec::with_capacity(b * rows * d + if bw > 0.0 { b * d } else { 0 });
         for p in 0..b {
             let x = &xr[p * d..(p + 1) * d];
             x_all.extend_from_slice(x);
@@ -534,11 +606,17 @@ impl PresetEval {
                 }
             }
         }
+        let mut targets = Vec::new();
+        if bw > 0.0 {
+            self.append_boundary_rows(xr, &mut x_all, &mut targets);
+        }
         let f = self.forward_f(phi, &x_all);
         let z_sq: Vec<f32> = (0..q)
             .map(|k| z[k * d..k * d + dim].iter().map(|v| v * v).sum())
             .collect();
+        let need_d2 = self.problem.needs_d2();
         let mut df = vec![0.0f32; d];
+        let mut d2 = vec![0.0f32; dim];
         let mut acc = 0.0f32;
         for p in 0..b {
             let fr = &f[p * rows..(p + 1) * rows];
@@ -557,10 +635,29 @@ impl PresetEval {
                 lsum += (fr[1 + k] + fr[1 + q + k] - 2.0 * f0) * (z_sq[k] - dim as f32);
             }
             let lap = lsum / q as f32 / (2.0 * sigma * sigma);
-            let r = self.pde.residual(f0, &df, lap, &xr[p * d..(p + 1) * d]);
+            // per-dim ∂ⱼⱼf ≈ E[(f+ + f− − 2f0)(zⱼ² − 1)] / (2σ²), only
+            // assembled for anisotropic-diffusion problems
+            if need_d2 {
+                for j in 0..dim {
+                    let mut sum = 0.0f32;
+                    for k in 0..q {
+                        let zj = z[k * d + j];
+                        sum += (fr[1 + k] + fr[1 + q + k] - 2.0 * f0) * (zj * zj - 1.0);
+                    }
+                    d2[j] = sum / q as f32 / (2.0 * sigma * sigma);
+                }
+            }
+            let r = self
+                .problem
+                .residual(f0, &df, lap, &d2, &xr[p * d..(p + 1) * d]);
             acc += r * r;
         }
-        acc / b as f32
+        let res = acc / b as f32;
+        if bw > 0.0 {
+            res + bw * self.boundary_mse(&f, &x_all, b * rows, &targets)
+        } else {
+            res
+        }
     }
 
     /// Validation MSE vs exact-solution targets (python `make_validate`).
@@ -694,14 +791,23 @@ impl NativeBackend {
                     "preset '{name}': loss_stein z shape {got:?} != (stein_q, in_dim) {want:?}"
                 );
             }
+            // soft-constraint weight: manifest hyper override, else the
+            // problem's own default; 0 for hard-constrained problems
+            let bc_default = pm.pde.boundary().map(|sb| sb.default_weight).unwrap_or(0.0);
+            let bc = pm.hyper.bc_weight.map(|w| w as f32).unwrap_or(bc_default);
+            anyhow::ensure!(
+                bc >= 0.0 && bc.is_finite(),
+                "preset '{name}': bc_weight {bc} must be a finite non-negative number"
+            );
             evals.insert(
                 name.clone(),
                 Arc::new(PresetEval {
-                    pde: pm.pde,
+                    problem: pm.pde.clone(),
                     net,
                     fd_h: pm.hyper.fd_h as f32,
                     stein_sigma: pm.hyper.stein_sigma as f32,
                     stein_q: pm.hyper.stein_q,
+                    bc_weight: AtomicU32::new(bc.to_bits()),
                     par: par.clone(),
                     mat_cache: Mutex::new(Vec::new()),
                 }),
@@ -777,6 +883,21 @@ impl Backend for NativeBackend {
         true
     }
 
+    fn set_bc_weight(&self, preset: &str, weight: f32) -> bool {
+        // reject (don't clamp) invalid weights: a negative weight would
+        // silently disable the soft-constraint term
+        if weight.is_nan() || weight < 0.0 {
+            return false;
+        }
+        match self.evals.get(preset) {
+            Some(eval) if eval.problem.boundary().is_some() => {
+                eval.bc_weight.store(weight.to_bits(), Ordering::Relaxed);
+                true
+            }
+            _ => false,
+        }
+    }
+
     fn entry(&self, preset: &str, entry: &str) -> Result<Arc<dyn Entry>> {
         let key = (preset.to_string(), entry.to_string());
         if let Some(e) = self.cache.lock().unwrap().get(&key) {
@@ -817,25 +938,28 @@ impl Backend for NativeBackend {
 
 struct BuiltinPreset {
     name: &'static str,
-    pde: Pde,
+    /// problem name, resolved against [`crate::pde::registry`]
+    pde: &'static str,
     /// (factors_m, factors_n, ranks) for tonn; hidden for onn
     tonn: Option<(&'static [usize], &'static [usize], &'static [usize])>,
     hidden: usize,
     entries: &'static [&'static str],
 }
 
+const ALL_ENTRIES: &[&str] = &["forward", "loss", "loss_multi", "loss_stein", "validate"];
+
 const BUILTIN_PRESETS: &[BuiltinPreset] = &[
     // -- default reproduction scale (Table-1 runs) -----------------------
     BuiltinPreset {
         name: "tonn_small",
-        pde: Pde::Hjb20,
+        pde: "hjb20",
         tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 2, 2, 1])),
         hidden: 64,
-        entries: &["forward", "loss", "loss_multi", "loss_stein", "validate"],
+        entries: ALL_ENTRIES,
     },
     BuiltinPreset {
         name: "onn_small",
-        pde: Pde::Hjb20,
+        pde: "hjb20",
         tonn: None,
         hidden: 64,
         entries: &["forward", "loss", "loss_multi", "validate"],
@@ -843,14 +967,14 @@ const BUILTIN_PRESETS: &[BuiltinPreset] = &[
     // -- paper scale (n=1024; Table-2 census) ----------------------------
     BuiltinPreset {
         name: "tonn_paper",
-        pde: Pde::Hjb20,
+        pde: "hjb20",
         tonn: Some((&[4, 8, 4, 8], &[8, 4, 8, 4], &[1, 2, 1, 2, 1])),
         hidden: 1024,
         entries: &["forward", "loss", "loss_multi", "validate"],
     },
     BuiltinPreset {
         name: "onn_paper",
-        pde: Pde::Hjb20,
+        pde: "hjb20",
         tonn: None,
         hidden: 1024,
         entries: &["forward", "validate"],
@@ -858,14 +982,14 @@ const BUILTIN_PRESETS: &[BuiltinPreset] = &[
     // -- TT-rank ablation (A3) -------------------------------------------
     BuiltinPreset {
         name: "tonn_rank1",
-        pde: Pde::Hjb20,
+        pde: "hjb20",
         tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 1, 1, 1])),
         hidden: 64,
         entries: &["forward", "loss", "loss_multi", "validate"],
     },
     BuiltinPreset {
         name: "tonn_rank4",
-        pde: Pde::Hjb20,
+        pde: "hjb20",
         tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 4, 4, 1])),
         hidden: 64,
         entries: &["forward", "loss", "loss_multi", "validate"],
@@ -873,14 +997,14 @@ const BUILTIN_PRESETS: &[BuiltinPreset] = &[
     // -- extension problems ----------------------------------------------
     BuiltinPreset {
         name: "tonn_poisson",
-        pde: Pde::Poisson2,
+        pde: "poisson2",
         tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 2, 2, 1])),
         hidden: 64,
         entries: &["forward", "loss", "loss_multi", "validate"],
     },
     BuiltinPreset {
         name: "tonn_heat",
-        pde: Pde::Heat2,
+        pde: "heat2",
         tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 2, 2, 1])),
         hidden: 64,
         entries: &["forward", "loss", "loss_multi", "validate"],
@@ -888,17 +1012,54 @@ const BUILTIN_PRESETS: &[BuiltinPreset] = &[
     // -- micro presets (native-only; sized for fast CI tests) ------------
     BuiltinPreset {
         name: "tonn_micro",
-        pde: Pde::Poisson2,
+        pde: "poisson2",
         tonn: Some((&[2, 2], &[2, 2], &[1, 2, 1])),
         hidden: 4,
-        entries: &["forward", "loss", "loss_multi", "loss_stein", "validate"],
+        entries: ALL_ENTRIES,
     },
     BuiltinPreset {
         name: "tonn_micro_heat",
-        pde: Pde::Heat2,
+        pde: "heat2",
         tonn: Some((&[2, 2], &[2, 2], &[1, 2, 1])),
         hidden: 4,
         entries: &["forward", "loss", "loss_multi", "validate"],
+    },
+    // -- scenario presets: one fast-CI-sized preset per registered
+    //    problem of the pde registry (hidden >= in_dim; even TT meshes) --
+    BuiltinPreset {
+        name: "tonn_micro_hjb5",
+        pde: "hjb5",
+        tonn: Some((&[2, 4], &[4, 2], &[1, 2, 1])),
+        hidden: 8,
+        entries: ALL_ENTRIES,
+    },
+    BuiltinPreset {
+        name: "tonn_micro_hjb10",
+        pde: "hjb10",
+        tonn: Some((&[4, 4], &[4, 4], &[1, 2, 1])),
+        hidden: 16,
+        entries: ALL_ENTRIES,
+    },
+    BuiltinPreset {
+        name: "tonn_hjb50",
+        pde: "hjb50",
+        tonn: Some((&[4, 4, 4], &[4, 4, 4], &[1, 2, 2, 1])),
+        hidden: 64,
+        entries: ALL_ENTRIES,
+    },
+    BuiltinPreset {
+        name: "tonn_micro_bs5",
+        pde: "bs_basket5",
+        tonn: Some((&[2, 4], &[4, 2], &[1, 2, 1])),
+        hidden: 8,
+        entries: ALL_ENTRIES,
+    },
+    BuiltinPreset {
+        name: "tonn_micro_ac",
+        pde: "allen_cahn2",
+        tonn: Some((&[2, 2], &[2, 2], &[1, 2, 1])),
+        hidden: 4,
+        entries: ALL_ENTRIES,
     },
 ];
 
@@ -906,11 +1067,11 @@ fn arr_usize(xs: &[usize]) -> Value {
     Value::Arr(xs.iter().map(|&x| Value::Num(x as f64)).collect())
 }
 
-fn builtin_arch(p: &BuiltinPreset) -> Value {
+fn builtin_arch(p: &BuiltinPreset, in_dim: usize) -> Value {
     match p.tonn {
         Some((fm, fn_, ranks)) => Value::obj(vec![
             ("type", Value::Str("tonn".into())),
-            ("in_dim", Value::Num(p.pde.in_dim() as f64)),
+            ("in_dim", Value::Num(in_dim as f64)),
             ("hidden", Value::Num(p.hidden as f64)),
             ("omega0", Value::Num(6.0)),
             ("factors_m", arr_usize(fm)),
@@ -919,7 +1080,7 @@ fn builtin_arch(p: &BuiltinPreset) -> Value {
         ]),
         None => Value::obj(vec![
             ("type", Value::Str("onn".into())),
-            ("in_dim", Value::Num(p.pde.in_dim() as f64)),
+            ("in_dim", Value::Num(in_dim as f64)),
             ("hidden", Value::Num(p.hidden as f64)),
             ("omega0", Value::Num(6.0)),
         ]),
@@ -939,11 +1100,12 @@ fn builtin_hyper() -> Hyper {
         k_multi: K_MULTI,
         stein_sigma: 0.05,
         stein_q: 20,
+        // None = the problem's own SoftBoundary default applies
+        bc_weight: None,
     }
 }
 
-fn builtin_entry_meta(ename: &str, d: usize, pde: Pde, stein_q: usize) -> EntryMeta {
-    let ind = pde.in_dim();
+fn builtin_entry_meta(ename: &str, d: usize, ind: usize, stein_q: usize) -> EntryMeta {
     let (inputs, outputs): (Vec<(String, Vec<usize>)>, Vec<Vec<usize>>) = match ename {
         "forward" => (
             vec![("phi".into(), vec![d]), ("x".into(), vec![B_FWD, ind])],
@@ -991,7 +1153,8 @@ fn builtin_entry_meta(ename: &str, d: usize, pde: Pde, stein_q: usize) -> EntryM
 pub fn builtin_manifest() -> Manifest {
     let mut presets = HashMap::new();
     for p in BUILTIN_PRESETS {
-        let arch = builtin_arch(p);
+        let problem = crate::pde::lookup(p.pde).expect("builtin preset names a registered problem");
+        let arch = builtin_arch(p, problem.in_dim());
         let (_, layout) = build_net(&arch).expect("builtin arch is well-formed");
         let hyper = builtin_hyper();
         let d = layout.param_dim;
@@ -999,14 +1162,14 @@ pub fn builtin_manifest() -> Manifest {
         for ename in p.entries {
             entries.insert(
                 ename.to_string(),
-                builtin_entry_meta(ename, d, p.pde, hyper.stein_q),
+                builtin_entry_meta(ename, d, problem.in_dim(), hyper.stein_q),
             );
         }
         presets.insert(
             p.name.to_string(),
             PresetMeta {
                 name: p.name.to_string(),
-                pde: p.pde,
+                pde: problem,
                 layout,
                 hyper,
                 entries,
@@ -1185,6 +1348,107 @@ mod tests {
         let ua2 = fwd.run1(&[&phi_a, &x]).unwrap();
         assert_eq!(ua1, ua2);
         assert_ne!(ua1, ub);
+    }
+
+    /// Every scenario preset (one per registered problem) must evaluate
+    /// end-to-end: forward respects the constraint style, and all loss
+    /// entries stay finite.
+    #[test]
+    fn scenario_presets_evaluate() {
+        let be = NativeBackend::builtin();
+        for preset in [
+            "tonn_micro_hjb5",
+            "tonn_micro_hjb10",
+            "tonn_hjb50",
+            "tonn_micro_bs5",
+            "tonn_micro_ac",
+        ] {
+            let pm = be.manifest().preset(preset).unwrap();
+            let mut rng = Rng::new(41);
+            let phi = pm.layout.init_vector(&mut rng);
+            let fwd = be.entry(preset, "forward").unwrap();
+            let mut x = vec![0.0f32; fwd.meta().input_len(1)];
+            rng.fill_uniform(&mut x, 0.05, 0.95);
+            let u = fwd.run1(&[&phi, &x]).unwrap();
+            assert!(u.iter().all(|v| v.is_finite()), "{preset}");
+
+            let loss = be.entry(preset, "loss").unwrap();
+            let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+            rng.fill_uniform(&mut xr, 0.05, 0.95);
+            let l = loss.run_scalar(&[&phi, &xr]).unwrap();
+            assert!(l.is_finite() && l >= 0.0, "{preset}: loss {l}");
+
+            let stein = be.entry(preset, "loss_stein").unwrap();
+            let mut z = vec![0.0f32; stein.meta().input_len(2)];
+            rng.fill_normal(&mut z);
+            let ls = stein.run_scalar(&[&phi, &xr, &z]).unwrap();
+            assert!(ls.is_finite() && ls >= 0.0, "{preset}: stein {ls}");
+        }
+    }
+
+    /// Hard terminal conditions of the scenario presets hold exactly
+    /// after the transform, for any network output.
+    #[test]
+    fn scenario_hard_constraints_hold() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro_bs5").unwrap();
+        let mut rng = Rng::new(5);
+        let phi = pm.layout.init_vector(&mut rng);
+        let fwd = be.entry("tonn_micro_bs5", "forward").unwrap();
+        let mut x = vec![0.0f32; fwd.meta().input_len(1)];
+        rng.fill_uniform(&mut x, 0.1, 0.9);
+        // pin row 0 to the terminal slice t = 1: u must equal the payoff
+        x[5] = 1.0;
+        let u = fwd.run1(&[&phi, &x]).unwrap();
+        let payoff = pm.pde.exact(&x[..6]);
+        assert!(
+            (u[0] - payoff).abs() < 1e-5,
+            "terminal condition broken: {} vs {payoff}",
+            u[0]
+        );
+    }
+
+    /// The soft-constraint boundary term must be active for the
+    /// Allen–Cahn preset, scale with the weight, and be runtime-tunable
+    /// through `Backend::set_bc_weight`; presets with hard constraints
+    /// must refuse the override.
+    #[test]
+    fn soft_boundary_term_is_active_and_tunable() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro_ac").unwrap();
+        assert!(pm.pde.boundary().is_some());
+        let loss = be.entry("tonn_micro_ac", "loss").unwrap();
+        let mut rng = Rng::new(9);
+        let phi = pm.layout.init_vector(&mut rng);
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.1, 0.9);
+
+        let l_default = loss.run_scalar(&[&phi, &xr]).unwrap();
+        assert!(be.set_bc_weight("tonn_micro_ac", 0.0));
+        let l_residual_only = loss.run_scalar(&[&phi, &xr]).unwrap();
+        assert!(be.set_bc_weight("tonn_micro_ac", 5.0));
+        let l_heavy = loss.run_scalar(&[&phi, &xr]).unwrap();
+        // default weight is 1.0 > 0: a random-init network violates the
+        // BC, so the ladder must be strictly ordered
+        assert!(
+            l_residual_only < l_default && l_default < l_heavy,
+            "boundary term inert: {l_residual_only} / {l_default} / {l_heavy}"
+        );
+        // same ladder through the Stein estimator
+        let stein = be.entry("tonn_micro_ac", "loss_stein").unwrap();
+        let mut z = vec![0.0f32; stein.meta().input_len(2)];
+        rng.fill_normal(&mut z);
+        let s_heavy = stein.run_scalar(&[&phi, &xr, &z]).unwrap();
+        assert!(be.set_bc_weight("tonn_micro_ac", 0.0));
+        let s_none = stein.run_scalar(&[&phi, &xr, &z]).unwrap();
+        assert!(s_none < s_heavy, "stein boundary term inert: {s_none} vs {s_heavy}");
+
+        // hard-constrained presets reject the override, and invalid
+        // weights are rejected rather than clamped
+        assert!(!be.set_bc_weight("tonn_micro", 1.0));
+        assert!(!be.set_bc_weight("no_such_preset", 1.0));
+        assert!(!be.set_bc_weight("tonn_micro_ac", -1.0));
+        assert!(!be.set_bc_weight("tonn_micro_ac", f32::NAN));
     }
 
     #[test]

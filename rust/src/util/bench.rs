@@ -156,6 +156,10 @@ pub struct BenchCase {
     pub baseline_median_s: Option<f64>,
     /// `baseline_median_s / median_s` (> 1 means faster than baseline)
     pub speedup: Option<f64>,
+    /// extra named scalar metrics serialized onto the case object
+    /// (additive schema extension — e.g. the scenario sweep's
+    /// `final_val` per problem); empty for plain timing cases
+    pub extra: Vec<(String, f64)>,
 }
 
 /// A named group of bench cases destined for `BENCH_native.json`.
@@ -218,11 +222,18 @@ impl BenchReport {
                     0.0
                 }
             }),
+            extra: Vec::new(),
         });
     }
 
     /// Record a one-shot wall-time measured outside [`bench`].
     pub fn case_raw(&mut self, name: &str, seconds: f64) {
+        self.case_raw_with(name, seconds, &[]);
+    }
+
+    /// [`Self::case_raw`] plus extra named scalar metrics (e.g. a final
+    /// loss value alongside the wall time).
+    pub fn case_raw_with(&mut self, name: &str, seconds: f64, extra: &[(&str, f64)]) {
         self.cases.push(BenchCase {
             name: name.to_string(),
             iters: 1,
@@ -233,6 +244,7 @@ impl BenchReport {
             per_sec: if seconds > 0.0 { 1.0 / seconds } else { 0.0 },
             baseline_median_s: None,
             speedup: None,
+            extra: extra.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
         });
     }
 
@@ -270,7 +282,13 @@ impl BenchReport {
                 if let Some(s) = c.speedup {
                     pairs.push(("speedup", Value::Num(s)));
                 }
-                Value::obj(pairs)
+                let mut v = Value::obj(pairs);
+                if let Value::Obj(obj) = &mut v {
+                    for (k, x) in &c.extra {
+                        obj.push((k.clone(), Value::Num(*x)));
+                    }
+                }
+                v
             })
             .collect();
         Value::obj(vec![
@@ -400,6 +418,17 @@ mod tests {
         assert_eq!(cases.len(), 4);
         assert_eq!(cases[1].get("speedup").unwrap().as_f64(), Some(4.0));
         assert!(cases[0].get("speedup").is_none());
+    }
+
+    #[test]
+    fn case_raw_with_serializes_extra_metrics() {
+        let mut rep = BenchReport::new("sweep", "native-cpu", 2, 32);
+        rep.case_raw_with("hjb5 train", 1.5, &[("final_val", 0.125), ("epochs", 20.0)]);
+        let j = rep.to_json();
+        let c = &j.get("cases").unwrap().as_arr().unwrap()[0];
+        assert_eq!(c.get("final_val").unwrap().as_f64(), Some(0.125));
+        assert_eq!(c.get("epochs").unwrap().as_f64(), Some(20.0));
+        assert_eq!(c.get("median_s").unwrap().as_f64(), Some(1.5));
     }
 
     #[test]

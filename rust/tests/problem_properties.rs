@@ -1,0 +1,219 @@
+//! Registry-wide property tests over the `pde::problem` subsystem — the
+//! guard against enum→trait porting drift. Every assertion here runs
+//! against EVERY registered problem, so a new scenario is covered the
+//! moment it is registered:
+//!
+//! * `stencil_rows` emits exactly `n_stencil · in_dim` floats, base row
+//!   first, each perturbed row differing from the base in exactly one
+//!   coordinate by ±h (the layout `runtime::native::loss_fd` indexes);
+//! * the hard-constraint transform is affine in f and pins the
+//!   constraint surfaces;
+//! * the base row round-trips transform/residual against the exact
+//!   solution: deriving f* from u* through the (affine) transform and
+//!   FD-estimating its derivatives on the stencil must drive the
+//!   assembled residual to ≈ 0 — exactly the `loss_fd` assembly, so a
+//!   ported residual/transform/exact that drifted from its enum-era
+//!   arithmetic fails here;
+//! * soft-constraint boundary projections land on the constraint set
+//!   and target the exact solution.
+
+use photon_pinn::pde::{registry, Problem};
+use photon_pinn::util::rng::Rng;
+
+fn sample_point(p: &dyn Problem, rng: &mut Rng, lo: f32, hi: f32) -> Vec<f32> {
+    (0..p.in_dim()).map(|_| lo + (hi - lo) * rng.f32()).collect()
+}
+
+#[test]
+fn registry_serves_the_scenario_suite() {
+    let names = registry().names();
+    assert!(names.len() >= 6, "registry too small: {names:?}");
+    for want in [
+        "hjb5",
+        "hjb10",
+        "hjb20",
+        "hjb50",
+        "poisson2",
+        "heat2",
+        "bs_basket5",
+        "allen_cahn2",
+    ] {
+        assert!(names.iter().any(|n| n == want), "missing '{want}' in {names:?}");
+    }
+    // at least one soft-constraint problem (boundary-loss path coverage)
+    assert!(
+        registry().problems().any(|p| p.boundary().is_some()),
+        "no soft-constraint problem registered"
+    );
+}
+
+#[test]
+fn stencil_rows_shape_and_layout() {
+    let h = 0.05f32;
+    for p in registry().problems() {
+        let (d, ind, s) = (p.dim(), p.in_dim(), p.n_stencil());
+        assert_eq!(ind, d + usize::from(p.has_time()), "{}", p.name());
+        assert_eq!(s, 1 + 2 * d + usize::from(p.has_time()), "{}", p.name());
+        let mut rng = Rng::new(11);
+        for _case in 0..5 {
+            let x = sample_point(p.as_ref(), &mut rng, 0.2, 0.8);
+            let mut out = Vec::new();
+            p.stencil_rows(&x, h, &mut out);
+            assert_eq!(out.len(), s * ind, "{}: stencil_rows length", p.name());
+            assert_eq!(&out[..ind], &x[..], "{}: base row first", p.name());
+            for r in 1..s {
+                let row = &out[r * ind..(r + 1) * ind];
+                let diffs: Vec<usize> = (0..ind).filter(|&j| row[j] != x[j]).collect();
+                assert_eq!(
+                    diffs.len(),
+                    1,
+                    "{}: row {r} must differ from base in exactly one coord",
+                    p.name()
+                );
+                let j = diffs[0];
+                assert!(
+                    ((row[j] - x[j]).abs() - h).abs() < 1e-6,
+                    "{}: row {r} perturbation is not ±h",
+                    p.name()
+                );
+            }
+            // the last row perturbs time (+h) when the problem has time
+            if p.has_time() {
+                let last = &out[(s - 1) * ind..s * ind];
+                assert!(
+                    (last[ind - 1] - (x[ind - 1] + h)).abs() < 1e-6,
+                    "{}: forward time row last",
+                    p.name()
+                );
+            }
+        }
+    }
+}
+
+/// Invert the (affine-in-f) constraint transform at x:
+/// u = a(x)·f + b(x) ⇒ f = (u − b)/a.
+fn f_from_exact(p: &dyn Problem, x: &[f32]) -> f32 {
+    let b = p.transform(0.0, x);
+    let a = p.transform(1.0, x) - b;
+    (p.exact(x) - b) / a
+}
+
+#[test]
+fn transform_is_affine_in_f() {
+    // T(f) = a·f + b ⇒ T(2) − T(1) == T(1) − T(0); the loss assemblies
+    // and f_from_exact both rely on this structure
+    for p in registry().problems() {
+        let mut rng = Rng::new(23);
+        for _case in 0..5 {
+            let x = sample_point(p.as_ref(), &mut rng, 0.1, 0.9);
+            let t0 = p.transform(0.0, &x);
+            let t1 = p.transform(1.0, &x);
+            let t2 = p.transform(2.0, &x);
+            let scale = t0.abs().max(t1.abs()).max(1.0);
+            assert!(
+                ((t2 - t1) - (t1 - t0)).abs() <= 1e-4 * scale,
+                "{}: transform not affine at {x:?}",
+                p.name()
+            );
+        }
+    }
+}
+
+/// The core porting-drift guard: FD-estimate f*'s derivatives on the
+/// stencil (exactly as `loss_fd` does) and assemble the residual — on
+/// the exact solution it must vanish up to FD truncation + f32 noise.
+/// Tolerances are generous (high-dim Laplacian estimates amplify f32
+/// rounding by 1/h²) but far below the O(1)–O(10) error any transposed
+/// sign, wrong constant, or mis-indexed derivative produces.
+#[test]
+fn residual_round_trips_exact_solution_through_fd() {
+    for p in registry().problems() {
+        let (d, ind, s) = (p.dim(), p.in_dim(), p.n_stencil());
+        // higher-dim problems need a larger h: the Laplacian sums d
+        // second differences, each dividing f32 rounding noise (scaled
+        // by the O(d)-sized ‖x‖₁ terms) by h² — bigger h trades
+        // truncation (zero for the HJB family, whose f* is constant)
+        // for noise headroom
+        let (h, tol) = if d >= 20 {
+            (0.1f32, 1.0f32)
+        } else if d >= 5 {
+            (0.05, 0.5)
+        } else {
+            (0.02, 0.5)
+        };
+        let mut rng = Rng::new(3);
+        for _case in 0..8 {
+            // interior sampling keeps a(x) ≠ 0 and f* well-conditioned
+            let x = sample_point(p.as_ref(), &mut rng, 0.3, 0.7);
+            let mut rows = Vec::new();
+            p.stencil_rows(&x, h, &mut rows);
+            let f: Vec<f32> = (0..s)
+                .map(|i| f_from_exact(p.as_ref(), &rows[i * ind..(i + 1) * ind]))
+                .collect();
+            let mut df = vec![0.0f32; ind];
+            let mut d2 = vec![0.0f32; d];
+            let mut lap_sum = 0.0f32;
+            for i in 0..d {
+                let fp = f[1 + 2 * i];
+                let fm = f[2 + 2 * i];
+                df[i] = (fp - fm) / (2.0 * h);
+                lap_sum += fp - 2.0 * f[0] + fm;
+                d2[i] = (fp - 2.0 * f[0] + fm) / (h * h);
+            }
+            let lap = lap_sum / (h * h);
+            if p.has_time() {
+                df[d] = (f[s - 1] - f[0]) / h;
+            }
+            let r = p.residual(f[0], &df, lap, &d2, &x);
+            assert!(
+                r.abs() < tol,
+                "{}: residual {r} on the exact solution at {x:?} (h = {h})",
+                p.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn boundary_projections_land_on_the_constraint_set() {
+    for p in registry().problems() {
+        let Some(sb) = p.boundary() else { continue };
+        assert!(sb.default_weight > 0.0, "{}", p.name());
+        let (d, ind) = (p.dim(), p.in_dim());
+        let faces = 2 * d + usize::from(p.has_time());
+        let mut rng = Rng::new(7);
+        for i in 0..2 * faces {
+            let x = sample_point(p.as_ref(), &mut rng, 0.2, 0.8);
+            let mut xb = vec![0.0f32; ind];
+            let target = p.boundary_project(i, &x, &mut xb);
+            // exactly one coordinate moved, onto a face / the t=0 slice
+            let moved: Vec<usize> = (0..ind).filter(|&j| xb[j] != x[j]).collect();
+            assert_eq!(moved.len(), 1, "{}: projection {i}", p.name());
+            let j = moved[0];
+            assert!(
+                xb[j] == 0.0 || xb[j] == 1.0,
+                "{}: projected coord {} not on a face",
+                p.name(),
+                xb[j]
+            );
+            // the target is the exact solution on the constraint set
+            assert!(
+                (target - p.exact(&xb)).abs() < 1e-5,
+                "{}: target {target} vs exact {}",
+                p.name(),
+                p.exact(&xb)
+            );
+        }
+        // every face is reachable: projections of 0..faces hit distinct
+        // (coordinate, value) pairs
+        let x = sample_point(p.as_ref(), &mut rng, 0.2, 0.8);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..faces {
+            let mut xb = vec![0.0f32; ind];
+            p.boundary_project(i, &x, &mut xb);
+            let j = (0..ind).find(|&j| xb[j] != x[j]).unwrap();
+            seen.insert((j, xb[j].to_bits()));
+        }
+        assert_eq!(seen.len(), faces, "{}: faces not all exercised", p.name());
+    }
+}

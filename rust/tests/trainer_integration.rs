@@ -92,6 +92,52 @@ fn heat_preset_trains() {
     assert_eq!(res.metrics.records.len() as u64 + res.metrics.skipped_epochs, 60);
 }
 
+/// Every fast-sized scenario preset of the problem registry trains end
+/// to end through the generic trainer — no scenario-specific code paths
+/// anywhere in the coordinator. (`tonn_hjb50` is covered by the
+/// release-mode scenario_sweep bench; 102-row stencils are too slow for
+/// debug-mode unit tests.)
+#[test]
+fn scenario_presets_train() {
+    let be = NativeBackend::builtin();
+    for (preset, epochs) in [
+        ("tonn_micro_hjb5", 25),
+        ("tonn_micro_hjb10", 10),
+        ("tonn_micro_bs5", 25),
+    ] {
+        let mut cfg = quick_cfg(&be, preset, epochs);
+        cfg.noise = NoiseConfig::ideal();
+        let res = OnChipTrainer::new(&be, cfg).unwrap().train().unwrap();
+        assert!(res.final_val.is_finite(), "{preset}");
+        assert_eq!(
+            res.metrics.records.len() as u64 + res.metrics.skipped_epochs,
+            epochs as u64,
+            "{preset}"
+        );
+    }
+}
+
+/// The soft-constraint Allen–Cahn preset trains with its boundary-loss
+/// term, and `TrainConfig.bc_weight` flows through to the backend — a
+/// hard-constrained preset must reject the override loudly.
+#[test]
+fn soft_constraint_preset_trains_and_bc_weight_flows() {
+    let be = NativeBackend::builtin();
+    let mut cfg = quick_cfg(&be, "tonn_micro_ac", 40);
+    cfg.noise = NoiseConfig::ideal();
+    cfg.bc_weight = Some(2.0);
+    let res = OnChipTrainer::new(&be, cfg).unwrap().train().unwrap();
+    assert!(res.final_val.is_finite());
+
+    let mut bad = quick_cfg(&be, "tonn_micro", 5);
+    bad.bc_weight = Some(1.0);
+    let err = OnChipTrainer::new(&be, bad)
+        .err()
+        .expect("hard-constraint preset must reject bc_weight");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("soft"), "{msg}");
+}
+
 #[test]
 fn training_under_hardware_noise_completes() {
     let be = NativeBackend::builtin();
