@@ -5,7 +5,7 @@
 
 mod common;
 
-use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig, UpdateRule};
+use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
 use photon_pinn::util::bench::Table;
 use photon_pinn::util::stats::sci;
 
@@ -16,22 +16,22 @@ fn main() {
         "A1 — SPSA update-rule & radius ablation (tonn_small, ZO on-chip)",
         &["update", "mu", "lr", "final val MSE", "best val MSE", "skipped"],
     );
-    for (rule, mu, lr) in [
-        (UpdateRule::SignSgd, 0.02, 0.02),   // the paper's configuration
-        (UpdateRule::RawSgd, 0.02, 0.02),    // no sign de-noising
-        (UpdateRule::RawSgd, 0.02, 0.002),   // no sign, tamer lr
-        (UpdateRule::SignSgd, 0.1, 0.02),    // big radius
-        (UpdateRule::SignSgd, 0.005, 0.02),  // small radius
+    for (optimizer, mu, lr) in [
+        ("zo-signsgd", 0.02, 0.02),   // the paper's configuration
+        ("zo-sgd", 0.02, 0.02),       // no sign de-noising
+        ("zo-sgd", 0.02, 0.002),      // no sign, tamer lr
+        ("zo-signsgd", 0.1, 0.02),    // big radius
+        ("zo-signsgd", 0.005, 0.02),  // small radius
     ] {
         let mut cfg = TrainConfig::from_manifest(&rt, "tonn_small").unwrap();
         cfg.epochs = epochs;
-        cfg.update_rule = rule;
+        cfg.optimizer = optimizer.into();
         cfg.spsa_mu = mu;
         cfg.lr = lr;
         cfg.validate_every = 50;
         let res = OnChipTrainer::new(&rt, cfg).unwrap().train().unwrap();
         t.row(&[
-            format!("{rule:?}"),
+            optimizer.to_string(),
             mu.to_string(),
             lr.to_string(),
             sci(res.final_val as f64),

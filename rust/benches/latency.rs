@@ -16,6 +16,7 @@
 
 mod common;
 
+use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
 use photon_pinn::optim::Spsa;
 use photon_pinn::pde::Sampler;
 use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
@@ -162,6 +163,56 @@ fn main() {
                 val.run_scalar(&[&phi, &xv, &uv]).unwrap();
             });
             record(&mut rep, runs);
+        }
+    }
+
+    // train_throughput: full ZO training epochs through the probe-
+    // parallel batched loss path vs the 1-thread sequential engine
+    // (epochs/s is THE number the paper's "real-time" claim cares
+    // about). The parallel case joins the enforce gate below: CI fails
+    // if probe-parallel training is slower than sequential.
+    {
+        let preset = "tonn_small";
+        if rt.manifest().preset(preset).is_ok() {
+            let epochs = if fast { 3 } else { 12 };
+            let iters = if fast { 3 } else { 5 };
+            let mut cfg = TrainConfig::from_manifest(&rt, preset).unwrap();
+            cfg.epochs = epochs;
+            cfg.seed = 1;
+            cfg.validate_every = 0;
+            cfg.verbose = false;
+            let mut final_val = 0.0f32;
+            let mut run = |par: ParallelConfig, label: &str| {
+                rt.set_parallel(par);
+                bench(
+                    &format!("train/{preset} {epochs}ep {label}"),
+                    1,
+                    iters,
+                    || {
+                        let res = OnChipTrainer::new(&rt, cfg.clone())
+                            .unwrap()
+                            .train()
+                            .unwrap();
+                        final_val = res.final_val;
+                    },
+                )
+            };
+            let seq = run(seq_cfg, "engine seq(1T)");
+            let par = run(par_cfg, &format!("engine par({}T)", par_cfg.threads));
+            rep.case_vs(&seq, None);
+            rep.case_vs(&par, Some(&seq));
+            rep.case_raw_with(
+                &format!("train_throughput/{preset}"),
+                par.median_s,
+                &[
+                    ("epochs_per_s_par", epochs as f64 / par.median_s),
+                    ("epochs_per_s_seq", epochs as f64 / seq.median_s),
+                    ("final_val", final_val as f64),
+                ],
+            );
+            enforced.push((par.name.clone(), par.median_s, seq.median_s));
+            results.push(seq);
+            results.push(par);
         }
     }
 

@@ -1,4 +1,13 @@
-//! Checkpointing: commanded parameters + run metadata as JSON.
+//! Checkpointing: commanded parameters + optimizer state + run metadata
+//! as JSON.
+//!
+//! The trainer writes one on every validation epoch and at the end of a
+//! run when `TrainConfig.checkpoint_path` is set; `--resume <path>`
+//! (`TrainConfig.resume`) restores Φ, the optimizer's internal state
+//! ([`crate::optim::Optimizer::state`]) and the completed-epoch count,
+//! then continues **bit-identically** to an uninterrupted run (the
+//! trainer replays the deterministic per-epoch RNG draws up to the
+//! checkpointed epoch).
 
 use std::path::Path;
 
@@ -10,10 +19,30 @@ use crate::util::json::{self, Value};
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
     pub preset: String,
+    /// completed epochs (the resumed run continues at this epoch)
     pub epoch: usize,
     pub seed: u64,
     pub phi: Vec<f32>,
     pub final_val: Option<f32>,
+    /// optimizer registry name that produced `opt_state` (empty in
+    /// legacy checkpoints = unknown; the resumer then trusts its own
+    /// config)
+    pub optimizer: String,
+    /// gradient-estimator registry name the run was using (empty in
+    /// legacy checkpoints)
+    pub estimator: String,
+    /// chip noise realization the run was training on (`None` in
+    /// legacy checkpoints; resuming on a different chip is refused).
+    /// NOTE: the noise *severity* (`TrainConfig.noise`) is run config,
+    /// not checkpoint state — re-supply `--noise-scale` when resuming
+    /// a non-default-noise run from the CLI.
+    pub chip_seed: Option<u64>,
+    /// loss estimator tag (`"fd"` / `"stein"`; empty in legacy
+    /// checkpoints)
+    pub loss_kind: String,
+    /// optimizer internal state ([`crate::optim::Optimizer::state`];
+    /// `Value::Null` for stateless rules and legacy checkpoints)
+    pub opt_state: Value,
 }
 
 impl Checkpoint {
@@ -28,12 +57,27 @@ impl Checkpoint {
                     .map(|v| Value::Num(v as f64))
                     .unwrap_or(Value::Null),
             ),
+            ("optimizer", Value::Str(self.optimizer.clone())),
+            ("estimator", Value::Str(self.estimator.clone())),
+            (
+                "chip_seed",
+                self.chip_seed
+                    .map(|s| Value::Num(s as f64))
+                    .unwrap_or(Value::Null),
+            ),
+            ("loss_kind", Value::Str(self.loss_kind.clone())),
+            ("opt_state", self.opt_state.clone()),
             ("phi", Value::arr_f32(&self.phi)),
         ]);
         if let Some(parent) = path.parent() {
             std::fs::create_dir_all(parent)?;
         }
-        std::fs::write(path, v.to_string())?;
+        // atomic replace: the trainer rewrites this path on every
+        // validation epoch, and a crash mid-write must never destroy
+        // the previous good checkpoint
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, v.to_string())?;
+        std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
@@ -47,6 +91,12 @@ impl Checkpoint {
             .iter()
             .map(|x| x.as_f64().unwrap_or(0.0) as f32)
             .collect();
+        let str_or_empty = |k: &str| {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .unwrap_or_default()
+                .to_string()
+        };
         Ok(Checkpoint {
             preset: v
                 .req("preset")
@@ -57,6 +107,11 @@ impl Checkpoint {
             epoch: v.get("epoch").and_then(|x| x.as_usize()).unwrap_or(0),
             seed: v.get("seed").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
             final_val: v.get("final_val").and_then(|x| x.as_f64()).map(|f| f as f32),
+            optimizer: str_or_empty("optimizer"),
+            estimator: str_or_empty("estimator"),
+            chip_seed: v.get("chip_seed").and_then(|x| x.as_f64()).map(|s| s as u64),
+            loss_kind: str_or_empty("loss_kind"),
+            opt_state: v.get("opt_state").cloned().unwrap_or(Value::Null),
             phi,
         })
     }
@@ -74,6 +129,15 @@ mod tests {
             seed: 42,
             phi: vec![0.25, -1.5, 3.0e-4],
             final_val: Some(5.5e-3),
+            optimizer: "zo-adam".into(),
+            estimator: "spsa".into(),
+            chip_seed: Some(11),
+            loss_kind: "fd".into(),
+            opt_state: Value::obj(vec![
+                ("t", Value::Num(1500.0)),
+                ("m", Value::arr_f32(&[0.1, -0.2, 0.3])),
+                ("v", Value::arr_f32(&[0.01, 0.02, 0.03])),
+            ]),
         };
         let dir = std::env::temp_dir().join(format!("pp_ck_{}", std::process::id()));
         let path = dir.join("ck.json");
@@ -82,10 +146,39 @@ mod tests {
         assert_eq!(back.preset, ck.preset);
         assert_eq!(back.epoch, ck.epoch);
         assert_eq!(back.seed, ck.seed);
-        assert_eq!(back.phi.len(), 3);
-        for (a, b) in back.phi.iter().zip(&ck.phi) {
-            assert!((a - b).abs() < 1e-6);
-        }
+        assert_eq!(back.optimizer, "zo-adam");
+        assert_eq!(back.estimator, "spsa");
+        assert_eq!(back.chip_seed, Some(11));
+        assert_eq!(back.loss_kind, "fd");
+        // atomic-save leftover must not linger
+        assert!(!path.with_extension("tmp").exists());
+        // phi and optimizer state must roundtrip BIT-exactly: resume
+        // correctness depends on it (f32 -> f64 -> shortest-roundtrip
+        // JSON -> f64 -> f32 is lossless for finite values)
+        assert_eq!(back.phi, ck.phi);
+        assert_eq!(back.opt_state, ck.opt_state);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_checkpoint_defaults_optimizer_fields() {
+        // a PR-3-era checkpoint has no optimizer/estimator/opt_state
+        let dir = std::env::temp_dir().join(format!("pp_ck_legacy_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.json");
+        std::fs::write(
+            &path,
+            r#"{"preset":"tonn_micro","epoch":7,"seed":3,"final_val":null,"phi":[0.5,1.25]}"#,
+        )
+        .unwrap();
+        let ck = Checkpoint::load(&path).unwrap();
+        assert_eq!(ck.epoch, 7);
+        assert_eq!(ck.optimizer, "");
+        assert_eq!(ck.estimator, "");
+        assert_eq!(ck.chip_seed, None);
+        assert_eq!(ck.loss_kind, "");
+        assert_eq!(ck.opt_state, Value::Null);
+        assert_eq!(ck.phi, vec![0.5, 1.25]);
         std::fs::remove_dir_all(&dir).ok();
     }
 

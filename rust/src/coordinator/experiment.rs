@@ -8,7 +8,7 @@
 use anyhow::Result;
 
 use super::offchip::{OffChipConfig, OffChipTrainer};
-use super::trainer::{LossKind, OnChipTrainer, TrainConfig, UpdateRule};
+use super::trainer::{LossKind, OnChipTrainer, TrainConfig};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
 use crate::runtime::Backend;
 
@@ -98,7 +98,7 @@ impl<'rt> Table1Runner<'rt> {
         tc.seed = self.cfg.seed;
         tc.noise = self.cfg.noise.clone();
         tc.chip_seed = self.cfg.chip_seed;
-        tc.update_rule = UpdateRule::SignSgd;
+        tc.optimizer = "zo-signsgd".into();
         tc.loss_kind = LossKind::Fd;
         tc.verbose = self.cfg.verbose;
         let mut on = OnChipTrainer::new(self.rt, tc)?;

@@ -1,9 +1,12 @@
 //! The digital control system (Layer 3) — the paper's Fig. 1 box around
 //! the photonic accelerator.
 //!
-//! * [`trainer`] — BP-free on-chip training: SPSA perturbation batches,
-//!   noisy phase programming, ZO-signSGD updates. The photonic chip (=
-//!   the AOT artifacts) only ever evaluates losses.
+//! * [`trainer`] — BP-free on-chip training: perturbation batches from
+//!   a pluggable gradient estimator, noisy phase programming, ONE
+//!   probe-parallel batched loss dispatch per epoch, and a pluggable
+//!   ZO optimizer (both resolved by name from the
+//!   [`crate::optim`] registries). The photonic chip (= the AOT
+//!   artifacts) only ever evaluates losses.
 //! * [`offchip`] — the Table-1 baseline: exact-BP Adam training on the
 //!   ideal software model, then mapping to a noisy chip.
 //! * [`validator`] — validation MSE vs the exact PDE solution.

@@ -14,15 +14,19 @@
 //! native backend, total CPU pressure is roughly `workers x threads` —
 //! size the two together).
 //!
-//! Jobs are problem-agnostic: each [`SolveRequest`] carries a full
-//! `TrainConfig`, so one service instance drains a mixed stream of
-//! scenarios (every problem in the `pde` registry — see
-//! `benches/scenario_sweep.rs`, which sweeps the whole registry through
-//! this service). Note `TrainConfig.bc_weight`, like
-//! `TrainConfig.parallel`, mutates *shared backend* state at trainer
-//! construction: on a shared-backend service it reconfigures that
-//! preset for every worker — set soft-constraint weights once, not
-//! per job.
+//! Jobs are problem-agnostic AND optimizer-agnostic: each
+//! [`SolveRequest`] carries a full `TrainConfig`, so one service
+//! instance drains a mixed stream of scenarios (every problem in the
+//! `pde` registry — see `benches/scenario_sweep.rs`, which sweeps the
+//! whole registry through this service) under any registered
+//! optimizer/estimator pair (`TrainConfig.{optimizer,estimator}` —
+//! workers resolve them by name per job, nothing is shared). Note
+//! `TrainConfig.bc_weight`, like `TrainConfig.parallel`, mutates
+//! *shared backend* state at trainer construction: on a shared-backend
+//! service it reconfigures that preset for every worker — set
+//! soft-constraint weights once, not per job. A worker training with
+//! probe-parallel losses multiplies thread pressure (`workers ×
+//! threads`), same sizing rule as before.
 //!
 //! Two backend topologies:
 //!

@@ -4,36 +4,42 @@
 //!
 //! 1. samples a collocation minibatch (the "training data shed into the
 //!    inference accelerator");
-//! 2. samples N SPSA perturbations ξ_i and builds the K = N+1 commanded
-//!    phase settings [Φ, Φ+μξ_1, ..., Φ+μξ_N];
+//! 2. asks the pluggable [`GradientEstimator`] (resolved by name from
+//!    [`crate::optim::estimator::global`]; `spsa` reproduces the paper's
+//!    Eq. 5 draw-for-draw) for the perturbation block and the K = N+1
+//!    commanded phase settings [Φ, Φ+μξ_1, ..., Φ+μξ_N];
 //! 3. programs each setting through the chip's noise path
-//!    (Φ_eff = Ω(ΓΦ)+Φ_b) and dispatches ONE `loss_multi` executable —
-//!    K sequential on-chip loss evaluations, each internally performing
-//!    the 42-inference FD fan-out;
-//! 4. forms the SPSA estimate (Eq. 5) and applies the ZO-signSGD update
-//!    (Eq. 6) to the *commanded* parameters.
+//!    (Φ_eff = Ω(ΓΦ)+Φ_b) and dispatches ONE batched loss executable
+//!    (`loss_multi` / `loss_stein_multi`) — the native engine fans the
+//!    K independent probes out across workers (two-level parallelism:
+//!    probes × row blocks, see [`crate::runtime::parallel`]), and
+//!    probe-parallel ≡ sequential bit for bit;
+//! 4. forms the gradient estimate (Eq. 5) and applies the pluggable
+//!    [`Optimizer`] (resolved from [`crate::optim::optimizer::global`];
+//!    `zo-signsgd` reproduces Eq. 6 bit-for-bit) to the *commanded*
+//!    parameters.
 //!
 //! The optimizer therefore adapts to the chip's realized imperfection —
-//! exactly the robustness mechanism Table 1 credits on-chip training for.
+//! exactly the robustness mechanism Table 1 credits on-chip training
+//! for. Neither seam is hard-wired: `TrainConfig.{optimizer,estimator}`
+//! select variants (ZO-Adam, momentum, antithetic SPSA, ...) by name,
+//! manifests may pin them per preset (`hyper.optimizer`), and
+//! checkpoints carry the optimizer's internal state so `--resume`
+//! continues bit-identically.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use super::checkpoint::Checkpoint;
 use super::metrics::{EpochRecord, RunMetrics};
 use super::validator::Validator;
-use crate::optim::{LrSchedule, Spsa, ZoSgd, ZoSignSgd};
+use crate::optim::{GradientEstimator, LrSchedule, Optimizer};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
 use crate::pde::{Problem, Sampler};
 use crate::runtime::{Backend, Entry, ParallelConfig};
-
-/// Update rule variant (ablation A1: sign de-noising on/off).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum UpdateRule {
-    SignSgd,
-    RawSgd,
-}
 
 /// Loss estimator variant (ablation A4: FD vs Stein).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -41,6 +47,20 @@ pub enum LossKind {
     Fd,
     Stein,
 }
+
+/// Checkpoint tag for [`LossKind`] (resume-identity check).
+pub fn loss_kind_name(kind: LossKind) -> &'static str {
+    match kind {
+        LossKind::Fd => "fd",
+        LossKind::Stein => "stein",
+    }
+}
+
+/// Default bound on consecutive skipped (non-finite-loss) epochs before
+/// the trainer aborts — long enough for a transient blow-up to recover
+/// under the step-decay schedule, short enough that a diverged run
+/// fails in seconds instead of spinning to `epochs`.
+pub const DEFAULT_MAX_SKIPPED_RUN: usize = 25;
 
 /// On-chip training configuration.
 #[derive(Clone, Debug)]
@@ -60,8 +80,25 @@ pub struct TrainConfig {
     pub chip_seed: u64,
     /// validate every this many epochs (0 = only at the end)
     pub validate_every: usize,
-    pub update_rule: UpdateRule,
+    /// optimizer registry name ([`crate::optim::optimizer::global`];
+    /// Eq. 6 is `zo-signsgd`, ablation A1's raw rule is `zo-sgd`,
+    /// plus `zo-adam` / `momentum-sgd`)
+    pub optimizer: String,
+    /// gradient-estimator registry name
+    /// ([`crate::optim::estimator::global`]; Eq. 5 is `spsa`)
+    pub estimator: String,
     pub loss_kind: LossKind,
+    /// abort (loudly) after this many CONSECUTIVE epochs whose probe
+    /// losses were non-finite; 0 disables the guard (the pre-PR-4
+    /// skip-forever behavior)
+    pub max_skipped_run: usize,
+    /// write a [`Checkpoint`] (Φ + optimizer state + epoch) here on
+    /// every validation epoch and at the end of the run
+    pub checkpoint_path: Option<PathBuf>,
+    /// resume from this checkpoint: restores Φ, optimizer state and the
+    /// completed-epoch count, then continues bit-identically to an
+    /// uninterrupted run (same `seed` required)
+    pub resume: Option<PathBuf>,
     /// evaluation-engine parallelism applied to the backend at trainer
     /// construction; `None` (the default) keeps its current setting.
     /// NOTE: the engine config lives on the backend, so on a SHARED
@@ -95,8 +132,12 @@ impl TrainConfig {
             noise: NoiseConfig::default_chip(),
             chip_seed: 1,
             validate_every: 100,
-            update_rule: UpdateRule::SignSgd,
+            optimizer: h.optimizer.clone().unwrap_or_else(|| "zo-signsgd".into()),
+            estimator: h.estimator.clone().unwrap_or_else(|| "spsa".into()),
             loss_kind: LossKind::Fd,
+            max_skipped_run: DEFAULT_MAX_SKIPPED_RUN,
+            checkpoint_path: None,
+            resume: None,
             parallel: None,
             bc_weight: None,
             verbose: false,
@@ -114,14 +155,21 @@ pub struct TrainResult {
     pub metrics: RunMetrics,
 }
 
-/// The on-chip ZO trainer (generic over the execution [`Backend`]).
+/// The on-chip ZO trainer (generic over the execution [`Backend`], the
+/// [`GradientEstimator`] and the [`Optimizer`] — it references no
+/// concrete estimator or update-rule type).
 pub struct OnChipTrainer<'rt> {
     rt: &'rt dyn Backend,
     cfg: TrainConfig,
     chip: ChipRealization,
-    spsa: Spsa,
+    estimator: Box<dyn GradientEstimator>,
+    optimizer: Box<dyn Optimizer>,
     loss_multi: Arc<dyn Entry>,
-    loss_single: Option<Arc<dyn Entry>>,
+    /// batched K-probe Stein loss (preferred: one dispatch per epoch)
+    stein_multi: Option<Arc<dyn Entry>>,
+    /// per-probe Stein fallback for manifests predating
+    /// `loss_stein_multi`
+    stein_single: Option<Arc<dyn Entry>>,
     validator: Validator,
     sampler: Sampler,
     /// stencil inferences per loss evaluation (accounting)
@@ -129,8 +177,12 @@ pub struct OnChipTrainer<'rt> {
     batch: usize,
     k_multi: usize,
     /// Stein smoothing directions (fixed per run; runtime input of the
-    /// `loss_stein` artifact)
+    /// `loss_stein*` artifacts)
     stein_z: Vec<f32>,
+    /// completed epochs restored from [`TrainConfig::resume`]
+    start_epoch: usize,
+    /// Φ restored from [`TrainConfig::resume`] (consumed by `train`)
+    resume_phi: Option<Vec<f32>>,
 }
 
 impl<'rt> OnChipTrainer<'rt> {
@@ -139,6 +191,7 @@ impl<'rt> OnChipTrainer<'rt> {
             rt.set_parallel(par);
         }
         let pm = rt.manifest().preset(&cfg.preset)?;
+        let d = pm.layout.param_dim;
         if let Some(w) = cfg.bc_weight {
             anyhow::ensure!(
                 rt.set_bc_weight(&cfg.preset, w as f32),
@@ -147,43 +200,152 @@ impl<'rt> OnChipTrainer<'rt> {
                 cfg.preset
             );
         }
-        anyhow::ensure!(
-            cfg.spsa_n + 1 == rt.manifest().k_multi,
-            "spsa_n {} must equal k_multi-1 = {} (static artifact shape)",
+        let estimator = crate::optim::estimator::global().build(
+            &cfg.estimator,
+            cfg.spsa_mu,
             cfg.spsa_n,
-            rt.manifest().k_multi - 1
+        )?;
+        anyhow::ensure!(
+            estimator.k() == rt.manifest().k_multi,
+            "estimator '{}' needs K = {} loss evaluations but the batched \
+             loss artifacts have static K = k_multi = {} (set spsa_n so \
+             that K matches)",
+            cfg.estimator,
+            estimator.k(),
+            rt.manifest().k_multi
         );
+        let schedule = LrSchedule {
+            base: cfg.lr,
+            decay: cfg.lr_decay,
+            every: cfg.lr_decay_every,
+        };
+        let mut optimizer =
+            crate::optim::optimizer::global().build(&cfg.optimizer, d, schedule)?;
+
         let loss_multi = rt.entry(&cfg.preset, "loss_multi")?;
-        let (loss_single, stein_z) = match cfg.loss_kind {
+        let (stein_multi, stein_single, stein_z) = match cfg.loss_kind {
             LossKind::Stein => {
-                let exec = rt.entry(&cfg.preset, "loss_stein")?;
-                // z is the third input: (stein_q, in_dim)
-                let len = exec.meta().input_len(2);
+                // prefer the probe-parallel batched entry; fall back to
+                // K per-probe dispatches for manifests that predate it
+                let (multi, single) = match rt.entry(&cfg.preset, "loss_stein_multi") {
+                    Ok(e) => (Some(e), None),
+                    Err(_) => (None, Some(rt.entry(&cfg.preset, "loss_stein")?)),
+                };
+                // z is the third input of both artifacts: (stein_q, in_dim)
+                let len = multi
+                    .as_ref()
+                    .or(single.as_ref())
+                    .unwrap()
+                    .meta()
+                    .input_len(2);
                 let mut z = vec![0.0f32; len];
                 crate::util::rng::Rng::new(cfg.seed ^ 0x57E1).fill_normal(&mut z);
-                (Some(exec), z)
+                (multi, single, z)
             }
-            LossKind::Fd => (None, Vec::new()),
+            LossKind::Fd => (None, None, Vec::new()),
         };
+
+        // resume: restore Φ / optimizer state / completed-epoch count
+        let (start_epoch, resume_phi) = match &cfg.resume {
+            Some(path) => {
+                let ck = Checkpoint::load(path)
+                    .map_err(|e| anyhow::anyhow!("loading --resume checkpoint: {e:#}"))?;
+                anyhow::ensure!(
+                    ck.preset == cfg.preset,
+                    "resume checkpoint is for preset '{}', not '{}'",
+                    ck.preset,
+                    cfg.preset
+                );
+                anyhow::ensure!(
+                    ck.seed == cfg.seed,
+                    "resume checkpoint was trained with seed {} but the run \
+                     is configured with seed {} — a resumed run must replay \
+                     the same RNG streams",
+                    ck.seed,
+                    cfg.seed
+                );
+                anyhow::ensure!(
+                    ck.phi.len() == d,
+                    "resume checkpoint has {} params but preset '{}' has {d}",
+                    ck.phi.len(),
+                    cfg.preset
+                );
+                anyhow::ensure!(
+                    ck.epoch <= cfg.epochs,
+                    "resume checkpoint already completed {} epochs (run \
+                     configured for {})",
+                    ck.epoch,
+                    cfg.epochs
+                );
+                if !ck.optimizer.is_empty() {
+                    anyhow::ensure!(
+                        ck.optimizer == cfg.optimizer,
+                        "resume checkpoint carries '{}' optimizer state but \
+                         the run is configured with '{}'",
+                        ck.optimizer,
+                        cfg.optimizer
+                    );
+                }
+                if !ck.estimator.is_empty() {
+                    // a different estimator draws a different number of
+                    // normals per epoch — the fast-forward replay (and
+                    // therefore the whole resumed trajectory) would
+                    // silently diverge
+                    anyhow::ensure!(
+                        ck.estimator == cfg.estimator,
+                        "resume checkpoint was trained with estimator '{}' \
+                         but the run is configured with '{}'",
+                        ck.estimator,
+                        cfg.estimator
+                    );
+                }
+                if let Some(cs) = ck.chip_seed {
+                    anyhow::ensure!(
+                        cs == cfg.chip_seed,
+                        "resume checkpoint was trained on chip_seed {cs} but \
+                         the run is configured with chip_seed {} — resuming \
+                         on a different chip realization is not a \
+                         continuation",
+                        cfg.chip_seed
+                    );
+                }
+                if !ck.loss_kind.is_empty() {
+                    anyhow::ensure!(
+                        ck.loss_kind == loss_kind_name(cfg.loss_kind),
+                        "resume checkpoint was trained with the '{}' loss \
+                         estimator but the run is configured with '{}'",
+                        ck.loss_kind,
+                        loss_kind_name(cfg.loss_kind)
+                    );
+                }
+                optimizer.load_state(&ck.opt_state)?;
+                (ck.epoch, Some(ck.phi))
+            }
+            None => (0, None),
+        };
+
         let validator = Validator::new(rt, &cfg.preset, cfg.seed)?;
         let sampler = Sampler::new(pm.pde.clone(), cfg.seed ^ 0xBA7C4);
         let n_stencil = pm.pde.n_stencil();
         let batch = rt.manifest().b_residual;
         let k_multi = rt.manifest().k_multi;
-        let spsa = Spsa::new(cfg.spsa_mu, cfg.spsa_n);
         Ok(OnChipTrainer {
             chip: ChipRealization::sample(&pm.layout, &cfg.noise, cfg.chip_seed),
             rt,
             cfg,
-            spsa,
+            estimator,
+            optimizer,
             loss_multi,
-            loss_single,
+            stein_multi,
+            stein_single,
             validator,
             sampler,
             n_stencil,
             batch,
             k_multi,
             stein_z,
+            start_epoch,
+            resume_phi,
         })
     }
 
@@ -193,12 +355,11 @@ impl<'rt> OnChipTrainer<'rt> {
         &self.chip
     }
 
-    /// Evaluate the K losses for the commanded settings.
-    ///
-    /// FD mode: one `loss_multi` dispatch (K sequential evals inside the
-    /// executable — the chip reprograms K times either way; batching the
-    /// dispatch is a simulator optimization, DESIGN.md §Perf L3).
-    /// Stein mode: K single dispatches of `loss_stein`.
+    /// Evaluate the K losses for the commanded settings: program each
+    /// setting through the chip's noise path, then ONE batched dispatch
+    /// (`loss_multi` / `loss_stein_multi`) — the engine fans the K
+    /// probes out across workers. Stein keeps a per-probe fallback for
+    /// manifests without the batched entry.
     fn eval_losses(
         &self,
         settings_cmd: &[f32],
@@ -208,26 +369,48 @@ impl<'rt> OnChipTrainer<'rt> {
     ) -> Result<Vec<f32>> {
         let d = self.chip.dim();
         let k = self.k_multi;
-        match self.cfg.loss_kind {
-            LossKind::Fd => {
-                eff_all.clear();
-                eff_all.reserve(k * d);
-                for i in 0..k {
-                    self.chip.program(&settings_cmd[i * d..(i + 1) * d], eff);
-                    eff_all.extend_from_slice(eff);
-                }
-                self.loss_multi.run1(&[eff_all.as_slice(), xr])
+        if let Some(exec) = &self.stein_single {
+            // legacy Stein path: K sequential single-probe dispatches
+            let mut out = Vec::with_capacity(k);
+            for i in 0..k {
+                self.chip.program(&settings_cmd[i * d..(i + 1) * d], eff);
+                out.push(exec.run_scalar(&[eff.as_slice(), xr, &self.stein_z])?);
             }
-            LossKind::Stein => {
-                let exec = self.loss_single.as_ref().unwrap();
-                let mut out = Vec::with_capacity(k);
-                for i in 0..k {
-                    self.chip.program(&settings_cmd[i * d..(i + 1) * d], eff);
-                    out.push(exec.run_scalar(&[eff.as_slice(), xr, &self.stein_z])?);
-                }
-                Ok(out)
-            }
+            return Ok(out);
         }
+        eff_all.clear();
+        eff_all.reserve(k * d);
+        for i in 0..k {
+            self.chip.program(&settings_cmd[i * d..(i + 1) * d], eff);
+            eff_all.extend_from_slice(eff);
+        }
+        match self.cfg.loss_kind {
+            LossKind::Fd => self.loss_multi.run1(&[eff_all.as_slice(), xr]),
+            LossKind::Stein => self
+                .stein_multi
+                .as_ref()
+                .unwrap()
+                .run1(&[eff_all.as_slice(), xr, &self.stein_z]),
+        }
+    }
+
+    fn save_checkpoint(&self, epoch_done: usize, phi: &[f32], val: Option<f32>) -> Result<()> {
+        if let Some(path) = &self.cfg.checkpoint_path {
+            Checkpoint {
+                preset: self.cfg.preset.clone(),
+                epoch: epoch_done,
+                seed: self.cfg.seed,
+                phi: phi.to_vec(),
+                final_val: val,
+                optimizer: self.cfg.optimizer.clone(),
+                estimator: self.cfg.estimator.clone(),
+                chip_seed: Some(self.cfg.chip_seed),
+                loss_kind: loss_kind_name(self.cfg.loss_kind).to_string(),
+                opt_state: self.optimizer.state(),
+            }
+            .save(path)?;
+        }
+        Ok(())
     }
 
     /// Run the full training loop.
@@ -238,14 +421,6 @@ impl<'rt> OnChipTrainer<'rt> {
         let mut phi = pm.layout.init_vector(&mut rng);
         let mut spsa_rng = rng.substream(0x5b5a);
 
-        let schedule = LrSchedule {
-            base: self.cfg.lr,
-            decay: self.cfg.lr_decay,
-            every: self.cfg.lr_decay_every,
-        };
-        let sign_opt = ZoSignSgd { schedule: schedule.clone() };
-        let raw_opt = ZoSgd { schedule };
-
         let mut metrics = RunMetrics::default();
         let mut xr = Vec::new();
         let mut xi = Vec::new();
@@ -253,25 +428,50 @@ impl<'rt> OnChipTrainer<'rt> {
         let mut grad = Vec::new();
         let mut eff = Vec::with_capacity(d);
         let mut eff_all = Vec::with_capacity(self.k_multi * d);
+
+        // resume: fast-forward the deterministic per-epoch draws so
+        // epoch E sees exactly the batch + perturbations it would have
+        // in an uninterrupted run, then restore the checkpointed Φ
+        // (the optimizer state was restored in `new`)
+        if self.start_epoch > 0 {
+            for _ in 0..self.start_epoch {
+                self.sampler.batch(self.batch, &mut xr);
+                self.estimator.sample(d, &mut spsa_rng, &mut xi);
+            }
+            phi = self.resume_phi.take().expect("resume phi set with start_epoch");
+        }
+
+        let mut consecutive_skipped = 0usize;
         let t0 = Instant::now();
 
-        for epoch in 0..self.cfg.epochs {
+        for epoch in self.start_epoch..self.cfg.epochs {
             self.sampler.batch(self.batch, &mut xr);
-            self.spsa.sample_perturbations(d, &mut spsa_rng, &mut xi);
-            self.spsa.build_settings(&phi, &xi, &mut settings);
+            self.estimator.sample(d, &mut spsa_rng, &mut xi);
+            self.estimator.build_settings(&phi, &xi, &mut settings);
             let losses = self.eval_losses(&settings, &xr, &mut eff, &mut eff_all)?;
             metrics.inferences += (self.n_stencil * self.batch * self.k_multi) as u64;
             metrics.programmings += self.k_multi as u64;
 
             if losses.iter().any(|l| !l.is_finite()) {
                 metrics.skipped_epochs += 1;
+                consecutive_skipped += 1;
+                if self.cfg.max_skipped_run != 0
+                    && consecutive_skipped >= self.cfg.max_skipped_run
+                {
+                    anyhow::bail!(
+                        "training diverged: {consecutive_skipped} consecutive \
+                         epochs produced non-finite probe losses (preset '{}', \
+                         epoch {epoch}, optimizer '{}') — lower lr/spsa_mu or \
+                         raise TrainConfig.max_skipped_run",
+                        self.cfg.preset,
+                        self.cfg.optimizer
+                    );
+                }
                 continue;
             }
-            self.spsa.estimate(&losses, &xi, &mut grad);
-            match self.cfg.update_rule {
-                UpdateRule::SignSgd => sign_opt.step(&mut phi, &grad, epoch),
-                UpdateRule::RawSgd => raw_opt.step(&mut phi, &grad, epoch),
-            }
+            consecutive_skipped = 0;
+            self.estimator.estimate(&losses, &xi, &mut grad);
+            self.optimizer.step(&mut phi, &grad, epoch);
 
             let validate_now = self.cfg.validate_every != 0
                 && (epoch % self.cfg.validate_every == 0 || epoch + 1 == self.cfg.epochs);
@@ -280,10 +480,7 @@ impl<'rt> OnChipTrainer<'rt> {
             } else {
                 None
             };
-            let lr_now = match self.cfg.update_rule {
-                UpdateRule::SignSgd => sign_opt.schedule.at(epoch),
-                UpdateRule::RawSgd => raw_opt.schedule.at(epoch),
-            };
+            let lr_now = self.optimizer.lr_at(epoch);
             if self.cfg.verbose && (validate_now || epoch % 100 == 0) {
                 crate::info!(
                     "[{}] epoch {:5} loss {:.4e} val {} lr {:.4}",
@@ -300,9 +497,13 @@ impl<'rt> OnChipTrainer<'rt> {
                 val,
                 lr: lr_now,
             });
+            if validate_now {
+                self.save_checkpoint(epoch + 1, &phi, val)?;
+            }
         }
         metrics.wall_seconds = t0.elapsed().as_secs_f64();
         let final_val = self.validator.mse_on_chip(&phi, &self.chip)?;
+        self.save_checkpoint(self.cfg.epochs, &phi, Some(final_val))?;
         Ok(TrainResult {
             phi,
             final_val,

@@ -68,6 +68,45 @@
 //! reproduce them to 1e-4/1e-3; the three ported problems reproduce
 //! their enum-era fixtures bit-for-bit.
 //!
+//! ## Training stack (the `optim` registries + probe-parallel losses)
+//!
+//! The ZO trainer ([`coordinator::OnChipTrainer`]) is generic over two
+//! pluggable seams, both resolved **by name** exactly like PDEs:
+//!
+//! * [`optim::GradientEstimator`] (Eq. 5; registry
+//!   [`optim::estimator::global`]) — `spsa` (the paper),
+//!   `spsa-antithetic` (mirrored-pair variance reduction);
+//! * [`optim::Optimizer`] (Eq. 6; registry
+//!   [`optim::optimizer::global`]) — `zo-signsgd` (the paper),
+//!   `zo-sgd`, `zo-adam`, `momentum-sgd`.
+//!
+//! Names flow from manifest `hyper.{optimizer,estimator}` →
+//! `TrainConfig.{optimizer,estimator}` → `--optimizer` / `--estimator`
+//! (`photon-pinn optims` lists both registries). Registering a new
+//! optimizer is:
+//!
+//! 1. `impl optim::Optimizer for MyRule` (stateful rules implement
+//!    `state`/`load_state` so `--resume` checkpoints carry them);
+//! 2. one `reg.register("my-rule", |d, schedule| ...)` line in
+//!    `optim::optimizer::OptimizerRegistry::builtin`;
+//! 3. nothing else — the trainer, solver service, checkpoints and
+//!    `--optimizer` resolve it by name (add a trainer integration test
+//!    alongside the ones in `rust/tests/trainer_integration.rs`).
+//!
+//! Gradient estimators register the same way in
+//! `optim::estimator::EstimatorRegistry::builtin`; an estimator's
+//! `k()` must equal the manifest's static `k_multi`.
+//!
+//! The K probe losses of an epoch go through the **batched loss API**
+//! (`loss_multi` / `loss_stein_multi` entries): the native engine fans
+//! probes across workers and row-blocks within each probe under one
+//! [`runtime::ParallelConfig`] (two-level parallelism), bit-identical
+//! to the sequential path — `rust/tests/probe_parallel.rs` checks every
+//! builtin preset in both FD and Stein modes. Divergent runs abort
+//! after `TrainConfig.max_skipped_run` consecutive non-finite epochs;
+//! `TrainConfig.checkpoint_path` + `--resume` give bit-identical
+//! warm restarts.
+//!
 //! Entry points: [`runtime::load_backend`] (or `NativeBackend::builtin`)
 //! loads a backend; [`coordinator`] drives training; `examples/` are
 //! runnable end-to-end drivers.

@@ -7,11 +7,16 @@
 //!   hardware  Table-2 hardware report
 //!   presets   list available presets from the manifest
 //!   pdes      list every registered PDE problem (the pde registry)
+//!   optims    list registered optimizers + gradient estimators
 //!
-//! `--list-presets` / `--list-pdes` are accepted as top-level aliases.
+//! `--list-presets` / `--list-pdes` / `--list-optimizers` are accepted
+//! as top-level aliases.
 //!
 //! Examples:
 //!   photon-pinn train --preset tonn_small --epochs 1500
+//!   photon-pinn train --preset tonn_small --optimizer zo-adam --estimator spsa-antithetic
+//!   photon-pinn train --preset tonn_small --checkpoint ck.json
+//!   photon-pinn train --resume ck.json --epochs 3000
 //!   photon-pinn train --preset tonn_micro_ac --bc-weight 4.0
 //!   photon-pinn table1 --zo-epochs 800 --bp-epochs 300
 //!   photon-pinn hardware
@@ -49,7 +54,10 @@ fn args_for(cmd: &str) -> Args {
         .flag("lr", None, "override learning rate")
         .flag("zo-epochs", Some("1500"), "on-chip epochs (table1)")
         .flag("bp-epochs", Some("400"), "off-chip epochs (table1)")
-        .flag("checkpoint", None, "write final parameters to this path")
+        .flag("checkpoint", None, "write checkpoints (Φ + optimizer state) to this path")
+        .flag("resume", None, "resume training from a checkpoint JSON (train only)")
+        .flag("optimizer", None, "optimizer registry name (default: manifest / zo-signsgd)")
+        .flag("estimator", None, "gradient-estimator registry name (default: manifest / spsa)")
         .flag("threads", None, "evaluation-engine worker threads (default: auto / PHOTON_THREADS)")
         .flag("block-rows", None, "rows per engine work block (default: 32 / PHOTON_BLOCK_ROWS)")
         .flag("bc-weight", None, "boundary-loss weight override (soft-constraint problems only)")
@@ -102,9 +110,10 @@ fn run() -> Result<()> {
         "hardware" => cmd_hardware(argv),
         "presets" | "--list-presets" => cmd_presets(argv),
         "pdes" | "--list-pdes" => cmd_pdes(argv),
+        "optims" | "--list-optimizers" => cmd_optims(argv),
         _ => {
             eprintln!(
-                "usage: photon-pinn <train|offchip|table1|hardware|presets|pdes> [flags]\n\
+                "usage: photon-pinn <train|offchip|table1|hardware|presets|pdes|optims> [flags]\n\
                  run a subcommand with --help for its flags"
             );
             Ok(())
@@ -138,6 +147,27 @@ fn cmd_pdes(argv: Vec<String>) -> Result<()> {
     Ok(())
 }
 
+/// List the optimizer + gradient-estimator registries (what
+/// `--optimizer` / `--estimator` and manifest `hyper` resolve against).
+fn cmd_optims(argv: Vec<String>) -> Result<()> {
+    let _a = Args::new(
+        "photon-pinn optims",
+        "list registered optimizers and gradient estimators",
+    )
+    .parse(argv)?;
+    let mut t = Table::new("registered optimizers (--optimizer)", &["name"]);
+    for n in photon_pinn::optim::optimizer::global().names() {
+        t.row(&[n]);
+    }
+    t.print();
+    let mut t = Table::new("registered gradient estimators (--estimator)", &["name"]);
+    for n in photon_pinn::optim::estimator::global().names() {
+        t.row(&[n]);
+    }
+    t.print();
+    Ok(())
+}
+
 fn cmd_presets(argv: Vec<String>) -> Result<()> {
     let a = args_for("presets").parse(argv)?;
     let rt = load_runtime(&a)?;
@@ -162,7 +192,18 @@ fn cmd_presets(argv: Vec<String>) -> Result<()> {
 fn cmd_train(argv: Vec<String>) -> Result<()> {
     let a = args_for("train").parse(argv)?;
     let rt = load_runtime(&a)?;
-    let preset = a.get_str("preset").unwrap();
+    // --resume: the checkpoint is authoritative for preset / seed /
+    // optimizer / estimator (a resumed run must replay the same RNG
+    // streams and optimizer state); other flags still apply
+    let resume = a.get_str("resume").map(std::path::PathBuf::from);
+    let resumed_ck = match &resume {
+        Some(p) => Some(Checkpoint::load(p)?),
+        None => None,
+    };
+    let preset = match &resumed_ck {
+        Some(ck) => ck.preset.clone(),
+        None => a.get_str("preset").unwrap(),
+    };
     let mut cfg = TrainConfig::from_manifest(&rt, &preset)?;
     if let Some(e) = a.get_usize("epochs")? {
         cfg.epochs = e;
@@ -177,29 +218,54 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if a.get_bool("stein") {
         cfg.loss_kind = photon_pinn::coordinator::trainer::LossKind::Stein;
     }
-    if a.get_bool("raw-sgd") {
-        cfg.update_rule = photon_pinn::coordinator::trainer::UpdateRule::RawSgd;
+    if let Some(opt) = a.get_str("optimizer") {
+        cfg.optimizer = opt;
+    } else if a.get_bool("raw-sgd") {
+        // legacy A1-ablation switch: plain SGD on the raw ZO estimate
+        cfg.optimizer = "zo-sgd".into();
+    }
+    if let Some(est) = a.get_str("estimator") {
+        cfg.estimator = est;
     }
     if let Some(w) = a.get_f64("bc-weight")? {
         cfg.bc_weight = Some(w);
     }
+    if let Some(ck) = &resumed_ck {
+        cfg.seed = ck.seed;
+        if !ck.optimizer.is_empty() {
+            cfg.optimizer = ck.optimizer.clone();
+        }
+        if !ck.estimator.is_empty() {
+            cfg.estimator = ck.estimator.clone();
+        }
+        if let Some(cs) = ck.chip_seed {
+            cfg.chip_seed = cs;
+        }
+        match ck.loss_kind.as_str() {
+            "stein" => cfg.loss_kind = photon_pinn::coordinator::trainer::LossKind::Stein,
+            "fd" => cfg.loss_kind = photon_pinn::coordinator::trainer::LossKind::Fd,
+            _ => {} // legacy checkpoint: trust the flags
+        }
+        cfg.resume = resume.clone();
+        eprintln!(
+            "resuming '{preset}' from epoch {} (seed {}, chip_seed {}, optimizer {}; \
+             NOTE: noise severity is run config — re-pass --noise-scale if the \
+             original run used one)",
+            ck.epoch, ck.seed, cfg.chip_seed, cfg.optimizer
+        );
+    }
+    // the trainer itself checkpoints (Φ + optimizer state) on every
+    // validation epoch and at the end of the run
+    let checkpoint = a.get_str("checkpoint");
+    cfg.checkpoint_path = checkpoint.as_ref().map(std::path::PathBuf::from);
     let epochs = cfg.epochs;
-    let seed = cfg.seed;
     let mut trainer = OnChipTrainer::new(&rt, cfg)?;
     let result = trainer.train()?;
     println!(
         "final on-chip validation MSE: {:.4e}  ({} epochs, {:.1}s wall, {} simulated inferences)",
         result.final_val, epochs, result.metrics.wall_seconds, result.metrics.inferences
     );
-    if let Some(path) = a.get_str("checkpoint") {
-        Checkpoint {
-            preset: preset.clone(),
-            epoch: epochs,
-            seed,
-            phi: result.phi.clone(),
-            final_val: Some(result.final_val),
-        }
-        .save(std::path::Path::new(&path))?;
+    if let Some(path) = checkpoint {
         println!("checkpoint written to {path}");
     }
     Ok(())
@@ -226,6 +292,12 @@ fn cmd_offchip(argv: Vec<String>) -> Result<()> {
             seed: a.get_u64("seed")?.unwrap(),
             phi,
             final_val: Some(ideal),
+            // the BP baseline is not resumable: no ZO optimizer state
+            optimizer: String::new(),
+            estimator: String::new(),
+            chip_seed: None,
+            loss_kind: String::new(),
+            opt_state: photon_pinn::util::json::Value::Null,
         }
         .save(std::path::Path::new(&path))?;
         println!("checkpoint written to {path}");

@@ -210,6 +210,13 @@ pub struct Hyper {
     /// problem's own default (`Problem::boundary().default_weight`).
     /// Ignored for problems whose constraints are all hard.
     pub bc_weight: Option<f64>,
+    /// Optimizer registry name (`crate::optim::optimizer::global`);
+    /// `None` = the trainer default (`zo-signsgd`).
+    pub optimizer: Option<String>,
+    /// Gradient-estimator registry name
+    /// (`crate::optim::estimator::global`); `None` = the trainer
+    /// default (`spsa`).
+    pub estimator: Option<String>,
 }
 
 impl Hyper {
@@ -234,6 +241,14 @@ impl Hyper {
             stein_sigma: opt("stein_sigma", 0.05),
             stein_q: opt("stein_q", 20.0) as usize,
             bc_weight: v.get("bc_weight").and_then(|x| x.as_f64()),
+            optimizer: v
+                .get("optimizer")
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string()),
+            estimator: v
+                .get("estimator")
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string()),
         })
     }
 }
@@ -404,6 +419,22 @@ mod tests {
         .unwrap();
         let h = Hyper::parse(&v).unwrap();
         assert_eq!(h.bc_weight, Some(2.5));
+        assert_eq!(h.optimizer, None);
+        assert_eq!(h.estimator, None);
+    }
+
+    #[test]
+    fn hyper_parse_optimizer_names() {
+        let v = json::parse(
+            r#"{"fd_h":0.05,"spsa_mu":0.02,"spsa_n":10,"lr":0.02,
+                "lr_decay":0.3,"lr_decay_every":600,"epochs":1500,
+                "batch":100,"k_multi":11,
+                "optimizer":"zo-adam","estimator":"spsa-antithetic"}"#,
+        )
+        .unwrap();
+        let h = Hyper::parse(&v).unwrap();
+        assert_eq!(h.optimizer.as_deref(), Some("zo-adam"));
+        assert_eq!(h.estimator.as_deref(), Some("spsa-antithetic"));
     }
 
     #[test]

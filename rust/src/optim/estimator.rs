@@ -1,0 +1,316 @@
+//! Pluggable zeroth-order gradient estimators (the paper's Eq. 5 slot).
+//!
+//! The trainer never names a concrete estimator: it drives the
+//! object-safe [`GradientEstimator`] trait and resolves implementations
+//! by name through the [`EstimatorRegistry`] (mirroring
+//! [`crate::pde::ProblemRegistry`]). An epoch is always the same shape —
+//! draw a perturbation block, build the K commanded phase settings
+//! (row 0 = Φ itself), evaluate the K losses in ONE batched dispatch
+//! (`loss_multi` / `loss_stein_multi`), form ĝ — so any estimator whose
+//! `k()` matches the manifest's static `k_multi` plugs in unchanged.
+//!
+//! Built-ins:
+//!
+//! * `spsa` — the paper's Eq. (5) one-sided Gaussian-smoothing
+//!   estimator, delegating to [`Spsa`] bit-for-bit (the PR-1 golden
+//!   epoch fixture pins it).
+//! * `spsa-antithetic` — mirrored-pair (antithetic) variant: N/2 base
+//!   directions evaluated at Φ±μξ, central-difference weights. Same
+//!   K = N+1 budget, lower variance, O(μ²) bias instead of O(μ) — the
+//!   variance-reduced ZO slot the tensor-compressed training papers
+//!   motivate.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use super::Spsa;
+use crate::util::rng::Rng;
+
+/// Object-safe zeroth-order gradient estimator.
+///
+/// Contract: `build_settings` emits a flat (K, d) block whose row 0 is
+/// the unperturbed Φ (the trainer reports `losses[0]` as the epoch
+/// loss), and `estimate` consumes the K losses in that exact order.
+pub trait GradientEstimator: Send + Sync {
+    /// Registry name (what `TrainConfig.estimator` resolves).
+    fn name(&self) -> &str;
+
+    /// Loss evaluations per epoch, K (base + perturbed probes). Must
+    /// equal the manifest's `k_multi` — the batched loss entries have a
+    /// static (K, d) input shape.
+    fn k(&self) -> usize;
+
+    /// Draw the per-epoch perturbation block into `xi` (layout is
+    /// estimator-defined; `build_settings` / `estimate` consume it).
+    fn sample(&self, d: usize, rng: &mut Rng, xi: &mut Vec<f32>);
+
+    /// Build the K commanded settings as a flat (K, d) buffer,
+    /// row 0 = Φ.
+    fn build_settings(&self, phi: &[f32], xi: &[f32], out: &mut Vec<f32>);
+
+    /// Gradient estimate from the K losses of [`Self::build_settings`].
+    fn estimate(&self, losses: &[f32], xi: &[f32], grad: &mut Vec<f32>);
+}
+
+/// The paper's SPSA estimator behind the trait — a delegating wrapper
+/// around [`Spsa`], so the arithmetic (and the PR-1 golden epoch) is
+/// untouched.
+pub struct SpsaEstimator {
+    inner: Spsa,
+}
+
+impl SpsaEstimator {
+    pub fn new(mu: f64, n: usize) -> SpsaEstimator {
+        SpsaEstimator { inner: Spsa::new(mu, n) }
+    }
+}
+
+impl GradientEstimator for SpsaEstimator {
+    fn name(&self) -> &str {
+        "spsa"
+    }
+
+    fn k(&self) -> usize {
+        self.inner.n + 1
+    }
+
+    fn sample(&self, d: usize, rng: &mut Rng, xi: &mut Vec<f32>) {
+        self.inner.sample_perturbations(d, rng, xi);
+    }
+
+    fn build_settings(&self, phi: &[f32], xi: &[f32], out: &mut Vec<f32>) {
+        self.inner.build_settings(phi, xi, out);
+    }
+
+    fn estimate(&self, losses: &[f32], xi: &[f32], grad: &mut Vec<f32>) {
+        self.inner.estimate(losses, xi, grad);
+    }
+}
+
+/// Antithetic (mirrored-pair) SPSA: `pairs = N/2` directions ξ_i, each
+/// evaluated at Φ+μξ_i and Φ−μξ_i:
+///
+/// `ĝ = (1/(2μ·pairs)) Σ [L(Φ+μξ_i) − L(Φ−μξ_i)] ξ_i`
+///
+/// Settings layout: `[Φ; Φ+μξ_1 .. Φ+μξ_P; Φ−μξ_1 .. Φ−μξ_P]` — K is
+/// still N+1, so the static `loss_multi` shape is unchanged, and the
+/// base loss (row 0) remains available for progress reporting even
+/// though the central difference doesn't need it.
+pub struct AntitheticSpsa {
+    pub mu: f64,
+    pub pairs: usize,
+}
+
+impl AntitheticSpsa {
+    pub fn new(mu: f64, n: usize) -> Result<AntitheticSpsa> {
+        anyhow::ensure!(mu > 0.0, "spsa-antithetic: mu must be positive");
+        anyhow::ensure!(
+            n >= 2 && n % 2 == 0,
+            "spsa-antithetic needs an even perturbation count >= 2 \
+             (got spsa_n = {n}: probes come in ±μξ pairs)"
+        );
+        Ok(AntitheticSpsa { mu, pairs: n / 2 })
+    }
+}
+
+impl GradientEstimator for AntitheticSpsa {
+    fn name(&self) -> &str {
+        "spsa-antithetic"
+    }
+
+    fn k(&self) -> usize {
+        2 * self.pairs + 1
+    }
+
+    fn sample(&self, d: usize, rng: &mut Rng, xi: &mut Vec<f32>) {
+        xi.clear();
+        xi.resize(self.pairs * d, 0.0);
+        rng.fill_normal(xi);
+    }
+
+    fn build_settings(&self, phi: &[f32], xi: &[f32], out: &mut Vec<f32>) {
+        let d = phi.len();
+        assert_eq!(xi.len(), self.pairs * d);
+        out.clear();
+        out.reserve((2 * self.pairs + 1) * d);
+        out.extend_from_slice(phi);
+        let mu = self.mu as f32;
+        for sign in [1.0f32, -1.0] {
+            for i in 0..self.pairs {
+                let row = &xi[i * d..(i + 1) * d];
+                out.extend(phi.iter().zip(row).map(|(p, x)| p + sign * mu * x));
+            }
+        }
+    }
+
+    fn estimate(&self, losses: &[f32], xi: &[f32], grad: &mut Vec<f32>) {
+        assert_eq!(losses.len(), 2 * self.pairs + 1);
+        let d = xi.len() / self.pairs;
+        grad.clear();
+        grad.resize(d, 0.0);
+        let scale = 1.0 / (2.0 * self.mu as f32 * self.pairs as f32);
+        for i in 0..self.pairs {
+            let w = (losses[1 + i] - losses[1 + self.pairs + i]) * scale;
+            let row = &xi[i * d..(i + 1) * d];
+            for (g, x) in grad.iter_mut().zip(row) {
+                *g += w * x;
+            }
+        }
+    }
+}
+
+/// Builds an estimator from the run's SPSA hyperparameters (sampling
+/// radius μ, perturbation count N = K−1). Fallible: a variant may
+/// reject hyperparameters it cannot honor (e.g. odd N for antithetic
+/// pairs).
+pub type EstimatorFactory = fn(mu: f64, n: usize) -> Result<Box<dyn GradientEstimator>>;
+
+/// Name → estimator factory, mirroring [`crate::pde::ProblemRegistry`]:
+/// explicit registration, duplicate names panic, lookup errors list
+/// every registered name.
+#[derive(Default)]
+pub struct EstimatorRegistry {
+    map: BTreeMap<String, EstimatorFactory>,
+}
+
+impl EstimatorRegistry {
+    pub fn new() -> EstimatorRegistry {
+        EstimatorRegistry::default()
+    }
+
+    /// Register a factory under `name`. Panics on duplicates: two
+    /// estimators answering to one name is a programming error.
+    pub fn register(&mut self, name: &str, f: EstimatorFactory) {
+        assert!(
+            self.map.insert(name.to_string(), f).is_none(),
+            "duplicate estimator registration '{name}'"
+        );
+    }
+
+    /// Build `name` with the run's hyperparameters; the error lists
+    /// every valid name.
+    pub fn build(&self, name: &str, mu: f64, n: usize) -> Result<Box<dyn GradientEstimator>> {
+        match self.map.get(name) {
+            Some(f) => f(mu, n),
+            None => anyhow::bail!(
+                "unknown estimator '{name}' (registered: {})",
+                self.names().join(", ")
+            ),
+        }
+    }
+
+    /// Sorted estimator names.
+    pub fn names(&self) -> Vec<String> {
+        self.map.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// A registry pre-populated with every built-in estimator.
+    pub fn builtin() -> EstimatorRegistry {
+        let mut reg = EstimatorRegistry::new();
+        reg.register("spsa", |mu, n| Ok(Box::new(SpsaEstimator::new(mu, n))));
+        reg.register("spsa-antithetic", |mu, n| {
+            Ok(Box::new(AntitheticSpsa::new(mu, n)?))
+        });
+        reg
+    }
+}
+
+/// The process-wide estimator registry (what `TrainConfig.estimator`,
+/// manifest `hyper.estimator` and `--estimator` resolve against).
+pub fn global() -> &'static EstimatorRegistry {
+    static REGISTRY: OnceLock<EstimatorRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(EstimatorRegistry::builtin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quad(c: &[f32]) -> impl Fn(&[f32]) -> f32 + '_ {
+        move |x: &[f32]| x.iter().zip(c).map(|(a, b)| (a - b) * (a - b)).sum()
+    }
+
+    fn cosine_to_true_gradient(est: &dyn GradientEstimator, seed: u64) -> f32 {
+        let c = vec![0.5f32, -1.0, 2.0, 0.0];
+        let loss = quad(&c);
+        let phi = vec![1.0f32, 1.0, 1.0, 1.0];
+        let mut rng = Rng::new(seed);
+        let (mut xi, mut settings, mut g) = (Vec::new(), Vec::new(), Vec::new());
+        est.sample(4, &mut rng, &mut xi);
+        est.build_settings(&phi, &xi, &mut settings);
+        let k = est.k();
+        assert_eq!(settings.len(), k * 4);
+        assert_eq!(&settings[..4], phi.as_slice(), "row 0 must be Φ");
+        let losses: Vec<f32> = (0..k).map(|i| loss(&settings[i * 4..(i + 1) * 4])).collect();
+        est.estimate(&losses, &xi, &mut g);
+        let tg: Vec<f32> = phi.iter().zip(&c).map(|(p, c)| 2.0 * (p - c)).collect();
+        let dot: f32 = g.iter().zip(&tg).map(|(a, b)| a * b).sum();
+        let ng: f32 = g.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let nt: f32 = tg.iter().map(|v| v * v).sum::<f32>().sqrt();
+        dot / (ng * nt)
+    }
+
+    #[test]
+    fn spsa_wrapper_matches_raw_spsa_bitwise() {
+        let est = SpsaEstimator::new(0.05, 8);
+        let raw = Spsa::new(0.05, 8);
+        let phi = vec![0.3f32, -0.7, 1.5];
+        let (mut xi_a, mut xi_b) = (Vec::new(), Vec::new());
+        est.sample(3, &mut Rng::new(11), &mut xi_a);
+        raw.sample_perturbations(3, &mut Rng::new(11), &mut xi_b);
+        assert_eq!(xi_a, xi_b);
+        let (mut s_a, mut s_b) = (Vec::new(), Vec::new());
+        est.build_settings(&phi, &xi_a, &mut s_a);
+        raw.build_settings(&phi, &xi_b, &mut s_b);
+        assert_eq!(s_a, s_b);
+        let losses: Vec<f32> = (0..9).map(|i| 0.1 * i as f32).collect();
+        let (mut g_a, mut g_b) = (Vec::new(), Vec::new());
+        est.estimate(&losses, &xi_a, &mut g_a);
+        raw.estimate(&losses, &xi_b, &mut g_b);
+        assert_eq!(g_a, g_b);
+    }
+
+    #[test]
+    fn antithetic_estimates_quadratic_gradient() {
+        let est = AntitheticSpsa::new(0.01, 512).unwrap();
+        assert_eq!(est.k(), 513);
+        let cos = cosine_to_true_gradient(&est, 1);
+        assert!(cos > 0.9, "cos={cos}");
+    }
+
+    #[test]
+    fn antithetic_rejects_odd_probe_counts() {
+        assert!(AntitheticSpsa::new(0.01, 9).is_err());
+        assert!(AntitheticSpsa::new(0.01, 0).is_err());
+        assert!(AntitheticSpsa::new(-0.1, 4).is_err());
+    }
+
+    #[test]
+    fn registry_builds_and_error_lists_names() {
+        let reg = EstimatorRegistry::builtin();
+        assert!(reg.len() >= 2);
+        let est = reg.build("spsa", 0.02, 10).unwrap();
+        assert_eq!(est.k(), 11);
+        let est = reg.build("spsa-antithetic", 0.02, 10).unwrap();
+        assert_eq!(est.k(), 11);
+        let err = reg.build("nope", 0.02, 10).unwrap_err().to_string();
+        assert!(err.contains("spsa") && err.contains("spsa-antithetic"), "{err}");
+        // factory-level hyperparameter rejection surfaces
+        assert!(reg.build("spsa-antithetic", 0.02, 7).is_err());
+    }
+
+    #[test]
+    fn global_registry_has_builtins() {
+        assert!(global().names().contains(&"spsa".to_string()));
+    }
+}

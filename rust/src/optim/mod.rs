@@ -1,10 +1,29 @@
 //! Optimizers of the digital control system.
 //!
+//! Two layers live here:
+//!
+//! **Raw update rules** (this module) — the concrete arithmetic:
+//!
 //! * [`Spsa`] — the paper's Eq. (5) zeroth-order gradient estimator:
 //!   `ĝ = (1/Nμ) Σ [L(Φ+μξ_i) − L(Φ)] ξ_i`, ξ ~ N(0, I).
 //! * [`ZoSignSgd`] — Eq. (6): `Φ ← Φ − α·sign(ĝ)` (ZO-signSGD
 //!   de-noising), with a step-decay schedule.
 //! * [`Adam`] — for the *off-chip* BP baseline trainer.
+//!
+//! **Pluggable trainer seams** ([`estimator`], [`optimizer`]) — the
+//! object-safe [`GradientEstimator`] / [`Optimizer`] traits plus name
+//! registries mirroring [`crate::pde::ProblemRegistry`]. The on-chip
+//! trainer resolves both by name (`TrainConfig.{estimator,optimizer}`,
+//! manifest `hyper`, `--estimator` / `--optimizer`), so new ZO variants
+//! register without touching the training loop. The `spsa` and
+//! `zo-signsgd` registry entries delegate to the raw structs above
+//! bit-for-bit — the PR-1 golden epoch fixture pins that.
+
+pub mod estimator;
+pub mod optimizer;
+
+pub use estimator::{EstimatorRegistry, GradientEstimator};
+pub use optimizer::{Optimizer, OptimizerRegistry};
 
 use crate::util::rng::Rng;
 

@@ -1,0 +1,451 @@
+//! Pluggable ZO parameter-update rules (the paper's Eq. 6 slot).
+//!
+//! The trainer drives the object-safe [`Optimizer`] trait and resolves
+//! implementations by name through the [`OptimizerRegistry`] (mirroring
+//! [`crate::pde::ProblemRegistry`]). Every optimizer takes the gradient
+//! *estimate* from a [`super::estimator::GradientEstimator`] — nothing
+//! here ever sees an exact gradient.
+//!
+//! Built-ins:
+//!
+//! * `zo-signsgd` — Eq. (6) sign de-noising, delegating to
+//!   [`ZoSignSgd`] bit-for-bit (the PR-1 golden epoch fixture pins it).
+//! * `zo-sgd` — plain SGD on the raw estimate ([`ZoSgd`]; ablation A1).
+//! * `zo-adam` — Adam moments on the ZO estimate (the quantized /
+//!   variance-reduced ZO-training direction of the tensor-compressed
+//!   PDE-solver papers). Stateful: m, v, t ride through checkpoints.
+//! * `momentum-sgd` — classical heavy-ball momentum on the raw
+//!   estimate. Stateful: the velocity buffer rides through checkpoints.
+//!
+//! Stateful optimizers serialize their internal state via
+//! [`Optimizer::state`] / [`Optimizer::load_state`] so a resumed run
+//! ([`crate::coordinator::checkpoint`]) continues bit-identically.
+
+use std::collections::BTreeMap;
+use std::sync::OnceLock;
+
+use anyhow::Result;
+
+use super::{LrSchedule, ZoSgd, ZoSignSgd};
+use crate::util::json::Value;
+
+/// Object-safe parameter-update rule over gradient *estimates*.
+pub trait Optimizer: Send {
+    /// Registry name (what `TrainConfig.optimizer` resolves).
+    fn name(&self) -> &str;
+
+    /// Learning rate in effect at `epoch` (reporting/metrics).
+    fn lr_at(&self, epoch: usize) -> f64;
+
+    /// Apply one update of Φ from the gradient estimate.
+    fn step(&mut self, phi: &mut [f32], grad: &[f32], epoch: usize);
+
+    /// Serializable internal state for checkpoint/resume
+    /// (`Value::Null` for stateless rules).
+    fn state(&self) -> Value {
+        Value::Null
+    }
+
+    /// Restore [`Self::state`]. `Value::Null` must always be accepted
+    /// (a fresh/legacy checkpoint): it means "start from zero state".
+    fn load_state(&mut self, state: &Value) -> Result<()> {
+        anyhow::ensure!(
+            matches!(state, Value::Null),
+            "{}: stateless optimizer cannot restore non-null state",
+            self.name()
+        );
+        Ok(())
+    }
+}
+
+/// `zo-signsgd`: Eq. (6) behind the trait (delegates to [`ZoSignSgd`]).
+pub struct SignSgdOpt {
+    inner: ZoSignSgd,
+}
+
+impl Optimizer for SignSgdOpt {
+    fn name(&self) -> &str {
+        "zo-signsgd"
+    }
+
+    fn lr_at(&self, epoch: usize) -> f64 {
+        self.inner.schedule.at(epoch)
+    }
+
+    fn step(&mut self, phi: &mut [f32], grad: &[f32], epoch: usize) {
+        self.inner.step(phi, grad, epoch);
+    }
+}
+
+/// `zo-sgd`: raw-estimate SGD behind the trait (delegates to [`ZoSgd`]).
+pub struct RawSgdOpt {
+    inner: ZoSgd,
+}
+
+impl Optimizer for RawSgdOpt {
+    fn name(&self) -> &str {
+        "zo-sgd"
+    }
+
+    fn lr_at(&self, epoch: usize) -> f64 {
+        self.inner.schedule.at(epoch)
+    }
+
+    fn step(&mut self, phi: &mut [f32], grad: &[f32], epoch: usize) {
+        self.inner.step(phi, grad, epoch);
+    }
+}
+
+fn state_vecf(state: &Value, key: &str, d: usize, name: &str) -> Result<Vec<f32>> {
+    let arr = state
+        .req(key)
+        .map_err(|e| anyhow::anyhow!("{name}: {e}"))?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("{name}: state.{key} must be an array"))?;
+    anyhow::ensure!(
+        arr.len() == d,
+        "{name}: state.{key} has {} entries, expected {d}",
+        arr.len()
+    );
+    Ok(arr.iter().map(|v| v.as_f64().unwrap_or(0.0) as f32).collect())
+}
+
+/// `zo-adam`: Adam moment estimates driven by the ZO gradient estimate,
+/// with the shared step-decay schedule as the base learning rate.
+pub struct ZoAdam {
+    schedule: LrSchedule,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl ZoAdam {
+    pub fn new(d: usize, schedule: LrSchedule) -> ZoAdam {
+        ZoAdam {
+            schedule,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; d],
+            v: vec![0.0; d],
+            t: 0,
+        }
+    }
+}
+
+impl Optimizer for ZoAdam {
+    fn name(&self) -> &str {
+        "zo-adam"
+    }
+
+    fn lr_at(&self, epoch: usize) -> f64 {
+        self.schedule.at(epoch)
+    }
+
+    fn step(&mut self, phi: &mut [f32], grad: &[f32], epoch: usize) {
+        self.t += 1;
+        let b1 = self.beta1 as f32;
+        let b2 = self.beta2 as f32;
+        let bc1 = 1.0 - (self.beta1.powi(self.t as i32)) as f32;
+        let bc2 = 1.0 - (self.beta2.powi(self.t as i32)) as f32;
+        let lr = self.schedule.at(epoch) as f32;
+        let eps = self.eps as f32;
+        for i in 0..phi.len() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * grad[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * grad[i] * grad[i];
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            phi[i] -= lr * mh / (vh.sqrt() + eps);
+        }
+    }
+
+    fn state(&self) -> Value {
+        Value::obj(vec![
+            ("t", Value::Num(self.t as f64)),
+            ("m", Value::arr_f32(&self.m)),
+            ("v", Value::arr_f32(&self.v)),
+        ])
+    }
+
+    fn load_state(&mut self, state: &Value) -> Result<()> {
+        if matches!(state, Value::Null) {
+            return Ok(());
+        }
+        let d = self.m.len();
+        self.t = state
+            .req("t")
+            .map_err(|e| anyhow::anyhow!("zo-adam: {e}"))?
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("zo-adam: state.t must be an integer"))?;
+        self.m = state_vecf(state, "m", d, "zo-adam")?;
+        self.v = state_vecf(state, "v", d, "zo-adam")?;
+        Ok(())
+    }
+}
+
+/// `momentum-sgd`: heavy-ball momentum on the raw estimate
+/// (`v ← β·v + ĝ`, `Φ ← Φ − lr·v`).
+pub struct MomentumSgd {
+    schedule: LrSchedule,
+    beta: f64,
+    vel: Vec<f32>,
+}
+
+impl MomentumSgd {
+    pub fn new(d: usize, schedule: LrSchedule) -> MomentumSgd {
+        MomentumSgd {
+            schedule,
+            beta: 0.9,
+            vel: vec![0.0; d],
+        }
+    }
+}
+
+impl Optimizer for MomentumSgd {
+    fn name(&self) -> &str {
+        "momentum-sgd"
+    }
+
+    fn lr_at(&self, epoch: usize) -> f64 {
+        self.schedule.at(epoch)
+    }
+
+    fn step(&mut self, phi: &mut [f32], grad: &[f32], epoch: usize) {
+        let lr = self.schedule.at(epoch) as f32;
+        let beta = self.beta as f32;
+        for i in 0..phi.len() {
+            self.vel[i] = beta * self.vel[i] + grad[i];
+            phi[i] -= lr * self.vel[i];
+        }
+    }
+
+    fn state(&self) -> Value {
+        Value::obj(vec![("vel", Value::arr_f32(&self.vel))])
+    }
+
+    fn load_state(&mut self, state: &Value) -> Result<()> {
+        if matches!(state, Value::Null) {
+            return Ok(());
+        }
+        self.vel = state_vecf(state, "vel", self.vel.len(), "momentum-sgd")?;
+        Ok(())
+    }
+}
+
+/// Builds an optimizer for a parameter dimension + learning-rate
+/// schedule (the hyperparameters every TrainConfig already carries).
+pub type OptimizerFactory = fn(d: usize, schedule: LrSchedule) -> Box<dyn Optimizer>;
+
+/// Name → optimizer factory, mirroring [`crate::pde::ProblemRegistry`]:
+/// explicit registration, duplicate names panic, lookup errors list
+/// every registered name.
+#[derive(Default)]
+pub struct OptimizerRegistry {
+    map: BTreeMap<String, OptimizerFactory>,
+}
+
+impl OptimizerRegistry {
+    pub fn new() -> OptimizerRegistry {
+        OptimizerRegistry::default()
+    }
+
+    /// Register a factory under `name`. Panics on duplicates: two
+    /// optimizers answering to one name is a programming error.
+    pub fn register(&mut self, name: &str, f: OptimizerFactory) {
+        assert!(
+            self.map.insert(name.to_string(), f).is_none(),
+            "duplicate optimizer registration '{name}'"
+        );
+    }
+
+    /// Build `name`; the error lists every valid name.
+    pub fn build(&self, name: &str, d: usize, schedule: LrSchedule) -> Result<Box<dyn Optimizer>> {
+        match self.map.get(name) {
+            Some(f) => Ok(f(d, schedule)),
+            None => anyhow::bail!(
+                "unknown optimizer '{name}' (registered: {})",
+                self.names().join(", ")
+            ),
+        }
+    }
+
+    /// Sorted optimizer names.
+    pub fn names(&self) -> Vec<String> {
+        self.map.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// A registry pre-populated with every built-in optimizer.
+    pub fn builtin() -> OptimizerRegistry {
+        let mut reg = OptimizerRegistry::new();
+        reg.register("zo-signsgd", |_d, schedule| {
+            Box::new(SignSgdOpt { inner: ZoSignSgd { schedule } })
+        });
+        reg.register("zo-sgd", |_d, schedule| {
+            Box::new(RawSgdOpt { inner: ZoSgd { schedule } })
+        });
+        reg.register("zo-adam", |d, schedule| Box::new(ZoAdam::new(d, schedule)));
+        reg.register("momentum-sgd", |d, schedule| {
+            Box::new(MomentumSgd::new(d, schedule))
+        });
+        reg
+    }
+}
+
+/// The process-wide optimizer registry (what `TrainConfig.optimizer`,
+/// manifest `hyper.optimizer` and `--optimizer` resolve against).
+pub fn global() -> &'static OptimizerRegistry {
+    static REGISTRY: OnceLock<OptimizerRegistry> = OnceLock::new();
+    REGISTRY.get_or_init(OptimizerRegistry::builtin)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_schedule(lr: f64) -> LrSchedule {
+        LrSchedule { base: lr, decay: 1.0, every: 0 }
+    }
+
+    fn quad_grad(phi: &[f32], c: &[f32]) -> Vec<f32> {
+        phi.iter().zip(c).map(|(p, c)| 2.0 * (p - c)).collect()
+    }
+
+    fn converges_on_quadratic(opt: &mut dyn Optimizer, lr_hint: f64) {
+        let c = vec![1.0f32, -2.0, 0.5];
+        let mut phi = vec![0.0f32; 3];
+        for epoch in 0..800 {
+            let g = quad_grad(&phi, &c);
+            opt.step(&mut phi, &g, epoch);
+        }
+        for (p, t) in phi.iter().zip(&c) {
+            assert!(
+                (p - t).abs() < 0.05,
+                "{} (lr {lr_hint}): {p} vs {t}",
+                opt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn zo_adam_converges_on_quadratic() {
+        let mut opt = ZoAdam::new(3, flat_schedule(0.05));
+        converges_on_quadratic(&mut opt, 0.05);
+    }
+
+    #[test]
+    fn momentum_sgd_converges_on_quadratic() {
+        let mut opt = MomentumSgd::new(3, flat_schedule(0.02));
+        converges_on_quadratic(&mut opt, 0.02);
+    }
+
+    #[test]
+    fn registry_ports_are_bit_identical_to_raw_structs() {
+        // the trait wrappers of the PR-1 rules must not change a single
+        // bit of the update arithmetic (golden-epoch contract)
+        let schedule = LrSchedule { base: 0.05, decay: 0.5, every: 100 };
+        let reg = OptimizerRegistry::builtin();
+        let grad = vec![0.5f32, -2.0, 0.0, 1e-7];
+        for (name, raw_step) in [
+            (
+                "zo-signsgd",
+                Box::new(|phi: &mut [f32], g: &[f32], e: usize| {
+                    ZoSignSgd { schedule: LrSchedule { base: 0.05, decay: 0.5, every: 100 } }
+                        .step(phi, g, e)
+                }) as Box<dyn Fn(&mut [f32], &[f32], usize)>,
+            ),
+            (
+                "zo-sgd",
+                Box::new(|phi: &mut [f32], g: &[f32], e: usize| {
+                    ZoSgd { schedule: LrSchedule { base: 0.05, decay: 0.5, every: 100 } }
+                        .step(phi, g, e)
+                }),
+            ),
+        ] {
+            let mut opt = reg.build(name, 4, schedule.clone()).unwrap();
+            for epoch in [0usize, 99, 100, 250] {
+                let mut a = vec![0.3f32, -0.1, 0.0, 2.0];
+                let mut b = a.clone();
+                opt.step(&mut a, &grad, epoch);
+                raw_step(&mut b, &grad, epoch);
+                assert_eq!(a, b, "{name} @ epoch {epoch}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_bit_identically() {
+        let schedule = flat_schedule(0.05);
+        let c = vec![1.0f32, -2.0, 0.5];
+        for name in ["zo-adam", "momentum-sgd", "zo-signsgd", "zo-sgd"] {
+            let reg = OptimizerRegistry::builtin();
+            let mut opt = reg.build(name, 3, schedule.clone()).unwrap();
+            let mut phi = vec![0.0f32; 3];
+            for epoch in 0..10 {
+                let g = quad_grad(&phi, &c);
+                opt.step(&mut phi, &g, epoch);
+            }
+            // snapshot through a JSON text roundtrip (what checkpoints do)
+            let snap = crate::util::json::parse(&opt.state().to_string()).unwrap();
+            let phi_snap = phi.clone();
+            for epoch in 10..15 {
+                let g = quad_grad(&phi, &c);
+                opt.step(&mut phi, &g, epoch);
+            }
+            let mut fresh = reg.build(name, 3, schedule.clone()).unwrap();
+            fresh.load_state(&snap).unwrap();
+            let mut phi2 = phi_snap;
+            for epoch in 10..15 {
+                let g = quad_grad(&phi2, &c);
+                fresh.step(&mut phi2, &g, epoch);
+            }
+            assert_eq!(phi, phi2, "{name}: resumed trajectory drifted");
+        }
+    }
+
+    #[test]
+    fn load_state_rejects_malformed_state() {
+        let reg = OptimizerRegistry::builtin();
+        let mut adam = reg.build("zo-adam", 3, flat_schedule(0.05)).unwrap();
+        // wrong dimension
+        let bad = Value::obj(vec![
+            ("t", Value::Num(2.0)),
+            ("m", Value::arr_f32(&[0.0; 2])),
+            ("v", Value::arr_f32(&[0.0; 2])),
+        ]);
+        assert!(adam.load_state(&bad).is_err());
+        // Null always resets cleanly
+        assert!(adam.load_state(&Value::Null).is_ok());
+        // stateless optimizers refuse non-null state
+        let mut sign = reg.build("zo-signsgd", 3, flat_schedule(0.05)).unwrap();
+        assert!(sign.load_state(&Value::Null).is_ok());
+        assert!(sign.load_state(&Value::Num(1.0)).is_err());
+    }
+
+    #[test]
+    fn registry_builds_and_error_lists_names() {
+        let reg = OptimizerRegistry::builtin();
+        assert!(reg.len() >= 4);
+        for name in ["zo-signsgd", "zo-sgd", "zo-adam", "momentum-sgd"] {
+            let opt = reg.build(name, 2, flat_schedule(0.1)).unwrap();
+            assert_eq!(opt.name(), name);
+        }
+        let err = reg.build("sgd9000", 2, flat_schedule(0.1)).unwrap_err().to_string();
+        assert!(err.contains("zo-signsgd") && err.contains("zo-adam"), "{err}");
+    }
+
+    #[test]
+    fn global_registry_has_builtins() {
+        assert!(global().names().contains(&"zo-signsgd".to_string()));
+    }
+}

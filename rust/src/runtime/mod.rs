@@ -19,6 +19,15 @@
 //! Shared vocabulary: `manifest.json` -> [`Manifest`] (presets, layouts,
 //! hyperparameters, entry I/O shapes) -> [`Backend::entry`] ->
 //! [`Entry::run`] with flat f32 buffers.
+//!
+//! The multi-Φ **batched loss API** lives on the entry layer: the
+//! `loss_multi` (FD) and `loss_stein_multi` (Stein) entries take a flat
+//! (K, d) block of phase settings and return the K probe losses of one
+//! ZO training epoch in a single dispatch. The native backend fans the
+//! probes out across engine workers (two-level parallelism — see
+//! [`parallel::for_probes`]) with results bit-identical to K sequential
+//! single-Φ dispatches; backends without a batched executable keep the
+//! per-probe `loss_stein` path (the trainer falls back automatically).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

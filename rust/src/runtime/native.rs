@@ -22,6 +22,15 @@
 //!   evaluator is retained as the reference oracle and bench baseline
 //!   ([`NativeBackend::forward_reference`] /
 //!   [`NativeBackend::loss_reference`]);
+//! * the multi-Φ training entries (`loss_multi`, `loss_stein_multi`)
+//!   are the batched loss API the ZO trainer dispatches once per epoch:
+//!   K independent probe losses fan out across
+//!   [`super::parallel::for_probes`] workers (the OUTER parallel level)
+//!   while each probe's row blocks use the remaining thread budget —
+//!   two-level parallelism under one `ParallelConfig`. Per-probe
+//!   arithmetic is exactly the single-Φ loss, so probe-parallel ≡
+//!   sequential bit for bit (`tests/probe_parallel.rs` checks every
+//!   builtin preset in both FD and Stein modes);
 //! * the BP-free FD / Stein losses and the validation MSE assemble PDE
 //!   residuals through [`Problem::residual`]; problems with
 //!   coordinate-weighted diffusion additionally receive per-dimension
@@ -46,7 +55,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::parallel::{for_row_blocks, ParallelConfig, ParallelCtl};
+use super::parallel::{for_probes, for_row_blocks, ParallelConfig, ParallelCtl};
 use super::{Backend, Entry, EntryMeta, Manifest, PresetMeta};
 use crate::model::{Hyper, Layout, LayoutBuilder};
 use crate::pde::Problem;
@@ -421,10 +430,23 @@ pub struct PresetEval {
     mat_cache: Mutex<Vec<(Vec<f32>, Arc<MaterializedNet>)>>,
 }
 
-/// MRU slots in the per-preset materialization cache — enough that a
-/// handful of solver-service workers interleaving distinct Φ's on one
-/// shared backend don't evict each other every dispatch.
-const MAT_CACHE_SLOTS: usize = 4;
+/// MRU slots in the per-preset materialization cache — sized to hold
+/// the K = `K_MULTI` phase settings of one probe-parallel training
+/// dispatch (so concurrent probes never evict each other mid-epoch),
+/// plus headroom for solver-service workers interleaving distinct Φ's
+/// on one shared backend. Manifests are runtime data and may carry a
+/// larger `k_multi`: that only costs rematerializations (results are
+/// unchanged), and [`NativeBackend::from_manifest`] warns about it.
+const MAT_CACHE_SLOTS: usize = K_MULTI + 5;
+
+/// Which evaluator runs a loss: the engine (cached materialization +
+/// row-block fan-out on an explicit config) or the retained PR-1 scalar
+/// reference path.
+#[derive(Clone, Copy, Debug)]
+enum EvalPath {
+    Engine(ParallelConfig),
+    Reference,
+}
 
 impl PresetEval {
     /// The materialized layer operands for Φ — cached by exact phase
@@ -448,10 +470,17 @@ impl PresetEval {
         m
     }
 
-    /// Engine forward: cached materialization + parallel row-blocks.
-    fn forward_f(&self, phi: &[f32], xs: &[f32]) -> Vec<f32> {
+    /// Engine forward: cached materialization + parallel row-blocks on
+    /// an explicit engine config (the per-probe budget of a batched
+    /// dispatch, or the backend's current setting).
+    fn forward_f_with(&self, phi: &[f32], xs: &[f32], par: ParallelConfig) -> Vec<f32> {
         let mat = self.materialized(phi);
-        self.net.forward_f(&mat, xs, self.par.get())
+        self.net.forward_f(&mat, xs, par)
+    }
+
+    /// Engine forward with the backend's current parallel config.
+    fn forward_f(&self, phi: &[f32], xs: &[f32]) -> Vec<f32> {
+        self.forward_f_with(phi, xs, self.par.get())
     }
 
     /// Transformed solution u(Φ, x) for a flat batch of rows.
@@ -517,15 +546,29 @@ impl PresetEval {
 
     /// BP-free FD-stencil loss (python `pinn.make_loss_fd`).
     fn loss_fd(&self, phi: &[f32], xr: &[f32]) -> f32 {
-        self.loss_fd_impl(phi, xr, false)
+        self.loss_fd_impl(phi, xr, EvalPath::Engine(self.par.get()))
     }
 
     /// [`Self::loss_fd`] through the PR-1 scalar reference path.
     fn loss_fd_reference(&self, phi: &[f32], xr: &[f32]) -> f32 {
-        self.loss_fd_impl(phi, xr, true)
+        self.loss_fd_impl(phi, xr, EvalPath::Reference)
     }
 
-    fn loss_fd_impl(&self, phi: &[f32], xr: &[f32], reference: bool) -> f32 {
+    /// Probe-parallel FD loss over K phase settings (flat (K, d) in
+    /// `phis`): the outer level of the engine's two-level parallelism.
+    /// Each probe evaluates exactly [`Self::loss_fd`] on its share of
+    /// the thread budget, so the output equals K sequential single-Φ
+    /// losses bit for bit.
+    fn loss_fd_batch(&self, phis: &[f32], k: usize, xr: &[f32]) -> Vec<f32> {
+        let d = phis.len() / k;
+        let mut out = vec![0.0f32; k];
+        for_probes(self.par.get(), &mut out, |i, inner| {
+            self.loss_fd_impl(&phis[i * d..(i + 1) * d], xr, EvalPath::Engine(inner))
+        });
+        out
+    }
+
+    fn loss_fd_impl(&self, phi: &[f32], xr: &[f32], path: EvalPath) -> f32 {
         let d = self.problem.in_dim();
         let s = self.problem.n_stencil();
         let dim = self.problem.dim();
@@ -543,10 +586,9 @@ impl PresetEval {
         if bw > 0.0 {
             self.append_boundary_rows(xr, &mut x_all, &mut targets);
         }
-        let f = if reference {
-            self.net.forward_f_reference(phi, &x_all)
-        } else {
-            self.forward_f(phi, &x_all)
+        let f = match path {
+            EvalPath::Reference => self.net.forward_f_reference(phi, &x_all),
+            EvalPath::Engine(par) => self.forward_f_with(phi, &x_all, par),
         };
         let need_d2 = self.problem.needs_d2();
         let mut df = vec![0.0f32; d];
@@ -584,6 +626,23 @@ impl PresetEval {
 
     /// Gaussian-Stein estimator loss (python `pinn.make_loss_stein`).
     fn loss_stein(&self, phi: &[f32], xr: &[f32], z: &[f32]) -> f32 {
+        self.loss_stein_with(phi, xr, z, self.par.get())
+    }
+
+    /// Probe-parallel Stein loss over K phase settings — the Stein
+    /// counterpart of [`Self::loss_fd_batch`], sharing the smoothing
+    /// directions `z` across probes exactly like the sequential
+    /// trainer's per-probe `loss_stein` dispatches did.
+    fn loss_stein_batch(&self, phis: &[f32], k: usize, xr: &[f32], z: &[f32]) -> Vec<f32> {
+        let d = phis.len() / k;
+        let mut out = vec![0.0f32; k];
+        for_probes(self.par.get(), &mut out, |i, inner| {
+            self.loss_stein_with(&phis[i * d..(i + 1) * d], xr, z, inner)
+        });
+        out
+    }
+
+    fn loss_stein_with(&self, phi: &[f32], xr: &[f32], z: &[f32], par: ParallelConfig) -> f32 {
         let d = self.problem.in_dim();
         let dim = self.problem.dim();
         let q = self.stein_q;
@@ -610,7 +669,7 @@ impl PresetEval {
         if bw > 0.0 {
             self.append_boundary_rows(xr, &mut x_all, &mut targets);
         }
-        let f = self.forward_f(phi, &x_all);
+        let f = self.forward_f_with(phi, &x_all, par);
         let z_sq: Vec<f32> = (0..q)
             .map(|k| z[k * d..k * d + dim].iter().map(|v| v * v).sum())
             .collect();
@@ -678,6 +737,7 @@ enum EntryKind {
     Loss,
     LossMulti,
     LossStein,
+    LossSteinMulti,
     Validate,
 }
 
@@ -705,14 +765,15 @@ impl Entry for NativeEntry {
             EntryKind::Forward => self.eval.forward_u(inputs[0], inputs[1]),
             EntryKind::Loss => vec![self.eval.loss_fd(inputs[0], inputs[1])],
             EntryKind::LossMulti => {
-                let shape = &self.meta.inputs[0].1; // (K, d)
-                let (k, d) = (shape[0], shape[1]);
-                (0..k)
-                    .map(|i| self.eval.loss_fd(&inputs[0][i * d..(i + 1) * d], inputs[1]))
-                    .collect()
+                let k = self.meta.inputs[0].1[0]; // phis is (K, d)
+                self.eval.loss_fd_batch(inputs[0], k, inputs[1])
             }
             EntryKind::LossStein => {
                 vec![self.eval.loss_stein(inputs[0], inputs[1], inputs[2])]
+            }
+            EntryKind::LossSteinMulti => {
+                let k = self.meta.inputs[0].1[0]; // phis is (K, d)
+                self.eval.loss_stein_batch(inputs[0], k, inputs[1], inputs[2])
             }
             EntryKind::Validate => {
                 vec![self.eval.validate(inputs[0], inputs[1], inputs[2])]
@@ -728,6 +789,7 @@ fn entry_kind(name: &str) -> Result<EntryKind> {
         "loss" => Ok(EntryKind::Loss),
         "loss_multi" => Ok(EntryKind::LossMulti),
         "loss_stein" => Ok(EntryKind::LossStein),
+        "loss_stein_multi" => Ok(EntryKind::LossSteinMulti),
         "validate" => Ok(EntryKind::Validate),
         "grad" => Err(anyhow!(
             "entry 'grad' needs the pjrt backend (exact-BP autodiff is not \
@@ -754,6 +816,16 @@ impl NativeBackend {
     /// against the manifest's `param_dim` (catching drift between the
     /// python lowering and this evaluator).
     pub fn from_manifest(manifest: Manifest) -> Result<NativeBackend> {
+        if manifest.k_multi > MAT_CACHE_SLOTS {
+            crate::warn_!(
+                "manifest k_multi {} exceeds the {}-slot per-preset \
+                 materialization cache: probe-parallel training dispatches \
+                 will rematerialize mid-epoch (latency only — results are \
+                 unchanged)",
+                manifest.k_multi,
+                MAT_CACHE_SLOTS
+            );
+        }
         let par = Arc::new(ParallelCtl::new(ParallelConfig::auto()));
         let mut evals = HashMap::new();
         for (name, pm) in &manifest.presets {
@@ -789,6 +861,20 @@ impl NativeBackend {
                 anyhow::ensure!(
                     got == want,
                     "preset '{name}': loss_stein z shape {got:?} != (stein_q, in_dim) {want:?}"
+                );
+            }
+            if let Some(em) = pm.entries.get("loss_stein_multi") {
+                let want = vec![manifest.k_multi, pm.layout.param_dim];
+                let got = em.inputs.first().map(|(_, s)| s.clone()).unwrap_or_default();
+                anyhow::ensure!(
+                    got == want,
+                    "preset '{name}': loss_stein_multi phis shape {got:?} != (k_multi, d) {want:?}"
+                );
+                let want_z = vec![pm.hyper.stein_q, pm.pde.in_dim()];
+                let got_z = em.inputs.get(2).map(|(_, s)| s.clone()).unwrap_or_default();
+                anyhow::ensure!(
+                    got_z == want_z,
+                    "preset '{name}': loss_stein_multi z shape {got_z:?} != (stein_q, in_dim) {want_z:?}"
                 );
             }
             // soft-constraint weight: manifest hyper override, else the
@@ -946,7 +1032,14 @@ struct BuiltinPreset {
     entries: &'static [&'static str],
 }
 
-const ALL_ENTRIES: &[&str] = &["forward", "loss", "loss_multi", "loss_stein", "validate"];
+const ALL_ENTRIES: &[&str] = &[
+    "forward",
+    "loss",
+    "loss_multi",
+    "loss_stein",
+    "loss_stein_multi",
+    "validate",
+];
 
 const BUILTIN_PRESETS: &[BuiltinPreset] = &[
     // -- default reproduction scale (Table-1 runs) -----------------------
@@ -1102,6 +1195,9 @@ fn builtin_hyper() -> Hyper {
         stein_q: 20,
         // None = the problem's own SoftBoundary default applies
         bc_weight: None,
+        // None = trainer defaults (zo-signsgd / spsa)
+        optimizer: None,
+        estimator: None,
     }
 }
 
@@ -1129,6 +1225,14 @@ fn builtin_entry_meta(ename: &str, d: usize, ind: usize, stein_q: usize) -> Entr
                 ("z".into(), vec![stein_q, ind]),
             ],
             vec![vec![]],
+        ),
+        "loss_stein_multi" => (
+            vec![
+                ("phis".into(), vec![K_MULTI, d]),
+                ("xr".into(), vec![B_RES, ind]),
+                ("z".into(), vec![stein_q, ind]),
+            ],
+            vec![vec![K_MULTI]],
         ),
         "validate" => (
             vec![
@@ -1326,6 +1430,52 @@ mod tests {
                 let l = loss.run_scalar(&[&phi, &xr]).unwrap();
                 assert_eq!(l, l_ref, "{preset}: loss drifted under {cfg:?}");
             }
+        }
+    }
+
+    /// The probe-parallel batched entries must reproduce per-probe
+    /// single-Φ dispatches bit for bit, for any engine config — the
+    /// correctness contract that lets the trainer fan an SPSA epoch out
+    /// across probes without touching the golden fixtures.
+    #[test]
+    fn batched_losses_match_per_probe_bitwise() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let d = pm.layout.param_dim;
+        let k = be.manifest().k_multi;
+        let mut rng = Rng::new(77);
+        let phi = pm.layout.init_vector(&mut rng);
+        let phis: Vec<f32> = (0..k)
+            .flat_map(|ki| phi.iter().map(move |p| p + 0.01 * ki as f32))
+            .collect();
+        let loss = be.entry("tonn_micro", "loss").unwrap();
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        let stein = be.entry("tonn_micro", "loss_stein").unwrap();
+        let mut z = vec![0.0f32; stein.meta().input_len(2)];
+        rng.fill_normal(&mut z);
+
+        // sequential per-probe oracle
+        assert!(be.set_parallel(ParallelConfig::sequential()));
+        let fd_seq: Vec<f32> = (0..k)
+            .map(|i| loss.run_scalar(&[&phis[i * d..(i + 1) * d], &xr]).unwrap())
+            .collect();
+        let st_seq: Vec<f32> = (0..k)
+            .map(|i| stein.run_scalar(&[&phis[i * d..(i + 1) * d], &xr, &z]).unwrap())
+            .collect();
+
+        let lm = be.entry("tonn_micro", "loss_multi").unwrap();
+        let sm = be.entry("tonn_micro", "loss_stein_multi").unwrap();
+        for cfg in [
+            ParallelConfig { threads: 1, block_rows: 32 },
+            ParallelConfig { threads: 3, block_rows: 7 },
+            ParallelConfig { threads: 16, block_rows: 4 },
+        ] {
+            assert!(be.set_parallel(cfg));
+            let fd = lm.run1(&[&phis, &xr]).unwrap();
+            assert_eq!(fd, fd_seq, "loss_multi drifted under {cfg:?}");
+            let st = sm.run1(&[&phis, &xr, &z]).unwrap();
+            assert_eq!(st, st_seq, "loss_stein_multi drifted under {cfg:?}");
         }
     }
 

@@ -18,6 +18,14 @@
 //!   entries so the config is runtime-tunable without rebuilding them.
 //! * [`for_row_blocks`] — the scoped-thread driver (std threads only;
 //!   the repo substrate stays tokio-free, DESIGN.md §Substitutions).
+//! * [`for_probes`] / [`probe_split`] — the OUTER level of the training
+//!   hot path's two-level parallelism: a ZO epoch is K = N+1 fully
+//!   independent loss evaluations at different phase settings (paper
+//!   Eq. 5), so the K probes fan out across workers and each probe's
+//!   row-block evaluation runs on its share of the same thread budget.
+//!   Each probe computes exactly what it would sequentially (row
+//!   blocking never changes a probe's bits — see above), so
+//!   probe-parallel ≡ probe-sequential bit for bit as well.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -164,6 +172,61 @@ where
     });
 }
 
+/// Split one engine thread budget across `k` concurrent probe
+/// evaluations: returns `(probe_workers, inner_cfg)` where
+/// `probe_workers ≤ min(threads, k)` probes run at once and each runs
+/// its row-block evaluation with `inner_cfg` (`threads / probe_workers`
+/// workers), so total thread pressure never exceeds `cfg.threads`.
+pub fn probe_split(cfg: ParallelConfig, k: usize) -> (usize, ParallelConfig) {
+    let threads = cfg.threads.max(1);
+    let workers = threads.min(k.max(1));
+    (
+        workers,
+        ParallelConfig {
+            threads: (threads / workers).max(1),
+            block_rows: cfg.block_rows.max(1),
+        },
+    )
+}
+
+/// Evaluate `out.len()` independent probes, `out[i] = eval(i, inner)`,
+/// fanned out across [`probe_split`]'s probe workers (round-robin,
+/// static partition — same scheduling discipline as [`for_row_blocks`]).
+///
+/// `eval` receives the per-probe engine config it should evaluate with.
+/// Because a probe's result may not depend on its engine config (the
+/// row-block contract above), the output is identical for every
+/// `ParallelConfig` — probe-parallel ≡ sequential, bit for bit. With
+/// one worker (or one probe) everything stays on the calling thread and
+/// `eval` gets the full budget.
+pub fn for_probes<F>(cfg: ParallelConfig, out: &mut [f32], eval: F)
+where
+    F: Fn(usize, ParallelConfig) -> f32 + Sync,
+{
+    let k = out.len();
+    let (workers, inner) = probe_split(cfg, k);
+    if workers <= 1 {
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = eval(i, cfg);
+        }
+        return;
+    }
+    let mut lanes: Vec<Vec<(usize, &mut f32)>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, o) in out.iter_mut().enumerate() {
+        lanes[i % workers].push((i, o));
+    }
+    let eval = &eval;
+    std::thread::scope(|s| {
+        for lane in lanes {
+            s.spawn(move || {
+                for (i, o) in lane {
+                    *o = eval(i, inner);
+                }
+            });
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -226,6 +289,64 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// The probe budget split never oversubscribes and never starves.
+    #[test]
+    fn probe_split_respects_thread_budget() {
+        for (threads, k, want_workers, want_inner) in [
+            (1usize, 11usize, 1usize, 1usize),
+            (4, 11, 4, 1),
+            (8, 11, 8, 1),
+            (16, 11, 11, 1),
+            (22, 11, 11, 2),
+            (8, 1, 1, 8),
+            (8, 2, 2, 4),
+            (3, 0, 1, 3),
+        ] {
+            let (workers, inner) =
+                probe_split(ParallelConfig { threads, block_rows: 32 }, k);
+            assert_eq!(workers, want_workers, "threads={threads} k={k}");
+            assert_eq!(inner.threads, want_inner, "threads={threads} k={k}");
+            assert!(workers * inner.threads <= threads.max(1));
+        }
+    }
+
+    /// Every probe is visited exactly once with its own index, and the
+    /// parallel fan-out equals the sequential loop bit for bit.
+    #[test]
+    fn probes_cover_every_index_and_match_sequential() {
+        let eval = |i: usize, _inner: ParallelConfig| ((i as f32) * 1.33).sin();
+        for k in [0usize, 1, 2, 11, 23] {
+            let mut seq = vec![0.0f32; k];
+            for_probes(ParallelConfig { threads: 1, block_rows: 4 }, &mut seq, eval);
+            for threads in [2, 4, 8, 64] {
+                let mut par = vec![0.0f32; k];
+                for_probes(ParallelConfig { threads, block_rows: 4 }, &mut par, eval);
+                assert_eq!(seq, par, "k={k} threads={threads}");
+            }
+        }
+    }
+
+    /// Nested use — probes fanning out row blocks on their inner budget
+    /// — still produces the sequential result.
+    #[test]
+    fn probes_nest_row_blocks() {
+        let rows = 37;
+        let probe_eval = |i: usize, inner: ParallelConfig| -> f32 {
+            let mut buf = vec![0.0f32; rows];
+            for_row_blocks(inner, 1, &mut buf, |row0, block| {
+                for (r, v) in block.iter_mut().enumerate() {
+                    *v = ((row0 + r) as f32 + i as f32 * 0.1).cos();
+                }
+            });
+            buf.iter().sum()
+        };
+        let mut seq = vec![0.0f32; 7];
+        for_probes(ParallelConfig::sequential(), &mut seq, probe_eval);
+        let mut par = vec![0.0f32; 7];
+        for_probes(ParallelConfig { threads: 6, block_rows: 5 }, &mut par, probe_eval);
+        assert_eq!(seq, par);
     }
 
     /// Parallel and sequential drivers produce identical buffers for a

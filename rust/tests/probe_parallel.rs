@@ -1,0 +1,174 @@
+//! Probe-parallel ≡ sequential, bit for bit — registry-wide.
+//!
+//! The training hot path batches the K = N+1 SPSA probe losses into one
+//! dispatch (`loss_multi` / `loss_stein_multi`) that fans the probes out
+//! across engine workers (two-level parallelism: probes × row blocks,
+//! `runtime::parallel::{for_probes, for_row_blocks}`). Because each
+//! probe computes exactly the single-Φ loss arithmetic, the batched
+//! output must equal K sequential per-probe dispatches **bitwise**, for
+//! every builtin preset, in both FD and Stein modes, under any engine
+//! config — that contract is what lets the PR-1 golden fixtures (and
+//! every trained result) pass through the probe-parallel path
+//! unchanged.
+//!
+//! Paper-scale presets (hidden = 1024) are covered only in release
+//! builds: the arithmetic is identical, but a debug-mode run of their
+//! 4300-row × K probes batch takes minutes.
+
+use photon_pinn::coordinator::trainer::{LossKind, OnChipTrainer, TrainConfig};
+use photon_pinn::photonics::noise::NoiseConfig;
+use photon_pinn::runtime::{Backend, Entry, NativeBackend, ParallelConfig};
+use photon_pinn::util::rng::Rng;
+
+/// K distinct probe settings around an init draw (the same +0.002·k
+/// spread the golden loss_multi fixtures use).
+fn probe_block(phi: &[f32], k: usize) -> Vec<f32> {
+    (0..k)
+        .flat_map(|ki| phi.iter().map(move |p| p + 0.002 * ki as f32))
+        .collect()
+}
+
+fn skip_in_debug(name: &str) -> bool {
+    cfg!(debug_assertions) && name.contains("paper")
+}
+
+/// The engine configs the equivalence must hold under: sequential,
+/// more probes than threads, more threads than probes.
+const CONFIGS: &[ParallelConfig] = &[
+    ParallelConfig { threads: 1, block_rows: 32 },
+    ParallelConfig { threads: 4, block_rows: 9 },
+    ParallelConfig { threads: 16, block_rows: 5 },
+];
+
+#[test]
+fn loss_batch_matches_sequential_per_probe_fd_for_every_preset() {
+    let be = NativeBackend::builtin();
+    let k = be.manifest().k_multi;
+    let mut names: Vec<String> = be.manifest().presets.keys().cloned().collect();
+    names.sort();
+    let mut covered = 0usize;
+    for name in &names {
+        let pm = be.manifest().preset(name).unwrap();
+        if !pm.entries.contains_key("loss_multi") || !pm.entries.contains_key("loss") {
+            continue; // forward/validate-only presets have no probe batch
+        }
+        if skip_in_debug(name) {
+            continue;
+        }
+        let d = pm.layout.param_dim;
+        let mut rng = Rng::new(29);
+        let phi = pm.layout.init_vector(&mut rng);
+        let phis = probe_block(&phi, k);
+        let loss = be.entry(name, "loss").unwrap();
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+
+        // sequential per-probe oracle (1-thread engine)
+        assert!(be.set_parallel(ParallelConfig::sequential()));
+        let seq: Vec<f32> = (0..k)
+            .map(|i| loss.run_scalar(&[&phis[i * d..(i + 1) * d], &xr]).unwrap())
+            .collect();
+        assert!(seq.iter().all(|l| l.is_finite()), "{name}");
+
+        let lm = be.entry(name, "loss_multi").unwrap();
+        for cfg in CONFIGS {
+            assert!(be.set_parallel(*cfg));
+            let batch = lm.run1(&[&phis, &xr]).unwrap();
+            assert_eq!(batch, seq, "{name}: FD probe batch drifted under {cfg:?}");
+        }
+        covered += 1;
+    }
+    assert!(covered >= 10, "only {covered} presets covered — registry shrank?");
+}
+
+#[test]
+fn loss_batch_matches_sequential_per_probe_stein_for_every_preset() {
+    let be = NativeBackend::builtin();
+    let k = be.manifest().k_multi;
+    let mut names: Vec<String> = be.manifest().presets.keys().cloned().collect();
+    names.sort();
+    let mut covered = 0usize;
+    for name in &names {
+        let pm = be.manifest().preset(name).unwrap();
+        if !pm.entries.contains_key("loss_stein_multi") {
+            continue;
+        }
+        assert!(
+            pm.entries.contains_key("loss_stein"),
+            "{name}: batched Stein entry without the single-probe one"
+        );
+        if skip_in_debug(name) {
+            continue;
+        }
+        let d = pm.layout.param_dim;
+        let mut rng = Rng::new(31);
+        let phi = pm.layout.init_vector(&mut rng);
+        let phis = probe_block(&phi, k);
+        let stein = be.entry(name, "loss_stein").unwrap();
+        let mut xr = vec![0.0f32; stein.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        let mut z = vec![0.0f32; stein.meta().input_len(2)];
+        rng.fill_normal(&mut z);
+
+        assert!(be.set_parallel(ParallelConfig::sequential()));
+        let seq: Vec<f32> = (0..k)
+            .map(|i| {
+                stein
+                    .run_scalar(&[&phis[i * d..(i + 1) * d], &xr, &z])
+                    .unwrap()
+            })
+            .collect();
+        assert!(seq.iter().all(|l| l.is_finite()), "{name}");
+
+        let sm = be.entry(name, "loss_stein_multi").unwrap();
+        for cfg in CONFIGS {
+            assert!(be.set_parallel(*cfg));
+            let batch = sm.run1(&[&phis, &xr, &z]).unwrap();
+            assert_eq!(batch, seq, "{name}: Stein probe batch drifted under {cfg:?}");
+        }
+        covered += 1;
+    }
+    assert!(covered >= 6, "only {covered} Stein presets covered — registry shrank?");
+}
+
+/// Trainer-level gate: a full probe-parallel training run reproduces the
+/// sequential run bit for bit — Φ trajectory, epoch losses, final
+/// validation — in both FD and Stein modes. Combined with the golden
+/// SPSA+ZO-signSGD epoch fixture (`artifact_numerics.rs`, which now
+/// dispatches through the same batched path), this pins the whole
+/// training loop across the parallelization.
+#[test]
+fn probe_parallel_training_is_bit_identical_to_sequential() {
+    let be = NativeBackend::builtin();
+    for kind in [LossKind::Fd, LossKind::Stein] {
+        let run = |par: ParallelConfig| {
+            let mut cfg = TrainConfig::from_manifest(&be, "tonn_micro").unwrap();
+            cfg.epochs = 20;
+            cfg.seed = 7;
+            cfg.validate_every = 5;
+            cfg.noise = NoiseConfig::default_chip();
+            cfg.loss_kind = kind;
+            cfg.parallel = Some(par);
+            cfg.verbose = false;
+            OnChipTrainer::new(&be, cfg).unwrap().train().unwrap()
+        };
+        let seq = run(ParallelConfig::sequential());
+        for cfg in [
+            ParallelConfig { threads: 4, block_rows: 9 },
+            ParallelConfig { threads: 13, block_rows: 3 },
+        ] {
+            let par = run(cfg);
+            assert_eq!(par.phi, seq.phi, "{kind:?}: Φ drifted under {cfg:?}");
+            assert_eq!(par.final_val, seq.final_val, "{kind:?} under {cfg:?}");
+            assert_eq!(
+                par.metrics.records.len(),
+                seq.metrics.records.len(),
+                "{kind:?} under {cfg:?}"
+            );
+            for (a, b) in par.metrics.records.iter().zip(&seq.metrics.records) {
+                assert_eq!(a.loss, b.loss, "{kind:?}: epoch {} loss", a.epoch);
+                assert_eq!(a.val, b.val, "{kind:?}: epoch {} val", a.epoch);
+            }
+        }
+    }
+}

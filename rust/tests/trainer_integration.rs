@@ -8,11 +8,12 @@
 
 use std::sync::Arc;
 
+use photon_pinn::coordinator::checkpoint::Checkpoint;
 use photon_pinn::coordinator::offchip::{OffChipConfig, OffChipTrainer};
-use photon_pinn::coordinator::trainer::{LossKind, OnChipTrainer, TrainConfig, UpdateRule};
+use photon_pinn::coordinator::trainer::{LossKind, OnChipTrainer, TrainConfig};
 use photon_pinn::coordinator::{ServiceConfig, SolveRequest, SolverService};
 use photon_pinn::photonics::noise::NoiseConfig;
-use photon_pinn::runtime::{Backend, Entry, NativeBackend};
+use photon_pinn::runtime::{Backend, Entry, EntryMeta, Manifest, NativeBackend, ParallelConfig};
 
 fn quick_cfg(be: &NativeBackend, preset: &str, epochs: usize) -> TrainConfig {
     let mut cfg = TrainConfig::from_manifest(be, preset).unwrap();
@@ -76,10 +77,104 @@ fn stein_estimator_runs_and_stays_finite() {
 fn raw_sgd_rule_runs() {
     let be = NativeBackend::builtin();
     let mut cfg = quick_cfg(&be, "tonn_micro", 20);
-    cfg.update_rule = UpdateRule::RawSgd;
+    cfg.optimizer = "zo-sgd".into();
     cfg.lr = 0.002;
     let res = OnChipTrainer::new(&be, cfg).unwrap().train().unwrap();
     assert!(res.final_val.is_finite());
+}
+
+/// Every registered optimizer trains end to end through the generic
+/// trainer (the acceptance gate for the pluggable optimizer layer: no
+/// optimizer-specific code paths anywhere in the coordinator).
+#[test]
+fn every_registered_optimizer_trains() {
+    let be = NativeBackend::builtin();
+    let pm = be.manifest().preset("tonn_micro").unwrap();
+    let mut rng = photon_pinn::util::rng::Rng::new(0);
+    let phi0 = pm.layout.init_vector(&mut rng);
+    for name in photon_pinn::optim::optimizer::global().names() {
+        let mut cfg = quick_cfg(&be, "tonn_micro", 30);
+        cfg.noise = NoiseConfig::ideal();
+        cfg.optimizer = name.clone();
+        if name == "zo-sgd" || name == "momentum-sgd" {
+            cfg.lr = 0.002; // raw-estimate rules need a tamer step
+        }
+        let res = OnChipTrainer::new(&be, cfg).unwrap().train().unwrap();
+        assert!(res.final_val.is_finite(), "{name}");
+        assert_eq!(
+            res.metrics.records.len() as u64 + res.metrics.skipped_epochs,
+            30,
+            "{name}"
+        );
+        assert_ne!(res.phi, phi0, "{name}: optimizer never moved Φ");
+    }
+}
+
+/// ZO-Adam makes actual progress on the micro preset (its trainer
+/// integration test beyond "runs and stays finite").
+#[test]
+fn zo_adam_reduces_validation_loss() {
+    let be = NativeBackend::builtin();
+    let mut cfg = quick_cfg(&be, "tonn_micro", 300);
+    cfg.noise = NoiseConfig::ideal();
+    cfg.optimizer = "zo-adam".into();
+    let mut trainer = OnChipTrainer::new(&be, cfg).unwrap();
+    let pm = be.manifest().preset("tonn_micro").unwrap();
+    let mut rng = photon_pinn::util::rng::Rng::new(0);
+    let phi0 = pm.layout.init_vector(&mut rng);
+    let before = trainer.score_on_this_chip(&phi0).unwrap();
+    let res = trainer.train().unwrap();
+    assert!(
+        res.final_val < before,
+        "zo-adam made no progress: {before} -> {}",
+        res.final_val
+    );
+}
+
+/// Momentum-SGD trainer integration: full run, finite, deterministic
+/// per seed (the stateful velocity buffer must replay identically).
+#[test]
+fn momentum_sgd_is_deterministic_per_seed() {
+    let be = NativeBackend::builtin();
+    let run = |seed: u64| {
+        let mut cfg = quick_cfg(&be, "tonn_micro", 25);
+        cfg.optimizer = "momentum-sgd".into();
+        cfg.lr = 0.002;
+        cfg.seed = seed;
+        OnChipTrainer::new(&be, cfg).unwrap().train().unwrap()
+    };
+    let a = run(3);
+    let b = run(3);
+    assert_eq!(a.phi, b.phi);
+    assert_eq!(a.final_val, b.final_val);
+}
+
+/// The antithetic SPSA estimator plugs into the same K = k_multi loss
+/// budget and trains end to end.
+#[test]
+fn antithetic_estimator_trains() {
+    let be = NativeBackend::builtin();
+    let mut cfg = quick_cfg(&be, "tonn_micro", 30);
+    cfg.noise = NoiseConfig::ideal();
+    cfg.estimator = "spsa-antithetic".into();
+    let res = OnChipTrainer::new(&be, cfg).unwrap().train().unwrap();
+    assert!(res.final_val.is_finite());
+    assert_eq!(res.metrics.records.len() as u64 + res.metrics.skipped_epochs, 30);
+}
+
+/// Unknown registry names fail at construction with errors that list
+/// every registered name (the ProblemRegistry error convention).
+#[test]
+fn unknown_optimizer_and_estimator_errors_list_names() {
+    let be = NativeBackend::builtin();
+    let mut cfg = quick_cfg(&be, "tonn_micro", 5);
+    cfg.optimizer = "sgd9000".into();
+    let err = format!("{:#}", OnChipTrainer::new(&be, cfg).err().unwrap());
+    assert!(err.contains("zo-signsgd") && err.contains("zo-adam"), "{err}");
+    let mut cfg = quick_cfg(&be, "tonn_micro", 5);
+    cfg.estimator = "fd9000".into();
+    let err = format!("{:#}", OnChipTrainer::new(&be, cfg).err().unwrap());
+    assert!(err.contains("spsa"), "{err}");
 }
 
 #[test]
@@ -146,6 +241,180 @@ fn training_under_hardware_noise_completes() {
     cfg.chip_seed = 11;
     let res = OnChipTrainer::new(&be, cfg).unwrap().train().unwrap();
     assert!(res.final_val.is_finite());
+}
+
+/// Backend decorator that forces every `loss_multi` dispatch to return
+/// NaN probe losses — the divergence scenario the trainer's skip guard
+/// must abort on (a real sin-activation network can only go non-finite
+/// through pathological states, so the test injects them directly).
+struct NanLossBackend {
+    inner: NativeBackend,
+}
+
+struct NanEntry {
+    meta: EntryMeta,
+}
+
+impl Entry for NanEntry {
+    fn meta(&self) -> &EntryMeta {
+        &self.meta
+    }
+    fn dispatches(&self) -> u64 {
+        0
+    }
+    fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.meta.check_inputs(inputs)?;
+        Ok(vec![vec![f32::NAN; self.meta.output_len(0)]])
+    }
+}
+
+impl Backend for NanLossBackend {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+    fn platform(&self) -> String {
+        "nan-injector".into()
+    }
+    fn parallel(&self) -> ParallelConfig {
+        self.inner.parallel()
+    }
+    fn set_parallel(&self, cfg: ParallelConfig) -> bool {
+        self.inner.set_parallel(cfg)
+    }
+    fn set_bc_weight(&self, preset: &str, weight: f32) -> bool {
+        self.inner.set_bc_weight(preset, weight)
+    }
+    fn entry(&self, preset: &str, entry: &str) -> anyhow::Result<Arc<dyn Entry>> {
+        let real = self.inner.entry(preset, entry)?;
+        if entry == "loss_multi" {
+            return Ok(Arc::new(NanEntry { meta: real.meta().clone() }));
+        }
+        Ok(real)
+    }
+}
+
+/// The divergence guard: a bounded run of consecutive non-finite-loss
+/// epochs aborts with a loud error instead of skipping to `epochs`.
+#[test]
+fn divergence_guard_aborts_after_bounded_skip_run() {
+    let be = NanLossBackend { inner: NativeBackend::builtin() };
+    let mut cfg = quick_cfg(&be.inner, "tonn_micro", 500);
+    cfg.max_skipped_run = 5;
+    let err = OnChipTrainer::new(&be, cfg)
+        .unwrap()
+        .train()
+        .err()
+        .expect("all-NaN losses must abort, not run 500 epochs");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("diverged") && msg.contains("non-finite"), "{msg}");
+    assert!(msg.contains("tonn_micro"), "{msg}");
+
+    // guard disabled (0): the pre-guard skip-forever behavior remains
+    // available and completes the run with every epoch skipped
+    let mut cfg = quick_cfg(&be.inner, "tonn_micro", 8);
+    cfg.max_skipped_run = 0;
+    let res = OnChipTrainer::new(&be, cfg).unwrap().train().unwrap();
+    assert_eq!(res.metrics.skipped_epochs, 8);
+    assert!(res.metrics.records.is_empty());
+}
+
+/// Resume from a checkpoint continues BIT-identically to an
+/// uninterrupted run — Φ, optimizer state (zo-adam: m/v/t) and the
+/// deterministic RNG streams all line up. This is the end-to-end gate
+/// for the checkpoint wiring.
+#[test]
+fn resume_from_checkpoint_equals_uninterrupted_run() {
+    let be = NativeBackend::builtin();
+    let dir = std::env::temp_dir().join(format!("pp_resume_{}", std::process::id()));
+    let ck_path = dir.join("mid.json");
+
+    // zo-adam: a STATEFUL optimizer, so a resume that dropped m/v/t
+    // would visibly drift from the uninterrupted trajectory
+    let base = |epochs: usize| {
+        let mut cfg = quick_cfg(&be, "tonn_micro", epochs);
+        cfg.optimizer = "zo-adam".into();
+        cfg.seed = 13;
+        cfg
+    };
+
+    // run A: first 4 epochs, checkpointed at the end
+    let mut cfg_a = base(4);
+    cfg_a.checkpoint_path = Some(ck_path.clone());
+    OnChipTrainer::new(&be, cfg_a).unwrap().train().unwrap();
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    assert_eq!(ck.epoch, 4);
+    assert_eq!(ck.optimizer, "zo-adam");
+
+    // run B: resume to 9 epochs
+    let mut cfg_b = base(9);
+    cfg_b.resume = Some(ck_path.clone());
+    let resumed = OnChipTrainer::new(&be, cfg_b).unwrap().train().unwrap();
+    // resumed metrics only cover the continued epochs
+    assert_eq!(resumed.metrics.records.len() as u64 + resumed.metrics.skipped_epochs, 5);
+
+    // run C: 9 epochs uninterrupted
+    let full = OnChipTrainer::new(&be, base(9)).unwrap().train().unwrap();
+
+    assert_eq!(resumed.phi, full.phi, "resumed Φ drifted from the uninterrupted run");
+    assert_eq!(resumed.final_val, full.final_val);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Periodic checkpointing: with `validate_every` set, the checkpoint
+/// file is refreshed on validation epochs (and finalized at the end),
+/// and resuming with a mismatched seed or preset fails loudly.
+#[test]
+fn checkpoints_save_periodically_and_resume_validates_identity() {
+    let be = NativeBackend::builtin();
+    let dir = std::env::temp_dir().join(format!("pp_ckpt_every_{}", std::process::id()));
+    let ck_path = dir.join("run.json");
+    let mut cfg = quick_cfg(&be, "tonn_micro", 6);
+    cfg.seed = 21;
+    cfg.validate_every = 2;
+    cfg.checkpoint_path = Some(ck_path.clone());
+    OnChipTrainer::new(&be, cfg).unwrap().train().unwrap();
+    let ck = Checkpoint::load(&ck_path).unwrap();
+    assert_eq!(ck.preset, "tonn_micro");
+    assert_eq!(ck.epoch, 6, "final save must reflect the completed run");
+    assert_eq!(ck.seed, 21);
+    assert!(ck.final_val.unwrap().is_finite());
+
+    // wrong seed: the RNG streams would not replay — must refuse
+    let mut bad = quick_cfg(&be, "tonn_micro", 8);
+    bad.seed = 99;
+    bad.resume = Some(ck_path.clone());
+    let msg = format!("{:#}", OnChipTrainer::new(&be, bad).err().unwrap());
+    assert!(msg.contains("seed"), "{msg}");
+
+    // wrong preset: Φ would not even be the right dimension — refuse
+    let mut bad = quick_cfg(&be, "tonn_micro_heat", 8);
+    bad.seed = 21;
+    bad.resume = Some(ck_path.clone());
+    let msg = format!("{:#}", OnChipTrainer::new(&be, bad).err().unwrap());
+    assert!(msg.contains("preset"), "{msg}");
+
+    // shrunken epoch budget below the completed count — refuse
+    let mut bad = quick_cfg(&be, "tonn_micro", 3);
+    bad.seed = 21;
+    bad.resume = Some(ck_path.clone());
+    assert!(OnChipTrainer::new(&be, bad).is_err());
+
+    // different loss estimator: the checkpointed run was FD — refuse
+    let mut bad = quick_cfg(&be, "tonn_micro", 8);
+    bad.seed = 21;
+    bad.loss_kind = LossKind::Stein;
+    bad.resume = Some(ck_path.clone());
+    let msg = format!("{:#}", OnChipTrainer::new(&be, bad).err().unwrap());
+    assert!(msg.contains("loss"), "{msg}");
+
+    // different chip realization — refuse
+    let mut bad = quick_cfg(&be, "tonn_micro", 8);
+    bad.seed = 21;
+    bad.chip_seed = 77;
+    bad.resume = Some(ck_path.clone());
+    let msg = format!("{:#}", OnChipTrainer::new(&be, bad).err().unwrap());
+    assert!(msg.contains("chip_seed"), "{msg}");
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 #[test]
@@ -221,10 +490,11 @@ fn manifest_presets_have_training_entries() {
             pm.entries.contains_key("forward") || pm.entries.contains_key("loss_multi"),
             "{name} has no usable entries"
         );
-        // every entry's phi input matches the layout dimension
+        // every entry's phi input matches the layout dimension (the
+        // multi-Φ batched entries take a (K, d) probe block)
         for (ename, em) in &pm.entries {
             let (pname, shape) = &em.inputs[0];
-            let expect = if ename == "loss_multi" {
+            let expect = if ename == "loss_multi" || ename == "loss_stein_multi" {
                 vec![be.manifest().k_multi, pm.layout.param_dim]
             } else {
                 vec![pm.layout.param_dim]
