@@ -20,7 +20,7 @@ use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
 use photon_pinn::optim::Spsa;
 use photon_pinn::pde::Sampler;
 use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
-use photon_pinn::runtime::{Backend, Entry, NativeBackend, ParallelConfig};
+use photon_pinn::runtime::{Backend, Entry, EvalOptions, NativeBackend, ParallelConfig};
 use photon_pinn::util::bench::{bench, bench_report_path, report, BenchReport, BenchResult};
 use photon_pinn::util::rng::Rng;
 
@@ -163,6 +163,48 @@ fn main() {
                 val.run_scalar(&[&phi, &xv, &uv]).unwrap();
             });
             record(&mut rep, runs);
+        }
+    }
+
+    // per-dispatch EvalOptions vs the old global-state path: the same
+    // engine config resolved once from the backend default (`run`) and
+    // once carried by every dispatch (`run_with`). The per-dispatch
+    // path joins the enforce gate below: CI fails if options travelling
+    // with the dispatch cost measurable latency over the global path.
+    {
+        let preset = "tonn_small";
+        if rt.manifest().preset(preset).is_ok() {
+            let pm = rt.manifest().preset(preset).unwrap();
+            let (warm, iters) = if fast { (1, 5) } else { (3, 20) };
+            let mut rng = Rng::new(5);
+            let phi = pm.layout.init_vector(&mut rng);
+            let mut sampler = Sampler::new(pm.pde.clone(), 6);
+            let mut xr = Vec::new();
+            sampler.batch(rt.manifest().b_residual, &mut xr);
+            let loss = rt.entry(preset, "loss").unwrap();
+            rt.set_parallel(par_cfg);
+            let global = bench(
+                &format!("{preset}/loss opts backend-default"),
+                warm,
+                iters,
+                || {
+                    loss.run_scalar(&[&phi, &xr]).unwrap();
+                },
+            );
+            let opts = EvalOptions::NONE.with_parallel(par_cfg);
+            let perdisp = bench(
+                &format!("{preset}/loss opts per-dispatch"),
+                warm,
+                iters,
+                || {
+                    loss.run_scalar_with(&[&phi, &xr], &opts).unwrap();
+                },
+            );
+            rep.case_vs(&global, None);
+            rep.case_vs(&perdisp, Some(&global));
+            enforced.push((perdisp.name.clone(), perdisp.median_s, global.median_s));
+            results.push(global);
+            results.push(perdisp);
         }
     }
 

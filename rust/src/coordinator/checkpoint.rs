@@ -10,10 +10,16 @@
 //! checkpointed epoch).
 
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::Result;
 
 use crate::util::json::{self, Value};
+
+/// Process-wide sequence for unique atomic-save tmp names: two threads
+/// (or two solver-service jobs) saving into one directory must never
+/// collide on a shared tmp path mid-write.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
 
 /// A saved training state.
 #[derive(Clone, Debug, PartialEq)]
@@ -45,12 +51,30 @@ pub struct Checkpoint {
     pub opt_state: Value,
 }
 
+/// Encode a u64 seed as a JSON number. JSON numbers are f64, which is
+/// exact only up to 2^53: a silently rounded seed would resume a
+/// DIFFERENT RNG stream while still passing the seed-identity check —
+/// refuse to write such a checkpoint instead.
+fn seed_to_num(label: &str, v: u64) -> Result<Value> {
+    anyhow::ensure!(
+        v as f64 as u64 == v,
+        "{label} {v} cannot be stored exactly in a JSON checkpoint \
+         (f64 loses integer precision above 2^53) — use a smaller {label}"
+    );
+    Ok(Value::Num(v as f64))
+}
+
 impl Checkpoint {
     pub fn save(&self, path: &Path) -> Result<()> {
+        let seed_v = seed_to_num("seed", self.seed)?;
+        let chip_seed_v = match self.chip_seed {
+            Some(s) => seed_to_num("chip_seed", s)?,
+            None => Value::Null,
+        };
         let v = Value::obj(vec![
             ("preset", Value::Str(self.preset.clone())),
             ("epoch", Value::Num(self.epoch as f64)),
-            ("seed", Value::Num(self.seed as f64)),
+            ("seed", seed_v),
             (
                 "final_val",
                 self.final_val
@@ -59,12 +83,7 @@ impl Checkpoint {
             ),
             ("optimizer", Value::Str(self.optimizer.clone())),
             ("estimator", Value::Str(self.estimator.clone())),
-            (
-                "chip_seed",
-                self.chip_seed
-                    .map(|s| Value::Num(s as f64))
-                    .unwrap_or(Value::Null),
-            ),
+            ("chip_seed", chip_seed_v),
             ("loss_kind", Value::Str(self.loss_kind.clone())),
             ("opt_state", self.opt_state.clone()),
             ("phi", Value::arr_f32(&self.phi)),
@@ -74,23 +93,81 @@ impl Checkpoint {
         }
         // atomic replace: the trainer rewrites this path on every
         // validation epoch, and a crash mid-write must never destroy
-        // the previous good checkpoint
-        let tmp = path.with_extension("tmp");
+        // the previous good checkpoint. The tmp name APPENDS a unique
+        // pid/sequence-qualified suffix instead of replacing the
+        // extension — `run.json` and `run.ckpt` in one directory used
+        // to collide on `run.tmp`, letting concurrent service jobs
+        // clobber each other mid-write
+        let mut tmp_name = path
+            .file_name()
+            .map(|n| n.to_os_string())
+            .unwrap_or_else(|| std::ffi::OsString::from("checkpoint"));
+        tmp_name.push(format!(
+            ".{}.{}.tmp",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let tmp = path.with_file_name(tmp_name);
         std::fs::write(&tmp, v.to_string())?;
-        std::fs::rename(&tmp, path)?;
+        if let Err(e) = std::fs::rename(&tmp, path) {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e.into());
+        }
         Ok(())
     }
 
+    /// Load a checkpoint. The fields a resumed run's correctness
+    /// depends on — `preset`, `epoch`, `seed`, every `phi` entry — are
+    /// REQUIRED: a malformed value means the file is truncated or
+    /// corrupt, and silently defaulting it (Φ entries → 0.0, seed → 0,
+    /// epoch → 0) would resume a *wrong* run. Optional run metadata
+    /// (`optimizer`, `estimator`, `chip_seed`, `loss_kind`,
+    /// `opt_state`) keeps its lenient legacy defaults: absent means
+    /// "unknown pre-PR-4 checkpoint", and the resume identity checks
+    /// treat empty as such.
     pub fn load(path: &Path) -> Result<Checkpoint> {
         let v = json::parse_file(path)?;
-        let phi = v
-            .req("phi")
-            .map_err(|e| anyhow::anyhow!("{e}"))?
-            .as_arr()
-            .ok_or_else(|| anyhow::anyhow!("phi must be an array"))?
-            .iter()
-            .map(|x| x.as_f64().unwrap_or(0.0) as f32)
-            .collect();
+        let bad = |field: &str| {
+            anyhow::anyhow!(
+                "checkpoint {}: missing or malformed required field '{field}' \
+                 (corrupt/truncated file — refusing to resume from \
+                 silently-defaulted state)",
+                path.display()
+            )
+        };
+        let preset = v
+            .get("preset")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| bad("preset"))?
+            .to_string();
+        let epoch = v
+            .get("epoch")
+            .and_then(|x| x.as_usize())
+            .ok_or_else(|| bad("epoch"))?;
+        // seeds must survive the u64 <-> f64 round-trip exactly: a
+        // fractional, negative or rounded value means the file does not
+        // encode the seed the run actually used
+        let seed_f = v
+            .get("seed")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| bad("seed"))?;
+        let seed = seed_f as u64;
+        if seed as f64 != seed_f {
+            return Err(bad("seed"));
+        }
+        let phi_arr = v
+            .get("phi")
+            .and_then(|x| x.as_arr())
+            .ok_or_else(|| bad("phi"))?;
+        let mut phi = Vec::with_capacity(phi_arr.len());
+        for (i, x) in phi_arr.iter().enumerate() {
+            let f = x.as_f64().ok_or_else(|| bad(&format!("phi[{i}]")))?;
+            phi.push(f as f32);
+        }
+        let final_val = match v.get("final_val") {
+            None | Some(Value::Null) => None,
+            Some(x) => Some(x.as_f64().ok_or_else(|| bad("final_val"))? as f32),
+        };
         let str_or_empty = |k: &str| {
             v.get(k)
                 .and_then(|x| x.as_str())
@@ -98,18 +175,19 @@ impl Checkpoint {
                 .to_string()
         };
         Ok(Checkpoint {
-            preset: v
-                .req("preset")
-                .map_err(|e| anyhow::anyhow!("{e}"))?
-                .as_str()
-                .unwrap_or_default()
-                .to_string(),
-            epoch: v.get("epoch").and_then(|x| x.as_usize()).unwrap_or(0),
-            seed: v.get("seed").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
-            final_val: v.get("final_val").and_then(|x| x.as_f64()).map(|f| f as f32),
+            preset,
+            epoch,
+            seed,
+            final_val,
             optimizer: str_or_empty("optimizer"),
             estimator: str_or_empty("estimator"),
-            chip_seed: v.get("chip_seed").and_then(|x| x.as_f64()).map(|s| s as u64),
+            // optional metadata, but when present it must round-trip
+            // exactly (same silent-wrong-resume argument as `seed`)
+            chip_seed: match v.get("chip_seed").and_then(|x| x.as_f64()) {
+                Some(s) if (s as u64) as f64 == s => Some(s as u64),
+                Some(_) => return Err(bad("chip_seed")),
+                None => None,
+            },
             loss_kind: str_or_empty("loss_kind"),
             opt_state: v.get("opt_state").cloned().unwrap_or(Value::Null),
             phi,
@@ -185,5 +263,143 @@ mod tests {
     #[test]
     fn load_missing_fails() {
         assert!(Checkpoint::load(Path::new("/nonexistent/ck.json")).is_err());
+    }
+
+    /// Malformed REQUIRED fields are hard errors — a truncated/corrupt
+    /// checkpoint must never resume a silently-defaulted (wrong) run.
+    #[test]
+    fn corrupted_required_fields_are_hard_errors() {
+        let dir = std::env::temp_dir().join(format!("pp_ck_corrupt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let cases: &[(&str, &str, &str)] = &[
+            (
+                "phi_entry.json",
+                r#"{"preset":"p","epoch":1,"seed":2,"phi":[0.5,"x",1.0]}"#,
+                "phi[1]",
+            ),
+            (
+                "no_seed.json",
+                r#"{"preset":"p","epoch":1,"phi":[0.5]}"#,
+                "seed",
+            ),
+            (
+                "bad_epoch.json",
+                r#"{"preset":"p","epoch":"three","seed":2,"phi":[0.5]}"#,
+                "epoch",
+            ),
+            (
+                "bad_preset.json",
+                r#"{"preset":7,"epoch":1,"seed":2,"phi":[0.5]}"#,
+                "preset",
+            ),
+            (
+                "no_phi.json",
+                r#"{"preset":"p","epoch":1,"seed":2}"#,
+                "phi",
+            ),
+            (
+                "bad_final_val.json",
+                r#"{"preset":"p","epoch":1,"seed":2,"final_val":"oops","phi":[0.5]}"#,
+                "final_val",
+            ),
+        ];
+        for (file, text, field) in cases {
+            let path = dir.join(file);
+            std::fs::write(&path, text).unwrap();
+            let err = match Checkpoint::load(&path) {
+                Ok(_) => panic!("{file}: corrupted '{field}' must not load"),
+                Err(e) => e,
+            };
+            let msg = format!("{err:#}");
+            assert!(msg.contains(field), "{file}: error should name '{field}': {msg}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Seeds must survive the JSON f64 round-trip EXACTLY: a silently
+    /// rounded seed (> 2^53) would resume a different RNG stream while
+    /// still passing the seed-identity check, so `save` refuses to
+    /// write it and `load` refuses fractional/negative values.
+    #[test]
+    fn seeds_that_do_not_roundtrip_are_refused() {
+        let dir = std::env::temp_dir().join(format!("pp_ck_seed_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut ck = Checkpoint {
+            preset: "p".into(),
+            epoch: 1,
+            seed: (1u64 << 53) + 1, // not representable in f64
+            phi: vec![0.5],
+            final_val: None,
+            optimizer: String::new(),
+            estimator: String::new(),
+            chip_seed: None,
+            loss_kind: String::new(),
+            opt_state: Value::Null,
+        };
+        let path = dir.join("seed.json");
+        let msg = format!("{:#}", ck.save(&path).err().expect("lossy seed must refuse"));
+        assert!(msg.contains("seed"), "{msg}");
+        ck.seed = 1 << 53; // exactly representable — fine
+        ck.chip_seed = Some((1u64 << 53) + 1);
+        let msg = format!("{:#}", ck.save(&path).err().expect("lossy chip_seed must refuse"));
+        assert!(msg.contains("chip_seed"), "{msg}");
+        ck.chip_seed = Some(11);
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.seed, 1 << 53);
+        assert_eq!(back.chip_seed, Some(11));
+        // corrupt files with fractional / negative seeds are refused
+        let frac = dir.join("frac.json");
+        std::fs::write(&frac, r#"{"preset":"p","epoch":1,"seed":1.5,"phi":[0.5]}"#).unwrap();
+        assert!(Checkpoint::load(&frac).is_err());
+        let neg = dir.join("neg.json");
+        std::fs::write(&neg, r#"{"preset":"p","epoch":1,"seed":-3,"phi":[0.5]}"#).unwrap();
+        assert!(Checkpoint::load(&neg).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Two checkpoints sharing a file stem in one directory (the
+    /// concurrent-service layout: `run.json` + `run.ckpt`) must never
+    /// clobber each other through a shared tmp path mid-write.
+    #[test]
+    fn concurrent_saves_with_shared_stem_do_not_clobber() {
+        let dir = std::env::temp_dir().join(format!("pp_ck_race_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mk = |preset: &str, seed: u64| Checkpoint {
+            preset: preset.into(),
+            epoch: 3,
+            seed,
+            phi: vec![1.0, 2.0],
+            final_val: None,
+            optimizer: String::new(),
+            estimator: String::new(),
+            chip_seed: None,
+            loss_kind: String::new(),
+            opt_state: Value::Null,
+        };
+        let a = mk("preset_a", 1);
+        let b = mk("preset_b", 2);
+        let a_path = dir.join("run.json");
+        let b_path = dir.join("run.ckpt");
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..200 {
+                    a.save(&a_path).unwrap();
+                }
+            });
+            s.spawn(|| {
+                for _ in 0..200 {
+                    b.save(&b_path).unwrap();
+                }
+            });
+        });
+        assert_eq!(Checkpoint::load(&a_path).unwrap().preset, "preset_a");
+        assert_eq!(Checkpoint::load(&b_path).unwrap().preset, "preset_b");
+        // the unique tmp names must not litter the directory either
+        for e in std::fs::read_dir(&dir).unwrap() {
+            let name = e.unwrap().file_name().into_string().unwrap();
+            assert!(!name.ends_with(".tmp"), "tmp file left behind: {name}");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -20,13 +20,24 @@
 //! `pde` registry — see `benches/scenario_sweep.rs`, which sweeps the
 //! whole registry through this service) under any registered
 //! optimizer/estimator pair (`TrainConfig.{optimizer,estimator}` —
-//! workers resolve them by name per job, nothing is shared). Note
-//! `TrainConfig.bc_weight`, like `TrainConfig.parallel`, mutates
-//! *shared backend* state at trainer construction: on a shared-backend
-//! service it reconfigures that preset for every worker — set
-//! soft-constraint weights once, not per job. A worker training with
-//! probe-parallel losses multiplies thread pressure (`workers ×
-//! threads`), same sizing rule as before.
+//! workers resolve them by name per job, nothing is shared). Per-job
+//! evaluation tuning is session-scoped too:
+//! `TrainConfig.{parallel,bc_weight,probe_workers}` become the job's
+//! [`EvalOptions`](crate::runtime::EvalOptions) and ride every
+//! dispatch, so two concurrent jobs with different boundary weights or
+//! thread budgets on ONE shared backend reproduce their isolated runs
+//! bit for bit (`tests/service_mixed_workload.rs`) — no backend state
+//! is mutated per job. `ServiceConfig.parallel` still sets the
+//! backend-wide *default* engine config once at startup (via the
+//! deprecated `set_parallel` shim); jobs that don't carry their own
+//! config inherit it. A worker training with probe-parallel losses
+//! multiplies thread pressure (`workers × threads`), same sizing rule
+//! as before.
+//!
+//! Workers are panic-proof: a job that panics mid-solve comes back as
+//! an `Err` [`SolveResult`] (so `recv()` can never hang waiting for a
+//! result that will not arrive) and the worker keeps draining the
+//! queue.
 //!
 //! Two backend topologies:
 //!
@@ -43,6 +54,7 @@
 //! job queued before [`SolverService::shutdown`] still runs, workers
 //! join, and the results never `recv`'d come back from the drain.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
@@ -81,8 +93,11 @@ pub struct ServiceConfig {
     pub queue_cap: usize,
     /// pre-build this preset's hot entries before accepting jobs
     pub warmup_preset: Option<String>,
-    /// evaluation-engine parallelism applied to the backend(s) at
-    /// startup; `None` keeps the backend's current setting
+    /// backend-wide DEFAULT evaluation-engine parallelism, applied to
+    /// the backend(s) once at startup (via the deprecated
+    /// `set_parallel` shim); `None` keeps the backend's current
+    /// setting. Jobs override it per dispatch through
+    /// `TrainConfig.parallel` ([`crate::runtime::EvalOptions`]).
     pub parallel: Option<ParallelConfig>,
 }
 
@@ -126,6 +141,12 @@ struct Plumbing {
 }
 
 /// Drain jobs against a backend until shutdown.
+///
+/// Job execution is wrapped in `catch_unwind`: a panicking job must
+/// neither kill this worker silently (the queue would stop draining)
+/// nor swallow its result (the submitter's `recv()` would hang forever
+/// on a solve that can no longer arrive) — it comes back as an `Err`
+/// [`SolveResult`] instead.
 fn worker_loop(w: usize, rt: &dyn Backend, p: &Plumbing) {
     loop {
         let job = { p.rx.lock().unwrap().recv() };
@@ -133,14 +154,27 @@ fn worker_loop(w: usize, rt: &dyn Backend, p: &Plumbing) {
             Ok(Job::Solve(req, submitted)) => {
                 let queue_seconds = submitted.elapsed().as_secs_f64();
                 let t0 = Instant::now();
-                let outcome =
-                    OnChipTrainer::new(rt, req.config.clone()).and_then(|mut t| t.train());
+                let SolveRequest { id, config } = req;
+                let outcome = catch_unwind(AssertUnwindSafe(|| {
+                    OnChipTrainer::new(rt, config).and_then(|mut t| t.train())
+                }));
                 let (final_val, phi) = match outcome {
-                    Ok(r) => (Ok(r.final_val), r.phi),
-                    Err(e) => (Err(e), Vec::new()),
+                    Ok(Ok(r)) => (Ok(r.final_val), r.phi),
+                    Ok(Err(e)) => (Err(e), Vec::new()),
+                    Err(payload) => {
+                        let msg = payload
+                            .downcast_ref::<&str>()
+                            .map(|s| s.to_string())
+                            .or_else(|| payload.downcast_ref::<String>().cloned())
+                            .unwrap_or_else(|| "non-string panic payload".to_string());
+                        (
+                            Err(anyhow::anyhow!("job {id} panicked on worker {w}: {msg}")),
+                            Vec::new(),
+                        )
+                    }
                 };
                 let _ = p.res_tx.send(SolveResult {
-                    id: req.id,
+                    id,
                     final_val,
                     phi,
                     queue_seconds,

@@ -26,6 +26,13 @@
 //! manifests may pin them per preset (`hyper.optimizer`), and
 //! checkpoints carry the optimizer's internal state so `--resume`
 //! continues bit-identically.
+//!
+//! Per-job evaluation configuration
+//! (`TrainConfig.{parallel,bc_weight,probe_workers}`) becomes the job's
+//! [`EvalOptions`] and rides every dispatch: the trainer never mutates
+//! shared backend state, so concurrent mixed-config jobs on a
+//! shared-backend solver service cannot corrupt each other's losses
+//! (`tests/service_mixed_workload.rs`).
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -39,7 +46,7 @@ use super::validator::Validator;
 use crate::optim::{GradientEstimator, LrSchedule, Optimizer};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
 use crate::pde::{Problem, Sampler};
-use crate::runtime::{Backend, Entry, ParallelConfig};
+use crate::runtime::{Backend, Entry, EvalOptions, ParallelConfig};
 
 /// Loss estimator variant (ablation A4: FD vs Stein).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -99,19 +106,23 @@ pub struct TrainConfig {
     /// completed-epoch count, then continues bit-identically to an
     /// uninterrupted run (same `seed` required)
     pub resume: Option<PathBuf>,
-    /// evaluation-engine parallelism applied to the backend at trainer
-    /// construction; `None` (the default) keeps its current setting.
-    /// NOTE: the engine config lives on the backend, so on a SHARED
-    /// backend (solver-service `start_shared`) a `Some` here
-    /// reconfigures every worker — leave it `None` for service jobs and
-    /// size the engine once via `ServiceConfig.parallel` instead.
+    /// evaluation-engine parallelism for THIS job's dispatches
+    /// (`EvalOptions.parallel`): carried with every loss / validation
+    /// dispatch, never written to the backend — safe to set per job on
+    /// a shared-backend service. `None` (the default) uses the
+    /// backend's default engine config (e.g. `ServiceConfig.parallel`).
     pub parallel: Option<ParallelConfig>,
-    /// soft-constraint boundary-loss weight override applied to the
-    /// backend at trainer construction; `None` keeps the preset's
-    /// manifest / problem default. Only meaningful for problems with
-    /// soft constraints (`Problem::boundary()`); same shared-backend
-    /// caveat as `parallel`.
+    /// soft-constraint boundary-loss weight for THIS job
+    /// (`EvalOptions.bc_weight`): rides every dispatch, never mutates
+    /// backend state. `None` keeps the preset's manifest / problem
+    /// default. Only meaningful for problems with soft constraints
+    /// (`Problem::boundary()`) — refused loudly otherwise.
     pub bc_weight: Option<f64>,
+    /// cap on concurrently evaluated SPSA probe lanes inside one
+    /// batched loss dispatch (`EvalOptions.probe_workers`); `None` =
+    /// the engine default, min(threads, K). Latency only — results
+    /// never depend on it.
+    pub probe_workers: Option<usize>,
     /// print progress lines
     pub verbose: bool,
 }
@@ -140,6 +151,7 @@ impl TrainConfig {
             resume: None,
             parallel: None,
             bc_weight: None,
+            probe_workers: None,
             verbose: false,
         })
     }
@@ -161,6 +173,10 @@ pub struct TrainResult {
 pub struct OnChipTrainer<'rt> {
     rt: &'rt dyn Backend,
     cfg: TrainConfig,
+    /// this job's per-dispatch evaluation options, resolved once from
+    /// `TrainConfig.{parallel,bc_weight,probe_workers}` and carried
+    /// with every dispatch (no shared backend state is ever mutated)
+    opts: EvalOptions,
     chip: ChipRealization,
     estimator: Box<dyn GradientEstimator>,
     optimizer: Box<dyn Optimizer>,
@@ -187,19 +203,29 @@ pub struct OnChipTrainer<'rt> {
 
 impl<'rt> OnChipTrainer<'rt> {
     pub fn new(rt: &'rt dyn Backend, cfg: TrainConfig) -> Result<Self> {
-        if let Some(par) = cfg.parallel {
-            rt.set_parallel(par);
-        }
         let pm = rt.manifest().preset(&cfg.preset)?;
         let d = pm.layout.param_dim;
+        // per-job evaluation options: validated here, then carried with
+        // every dispatch — nothing is ever written to the (possibly
+        // shared) backend, so concurrent service jobs can't corrupt
+        // each other's settings
         if let Some(w) = cfg.bc_weight {
             anyhow::ensure!(
-                rt.set_bc_weight(&cfg.preset, w as f32),
+                w.is_finite() && w >= 0.0,
+                "bc_weight {w} must be a finite non-negative number"
+            );
+            anyhow::ensure!(
+                pm.pde.boundary().is_some(),
                 "preset '{}' does not take a boundary-loss weight \
                  (its problem has no soft constraints)",
                 cfg.preset
             );
         }
+        let opts = EvalOptions {
+            parallel: cfg.parallel,
+            bc_weight: cfg.bc_weight.map(|w| w as f32),
+            probe_workers: cfg.probe_workers,
+        };
         let estimator = crate::optim::estimator::global().build(
             &cfg.estimator,
             cfg.spsa_mu,
@@ -324,7 +350,7 @@ impl<'rt> OnChipTrainer<'rt> {
             None => (0, None),
         };
 
-        let validator = Validator::new(rt, &cfg.preset, cfg.seed)?;
+        let validator = Validator::with_options(rt, &cfg.preset, cfg.seed, opts)?;
         let sampler = Sampler::new(pm.pde.clone(), cfg.seed ^ 0xBA7C4);
         let n_stencil = pm.pde.n_stencil();
         let batch = rt.manifest().b_residual;
@@ -333,6 +359,7 @@ impl<'rt> OnChipTrainer<'rt> {
             chip: ChipRealization::sample(&pm.layout, &cfg.noise, cfg.chip_seed),
             rt,
             cfg,
+            opts,
             estimator,
             optimizer,
             loss_multi,
@@ -374,7 +401,10 @@ impl<'rt> OnChipTrainer<'rt> {
             let mut out = Vec::with_capacity(k);
             for i in 0..k {
                 self.chip.program(&settings_cmd[i * d..(i + 1) * d], eff);
-                out.push(exec.run_scalar(&[eff.as_slice(), xr, &self.stein_z])?);
+                out.push(exec.run_scalar_with(
+                    &[eff.as_slice(), xr, &self.stein_z],
+                    &self.opts,
+                )?);
             }
             return Ok(out);
         }
@@ -385,12 +415,14 @@ impl<'rt> OnChipTrainer<'rt> {
             eff_all.extend_from_slice(eff);
         }
         match self.cfg.loss_kind {
-            LossKind::Fd => self.loss_multi.run1(&[eff_all.as_slice(), xr]),
+            LossKind::Fd => self
+                .loss_multi
+                .run1_with(&[eff_all.as_slice(), xr], &self.opts),
             LossKind::Stein => self
                 .stein_multi
                 .as_ref()
                 .unwrap()
-                .run1(&[eff_all.as_slice(), xr, &self.stein_z]),
+                .run1_with(&[eff_all.as_slice(), xr, &self.stein_z], &self.opts),
         }
     }
 

@@ -6,20 +6,39 @@ use anyhow::Result;
 
 use crate::pde::Sampler;
 use crate::photonics::noise::ChipRealization;
-use crate::runtime::{Backend, Entry, ParallelConfig};
+use crate::runtime::{Backend, Entry, EvalOptions, ParallelConfig};
 
 /// Holds the `validate` entry plus a fixed validation set.
+///
+/// Evaluation configuration is SESSION-SCOPED: the [`EvalOptions`]
+/// given at construction ride every dispatch this validator issues and
+/// never touch backend state, so concurrent jobs sharing one backend
+/// can validate under different engine configs.
 pub struct Validator {
     exec: Arc<dyn Entry>,
     xv: Vec<f32>,
     uv: Vec<f32>,
     /// scratch for the programmed (effective) parameter vector
     eff: Vec<f32>,
+    /// per-dispatch options carried by every validation dispatch
+    opts: EvalOptions,
 }
 
 impl Validator {
-    /// Build with a deterministic validation set of the manifest's size.
+    /// Build with a deterministic validation set of the manifest's size
+    /// (dispatches run under the backend's default options).
     pub fn new(rt: &dyn Backend, preset: &str, seed: u64) -> Result<Validator> {
+        Validator::with_options(rt, preset, seed, EvalOptions::NONE)
+    }
+
+    /// [`Validator::new`] with per-dispatch [`EvalOptions`] that every
+    /// validation dispatch will carry.
+    pub fn with_options(
+        rt: &dyn Backend,
+        preset: &str,
+        seed: u64,
+        opts: EvalOptions,
+    ) -> Result<Validator> {
         let pm = rt.manifest().preset(preset)?;
         let exec = rt.entry(preset, "validate")?;
         let mut sampler = Sampler::new(pm.pde.clone(), seed ^ 0x7A11_DA7E);
@@ -29,31 +48,36 @@ impl Validator {
             xv,
             uv,
             eff: Vec::new(),
+            opts,
         })
     }
 
-    /// [`Validator::new`] with an explicit evaluation-engine config
-    /// applied to `rt` first. Validation batches are the largest row
-    /// blocks the engine sees (B_VAL rows per dispatch), so standalone
-    /// validation sweeps benefit the most from parallel row-blocks.
+    /// DEPRECATED SHIM — [`Validator::with_options`] carrying only an
+    /// engine config. Unlike the pre-`EvalOptions` version this no
+    /// longer mutates the backend: the config rides this validator's
+    /// dispatches and nothing else. Validation batches are the largest
+    /// row blocks the engine sees (B_VAL rows per dispatch), so
+    /// standalone validation sweeps benefit the most from parallel
+    /// row-blocks.
     pub fn with_parallel(
         rt: &dyn Backend,
         preset: &str,
         seed: u64,
         par: ParallelConfig,
     ) -> Result<Validator> {
-        rt.set_parallel(par);
-        Validator::new(rt, preset, seed)
+        Validator::with_options(rt, preset, seed, EvalOptions::NONE.with_parallel(par))
     }
 
     /// Validation MSE of *commanded* parameters as realized on `chip`.
     pub fn mse_on_chip(&mut self, phi_cmd: &[f32], chip: &ChipRealization) -> Result<f32> {
         chip.program(phi_cmd, &mut self.eff);
-        self.exec.run_scalar(&[&self.eff, &self.xv, &self.uv])
+        self.exec
+            .run_scalar_with(&[&self.eff, &self.xv, &self.uv], &self.opts)
     }
 
     /// Validation MSE of parameters taken at face value (ideal hardware).
     pub fn mse_ideal(&self, phi: &[f32]) -> Result<f32> {
-        self.exec.run_scalar(&[phi, &self.xv, &self.uv])
+        self.exec
+            .run_scalar_with(&[phi, &self.xv, &self.uv], &self.opts)
     }
 }

@@ -58,8 +58,9 @@
 //! Black–Scholes basket option (anisotropic diffusion via per-dim
 //! second derivatives), and a soft-constrained Allen–Cahn
 //! reaction–diffusion whose boundary/initial conditions are enforced
-//! through a weighted boundary loss (`--bc-weight`,
-//! [`runtime::Backend::set_bc_weight`]). `photon-pinn pdes` (or
+//! through a weighted boundary loss (`--bc-weight`, riding each
+//! dispatch as [`runtime::EvalOptions::bc_weight`]). `photon-pinn
+//! pdes` (or
 //! `--list-pdes`) prints the registry.
 //!
 //! Cross-backend equivalence is pinned by golden tests

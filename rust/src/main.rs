@@ -61,6 +61,8 @@ fn args_for(cmd: &str) -> Args {
         .flag("threads", None, "evaluation-engine worker threads (default: auto / PHOTON_THREADS)")
         .flag("block-rows", None, "rows per engine work block (default: 32 / PHOTON_BLOCK_ROWS)")
         .flag("bc-weight", None, "boundary-loss weight override (soft-constraint problems only)")
+        .flag("probe-workers", None, "cap concurrent SPSA probe lanes per batched dispatch \
+               (default: min(threads, K))")
         .switch("stein", "use the Stein derivative estimator instead of FD")
         .switch("raw-sgd", "disable the signSGD de-noising (ablation)")
         .switch("quiet", "suppress progress lines")
@@ -87,6 +89,9 @@ fn load_runtime(a: &Args) -> Result<Box<dyn Backend>> {
     if let Some(b) = a.get_usize("block-rows")? {
         par.block_rows = b.max(1);
     }
+    // CLI flow: one backend per process, so setting the backend-wide
+    // DEFAULT engine config via the deprecated shim is exactly right
+    // (per-job overrides ride TrainConfig.parallel -> EvalOptions)
     rt.set_parallel(par);
     let par = rt.parallel();
     eprintln!(
@@ -229,6 +234,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     }
     if let Some(w) = a.get_f64("bc-weight")? {
         cfg.bc_weight = Some(w);
+    }
+    if let Some(p) = a.get_usize("probe-workers")? {
+        cfg.probe_workers = Some(p.max(1));
     }
     if let Some(ck) = &resumed_ck {
         cfg.seed = ck.seed;

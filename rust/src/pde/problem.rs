@@ -34,8 +34,9 @@ use std::sync::{Arc, OnceLock};
 /// boundary projection per collocation point and add
 /// `weight · mean_i (u(b_i) − u*(b_i))²` to the residual loss. The
 /// effective weight defaults to `default_weight`, is overridable per
-/// preset via the manifest `hyper.bc_weight`, and at runtime via
-/// `Backend::set_bc_weight` (CLI: `--bc-weight`).
+/// preset via the manifest `hyper.bc_weight`, and per dispatch via
+/// `EvalOptions.bc_weight` (CLI: `--bc-weight`; the deprecated
+/// `Backend::set_bc_weight` shim adjusts the stored default).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SoftBoundary {
     pub default_weight: f32,

@@ -28,6 +28,17 @@
 //! [`parallel::for_probes`]) with results bit-identical to K sequential
 //! single-Φ dispatches; backends without a batched executable keep the
 //! per-probe `loss_stein` path (the trainer falls back automatically).
+//!
+//! **Per-dispatch options.** Evaluation configuration — engine
+//! parallelism, the soft-constraint boundary weight, the probe budget
+//! of a batched dispatch — travels WITH each dispatch as an
+//! [`EvalOptions`] ([`Entry::run_with`] and friends) instead of living
+//! as mutable backend state. Concurrent solver-service jobs sharing ONE
+//! backend therefore never see each other's settings. The old
+//! [`Backend::set_parallel`] / [`Backend::set_bc_weight`] mutators
+//! remain as deprecated shims that set the backend's *defaults* (what a
+//! dispatch resolves when an option field is `None`), so existing CLI
+//! flows keep working.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -246,29 +257,101 @@ impl Manifest {
     }
 }
 
+/// Per-dispatch evaluation options.
+///
+/// Everything a single evaluation may want tuned — engine parallelism,
+/// the soft-constraint boundary weight, the probe-concurrency budget of
+/// a batched multi-Φ dispatch — travels WITH the dispatch instead of
+/// living as mutable backend state. `None` fields fall back to the
+/// backend's defaults (problem default → manifest `hyper` → the
+/// deprecated [`Backend::set_parallel`] / [`Backend::set_bc_weight`]
+/// shims), so [`EvalOptions::NONE`] reproduces the pre-options behavior
+/// bit for bit. Because options never mutate shared state, concurrent
+/// jobs on ONE shared backend can carry different settings without
+/// corrupting each other's losses — the shared-backend solver-service
+/// topology ([`crate::coordinator::SolverService`]) relies on this.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EvalOptions {
+    /// evaluation-engine parallelism for this dispatch; `None` = the
+    /// backend's default engine config. Latency only — results never
+    /// depend on it.
+    pub parallel: Option<ParallelConfig>,
+    /// soft-constraint boundary-loss weight for this dispatch (problems
+    /// with [`crate::pde::SoftBoundary`] constraints only — backends
+    /// reject the override elsewhere); `None` = the preset's default
+    /// weight.
+    pub bc_weight: Option<f32>,
+    /// cap on concurrently evaluated probe lanes inside one batched
+    /// multi-Φ dispatch; `None` = min(threads, K). Latency only —
+    /// results never depend on it.
+    pub probe_workers: Option<usize>,
+}
+
+impl EvalOptions {
+    /// No overrides: every field resolves to the backend's default.
+    pub const NONE: EvalOptions = EvalOptions {
+        parallel: None,
+        bc_weight: None,
+        probe_workers: None,
+    };
+
+    pub fn with_parallel(mut self, par: ParallelConfig) -> EvalOptions {
+        self.parallel = Some(par);
+        self
+    }
+
+    pub fn with_bc_weight(mut self, weight: f32) -> EvalOptions {
+        self.bc_weight = Some(weight);
+        self
+    }
+
+    pub fn with_probe_workers(mut self, n: usize) -> EvalOptions {
+        self.probe_workers = Some(n);
+        self
+    }
+}
+
 /// One executable entry point of a preset, regardless of backend.
 pub trait Entry {
     fn meta(&self) -> &EntryMeta;
 
-    /// Execute with flat f32 input buffers (shapes from the manifest).
-    /// Returns one flat f32 vector per output.
-    fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+    /// Execute with flat f32 input buffers (shapes from the manifest)
+    /// and per-dispatch [`EvalOptions`]. Returns one flat f32 vector
+    /// per output. An option a backend cannot honor must fail loudly
+    /// rather than silently change semantics; engine-parallelism
+    /// fields, which never affect results, may be ignored.
+    fn run_with(&self, inputs: &[&[f32]], opts: &EvalOptions) -> Result<Vec<Vec<f32>>>;
 
     /// Dispatch counter (metrics / perf accounting).
     fn dispatches(&self) -> u64;
 
-    /// Single-output convenience.
-    fn run1(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
-        let mut out = self.run(inputs)?;
+    /// [`Entry::run_with`] under the backend's default options.
+    fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.run_with(inputs, &EvalOptions::NONE)
+    }
+
+    /// Single-output convenience with per-dispatch options.
+    fn run1_with(&self, inputs: &[&[f32]], opts: &EvalOptions) -> Result<Vec<f32>> {
+        let mut out = self.run_with(inputs, opts)?;
         anyhow::ensure!(out.len() == 1, "{}: multi-output", self.meta().name);
         Ok(out.pop().unwrap())
     }
 
-    /// Scalar-output convenience.
-    fn run_scalar(&self, inputs: &[&[f32]]) -> Result<f32> {
-        let v = self.run1(inputs)?;
+    /// Single-output convenience.
+    fn run1(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        self.run1_with(inputs, &EvalOptions::NONE)
+    }
+
+    /// Scalar-output convenience with per-dispatch options.
+    fn run_scalar_with(&self, inputs: &[&[f32]], opts: &EvalOptions) -> Result<f32> {
+        let v = self.run1_with(inputs, opts)?;
         anyhow::ensure!(v.len() == 1, "{}: not scalar", self.meta().name);
         Ok(v[0])
+    }
+
+    /// Scalar-output convenience.
+    fn run_scalar(&self, inputs: &[&[f32]]) -> Result<f32> {
+        self.run_scalar_with(inputs, &EvalOptions::NONE)
     }
 }
 
@@ -284,27 +367,36 @@ pub trait Backend {
     /// Human-readable execution platform (e.g. `native-cpu`, `Host`).
     fn platform(&self) -> String;
 
-    /// Evaluation-engine parallelism currently in effect. Backends whose
+    /// Default evaluation-engine parallelism (what a dispatch resolves
+    /// when its `EvalOptions.parallel` is `None`). Backends whose
     /// execution engine is not configurable report the sequential config.
     fn parallel(&self) -> ParallelConfig {
         ParallelConfig::sequential()
     }
 
-    /// Reconfigure evaluation parallelism (worker threads x rows per
-    /// work block). Results never depend on the config — only latency
-    /// does. Returns `false` when the backend ignores the request (PJRT
-    /// executables own their threading).
+    /// DEPRECATED SHIM — sets the backend's *default* engine
+    /// parallelism (worker threads x rows per work block), i.e. the
+    /// value a dispatch resolves when its `EvalOptions.parallel` is
+    /// `None`. Prefer per-dispatch [`EvalOptions`]: unlike this shim,
+    /// options never mutate shared state, so concurrent jobs on a
+    /// shared backend can carry different engine configs. Results never
+    /// depend on the config — only latency does. Returns `false` when
+    /// the backend ignores the request (PJRT executables own their
+    /// threading).
     fn set_parallel(&self, _cfg: ParallelConfig) -> bool {
         false
     }
 
-    /// Override the soft-constraint boundary-loss weight of `preset`
-    /// (problems with [`crate::pde::SoftBoundary`] constraints only).
-    /// Returns `false` when the backend ignores the request or the
-    /// preset's problem has no soft constraints — the weight would be
-    /// meaningless there. Like [`Backend::set_parallel`], this mutates
-    /// shared backend state: on a solver-service shared backend it
-    /// reconfigures every worker evaluating that preset.
+    /// DEPRECATED SHIM — sets the backend's *default* soft-constraint
+    /// boundary-loss weight for `preset` (problems with
+    /// [`crate::pde::SoftBoundary`] constraints only), i.e. the value a
+    /// dispatch resolves when its `EvalOptions.bc_weight` is `None`.
+    /// Prefer per-dispatch [`EvalOptions`]: this shim mutates shared
+    /// backend state, so on a solver-service shared backend it
+    /// reconfigures every worker evaluating that preset. Returns
+    /// `false` when the backend ignores the request or the preset's
+    /// problem has no soft constraints — the weight would be
+    /// meaningless there.
     fn set_bc_weight(&self, _preset: &str, _weight: f32) -> bool {
         false
     }

@@ -15,8 +15,9 @@
 //! * batches stream through the parallel evaluation engine: contiguous
 //!   row-blocks hit the [`crate::tensor::gemm_rows`] micro-kernel and
 //!   fan out across scoped worker threads
-//!   ([`super::parallel::for_row_blocks`]), configured by the
-//!   [`ParallelConfig`] threaded through [`Backend::set_parallel`].
+//!   ([`super::parallel::for_row_blocks`]), configured per dispatch by
+//!   [`EvalOptions::parallel`] (falling back to the backend default the
+//!   deprecated [`Backend::set_parallel`] shim still sets).
 //!   Row-independent arithmetic makes the parallel path produce results
 //!   identical to the sequential one for every config; the PR-1 scalar
 //!   evaluator is retained as the reference oracle and bench baseline
@@ -37,8 +38,10 @@
 //!   second-derivative estimates ([`Problem::needs_d2`]), and problems
 //!   with soft constraints ([`crate::pde::SoftBoundary`]) get a weighted
 //!   boundary MSE over deterministic projections of the collocation
-//!   batch, evaluated in the same dispatch (weight runtime-tunable via
-//!   [`Backend::set_bc_weight`]).
+//!   batch, evaluated in the same dispatch. The weight rides each
+//!   dispatch ([`EvalOptions::bc_weight`]); the preset default (problem
+//!   default → manifest `hyper.bc_weight`) remains runtime-tunable via
+//!   the deprecated [`Backend::set_bc_weight`] shim.
 //!
 //! Presets come from an in-repo registry mirroring
 //! `python/compile/model.py` ([`NativeBackend::builtin`]) or from a
@@ -55,8 +58,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::parallel::{for_probes, for_row_blocks, ParallelConfig, ParallelCtl};
-use super::{Backend, Entry, EntryMeta, Manifest, PresetMeta};
+use super::parallel::{for_probes_capped, for_row_blocks, ParallelConfig, ParallelCtl};
+use super::{Backend, Entry, EntryMeta, EvalOptions, Manifest, PresetMeta};
 use crate::model::{Hyper, Layout, LayoutBuilder};
 use crate::pde::Problem;
 use crate::photonics::mesh;
@@ -417,11 +420,15 @@ pub struct PresetEval {
     fd_h: f32,
     stein_sigma: f32,
     stein_q: usize,
-    /// soft-constraint boundary-loss weight (f32 bits; 0 disables the
-    /// term). Runtime-tunable through [`Backend::set_bc_weight`] — only
-    /// meaningful for problems with a [`crate::pde::SoftBoundary`].
+    /// DEFAULT soft-constraint boundary-loss weight (f32 bits; 0
+    /// disables the term): what a dispatch resolves when its
+    /// [`EvalOptions::bc_weight`] is `None`. Runtime-tunable through
+    /// the deprecated [`Backend::set_bc_weight`] shim — only meaningful
+    /// for problems with a [`crate::pde::SoftBoundary`].
     bc_weight: AtomicU32,
-    /// engine parallelism, shared with the owning backend (runtime-tunable)
+    /// DEFAULT engine parallelism, shared with the owning backend
+    /// (runtime-tunable through the deprecated [`Backend::set_parallel`]
+    /// shim); dispatches may override it via [`EvalOptions::parallel`]
     par: Arc<ParallelCtl>,
     /// MRU materialization cache keyed by exact phase vector: repeated
     /// dispatches with a recent Φ (validation sweeps, forward batches,
@@ -448,7 +455,45 @@ enum EvalPath {
     Reference,
 }
 
+/// One dispatch's [`EvalOptions`] resolved against a preset's defaults:
+/// the effective engine config, soft-boundary weight and probe-lane cap.
+#[derive(Clone, Copy, Debug)]
+struct DispatchOpts {
+    par: ParallelConfig,
+    bw: f32,
+    probes: Option<usize>,
+}
+
 impl PresetEval {
+    /// Resolve per-dispatch [`EvalOptions`] against this preset's
+    /// defaults. Overrides a preset cannot honor (a boundary weight on
+    /// a hard-constrained problem, a non-finite/negative weight) are
+    /// loud errors — never silently ignored or clamped.
+    fn resolve(&self, opts: &EvalOptions) -> Result<DispatchOpts> {
+        let par = opts.parallel.unwrap_or_else(|| self.par.get());
+        let bw = match opts.bc_weight {
+            Some(w) => {
+                anyhow::ensure!(
+                    w.is_finite() && w >= 0.0,
+                    "bc_weight {w} must be a finite non-negative number"
+                );
+                anyhow::ensure!(
+                    self.problem.boundary().is_some(),
+                    "problem '{}' has no soft constraints — a boundary-loss \
+                     weight override is meaningless",
+                    self.problem.name()
+                );
+                w
+            }
+            None => self.bc_default(),
+        };
+        Ok(DispatchOpts {
+            par,
+            bw,
+            probes: opts.probe_workers,
+        })
+    }
+
     /// The materialized layer operands for Φ — cached by exact phase
     /// vector ("once per phase-vector, not per call").
     fn materialized(&self, phi: &[f32]) -> Arc<MaterializedNet> {
@@ -465,6 +510,16 @@ impl PresetEval {
         // and concurrent workers may be evaluating a different Φ
         let m = Arc::new(self.net.materialize(phi));
         let mut cache = self.mat_cache.lock().unwrap();
+        // two workers can race to build the same Φ; re-check under the
+        // second lock so the loser adopts the winner's entry instead of
+        // inserting a duplicate (which would waste a MAT_CACHE_SLOT and
+        // could evict a live probe entry mid-epoch)
+        if let Some(i) = cache.iter().position(|(p, _)| p.as_slice() == phi) {
+            let hit = cache.remove(i);
+            let m = hit.1.clone();
+            cache.insert(0, hit);
+            return m;
+        }
         cache.insert(0, (phi.to_vec(), m.clone()));
         cache.truncate(MAT_CACHE_SLOTS);
         m
@@ -478,15 +533,10 @@ impl PresetEval {
         self.net.forward_f(&mat, xs, par)
     }
 
-    /// Engine forward with the backend's current parallel config.
-    fn forward_f(&self, phi: &[f32], xs: &[f32]) -> Vec<f32> {
-        self.forward_f_with(phi, xs, self.par.get())
-    }
-
     /// Transformed solution u(Φ, x) for a flat batch of rows.
-    fn forward_u(&self, phi: &[f32], xs: &[f32]) -> Vec<f32> {
+    fn forward_u(&self, phi: &[f32], xs: &[f32], par: ParallelConfig) -> Vec<f32> {
         let d = self.problem.in_dim();
-        let f = self.forward_f(phi, xs);
+        let f = self.forward_f_with(phi, xs, par);
         f.iter()
             .enumerate()
             .map(|(i, &fv)| self.problem.transform(fv, &xs[i * d..(i + 1) * d]))
@@ -503,9 +553,11 @@ impl PresetEval {
             .collect()
     }
 
-    /// Effective soft-constraint boundary weight: 0 unless the problem
-    /// declares a [`crate::pde::SoftBoundary`] and the weight is > 0.
-    fn bc_weight(&self) -> f32 {
+    /// Default soft-constraint boundary weight: 0 unless the problem
+    /// declares a [`crate::pde::SoftBoundary`] (then the stored default
+    /// — problem default → manifest `hyper.bc_weight` → the deprecated
+    /// [`Backend::set_bc_weight`] shim).
+    fn bc_default(&self) -> f32 {
         if self.problem.boundary().is_some() {
             f32::from_bits(self.bc_weight.load(Ordering::Relaxed))
         } else {
@@ -544,37 +596,38 @@ impl PresetEval {
         acc / targets.len() as f32
     }
 
-    /// BP-free FD-stencil loss (python `pinn.make_loss_fd`).
-    fn loss_fd(&self, phi: &[f32], xr: &[f32]) -> f32 {
-        self.loss_fd_impl(phi, xr, EvalPath::Engine(self.par.get()))
+    /// BP-free FD-stencil loss (python `pinn.make_loss_fd`) under one
+    /// dispatch's resolved options.
+    fn loss_fd(&self, phi: &[f32], xr: &[f32], o: DispatchOpts) -> f32 {
+        self.loss_fd_impl(phi, xr, EvalPath::Engine(o.par), o.bw)
     }
 
-    /// [`Self::loss_fd`] through the PR-1 scalar reference path.
+    /// [`Self::loss_fd`] through the PR-1 scalar reference path (with
+    /// the preset's default boundary weight).
     fn loss_fd_reference(&self, phi: &[f32], xr: &[f32]) -> f32 {
-        self.loss_fd_impl(phi, xr, EvalPath::Reference)
+        self.loss_fd_impl(phi, xr, EvalPath::Reference, self.bc_default())
     }
 
     /// Probe-parallel FD loss over K phase settings (flat (K, d) in
     /// `phis`): the outer level of the engine's two-level parallelism.
     /// Each probe evaluates exactly [`Self::loss_fd`] on its share of
     /// the thread budget, so the output equals K sequential single-Φ
-    /// losses bit for bit.
-    fn loss_fd_batch(&self, phis: &[f32], k: usize, xr: &[f32]) -> Vec<f32> {
+    /// losses bit for bit (for any `o.probes` lane cap).
+    fn loss_fd_batch(&self, phis: &[f32], k: usize, xr: &[f32], o: DispatchOpts) -> Vec<f32> {
         let d = phis.len() / k;
         let mut out = vec![0.0f32; k];
-        for_probes(self.par.get(), &mut out, |i, inner| {
-            self.loss_fd_impl(&phis[i * d..(i + 1) * d], xr, EvalPath::Engine(inner))
+        for_probes_capped(o.par, o.probes, &mut out, |i, inner| {
+            self.loss_fd_impl(&phis[i * d..(i + 1) * d], xr, EvalPath::Engine(inner), o.bw)
         });
         out
     }
 
-    fn loss_fd_impl(&self, phi: &[f32], xr: &[f32], path: EvalPath) -> f32 {
+    fn loss_fd_impl(&self, phi: &[f32], xr: &[f32], path: EvalPath, bw: f32) -> f32 {
         let d = self.problem.in_dim();
         let s = self.problem.n_stencil();
         let dim = self.problem.dim();
         let h = self.fd_h;
         let b = xr.len() / d;
-        let bw = self.bc_weight();
         let mut x_all = Vec::with_capacity(b * s * d + if bw > 0.0 { b * d } else { 0 });
         for p in 0..b {
             self.problem
@@ -624,32 +677,34 @@ impl PresetEval {
         }
     }
 
-    /// Gaussian-Stein estimator loss (python `pinn.make_loss_stein`).
-    fn loss_stein(&self, phi: &[f32], xr: &[f32], z: &[f32]) -> f32 {
-        self.loss_stein_with(phi, xr, z, self.par.get())
-    }
-
     /// Probe-parallel Stein loss over K phase settings — the Stein
     /// counterpart of [`Self::loss_fd_batch`], sharing the smoothing
     /// directions `z` across probes exactly like the sequential
     /// trainer's per-probe `loss_stein` dispatches did.
-    fn loss_stein_batch(&self, phis: &[f32], k: usize, xr: &[f32], z: &[f32]) -> Vec<f32> {
+    fn loss_stein_batch(
+        &self,
+        phis: &[f32],
+        k: usize,
+        xr: &[f32],
+        z: &[f32],
+        o: DispatchOpts,
+    ) -> Vec<f32> {
         let d = phis.len() / k;
         let mut out = vec![0.0f32; k];
-        for_probes(self.par.get(), &mut out, |i, inner| {
-            self.loss_stein_with(&phis[i * d..(i + 1) * d], xr, z, inner)
+        for_probes_capped(o.par, o.probes, &mut out, |i, inner| {
+            self.loss_stein(&phis[i * d..(i + 1) * d], xr, z, inner, o.bw)
         });
         out
     }
 
-    fn loss_stein_with(&self, phi: &[f32], xr: &[f32], z: &[f32], par: ParallelConfig) -> f32 {
+    /// Gaussian-Stein estimator loss (python `pinn.make_loss_stein`).
+    fn loss_stein(&self, phi: &[f32], xr: &[f32], z: &[f32], par: ParallelConfig, bw: f32) -> f32 {
         let d = self.problem.in_dim();
         let dim = self.problem.dim();
         let q = self.stein_q;
         let sigma = self.stein_sigma;
         let b = xr.len() / d;
         let rows = 2 * q + 1;
-        let bw = self.bc_weight();
         let mut x_all = Vec::with_capacity(b * rows * d + if bw > 0.0 { b * d } else { 0 });
         for p in 0..b {
             let x = &xr[p * d..(p + 1) * d];
@@ -720,8 +775,8 @@ impl PresetEval {
     }
 
     /// Validation MSE vs exact-solution targets (python `make_validate`).
-    fn validate(&self, phi: &[f32], xv: &[f32], uv: &[f32]) -> f32 {
-        let u = self.forward_u(phi, xv);
+    fn validate(&self, phi: &[f32], xv: &[f32], uv: &[f32], par: ParallelConfig) -> f32 {
+        let u = self.forward_u(phi, xv, par);
         let mut acc = 0.0f32;
         for (a, b) in u.iter().zip(uv) {
             let e = a - b;
@@ -758,25 +813,32 @@ impl Entry for NativeEntry {
         self.dispatches.load(Ordering::Relaxed)
     }
 
-    fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    fn run_with(&self, inputs: &[&[f32]], opts: &EvalOptions) -> Result<Vec<Vec<f32>>> {
         self.meta.check_inputs(inputs)?;
+        // resolve the dispatch's options against the preset defaults
+        // BEFORE touching any state: an unhonorable override (e.g. a
+        // boundary weight on a hard-constrained problem) fails loudly
+        let o = self
+            .eval
+            .resolve(opts)
+            .with_context(|| format!("entry '{}'", self.meta.name))?;
         self.dispatches.fetch_add(1, Ordering::Relaxed);
         let out = match self.kind {
-            EntryKind::Forward => self.eval.forward_u(inputs[0], inputs[1]),
-            EntryKind::Loss => vec![self.eval.loss_fd(inputs[0], inputs[1])],
+            EntryKind::Forward => self.eval.forward_u(inputs[0], inputs[1], o.par),
+            EntryKind::Loss => vec![self.eval.loss_fd(inputs[0], inputs[1], o)],
             EntryKind::LossMulti => {
                 let k = self.meta.inputs[0].1[0]; // phis is (K, d)
-                self.eval.loss_fd_batch(inputs[0], k, inputs[1])
+                self.eval.loss_fd_batch(inputs[0], k, inputs[1], o)
             }
             EntryKind::LossStein => {
-                vec![self.eval.loss_stein(inputs[0], inputs[1], inputs[2])]
+                vec![self.eval.loss_stein(inputs[0], inputs[1], inputs[2], o.par, o.bw)]
             }
             EntryKind::LossSteinMulti => {
                 let k = self.meta.inputs[0].1[0]; // phis is (K, d)
-                self.eval.loss_stein_batch(inputs[0], k, inputs[1], inputs[2])
+                self.eval.loss_stein_batch(inputs[0], k, inputs[1], inputs[2], o)
             }
             EntryKind::Validate => {
-                vec![self.eval.validate(inputs[0], inputs[1], inputs[2])]
+                vec![self.eval.validate(inputs[0], inputs[1], inputs[2], o.par)]
             }
         };
         Ok(vec![out])
@@ -1599,6 +1661,115 @@ mod tests {
         assert!(!be.set_bc_weight("no_such_preset", 1.0));
         assert!(!be.set_bc_weight("tonn_micro_ac", -1.0));
         assert!(!be.set_bc_weight("tonn_micro_ac", f32::NAN));
+    }
+
+    /// Per-dispatch [`EvalOptions`] must (a) reproduce the old global
+    /// `set_bc_weight` mutation bit for bit, (b) never touch the stored
+    /// preset default, (c) be latency-only for engine fields, and (d)
+    /// reject unhonorable overrides loudly.
+    #[test]
+    fn per_dispatch_options_override_without_mutating_defaults() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro_ac").unwrap();
+        let loss = be.entry("tonn_micro_ac", "loss").unwrap();
+        let mut rng = Rng::new(31);
+        let phi = pm.layout.init_vector(&mut rng);
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.1, 0.9);
+
+        let l_default = loss.run_scalar(&[&phi, &xr]).unwrap();
+        // per-dispatch override == the old global mutation, bit for bit
+        let l_opts = loss
+            .run_scalar_with(&[&phi, &xr], &EvalOptions::NONE.with_bc_weight(5.0))
+            .unwrap();
+        assert!(be.set_bc_weight("tonn_micro_ac", 5.0));
+        let l_global = loss.run_scalar(&[&phi, &xr]).unwrap();
+        assert_eq!(l_opts, l_global, "per-dispatch weight drifted from the shim");
+        assert!(be.set_bc_weight("tonn_micro_ac", 1.0)); // restore default
+        // ... and the override never touched the stored default
+        assert_eq!(loss.run_scalar(&[&phi, &xr]).unwrap(), l_default);
+
+        // engine options ride per dispatch and never change bits
+        for threads in [1usize, 3, 8] {
+            let o = EvalOptions::NONE.with_parallel(ParallelConfig {
+                threads,
+                block_rows: 5,
+            });
+            assert_eq!(
+                loss.run_scalar_with(&[&phi, &xr], &o).unwrap(),
+                l_default,
+                "threads={threads}"
+            );
+        }
+
+        // invalid / meaningless overrides fail loudly
+        let neg = EvalOptions::NONE.with_bc_weight(-1.0);
+        assert!(loss.run_scalar_with(&[&phi, &xr], &neg).is_err());
+        let nan = EvalOptions::NONE.with_bc_weight(f32::NAN);
+        assert!(loss.run_scalar_with(&[&phi, &xr], &nan).is_err());
+        let hard = be.entry("tonn_micro", "loss").unwrap();
+        let pm_h = be.manifest().preset("tonn_micro").unwrap();
+        let mut rng_h = Rng::new(32);
+        let phi_h = pm_h.layout.init_vector(&mut rng_h);
+        let mut xr_h = vec![0.0f32; hard.meta().input_len(1)];
+        rng_h.fill_uniform(&mut xr_h, 0.1, 0.9);
+        let err = hard
+            .run_scalar_with(&[&phi_h, &xr_h], &EvalOptions::NONE.with_bc_weight(1.0))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("soft"), "{err:#}");
+    }
+
+    /// The probe-lane cap of a batched dispatch is latency-only: any
+    /// `probe_workers` value reproduces the uncapped output bit for bit.
+    #[test]
+    fn batched_loss_probe_cap_is_latency_only() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let k = be.manifest().k_multi;
+        let mut rng = Rng::new(57);
+        let phi = pm.layout.init_vector(&mut rng);
+        let phis: Vec<f32> = (0..k)
+            .flat_map(|ki| phi.iter().map(move |p| p + 0.02 * ki as f32))
+            .collect();
+        let lm = be.entry("tonn_micro", "loss_multi").unwrap();
+        let mut xr = vec![0.0f32; lm.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        let base = lm.run1(&[&phis, &xr]).unwrap();
+        for cap in [1usize, 2, 4, 64] {
+            let o = EvalOptions::NONE
+                .with_parallel(ParallelConfig {
+                    threads: 8,
+                    block_rows: 4,
+                })
+                .with_probe_workers(cap);
+            assert_eq!(lm.run1_with(&[&phis, &xr], &o).unwrap(), base, "cap={cap}");
+        }
+    }
+
+    /// Workers racing to materialize the SAME Φ must converge on one
+    /// cache entry: a duplicate insert wastes a MAT_CACHE_SLOT and can
+    /// evict a live probe entry mid-epoch (the double-insert race).
+    #[test]
+    fn materialization_cache_never_holds_duplicate_phis() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let eval = be.eval("tonn_micro").unwrap().clone();
+        let mut rng = Rng::new(91);
+        let phi = pm.layout.init_vector(&mut rng);
+        for round in 0..20 {
+            eval.mat_cache.lock().unwrap().clear();
+            std::thread::scope(|s| {
+                for _ in 0..8 {
+                    let eval = &eval;
+                    let phi = &phi;
+                    s.spawn(move || {
+                        eval.materialized(phi);
+                    });
+                }
+            });
+            let n = eval.mat_cache.lock().unwrap().len();
+            assert_eq!(n, 1, "round {round}: duplicate Φ entries in the cache");
+        }
     }
 
     #[test]

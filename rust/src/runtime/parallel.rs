@@ -178,8 +178,24 @@ where
 /// its row-block evaluation with `inner_cfg` (`threads / probe_workers`
 /// workers), so total thread pressure never exceeds `cfg.threads`.
 pub fn probe_split(cfg: ParallelConfig, k: usize) -> (usize, ParallelConfig) {
+    probe_split_capped(cfg, k, None)
+}
+
+/// [`probe_split`] with an optional cap on concurrent probe lanes (the
+/// `EvalOptions::probe_workers` budget of a dispatch): at most `cap`
+/// probes run at once, each inheriting a correspondingly larger share
+/// of the thread budget. Latency only — results never depend on the
+/// split.
+pub fn probe_split_capped(
+    cfg: ParallelConfig,
+    k: usize,
+    cap: Option<usize>,
+) -> (usize, ParallelConfig) {
     let threads = cfg.threads.max(1);
-    let workers = threads.min(k.max(1));
+    let mut workers = threads.min(k.max(1));
+    if let Some(c) = cap {
+        workers = workers.min(c.max(1));
+    }
     (
         workers,
         ParallelConfig {
@@ -203,8 +219,19 @@ pub fn for_probes<F>(cfg: ParallelConfig, out: &mut [f32], eval: F)
 where
     F: Fn(usize, ParallelConfig) -> f32 + Sync,
 {
+    for_probes_capped(cfg, None, out, eval);
+}
+
+/// [`for_probes`] with an optional cap on concurrent probe lanes (see
+/// [`probe_split_capped`]): fewer probes run at once, each on a larger
+/// inner thread budget. Bit-identical to the uncapped fan-out for every
+/// `cap` — the probe-parallel contract is split-independent.
+pub fn for_probes_capped<F>(cfg: ParallelConfig, cap: Option<usize>, out: &mut [f32], eval: F)
+where
+    F: Fn(usize, ParallelConfig) -> f32 + Sync,
+{
     let k = out.len();
-    let (workers, inner) = probe_split(cfg, k);
+    let (workers, inner) = probe_split_capped(cfg, k, cap);
     if workers <= 1 {
         for (i, o) in out.iter_mut().enumerate() {
             *o = eval(i, cfg);
@@ -326,6 +353,47 @@ mod tests {
                 assert_eq!(seq, par, "k={k} threads={threads}");
             }
         }
+    }
+
+    /// The probe-lane cap (`EvalOptions::probe_workers`) bounds
+    /// concurrency, refunds the thread budget to the inner config, and
+    /// never changes the output bits.
+    #[test]
+    fn capped_probe_fanout_matches_sequential() {
+        let eval = |i: usize, _inner: ParallelConfig| ((i as f32) * 0.71).cos();
+        let mut seq = vec![0.0f32; 11];
+        for_probes(
+            ParallelConfig {
+                threads: 1,
+                block_rows: 4,
+            },
+            &mut seq,
+            eval,
+        );
+        for cap in [Some(1), Some(2), Some(5), Some(64), None] {
+            let mut par = vec![0.0f32; 11];
+            for_probes_capped(
+                ParallelConfig {
+                    threads: 8,
+                    block_rows: 4,
+                },
+                cap,
+                &mut par,
+                eval,
+            );
+            assert_eq!(seq, par, "cap={cap:?}");
+        }
+        let (w, inner) = probe_split_capped(
+            ParallelConfig {
+                threads: 8,
+                block_rows: 4,
+            },
+            11,
+            Some(2),
+        );
+        assert_eq!(w, 2, "cap must bound the probe lanes");
+        assert_eq!(inner.threads, 4, "capped lanes inherit the freed budget");
+        assert!(w * inner.threads <= 8);
     }
 
     /// Nested use — probes fanning out row blocks on their inner budget

@@ -19,7 +19,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use super::{Backend, Entry, EntryMeta, Manifest};
+use super::{Backend, Entry, EntryMeta, EvalOptions, Manifest};
 
 // Without the `pjrt-xla` feature the real bindings are absent and the
 // whole module typechecks against the vendored stub (every runtime call
@@ -45,7 +45,18 @@ impl Entry for Executable {
     }
 
     /// Execute with flat f32 input buffers (shapes from the manifest).
-    fn run(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+    /// Engine-parallelism options are ignored (PJRT executables own
+    /// their threading — results never depend on them anyway); a
+    /// `bc_weight` override cannot be honored, so it is a loud error
+    /// rather than a silently differently-weighted loss.
+    fn run_with(&self, inputs: &[&[f32]], opts: &EvalOptions) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            opts.bc_weight.is_none(),
+            "{}: the pjrt backend cannot apply a per-dispatch bc_weight \
+             (the boundary weight is baked into the artifact at lowering \
+             time — re-lower with the desired hyper.bc_weight)",
+            self.meta.name
+        );
         self.meta.check_inputs(inputs)?;
         let mut literals = Vec::with_capacity(inputs.len());
         for (i, buf) in inputs.iter().enumerate() {

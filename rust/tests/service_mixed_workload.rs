@@ -1,0 +1,195 @@
+//! Mixed-workload solver service: per-job [`EvalOptions`] on ONE shared
+//! backend.
+//!
+//! The paper's motivating deployment is a long-lived service draining a
+//! *mixed* stream of scenarios. Per-job tuning used to be backend-GLOBAL
+//! mutable state (`set_bc_weight` / `set_parallel`), so two concurrent
+//! jobs with different settings silently corrupted each other's losses.
+//! These tests pin the fix:
+//!
+//! * ≥4 workers share ONE `NativeBackend`; interleaved hard-constraint
+//!   and soft-boundary (`tonn_micro_ac`) jobs carry distinct
+//!   `bc_weight`s and distinct `ParallelConfig`s, and every result must
+//!   be BIT-equal to the same config solved on a private backend;
+//! * a job that panics mid-solve comes back as an `Err` result (so
+//!   `recv()` cannot hang) and the worker keeps draining the queue.
+//!
+//! CI's bench-smoke job also runs this file in release mode under
+//! `PHOTON_BENCH_FAST=1` (smaller epoch budget).
+
+use std::sync::Arc;
+
+use photon_pinn::coordinator::{
+    OnChipTrainer, ServiceConfig, SolveRequest, SolverService, TrainConfig,
+};
+use photon_pinn::runtime::{
+    Backend, Entry, EntryMeta, EvalOptions, Manifest, NativeBackend, ParallelConfig,
+};
+
+fn epochs() -> usize {
+    if std::env::var("PHOTON_BENCH_FAST").as_deref() == Ok("1") {
+        8
+    } else {
+        15
+    }
+}
+
+fn job(
+    be: &NativeBackend,
+    preset: &str,
+    seed: u64,
+    par: Option<ParallelConfig>,
+    bc: Option<f64>,
+) -> TrainConfig {
+    let mut cfg = TrainConfig::from_manifest(be, preset).unwrap();
+    cfg.epochs = epochs();
+    cfg.validate_every = 0;
+    cfg.verbose = false;
+    cfg.seed = seed;
+    cfg.parallel = par;
+    cfg.bc_weight = bc;
+    cfg
+}
+
+/// The isolated-run oracle: the same config solved alone on a FRESH
+/// private backend (nothing else can possibly interfere).
+fn solo(cfg: &TrainConfig) -> (Vec<f32>, f32) {
+    let be = NativeBackend::builtin();
+    let res = OnChipTrainer::new(&be, cfg.clone()).unwrap().train().unwrap();
+    (res.phi, res.final_val)
+}
+
+/// The tentpole acceptance test: concurrent mixed-config jobs on one
+/// shared backend each reproduce their isolated run bit for bit.
+#[test]
+fn concurrent_jobs_with_distinct_options_match_solo_runs_bitwise() {
+    let be: Arc<NativeBackend> = Arc::new(NativeBackend::builtin());
+    let par = |threads, block_rows| ParallelConfig { threads, block_rows };
+    // interleave hard-constraint (poisson2 / heat2) and soft-boundary
+    // (allen_cahn2) scenarios; every job carries its OWN engine config,
+    // and the soft-boundary jobs carry three DIFFERENT bc_weights —
+    // under the old global-state backend these clobbered each other
+    let jobs: Vec<TrainConfig> = vec![
+        job(&be, "tonn_micro", 11, Some(par(1, 8)), None),
+        job(&be, "tonn_micro_ac", 12, Some(par(2, 16)), Some(0.25)),
+        job(&be, "tonn_micro", 13, Some(par(3, 5)), None),
+        job(&be, "tonn_micro_ac", 14, Some(par(4, 32)), Some(4.0)),
+        job(&be, "tonn_micro_heat", 15, None, None),
+        job(&be, "tonn_micro_ac", 16, Some(par(2, 7)), Some(1.0)),
+    ];
+    let oracle: Vec<(Vec<f32>, f32)> = jobs.iter().map(solo).collect();
+
+    let service = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(4, jobs.len()).with_warmup("tonn_micro"),
+    );
+    for (i, cfg) in jobs.iter().enumerate() {
+        service
+            .submit(SolveRequest {
+                id: i as u64,
+                config: cfg.clone(),
+            })
+            .unwrap();
+    }
+    let mut got: Vec<Option<(Vec<f32>, f32)>> = vec![None; jobs.len()];
+    for _ in 0..jobs.len() {
+        let r = service.recv().unwrap();
+        let val = r.final_val.expect("mixed-workload job must solve");
+        got[r.id as usize] = Some((r.phi, val));
+    }
+    assert!(service.shutdown().is_empty());
+
+    for (i, (phi, val)) in oracle.iter().enumerate() {
+        let (got_phi, got_val) = got[i].as_ref().expect("every job returns once");
+        assert_eq!(
+            got_phi, phi,
+            "job {i} ({}): Φ drifted on the shared backend — cross-job \
+             option leakage",
+            jobs[i].preset
+        );
+        assert_eq!(got_val, val, "job {i} ({}): final val drifted", jobs[i].preset);
+    }
+}
+
+/// Decorator backend that panics inside `loss_multi` dispatches of ONE
+/// preset (the NaN-injection decorator pattern, escalated to a panic).
+struct PanicBackend {
+    inner: NativeBackend,
+    poisoned_preset: &'static str,
+}
+
+struct PanicEntry {
+    meta: EntryMeta,
+}
+
+impl Entry for PanicEntry {
+    fn meta(&self) -> &EntryMeta {
+        &self.meta
+    }
+    fn dispatches(&self) -> u64 {
+        0
+    }
+    fn run_with(&self, _inputs: &[&[f32]], _opts: &EvalOptions) -> anyhow::Result<Vec<Vec<f32>>> {
+        panic!("injected dispatch panic");
+    }
+}
+
+impl Backend for PanicBackend {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+    fn platform(&self) -> String {
+        "panic-injector".into()
+    }
+    fn entry(&self, preset: &str, entry: &str) -> anyhow::Result<Arc<dyn Entry>> {
+        let real = self.inner.entry(preset, entry)?;
+        if entry == "loss_multi" && preset == self.poisoned_preset {
+            return Ok(Arc::new(PanicEntry {
+                meta: real.meta().clone(),
+            }));
+        }
+        Ok(real)
+    }
+}
+
+/// A panicking job must surface as an `Err` result — never a silently
+/// dead worker with a `recv()` that hangs forever — and the SAME worker
+/// must go on to solve the next job.
+#[test]
+fn panicking_job_returns_err_and_worker_keeps_draining() {
+    let be = Arc::new(PanicBackend {
+        inner: NativeBackend::builtin(),
+        poisoned_preset: "tonn_micro_heat",
+    });
+    // ONE worker: if the panic killed it, job 1 could never complete
+    let service = SolverService::start_shared(be.clone(), ServiceConfig::new(1, 4));
+    service
+        .submit(SolveRequest {
+            id: 0,
+            config: job(&be.inner, "tonn_micro_heat", 1, None, None),
+        })
+        .unwrap();
+    service
+        .submit(SolveRequest {
+            id: 1,
+            config: job(&be.inner, "tonn_micro", 2, None, None),
+        })
+        .unwrap();
+    let mut results = vec![service.recv().unwrap(), service.recv().unwrap()];
+    results.sort_by_key(|r| r.id);
+    let err = results[0]
+        .final_val
+        .as_ref()
+        .err()
+        .expect("panicking job must come back as Err");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("panicked"), "{msg}");
+    assert!(msg.contains("injected dispatch panic"), "{msg}");
+    assert!(results[0].phi.is_empty());
+    assert!(
+        results[1].final_val.as_ref().unwrap().is_finite(),
+        "the worker must survive the panic and solve the next job"
+    );
+    assert_eq!(results[0].worker, results[1].worker);
+    assert!(service.shutdown().is_empty());
+}

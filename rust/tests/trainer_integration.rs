@@ -13,7 +13,9 @@ use photon_pinn::coordinator::offchip::{OffChipConfig, OffChipTrainer};
 use photon_pinn::coordinator::trainer::{LossKind, OnChipTrainer, TrainConfig};
 use photon_pinn::coordinator::{ServiceConfig, SolveRequest, SolverService};
 use photon_pinn::photonics::noise::NoiseConfig;
-use photon_pinn::runtime::{Backend, Entry, EntryMeta, Manifest, NativeBackend, ParallelConfig};
+use photon_pinn::runtime::{
+    Backend, Entry, EntryMeta, EvalOptions, Manifest, NativeBackend, ParallelConfig,
+};
 
 fn quick_cfg(be: &NativeBackend, preset: &str, epochs: usize) -> TrainConfig {
     let mut cfg = TrainConfig::from_manifest(be, preset).unwrap();
@@ -262,7 +264,7 @@ impl Entry for NanEntry {
     fn dispatches(&self) -> u64 {
         0
     }
-    fn run(&self, inputs: &[&[f32]]) -> anyhow::Result<Vec<Vec<f32>>> {
+    fn run_with(&self, inputs: &[&[f32]], _opts: &EvalOptions) -> anyhow::Result<Vec<Vec<f32>>> {
         self.meta.check_inputs(inputs)?;
         Ok(vec![vec![f32::NAN; self.meta.output_len(0)]])
     }
