@@ -43,6 +43,13 @@ fn main() -> Result<()> {
         scfg = scfg.with_parallel(ParallelConfig::with_threads(t));
     }
     let service = SolverService::start(dir, scfg);
+    let boot = service.startup_report();
+    println!(
+        "workers live: {}/{}{}",
+        boot.live,
+        boot.workers,
+        if boot.is_warm() { "" } else { " (degraded — see warnings above)" }
+    );
 
     let t0 = std::time::Instant::now();
     for i in 0..requests {

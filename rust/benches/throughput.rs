@@ -1,0 +1,160 @@
+//! Bench: solver-service aggregate throughput (jobs/s) under queue
+//! depth, fused vs unfused dispatches. A backlog of same-preset jobs is
+//! submitted and drained twice — once with gang fusion at the default
+//! width (same-preset jobs share one `loss_fused` engine pass per
+//! epoch) and once with `fuse_max = 1` (every job dispatches alone, the
+//! pre-scheduler behavior). Fusion changes LATENCY ONLY: both drains
+//! produce bit-identical Φ/val per job (`tests/service_scheduler.rs`).
+//! Every case merges into `BENCH_native.json` (schema:
+//! `util::bench::BenchReport`) so perf is comparable across PRs.
+//!
+//!     cargo bench --bench throughput
+//!
+//! Environment knobs:
+//! * `PHOTON_BENCH_FAST=1`    — small backlogs, CI smoke depths
+//! * `PHOTON_THREADS=N`       — engine threads (via ParallelConfig::auto)
+//! * `PHOTON_BENCH_ENFORCE=1` — exit non-zero if the fused drain is
+//!   slower than the unfused drain at the gated depth (+noise margin)
+//! * `PHOTON_BENCH_OUT=path`  — report location (default: repo root)
+
+mod common;
+
+use std::sync::Arc;
+
+use photon_pinn::coordinator::{ServiceConfig, SolveRequest, SolverService, TrainConfig};
+use photon_pinn::runtime::{Backend, NativeBackend, ParallelConfig};
+use photon_pinn::util::bench::{bench, bench_report_path, report, BenchReport, BenchResult};
+
+const PRESET: &str = "tonn_micro";
+const WORKERS: usize = 2;
+const EPOCHS: usize = 3;
+/// shared-CI-runner tolerance on the enforce gate (same as latency.rs)
+const NOISE_MARGIN: f64 = 1.10;
+
+/// Submit a `depth`-job same-preset backlog and drain it; returns once
+/// every result arrived OK. The measured window is submit → last recv
+/// (service startup + warmup stay outside).
+fn drain(be: &Arc<dyn Backend + Send + Sync>, cfg: &TrainConfig, depth: usize, fuse_max: usize) {
+    let svc = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(WORKERS, depth)
+            .with_warmup(PRESET)
+            .with_parallel(ParallelConfig::auto())
+            .with_fuse_max(fuse_max),
+    );
+    for id in 0..depth as u64 {
+        let mut config = cfg.clone();
+        config.seed = 1000 + id;
+        svc.submit(SolveRequest { id, config }).unwrap();
+    }
+    for _ in 0..depth {
+        let r = svc.recv().unwrap();
+        r.final_val.unwrap_or_else(|e| panic!("job {} failed: {e:#}", r.id));
+    }
+    let rest = svc.shutdown();
+    assert!(rest.is_empty(), "drained everything before shutdown");
+}
+
+fn main() {
+    let fast = common::fast();
+    let dir = photon_pinn::resolve_artifacts_dir(None);
+    let be: Arc<dyn Backend + Send + Sync> = match NativeBackend::load_or_builtin(&dir) {
+        Ok(rt) => Arc::new(rt),
+        Err(e) => {
+            eprintln!("cannot load native backend from {}: {e:#}", dir.display());
+            std::process::exit(2);
+        }
+    };
+    let mut cfg = match TrainConfig::from_manifest(be.as_ref(), PRESET) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("no '{PRESET}' preset: {e:#}");
+            std::process::exit(2);
+        }
+    };
+    cfg.epochs = EPOCHS;
+    cfg.validate_every = 0;
+    cfg.verbose = false;
+
+    // queued-backlog depths; the gated depth is the 100-job (smoke:
+    // 30-job) drain — deep enough for gangs to form steadily, shallow
+    // enough for repeated medians
+    let depths: &[usize] = if fast { &[10, 30] } else { &[10, 100, 1000] };
+    let gated_depth = if fast { 30 } else { 100 };
+    let fused_width = ServiceConfig::DEFAULT_FUSE_MAX;
+
+    let par = ParallelConfig::auto();
+    let mut results: Vec<BenchResult> = Vec::new();
+    let mut rep = BenchReport::new("throughput", "native-cpu", par.threads, par.block_rows);
+    let mut gate: Option<(BenchResult, BenchResult)> = None;
+
+    for &depth in depths {
+        let (warm, iters) = if depth >= 1000 { (0, 1) } else { (1, 3) };
+        let unfused = bench(
+            &format!("service/{PRESET} jobs={depth} unfused(g=1)"),
+            warm,
+            iters,
+            || drain(&be, &cfg, depth, 1),
+        );
+        let fused = bench(
+            &format!("service/{PRESET} jobs={depth} fused(g={fused_width})"),
+            warm,
+            iters,
+            || drain(&be, &cfg, depth, fused_width),
+        );
+        rep.case_vs(&unfused, None);
+        rep.case_vs(&fused, Some(&unfused));
+        rep.case_raw_vs(
+            &format!("service/{PRESET} jobs={depth} aggregate"),
+            fused.median_s,
+            unfused.median_s,
+            &[
+                ("jobs_per_s_fused", depth as f64 / fused.median_s),
+                ("jobs_per_s_unfused", depth as f64 / unfused.median_s),
+            ],
+        );
+        if depth == gated_depth {
+            gate = Some((fused.clone(), unfused.clone()));
+        }
+        results.push(unfused);
+        results.push(fused);
+    }
+
+    report(&results);
+    println!(
+        "\naggregate throughput: {WORKERS} workers, {EPOCHS}-epoch {PRESET} jobs; fused drains"
+    );
+    println!("merge each epoch's probe dispatches across a gang of <= {fused_width} jobs.");
+
+    let path = bench_report_path();
+    if let Err(e) = rep.write_merged(&path) {
+        eprintln!("cannot write {}: {e:#}", path.display());
+        std::process::exit(2);
+    }
+    println!(
+        "\nperf report merged into {} ({} cases, engine {}Tx{} rows/block)",
+        path.display(),
+        rep.cases.len(),
+        rep.threads,
+        rep.block_rows
+    );
+
+    if std::env::var("PHOTON_BENCH_ENFORCE").as_deref() == Ok("1") {
+        let (fused, unfused) = gate.expect("gated depth is always measured");
+        if fused.median_s > unfused.median_s * NOISE_MARGIN {
+            eprintln!(
+                "enforce FAILED: fused drain {:.1}ms > unfused {:.1}ms (+10% margin) \
+                 at {gated_depth} queued jobs",
+                fused.median_s * 1e3,
+                unfused.median_s * 1e3
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "enforce: fused >= unfused jobs/s at {gated_depth} queued jobs \
+             ({:.1} vs {:.1} jobs/s)",
+            gated_depth as f64 / fused.median_s,
+            gated_depth as f64 / unfused.median_s
+        );
+    }
+}

@@ -14,18 +14,24 @@
 //! * [`metrics`] — per-epoch records + CSV/JSON export.
 //! * [`checkpoint`] — save/restore of commanded parameters.
 //! * [`service`] — threaded real-time PDE solve service (repeated
-//!   re-solves as "sensor data updates" — the paper's motivating loop).
+//!   re-solves as "sensor data updates" — the paper's motivating loop):
+//!   typed admission, cross-job dispatch fusion, streamed progress.
+//! * [`scheduler`] — the service's scheduling substrate: a multi-tenant
+//!   priority/deadline queue with quotas, gang formation for fusion,
+//!   and worker-pool liveness (dead pools fail fast).
 
 pub mod checkpoint;
 pub mod experiment;
 pub mod metrics;
 pub mod offchip;
+pub mod scheduler;
 pub mod service;
 pub mod trainer;
 pub mod validator;
 
 pub use experiment::{ExperimentRow, Table1Runner};
 pub use offchip::{OffChipConfig, OffChipTrainer};
+pub use scheduler::{Admission, ProgressEvent, ScheduledJob, StartupReport};
 pub use service::{ServiceConfig, SolveRequest, SolveResult, SolverService};
-pub use trainer::{OnChipTrainer, TrainConfig, TrainResult};
+pub use trainer::{OnChipTrainer, TrainConfig, TrainResult, TrainState};
 pub use validator::Validator;

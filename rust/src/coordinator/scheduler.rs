@@ -1,0 +1,576 @@
+//! Multi-tenant job scheduling for the solver service: typed admission
+//! control, a priority/deadline queue, per-tenant quotas, and the
+//! live-worker accounting that lets a dead pool fail fast.
+//!
+//! The service's old substrate was a single FIFO `sync_channel`; this
+//! module replaces it with an explicit [`JobQueue`]:
+//!
+//! * **Admission control** ([`Admission`]): every submission gets a
+//!   typed verdict — accepted, queue full (the old `try_submit(false)`
+//!   backpressure signal), tenant over quota, pool dead (with the
+//!   backend load error), or closed. Blocking submits park on the
+//!   queue's condvar until capacity/quota frees instead of spinning.
+//! * **Ordering**: jobs run by priority (higher first), then deadline
+//!   (earlier first; any deadline beats none), then submission order —
+//!   so equal-priority, deadline-free traffic is exactly the old FIFO.
+//! * **Per-tenant quotas**: an optional cap on each tenant's in-flight
+//!   (queued + running) jobs, so one chatty tenant cannot occupy the
+//!   whole queue; released as results are delivered.
+//! * **Gang formation** ([`JobQueue::pop_gang`]): a worker pops the top
+//!   job plus up to `fuse_max - 1` CONSECUTIVE top jobs on the same
+//!   preset, which the service drives in lockstep and fuses into
+//!   cross-job engine passes ([`crate::runtime::Backend::loss_fused`]).
+//!   Only consecutive heap tops are grouped, so gang formation never
+//!   reorders across priorities.
+//! * **Live-worker tracking**: workers register their backend load
+//!   outcome; once every worker has resolved and none is live, the pool
+//!   is dead and `submit`/`recv` fail fast with the load error instead
+//!   of queueing jobs nobody will drain (the pre-scheduler hang class).
+//!   [`StartupReport`] ([`JobQueue::startup_report`]) blocks until all
+//!   workers resolve and surfaces load + warmup failures, so a cold or
+//!   half-dead service cannot masquerade as a warm one.
+//!
+//! [`ProgressEvent`] is the streamed-progress vocabulary: one event per
+//! validation pass of any running job, fed from the trainer's
+//! `set_on_validate` hook into the service's progress channel.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::service::SolveRequest;
+
+/// One scheduled job: a [`SolveRequest`] plus scheduling metadata.
+/// `SolveRequest::into()` gives the neutral defaults (default tenant,
+/// priority 0, no deadline) — i.e. plain FIFO behavior.
+#[derive(Clone, Debug)]
+pub struct ScheduledJob {
+    pub request: SolveRequest,
+    /// tenant key for quota accounting (empty = the default tenant)
+    pub tenant: String,
+    /// higher runs first (default 0)
+    pub priority: i32,
+    /// absolute deadline; within a priority, earlier deadlines run
+    /// first and any deadline beats none
+    pub deadline: Option<Instant>,
+}
+
+impl ScheduledJob {
+    pub fn new(request: SolveRequest) -> ScheduledJob {
+        ScheduledJob {
+            request,
+            tenant: String::new(),
+            priority: 0,
+            deadline: None,
+        }
+    }
+
+    pub fn with_tenant(mut self, tenant: &str) -> ScheduledJob {
+        self.tenant = tenant.to_string();
+        self
+    }
+
+    pub fn with_priority(mut self, priority: i32) -> ScheduledJob {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_deadline(mut self, deadline: Instant) -> ScheduledJob {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+impl From<SolveRequest> for ScheduledJob {
+    fn from(request: SolveRequest) -> ScheduledJob {
+        ScheduledJob::new(request)
+    }
+}
+
+/// Typed admission verdict for a submission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// admitted; `queued` is the queue depth right after insertion
+    Accepted { queued: usize },
+    /// the bounded queue is full — the backpressure signal callers can
+    /// shed load on (the old `try_submit == Ok(false)`)
+    QueueFull,
+    /// the tenant is at its in-flight (queued + running) quota
+    QuotaExceeded {
+        tenant: String,
+        in_flight: usize,
+        quota: usize,
+    },
+    /// every worker is dead; `error` carries the first backend load
+    /// failure so the caller learns WHY nothing will run
+    PoolDead { error: String },
+    /// the service has shut down
+    Closed,
+}
+
+/// One streamed progress sample: job `job` finished a validation pass
+/// at `epoch` with on-chip validation MSE `val` (the final validation
+/// is reported with `epoch` = the job's configured epoch count).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ProgressEvent {
+    pub job: u64,
+    pub epoch: usize,
+    pub val: f32,
+}
+
+/// Startup outcome of the worker pool, available once every worker has
+/// resolved its backend load (see [`JobQueue::startup_report`]).
+#[derive(Clone, Debug, Default)]
+pub struct StartupReport {
+    /// configured worker count
+    pub workers: usize,
+    /// workers that loaded a backend and are draining the queue
+    pub live: usize,
+    /// `(worker, error)` for every failed backend load
+    pub load_errors: Vec<(usize, String)>,
+    /// warmup failures (logged via `warn_!` too): the service still
+    /// runs, but first dispatches will pay the build latency
+    pub warmup_errors: Vec<String>,
+}
+
+impl StartupReport {
+    /// Fully live and fully warm: every worker loaded its backend and
+    /// every requested warmup built.
+    pub fn is_warm(&self) -> bool {
+        self.live == self.workers && self.load_errors.is_empty() && self.warmup_errors.is_empty()
+    }
+}
+
+/// A popped job plus its submission timestamp (queue-latency metric).
+pub(crate) struct PoppedJob {
+    pub(crate) job: ScheduledJob,
+    pub(crate) submitted: Instant,
+}
+
+struct QueueEntry {
+    job: ScheduledJob,
+    submitted: Instant,
+    /// submission order: the FIFO tiebreaker
+    seq: u64,
+}
+
+impl QueueEntry {
+    /// `BinaryHeap` is a max-heap, so "greater" means "runs first":
+    /// priority desc → deadline asc (any deadline beats none) → seq asc.
+    fn cmp_entries(&self, other: &QueueEntry) -> Ordering {
+        self.job
+            .priority
+            .cmp(&other.job.priority)
+            .then_with(|| match (self.job.deadline, other.job.deadline) {
+                (Some(a), Some(b)) => b.cmp(&a),
+                (Some(_), None) => Ordering::Greater,
+                (None, Some(_)) => Ordering::Less,
+                (None, None) => Ordering::Equal,
+            })
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialEq for QueueEntry {
+    fn eq(&self, other: &QueueEntry) -> bool {
+        self.cmp_entries(other) == Ordering::Equal
+    }
+}
+
+impl Eq for QueueEntry {}
+
+impl PartialOrd for QueueEntry {
+    fn partial_cmp(&self, other: &QueueEntry) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueueEntry {
+    fn cmp(&self, other: &QueueEntry) -> Ordering {
+        self.cmp_entries(other)
+    }
+}
+
+struct QState {
+    heap: BinaryHeap<QueueEntry>,
+    /// queued + running jobs per tenant (quota accounting)
+    in_flight: HashMap<String, usize>,
+    next_seq: u64,
+    closed: bool,
+    /// workers currently draining the queue
+    live: usize,
+    /// workers configured at startup
+    spawned: usize,
+    /// workers whose backend load has resolved (either way)
+    resolved: usize,
+    load_errors: Vec<(usize, String)>,
+    warmup_errors: Vec<String>,
+}
+
+/// The scheduler substrate: a bounded priority/deadline queue with
+/// tenant quotas and worker-pool liveness, all under one mutex +
+/// condvar (submitters, workers and `startup_report` all park here).
+pub(crate) struct JobQueue {
+    cap: usize,
+    quota: Option<usize>,
+    state: Mutex<QState>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    pub(crate) fn new(cap: usize, quota: Option<usize>, workers: usize) -> JobQueue {
+        JobQueue {
+            cap: cap.max(1),
+            quota,
+            state: Mutex::new(QState {
+                heap: BinaryHeap::new(),
+                in_flight: HashMap::new(),
+                next_seq: 0,
+                closed: false,
+                live: 0,
+                spawned: workers,
+                resolved: 0,
+                load_errors: Vec::new(),
+                warmup_errors: Vec::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// The dead-pool condition: every worker resolved its backend load
+    /// and none is draining the queue (and nobody asked us to close) —
+    /// anything submitted now would sit forever.
+    fn dead_error(st: &QState) -> Option<String> {
+        if !st.closed && st.resolved == st.spawned && st.live == 0 {
+            Some(match st.load_errors.first() {
+                Some((w, e)) => format!(
+                    "the worker pool is dead: {} of {} worker(s) failed backend \
+                     load (worker {w}: {e})",
+                    st.load_errors.len(),
+                    st.spawned
+                ),
+                None => format!(
+                    "the worker pool is dead: all {} worker(s) exited",
+                    st.spawned
+                ),
+            })
+        } else {
+            None
+        }
+    }
+
+    /// The dead-pool error for `recv`-style callers (None while any
+    /// worker lives or loads).
+    pub(crate) fn pool_dead_error(&self) -> Option<String> {
+        Self::dead_error(&self.state.lock().unwrap())
+    }
+
+    fn try_admit_locked(&self, st: &mut QState, job: &ScheduledJob) -> Admission {
+        if st.closed {
+            return Admission::Closed;
+        }
+        if let Some(error) = Self::dead_error(st) {
+            return Admission::PoolDead { error };
+        }
+        if let Some(quota) = self.quota {
+            let in_flight = st.in_flight.get(&job.tenant).copied().unwrap_or(0);
+            if in_flight >= quota {
+                return Admission::QuotaExceeded {
+                    tenant: job.tenant.clone(),
+                    in_flight,
+                    quota,
+                };
+            }
+        }
+        if st.heap.len() >= self.cap {
+            return Admission::QueueFull;
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        *st.in_flight.entry(job.tenant.clone()).or_insert(0) += 1;
+        st.heap.push(QueueEntry {
+            job: job.clone(),
+            submitted: Instant::now(),
+            seq,
+        });
+        Admission::Accepted {
+            queued: st.heap.len(),
+        }
+    }
+
+    /// Non-blocking admission with a typed verdict.
+    pub(crate) fn admit(&self, job: &ScheduledJob) -> Admission {
+        let mut st = self.state.lock().unwrap();
+        let verdict = self.try_admit_locked(&mut st, job);
+        if matches!(verdict, Admission::Accepted { .. }) {
+            self.cv.notify_all();
+        }
+        verdict
+    }
+
+    /// Blocking submit: parks while the queue is full or the tenant is
+    /// at quota (capacity frees as workers pop / results deliver);
+    /// errors out on a closed service or a dead pool.
+    pub(crate) fn submit_blocking(&self, job: ScheduledJob) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match self.try_admit_locked(&mut st, &job) {
+                Admission::Accepted { .. } => {
+                    self.cv.notify_all();
+                    return Ok(());
+                }
+                Admission::QueueFull | Admission::QuotaExceeded { .. } => {
+                    st = self.cv.wait(st).unwrap();
+                }
+                Admission::Closed => anyhow::bail!("service is shut down"),
+                Admission::PoolDead { error } => anyhow::bail!("{error}"),
+            }
+        }
+    }
+
+    /// Blocking worker pop: the top job plus up to `fuse_max - 1`
+    /// consecutive top jobs on the same preset (the fusion gang).
+    /// `None` once the queue is closed AND drained — the ordered-
+    /// shutdown contract: everything queued before close still runs.
+    pub(crate) fn pop_gang(&self, fuse_max: usize) -> Option<Vec<PoppedJob>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(top) = st.heap.pop() {
+                let preset = top.job.request.config.preset.clone();
+                let mut gang = vec![PoppedJob {
+                    job: top.job,
+                    submitted: top.submitted,
+                }];
+                while gang.len() < fuse_max.max(1) {
+                    match st.heap.peek() {
+                        Some(next) if next.job.request.config.preset == preset => {
+                            let e = st.heap.pop().expect("peeked entry");
+                            gang.push(PoppedJob {
+                                job: e.job,
+                                submitted: e.submitted,
+                            });
+                        }
+                        _ => break,
+                    }
+                }
+                // queue slots freed: wake parked submitters
+                self.cv.notify_all();
+                return Some(gang);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// A job's result was delivered: release its tenant quota slot.
+    pub(crate) fn job_done(&self, tenant: &str) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(n) = st.in_flight.get_mut(tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                st.in_flight.remove(tenant);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// A worker loaded its backend and is entering the drain loop.
+    pub(crate) fn register_live(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.resolved += 1;
+        st.live += 1;
+        self.cv.notify_all();
+    }
+
+    /// A worker failed to load its backend and will never drain jobs.
+    pub(crate) fn register_load_failure(&self, worker: usize, error: String) {
+        let mut st = self.state.lock().unwrap();
+        st.resolved += 1;
+        st.load_errors.push((worker, error));
+        self.cv.notify_all();
+    }
+
+    /// A previously live worker left its drain loop.
+    pub(crate) fn worker_exited(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.live = st.live.saturating_sub(1);
+        self.cv.notify_all();
+    }
+
+    /// Record a warmup failure for the startup report (the service
+    /// still runs — first dispatches pay the build latency instead).
+    pub(crate) fn record_warmup_error(&self, error: String) {
+        let mut st = self.state.lock().unwrap();
+        st.warmup_errors.push(error);
+        self.cv.notify_all();
+    }
+
+    /// Close the queue: no new admissions; workers drain what is left,
+    /// then their pops return `None`.
+    pub(crate) fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    /// Block until every worker's backend load has resolved, then
+    /// report pool liveness + load/warmup failures.
+    pub(crate) fn startup_report(&self) -> StartupReport {
+        let mut st = self.state.lock().unwrap();
+        while st.resolved < st.spawned {
+            st = self.cv.wait(st).unwrap();
+        }
+        StartupReport {
+            workers: st.spawned,
+            live: st.live,
+            load_errors: st.load_errors.clone(),
+            warmup_errors: st.warmup_errors.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::time::Duration;
+
+    use super::super::trainer::TrainConfig;
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn req(id: u64, preset: &str, be: &NativeBackend) -> SolveRequest {
+        let mut config = TrainConfig::from_manifest(be, preset).unwrap();
+        config.epochs = 1;
+        config.validate_every = 0;
+        config.verbose = false;
+        SolveRequest { id, config }
+    }
+
+    fn job(id: u64, preset: &str, be: &NativeBackend) -> ScheduledJob {
+        ScheduledJob::new(req(id, preset, be))
+    }
+
+    #[test]
+    fn pop_order_is_priority_then_deadline_then_fifo() {
+        let be = NativeBackend::builtin();
+        let q = JobQueue::new(16, None, 1);
+        q.register_live();
+        let t = Instant::now();
+        let jobs = [
+            job(0, "tonn_micro", &be),
+            job(1, "tonn_micro", &be).with_priority(5),
+            job(2, "tonn_micro", &be)
+                .with_priority(5)
+                .with_deadline(t + Duration::from_millis(100)),
+            job(3, "tonn_micro", &be)
+                .with_priority(5)
+                .with_deadline(t + Duration::from_millis(200)),
+            job(4, "tonn_micro", &be),
+        ];
+        for j in &jobs {
+            assert!(matches!(q.admit(j), Admission::Accepted { .. }));
+        }
+        // priority 5 first (earlier deadline first, any deadline beats
+        // none), then the priority-0 jobs in submission order
+        let order: Vec<u64> = (0..jobs.len())
+            .map(|_| q.pop_gang(1).unwrap()[0].job.request.id)
+            .collect();
+        assert_eq!(order, vec![2, 3, 1, 0, 4]);
+    }
+
+    #[test]
+    fn tenant_quota_counts_queued_plus_running() {
+        let be = NativeBackend::builtin();
+        let q = JobQueue::new(16, Some(1), 1);
+        q.register_live();
+        let a = job(0, "tonn_micro", &be).with_tenant("acme");
+        let b = job(1, "tonn_micro", &be).with_tenant("acme");
+        let c = job(2, "tonn_micro", &be).with_tenant("other");
+        assert!(matches!(q.admit(&a), Admission::Accepted { .. }));
+        match q.admit(&b) {
+            Admission::QuotaExceeded {
+                tenant,
+                in_flight,
+                quota,
+            } => {
+                assert_eq!(tenant, "acme");
+                assert_eq!((in_flight, quota), (1, 1));
+            }
+            other => panic!("expected QuotaExceeded, got {other:?}"),
+        }
+        // quotas are per tenant: another tenant still fits
+        assert!(matches!(q.admit(&c), Admission::Accepted { .. }));
+        // popping does NOT release the slot (the job is now running) …
+        let popped = q.pop_gang(1).unwrap();
+        assert_eq!(popped.len(), 1);
+        assert!(matches!(q.admit(&b), Admission::QuotaExceeded { .. }));
+        // … delivering its result does
+        q.job_done("acme");
+        assert!(matches!(q.admit(&b), Admission::Accepted { .. }));
+    }
+
+    #[test]
+    fn gang_groups_consecutive_same_preset_tops_only() {
+        let be = NativeBackend::builtin();
+        let q = JobQueue::new(16, None, 1);
+        q.register_live();
+        for j in [
+            job(0, "tonn_micro", &be),
+            job(1, "tonn_micro", &be),
+            job(2, "tonn_micro_heat", &be),
+            job(3, "tonn_micro", &be),
+        ] {
+            assert!(matches!(q.admit(&j), Admission::Accepted { .. }));
+        }
+        let ids = |g: Vec<PoppedJob>| g.iter().map(|p| p.job.request.id).collect::<Vec<_>>();
+        // jobs 0 and 1 share a preset and sit on top together; job 2
+        // (different preset) fences the gang even though job 3 matches
+        assert_eq!(ids(q.pop_gang(4).unwrap()), vec![0, 1]);
+        assert_eq!(ids(q.pop_gang(4).unwrap()), vec![2]);
+        assert_eq!(ids(q.pop_gang(4).unwrap()), vec![3]);
+    }
+
+    #[test]
+    fn dead_pool_rejects_with_the_load_error() {
+        let be = NativeBackend::builtin();
+        let q = JobQueue::new(16, None, 2);
+        q.register_load_failure(0, "no such device".into());
+        q.register_load_failure(1, "no such device".into());
+        let report = q.startup_report();
+        assert_eq!((report.workers, report.live), (2, 0));
+        assert_eq!(report.load_errors.len(), 2);
+        assert!(!report.is_warm());
+        match q.admit(&job(0, "tonn_micro", &be)) {
+            Admission::PoolDead { error } => {
+                assert!(error.contains("no such device"), "{error}");
+                assert!(error.contains("worker 0"), "{error}");
+            }
+            other => panic!("expected PoolDead, got {other:?}"),
+        }
+        let err = q
+            .submit_blocking(job(1, "tonn_micro", &be))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no such device"), "{err}");
+        assert!(q.pool_dead_error().is_some());
+    }
+
+    #[test]
+    fn closed_queue_drains_then_stops() {
+        let be = NativeBackend::builtin();
+        let q = JobQueue::new(16, None, 1);
+        q.register_live();
+        assert!(matches!(
+            q.admit(&job(0, "tonn_micro", &be)),
+            Admission::Accepted { .. }
+        ));
+        q.close();
+        assert_eq!(q.admit(&job(1, "tonn_micro", &be)), Admission::Closed);
+        // the job queued before close still comes out, then None
+        assert_eq!(q.pop_gang(4).unwrap()[0].job.request.id, 0);
+        assert!(q.pop_gang(4).is_none());
+    }
+}

@@ -2,69 +2,86 @@
 //! ("a HJB/HJI PDE has to be solved repeatedly as the sensor data and
 //! avoidance specification updates").
 //!
-//! A bounded job queue feeds worker threads; results stream back over a
-//! channel. This is the tokio-free event loop substrate (DESIGN.md
-//! §Substitutions): std threads + mpsc + a bounded queue for
-//! backpressure ([`SolverService::submit`] blocks when full,
-//! [`SolverService::try_submit`] reports `false` instead).
+//! The service is a scheduler ([`super::scheduler`]) feeding worker
+//! threads; results and progress stream back over channels. Still the
+//! tokio-free substrate (DESIGN.md §Substitutions): std threads + mpsc
+//! + a bounded queue — but the queue is now a priority/deadline heap
+//! with typed **admission control**. [`SolverService::submit`] blocks
+//! when full or over quota; [`SolverService::try_submit`] keeps its
+//! `Ok(false)` backpressure contract; [`SolverService::admit`] exposes
+//! the full [`Admission`] verdict (accepted / queue full / tenant over
+//! quota / pool dead / closed) for callers that shed load by tenant.
+//! [`ScheduledJob`] carries the metadata (tenant, priority, deadline);
+//! a plain [`SolveRequest`] converts to neutral defaults, so
+//! equal-priority traffic still runs FIFO.
 //!
-//! Topology + engine tuning live in [`ServiceConfig`]: worker count,
-//! queue depth, warmup, and the evaluation-engine [`ParallelConfig`]
-//! applied to the backend(s) at startup (with W workers sharing one
-//! native backend, total CPU pressure is roughly `workers x threads` —
-//! size the two together).
+//! **Dispatch fusion.** Same-preset jobs already share materialized
+//! layers through the backend's Φ-keyed MRU cache; the scheduler goes
+//! one step further and hands a worker a *gang* of up to
+//! `ServiceConfig.fuse_max` consecutive same-preset jobs. The worker
+//! drives them in lockstep through the trainer's stepping API and
+//! merges each epoch's probe losses into ONE fused engine pass
+//! ([`crate::runtime::Backend::loss_fused`]): `G` jobs × `K` probes
+//! become one `G·K`-lane fan-out under a single thread budget instead
+//! of `G` passes contending for it. The per-probe kernels are the
+//! sequential ones, so a fused job reproduces its isolated run bit for
+//! bit — same Φ trajectory, same validation values
+//! (`tests/service_scheduler.rs`). `with_fuse_max(1)` disables fusion.
 //!
-//! Jobs are problem-agnostic AND optimizer-agnostic: each
-//! [`SolveRequest`] carries a full `TrainConfig`, so one service
-//! instance drains a mixed stream of scenarios (every problem in the
-//! `pde` registry — see `benches/scenario_sweep.rs`, which sweeps the
-//! whole registry through this service) under any registered
-//! optimizer/estimator pair (`TrainConfig.{optimizer,estimator}` —
-//! workers resolve them by name per job, nothing is shared). Per-job
-//! evaluation tuning is session-scoped too:
-//! `TrainConfig.{parallel,bc_weight,probe_workers}` become the job's
-//! [`EvalOptions`](crate::runtime::EvalOptions) and ride every
-//! dispatch, so two concurrent jobs with different boundary weights or
-//! thread budgets on ONE shared backend reproduce their isolated runs
-//! bit for bit (`tests/service_mixed_workload.rs`) — no backend state
-//! is mutated per job. `ServiceConfig.parallel` still sets the
-//! backend-wide *default* engine config once at startup (via the
-//! deprecated `set_parallel` shim); jobs that don't carry their own
-//! config inherit it. A worker training with probe-parallel losses
-//! multiplies thread pressure (`workers × threads`), same sizing rule
-//! as before.
+//! **Progress streaming.** Each validation pass of any running job
+//! emits a [`ProgressEvent`] `{ job, epoch, val }` on a side channel
+//! ([`SolverService::try_recv_progress`]), fed from the trainer's
+//! `set_on_validate` hook — so callers watch convergence live instead
+//! of waiting for the final [`SolveResult`].
 //!
-//! Workers are panic-proof: a job that panics mid-solve comes back as
-//! an `Err` [`SolveResult`] (so `recv()` can never hang waiting for a
-//! result that will not arrive) and the worker keeps draining the
-//! queue.
+//! Jobs stay problem- and optimizer-agnostic: each [`SolveRequest`]
+//! carries a full `TrainConfig`, and per-job evaluation tuning
+//! (`TrainConfig.{parallel,bc_weight,probe_workers}`) rides every
+//! dispatch as [`EvalOptions`](crate::runtime::EvalOptions) — fused or
+//! not, no backend state is mutated per job. `ServiceConfig.parallel`
+//! still sets the backend-wide *default* engine config once at startup.
 //!
-//! Two backend topologies:
+//! Failure containment, three layers:
 //!
-//! * **Shared** ([`SolverService::start_shared`]): the native backend is
-//!   `Send + Sync`, so every worker borrows ONE backend — no per-worker
-//!   manifest parse, no per-worker executable cache.
-//! * **Per-worker** ([`SolverService::start_per_worker`]): a factory
-//!   builds one backend inside each worker thread. Required for PJRT
-//!   (handles are not `Send` — physically faithful too: one photonic
-//!   accelerator per worker).
+//! * **Panics**: a job that panics mid-solve comes back as an `Err`
+//!   [`SolveResult`] (every unreported member of its gang does) and the
+//!   worker keeps draining — `recv()` can never hang on a result that
+//!   will not arrive.
+//! * **Dead pool**: workers report their backend-load outcome to the
+//!   scheduler; once every worker has resolved and none is live,
+//!   `submit`/`try_submit`/`recv` fail fast with the load error instead
+//!   of accepting jobs nobody will ever drain (the old per-worker
+//!   topology accepted forever and `recv` hung).
+//! * **Warmup failures**: no longer swallowed — logged via `warn_!` and
+//!   surfaced in [`SolverService::startup_report`]
+//!   ([`StartupReport`]), which blocks until every worker resolves.
 //!
-//! [`SolverService::start`] keeps the path-based API and picks the right
-//! topology for the compiled feature set. Shutdown is ordered: every
-//! job queued before [`SolverService::shutdown`] still runs, workers
-//! join, and the results never `recv`'d come back from the drain.
+//! Two backend topologies, as before: **shared**
+//! ([`SolverService::start_shared`], every worker borrows ONE `Send +
+//! Sync` native backend) and **per-worker**
+//! ([`SolverService::start_per_worker`], a factory builds one backend
+//! inside each worker thread — required for PJRT).
+//! [`SolverService::start`] picks by feature set.
+//!
+//! Shutdown is ordered AND spin-free: [`SolverService::shutdown`]
+//! closes the queue (jobs already admitted still run), then does a
+//! *blocking* drain of the results channel — the workers hold the only
+//! senders, so the drain ends exactly when the last worker exits. A
+//! worker blocked mid-`send` on a full results channel is freed by that
+//! same drain, so the join can never wedge.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::trainer::{OnChipTrainer, TrainConfig};
-use crate::runtime::{Backend, ParallelConfig};
+use super::scheduler::{Admission, JobQueue, PoppedJob, ProgressEvent, ScheduledJob, StartupReport};
+use super::trainer::{OnChipTrainer, TrainConfig, TrainState};
+use crate::runtime::{Backend, FusedLossJob, ParallelConfig};
 
 /// One solve job.
 #[derive(Clone, Debug)]
@@ -84,7 +101,7 @@ pub struct SolveResult {
     pub worker: usize,
 }
 
-/// Service topology + engine configuration.
+/// Service topology + scheduling + engine configuration.
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     /// worker threads draining the job queue
@@ -99,15 +116,27 @@ pub struct ServiceConfig {
     /// setting. Jobs override it per dispatch through
     /// `TrainConfig.parallel` ([`crate::runtime::EvalOptions`]).
     pub parallel: Option<ParallelConfig>,
+    /// per-tenant cap on in-flight (queued + running) jobs; `None`
+    /// disables quota checks
+    pub tenant_quota: Option<usize>,
+    /// max same-preset jobs a worker fuses into one gang (1 disables
+    /// dispatch fusion)
+    pub fuse_max: usize,
 }
 
 impl ServiceConfig {
+    /// Default gang width: enough to amortize the shared probe fan-out
+    /// without letting one worker monopolize a small queue.
+    pub const DEFAULT_FUSE_MAX: usize = 4;
+
     pub fn new(workers: usize, queue_cap: usize) -> ServiceConfig {
         ServiceConfig {
             workers: workers.max(1),
             queue_cap: queue_cap.max(1),
             warmup_preset: None,
             parallel: None,
+            tenant_quota: None,
+            fuse_max: Self::DEFAULT_FUSE_MAX,
         }
     }
 
@@ -120,70 +149,220 @@ impl ServiceConfig {
         self.parallel = Some(par);
         self
     }
+
+    pub fn with_tenant_quota(mut self, quota: usize) -> ServiceConfig {
+        self.tenant_quota = Some(quota.max(1));
+        self
+    }
+
+    pub fn with_fuse_max(mut self, fuse_max: usize) -> ServiceConfig {
+        self.fuse_max = fuse_max.max(1);
+        self
+    }
 }
 
-enum Job {
-    Solve(SolveRequest, Instant),
-    Shutdown,
-}
-
-/// Threaded solver service with a bounded queue (backpressure: `submit`
-/// blocks when `queue_cap` jobs are in flight).
+/// Threaded solver service with typed admission, dispatch fusion and
+/// streamed progress (see the module docs).
 pub struct SolverService {
-    tx: SyncSender<Job>,
+    queue: Arc<JobQueue>,
     results: Receiver<SolveResult>,
+    progress: Receiver<ProgressEvent>,
     workers: Vec<JoinHandle<()>>,
 }
 
 struct Plumbing {
-    rx: Arc<Mutex<Receiver<Job>>>,
+    queue: Arc<JobQueue>,
     res_tx: SyncSender<SolveResult>,
+    prog_tx: Sender<ProgressEvent>,
 }
 
-/// Drain jobs against a backend until shutdown.
-///
-/// Job execution is wrapped in `catch_unwind`: a panicking job must
-/// neither kill this worker silently (the queue would stop draining)
-/// nor swallow its result (the submitter's `recv()` would hang forever
-/// on a solve that can no longer arrive) — it comes back as an `Err`
-/// [`SolveResult`] instead.
-fn worker_loop(w: usize, rt: &dyn Backend, p: &Plumbing) {
-    loop {
-        let job = { p.rx.lock().unwrap().recv() };
-        match job {
-            Ok(Job::Solve(req, submitted)) => {
-                let queue_seconds = submitted.elapsed().as_secs_f64();
-                let t0 = Instant::now();
-                let SolveRequest { id, config } = req;
-                let outcome = catch_unwind(AssertUnwindSafe(|| {
-                    OnChipTrainer::new(rt, config).and_then(|mut t| t.train())
-                }));
-                let (final_val, phi) = match outcome {
-                    Ok(Ok(r)) => (Ok(r.final_val), r.phi),
-                    Ok(Err(e)) => (Err(e), Vec::new()),
-                    Err(payload) => {
-                        let msg = payload
-                            .downcast_ref::<&str>()
-                            .map(|s| s.to_string())
-                            .or_else(|| payload.downcast_ref::<String>().cloned())
-                            .unwrap_or_else(|| "non-string panic payload".to_string());
-                        (
-                            Err(anyhow::anyhow!("job {id} panicked on worker {w}: {msg}")),
-                            Vec::new(),
-                        )
-                    }
-                };
-                let _ = p.res_tx.send(SolveResult {
-                    id,
-                    final_val,
-                    phi,
-                    queue_seconds,
-                    solve_seconds: t0.elapsed().as_secs_f64(),
-                    worker: w,
+/// Per-gang bookkeeping for one popped job: enough to emit its
+/// [`SolveResult`] (and release its tenant slot) from any failure path.
+struct GangMember {
+    id: u64,
+    tenant: String,
+    config: Option<TrainConfig>,
+    queue_seconds: f64,
+    sent: bool,
+}
+
+/// One still-running gang member: its trainer + stepping state.
+struct Lane<'rt> {
+    mi: usize,
+    preset: String,
+    trainer: OnChipTrainer<'rt>,
+    state: TrainState,
+}
+
+/// Emit `m`'s result and release its tenant quota slot.
+fn finish_member(
+    p: &Plumbing,
+    m: &mut GangMember,
+    t0: Instant,
+    w: usize,
+    final_val: Result<f32>,
+    phi: Vec<f32>,
+) {
+    let _ = p.res_tx.send(SolveResult {
+        id: m.id,
+        final_val,
+        phi,
+        queue_seconds: m.queue_seconds,
+        solve_seconds: t0.elapsed().as_secs_f64(),
+        worker: w,
+    });
+    p.queue.job_done(&m.tenant);
+    m.sent = true;
+}
+
+/// Drive a gang of same-preset jobs in lockstep. Each epoch: advance
+/// every lane, merge the fusable lanes' probe dispatches into one
+/// [`Backend::loss_fused`] pass, dispatch the rest solo, apply, and
+/// retire finished lanes as their results become available. A gang of
+/// one degenerates to exactly `OnChipTrainer::train`.
+fn run_gang<'rt>(
+    w: usize,
+    rt: &'rt dyn Backend,
+    p: &Plumbing,
+    t0: Instant,
+    members: &mut [GangMember],
+) {
+    let mut lanes: Vec<Lane<'rt>> = Vec::with_capacity(members.len());
+    for (mi, m) in members.iter_mut().enumerate() {
+        let config = m.config.take().expect("config present before run");
+        let preset = config.preset.clone();
+        let id = m.id;
+        let ptx = p.prog_tx.clone();
+        let built = OnChipTrainer::new(rt, config).and_then(|mut trainer| {
+            trainer.set_on_validate(move |epoch, val| {
+                let _ = ptx.send(ProgressEvent {
+                    job: id,
+                    epoch,
+                    val,
                 });
-            }
-            Ok(Job::Shutdown) | Err(_) => break,
+            });
+            let state = trainer.begin()?;
+            Ok((trainer, state))
+        });
+        match built {
+            Ok((trainer, state)) => lanes.push(Lane {
+                mi,
+                preset,
+                trainer,
+                state,
+            }),
+            // a member that fails to construct reports immediately;
+            // the rest of the gang runs on
+            Err(e) => finish_member(p, m, t0, w, Err(e), Vec::new()),
         }
+    }
+    while !lanes.is_empty() {
+        for lane in lanes.iter_mut() {
+            lane.trainer.epoch_begin(&mut lane.state);
+        }
+        // one slot per lane: Some(losses) once dispatched
+        let mut dispatched: Vec<Option<Result<Vec<f32>>>> =
+            (0..lanes.len()).map(|_| None).collect();
+        let fuse: Vec<usize> = if lanes.len() >= 2 {
+            (0..lanes.len())
+                .filter(|&i| lanes[i].trainer.can_fuse())
+                .collect()
+        } else {
+            Vec::new()
+        };
+        if fuse.len() >= 2 {
+            for &i in &fuse {
+                let lane = &mut lanes[i];
+                lane.trainer.prepare_fused(&mut lane.state);
+            }
+            let preset = lanes[fuse[0]].preset.clone();
+            let jobs: Vec<FusedLossJob> = fuse
+                .iter()
+                .map(|&i| lanes[i].trainer.fused_job(&lanes[i].state))
+                .collect();
+            match rt.loss_fused(&preset, &jobs) {
+                Ok(all) => {
+                    for (&i, losses) in fuse.iter().zip(all) {
+                        dispatched[i] = Some(Ok(losses));
+                    }
+                }
+                Err(e) => {
+                    // a fused-pass failure fails every member of it
+                    let msg = format!("fused loss dispatch failed: {e:#}");
+                    for &i in &fuse {
+                        dispatched[i] = Some(Err(anyhow::anyhow!(msg.clone())));
+                    }
+                }
+            }
+        }
+        for (i, slot) in dispatched.iter_mut().enumerate() {
+            if slot.is_none() {
+                let lane = &mut lanes[i];
+                *slot = Some(lane.trainer.dispatch_losses(&mut lane.state));
+            }
+        }
+        let mut still_running: Vec<Lane<'rt>> = Vec::with_capacity(lanes.len());
+        for (mut lane, slot) in lanes.into_iter().zip(dispatched) {
+            let step = slot
+                .expect("every lane dispatched")
+                .and_then(|losses| lane.trainer.epoch_apply(&mut lane.state, &losses));
+            match step {
+                Err(e) => finish_member(p, &mut members[lane.mi], t0, w, Err(e), Vec::new()),
+                Ok(()) => {
+                    if lane.trainer.epoch_pending(&lane.state) {
+                        still_running.push(lane);
+                    } else {
+                        let mi = lane.mi;
+                        match lane.trainer.finish(lane.state) {
+                            Ok(r) => {
+                                finish_member(p, &mut members[mi], t0, w, Ok(r.final_val), r.phi)
+                            }
+                            Err(e) => finish_member(p, &mut members[mi], t0, w, Err(e), Vec::new()),
+                        }
+                    }
+                }
+            }
+        }
+        lanes = still_running;
+    }
+}
+
+/// Run one popped gang with panic containment: a panic anywhere in the
+/// lockstep loop reports an `Err` result for every member that has not
+/// reported yet, and the worker keeps draining the queue — `recv()` can
+/// never hang on a result that will not arrive.
+fn solve_gang(w: usize, rt: &dyn Backend, p: &Plumbing, gang: Vec<PoppedJob>) {
+    let t0 = Instant::now();
+    let mut members: Vec<GangMember> = gang
+        .into_iter()
+        .map(|popped| GangMember {
+            id: popped.job.request.id,
+            tenant: popped.job.tenant,
+            config: Some(popped.job.request.config),
+            queue_seconds: popped.submitted.elapsed().as_secs_f64(),
+            sent: false,
+        })
+        .collect();
+    let outcome = catch_unwind(AssertUnwindSafe(|| run_gang(w, rt, p, t0, &mut members)));
+    if let Err(payload) = outcome {
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".to_string());
+        for m in members.iter_mut() {
+            if !m.sent {
+                let err = anyhow::anyhow!("job {} panicked on worker {w}: {msg}", m.id);
+                finish_member(p, m, t0, w, Err(err), Vec::new());
+            }
+        }
+    }
+}
+
+/// Drain gangs against a backend until the queue closes and empties.
+fn worker_loop(w: usize, rt: &dyn Backend, p: &Plumbing, fuse_max: usize) {
+    while let Some(gang) = p.queue.pop_gang(fuse_max) {
+        solve_gang(w, rt, p, gang);
     }
 }
 
@@ -204,69 +383,98 @@ impl SolverService {
         if let Some(par) = cfg.parallel {
             backend.set_parallel(par);
         }
-        if let Some(p) = &cfg.warmup_preset {
-            let _ = backend.warmup(p, &["loss_multi", "validate"]);
+        let queue = Arc::new(JobQueue::new(cfg.queue_cap, cfg.tenant_quota, cfg.workers));
+        if let Some(preset) = &cfg.warmup_preset {
+            if let Err(e) = backend.warmup(preset, &["loss_multi", "validate"]) {
+                crate::warn_!("warmup of preset '{preset}' failed: {e:#}");
+                queue.record_warmup_error(format!("preset '{preset}': {e:#}"));
+            }
         }
-        let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
-        let rx = Arc::new(Mutex::new(rx));
         let (res_tx, results) = sync_channel::<SolveResult>(Self::result_cap(&cfg));
+        let (prog_tx, progress) = channel::<ProgressEvent>();
         let mut handles = Vec::new();
         for w in 0..cfg.workers {
+            queue.register_live();
             let be = backend.clone();
-            let plumbing = Plumbing {
-                rx: rx.clone(),
+            let fuse_max = cfg.fuse_max;
+            let p = Plumbing {
+                queue: queue.clone(),
                 res_tx: res_tx.clone(),
+                prog_tx: prog_tx.clone(),
             };
             handles.push(std::thread::spawn(move || {
-                worker_loop(w, be.as_ref(), &plumbing);
+                worker_loop(w, be.as_ref(), &p, fuse_max);
+                p.queue.worker_exited();
             }));
         }
+        // the workers hold the ONLY result senders: shutdown's blocking
+        // drain (and a dead pool's recv) end when they are gone
+        drop(res_tx);
+        drop(prog_tx);
         SolverService {
-            tx,
+            queue,
             results,
+            progress,
             workers: handles,
         }
     }
 
     /// Spin up workers, each building its own backend via `factory`
-    /// (PJRT topology: one client/accelerator per worker).
+    /// (PJRT topology: one client/accelerator per worker). A worker
+    /// whose load fails reports it to the scheduler; if EVERY load
+    /// fails, the pool is dead and `submit`/`recv` fail fast with the
+    /// load error instead of hanging.
     pub fn start_per_worker<F>(factory: F, cfg: ServiceConfig) -> SolverService
     where
         F: Fn(usize) -> Result<Box<dyn Backend>> + Send + Sync + 'static,
     {
         let factory = Arc::new(factory);
-        let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(JobQueue::new(cfg.queue_cap, cfg.tenant_quota, cfg.workers));
         let (res_tx, results) = sync_channel::<SolveResult>(Self::result_cap(&cfg));
+        let (prog_tx, progress) = channel::<ProgressEvent>();
         let mut handles = Vec::new();
         for w in 0..cfg.workers {
             let factory = factory.clone();
             let warm = cfg.warmup_preset.clone();
             let par = cfg.parallel;
-            let plumbing = Plumbing {
-                rx: rx.clone(),
+            let fuse_max = cfg.fuse_max;
+            let p = Plumbing {
+                queue: queue.clone(),
                 res_tx: res_tx.clone(),
+                prog_tx: prog_tx.clone(),
             };
             handles.push(std::thread::spawn(move || {
                 let rt = match (*factory)(w) {
-                    Ok(rt) => rt,
+                    Ok(rt) => {
+                        p.queue.register_live();
+                        rt
+                    }
                     Err(e) => {
                         crate::warn_!("worker {w}: backend load failed: {e:#}");
+                        p.queue.register_load_failure(w, format!("{e:#}"));
                         return;
                     }
                 };
-                if let Some(p) = par {
-                    rt.set_parallel(p);
+                if let Some(pc) = par {
+                    rt.set_parallel(pc);
                 }
-                if let Some(p) = warm {
-                    let _ = rt.warmup(&p, &["loss_multi", "validate"]);
+                if let Some(preset) = warm {
+                    if let Err(e) = rt.warmup(&preset, &["loss_multi", "validate"]) {
+                        crate::warn_!("worker {w}: warmup of preset '{preset}' failed: {e:#}");
+                        p.queue
+                            .record_warmup_error(format!("worker {w}, preset '{preset}': {e:#}"));
+                    }
                 }
-                worker_loop(w, rt.as_ref(), &plumbing);
+                worker_loop(w, rt.as_ref(), &p, fuse_max);
+                p.queue.worker_exited();
             }));
         }
+        drop(res_tx);
+        drop(prog_tx);
         SolverService {
-            tx,
+            queue,
             results,
+            progress,
             workers: handles,
         }
     }
@@ -288,8 +496,8 @@ impl SolverService {
         {
             match crate::runtime::NativeBackend::load_or_builtin(&artifacts_dir) {
                 Ok(be) => Self::start_shared(Arc::new(be), cfg),
-                // keep the old per-worker fail-loudly behavior: each
-                // worker logs the load error and exits
+                // per-worker retry: each worker reports the load error
+                // to the scheduler, so an all-dead pool fails fast
                 Err(_) => Self::start_per_worker(
                     move |_w| {
                         crate::runtime::NativeBackend::load_or_builtin(&artifacts_dir)
@@ -301,67 +509,79 @@ impl SolverService {
         }
     }
 
-    /// Submit a solve; blocks when the queue is full (backpressure).
+    /// Block until every worker's backend load has resolved, then
+    /// report pool liveness and any load/warmup failures.
+    pub fn startup_report(&self) -> StartupReport {
+        self.queue.startup_report()
+    }
+
+    /// Submit a solve with neutral scheduling (default tenant, priority
+    /// 0, no deadline); blocks while the queue is full or the tenant is
+    /// at quota, errors on a shut-down service or a dead pool (with the
+    /// backend load error).
     pub fn submit(&self, req: SolveRequest) -> Result<()> {
-        self.tx
-            .send(Job::Solve(req, Instant::now()))
-            .map_err(|_| anyhow::anyhow!("service is shut down"))
+        self.queue.submit_blocking(req.into())
+    }
+
+    /// Blocking submit of a [`ScheduledJob`] (tenant/priority/deadline).
+    pub fn submit_scheduled(&self, job: ScheduledJob) -> Result<()> {
+        self.queue.submit_blocking(job)
     }
 
     /// Non-blocking submit: `Ok(true)` when accepted, `Ok(false)` when
-    /// the bounded queue is full (the backpressure signal callers can
-    /// shed load on), `Err` when the service is shut down.
+    /// backpressured (queue full or tenant at quota), `Err` when the
+    /// service is shut down or the worker pool is dead. Use
+    /// [`Self::admit`] for the distinguishing verdict.
     pub fn try_submit(&self, req: SolveRequest) -> Result<bool> {
-        match self.tx.try_send(Job::Solve(req, Instant::now())) {
-            Ok(()) => Ok(true),
-            Err(TrySendError::Full(_)) => Ok(false),
-            Err(TrySendError::Disconnected(_)) => Err(anyhow::anyhow!("service is shut down")),
+        match self.admit(req.into()) {
+            Admission::Accepted { .. } => Ok(true),
+            Admission::QueueFull | Admission::QuotaExceeded { .. } => Ok(false),
+            Admission::Closed => Err(anyhow::anyhow!("service is shut down")),
+            Admission::PoolDead { error } => Err(anyhow::anyhow!(error)),
         }
     }
 
-    /// Receive the next completed solve (blocking).
-    pub fn recv(&self) -> Result<SolveResult> {
-        self.results
-            .recv()
-            .map_err(|_| anyhow::anyhow!("service is shut down"))
+    /// Non-blocking admission with the full typed verdict.
+    pub fn admit(&self, job: ScheduledJob) -> Admission {
+        self.queue.admit(&job)
     }
 
-    /// Ordered shutdown: every job queued before this call still runs
-    /// (the Shutdown markers sit behind them in the FIFO), workers join,
-    /// and the results never `recv`'d are returned in completion order.
+    /// Receive the next completed solve (blocking). Fails fast with the
+    /// backend load error when the worker pool is dead (nothing could
+    /// ever arrive), or "shut down" after close.
+    pub fn recv(&self) -> Result<SolveResult> {
+        match self.results.recv() {
+            Ok(r) => Ok(r),
+            Err(_) => match self.queue.pool_dead_error() {
+                Some(error) => Err(anyhow::anyhow!(error)),
+                None => Err(anyhow::anyhow!("service is shut down")),
+            },
+        }
+    }
+
+    /// Drain one streamed [`ProgressEvent`] if available (non-blocking;
+    /// events are unbounded-buffered, so poll this while jobs run).
+    pub fn try_recv_progress(&self) -> Option<ProgressEvent> {
+        self.progress.try_recv().ok()
+    }
+
+    /// Ordered shutdown: every job admitted before this call still runs
+    /// (the queue closes, workers drain it empty), workers join, and
+    /// the results never `recv`'d are returned in completion order.
     ///
-    /// The results channel is drained *while* the markers are sent and
-    /// the workers wind down — a worker blocked mid-`send` on a full
-    /// results channel can therefore never wedge the join, no matter how
-    /// many results were left un-`recv`'d.
+    /// No spin-waits: the workers hold the only result senders, so the
+    /// blocking drain ends exactly when the last worker exits — and a
+    /// worker blocked mid-`send` on a full results channel is freed by
+    /// that same drain, so the join can never wedge.
     pub fn shutdown(self) -> Vec<SolveResult> {
+        self.queue.close();
         let mut rest = Vec::new();
-        let drain = |rest: &mut Vec<SolveResult>| {
-            while let Ok(r) = self.results.try_recv() {
-                rest.push(r);
-            }
-        };
-        let mut sent = 0;
-        while sent < self.workers.len() {
-            match self.tx.try_send(Job::Shutdown) {
-                Ok(()) => sent += 1,
-                // queue full: workers are still draining it — free
-                // result capacity so they can make progress
-                Err(TrySendError::Full(_)) => {
-                    drain(&mut rest);
-                    std::thread::sleep(std::time::Duration::from_millis(1));
-                }
-                Err(TrySendError::Disconnected(_)) => break,
-            }
+        while let Ok(r) = self.results.recv() {
+            rest.push(r);
         }
         for h in self.workers {
-            while !h.is_finished() {
-                drain(&mut rest);
-                std::thread::sleep(std::time::Duration::from_millis(1));
-            }
             let _ = h.join();
         }
-        drain(&mut rest);
         rest
     }
 }

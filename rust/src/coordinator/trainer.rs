@@ -33,6 +33,21 @@
 //! shared backend state, so concurrent mixed-config jobs on a
 //! shared-backend solver service cannot corrupt each other's losses
 //! (`tests/service_mixed_workload.rs`).
+//!
+//! The loop body is also exposed as a **stepping API** —
+//! [`OnChipTrainer::begin`] / [`OnChipTrainer::epoch_begin`] /
+//! [`OnChipTrainer::dispatch_losses`] (or
+//! [`OnChipTrainer::prepare_fused`] + [`OnChipTrainer::fused_job`] for
+//! a fused cross-job pass) / [`OnChipTrainer::epoch_apply`] /
+//! [`OnChipTrainer::finish`] — with all per-run mutable state lifted
+//! into a [`TrainState`]. [`OnChipTrainer::train`] is literally that
+//! sequence, so an external driver (the solver-service scheduler,
+//! which interleaves the epochs of co-scheduled same-preset jobs and
+//! fuses their loss dispatches through
+//! [`crate::runtime::Backend::loss_fused`]) reproduces a solo `train()`
+//! call bit for bit. [`OnChipTrainer::set_on_validate`] installs a
+//! progress hook fed on every validation pass — the solver service's
+//! streamed `ProgressEvent`s come from here.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -46,7 +61,8 @@ use super::validator::Validator;
 use crate::optim::{GradientEstimator, LrSchedule, Optimizer};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
 use crate::pde::{Problem, Sampler};
-use crate::runtime::{Backend, Entry, EvalOptions, ParallelConfig};
+use crate::runtime::{Backend, Entry, EvalOptions, FusedLossJob, FusedLossKind, ParallelConfig};
+use crate::util::rng::Rng;
 
 /// Loss estimator variant (ablation A4: FD vs Stein).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -167,6 +183,34 @@ pub struct TrainResult {
     pub metrics: RunMetrics,
 }
 
+/// In-flight state of one stepping-API run ([`OnChipTrainer::begin`]):
+/// everything `train` used to keep on its stack — Φ, the RNG streams,
+/// per-epoch scratch buffers, metrics, the skip counter — lifted into a
+/// value so an external driver can interleave the epochs of several
+/// trainers (and fuse their loss dispatches) without any trainer
+/// noticing the others exist.
+pub struct TrainState {
+    phi: Vec<f32>,
+    spsa_rng: Rng,
+    metrics: RunMetrics,
+    xr: Vec<f32>,
+    xi: Vec<f32>,
+    settings: Vec<f32>,
+    grad: Vec<f32>,
+    eff: Vec<f32>,
+    eff_all: Vec<f32>,
+    consecutive_skipped: usize,
+    epoch: usize,
+    t0: Instant,
+}
+
+impl TrainState {
+    /// The next epoch this state will run (monotonic progress counter).
+    pub fn epoch(&self) -> usize {
+        self.epoch
+    }
+}
+
 /// The on-chip ZO trainer (generic over the execution [`Backend`], the
 /// [`GradientEstimator`] and the [`Optimizer`] — it references no
 /// concrete estimator or update-rule type).
@@ -199,6 +243,9 @@ pub struct OnChipTrainer<'rt> {
     start_epoch: usize,
     /// Φ restored from [`TrainConfig::resume`] (consumed by `train`)
     resume_phi: Option<Vec<f32>>,
+    /// streamed-progress hook, called `(epoch, val)` after every
+    /// validation pass (see [`Self::set_on_validate`])
+    on_validate: Option<Box<dyn Fn(usize, f32) + Send>>,
 }
 
 impl<'rt> OnChipTrainer<'rt> {
@@ -373,7 +420,16 @@ impl<'rt> OnChipTrainer<'rt> {
             stein_z,
             start_epoch,
             resume_phi,
+            on_validate: None,
         })
+    }
+
+    /// Install a streamed-progress hook, called with `(epoch, val)`
+    /// after every validation pass (including the final validation,
+    /// reported as `epoch = cfg.epochs`). The solver service feeds its
+    /// `ProgressEvent` channel from here; the hook must not block.
+    pub fn set_on_validate<F: Fn(usize, f32) + Send + 'static>(&mut self, hook: F) {
+        self.on_validate = Some(Box::new(hook));
     }
 
     /// Access the chip realization (for evaluating other params on the
@@ -445,26 +501,21 @@ impl<'rt> OnChipTrainer<'rt> {
         Ok(())
     }
 
-    /// Run the full training loop.
-    pub fn train(&mut self) -> Result<TrainResult> {
+    /// Start a stepping-API run: seed the RNG streams, initialize Φ,
+    /// and (on `--resume`) fast-forward the deterministic per-epoch
+    /// draws so epoch E sees exactly the batch + perturbations it would
+    /// have in an uninterrupted run, then restore the checkpointed Φ
+    /// (the optimizer state was restored in `new`). Call once per
+    /// trainer; `begin` → (`epoch_begin` → losses → `epoch_apply`)* →
+    /// `finish` IS [`Self::train`], bit for bit.
+    pub fn begin(&mut self) -> Result<TrainState> {
         let pm = self.rt.manifest().preset(&self.cfg.preset)?;
         let d = pm.layout.param_dim;
-        let mut rng = crate::util::rng::Rng::new(self.cfg.seed);
+        let mut rng = Rng::new(self.cfg.seed);
         let mut phi = pm.layout.init_vector(&mut rng);
         let mut spsa_rng = rng.substream(0x5b5a);
-
-        let mut metrics = RunMetrics::default();
         let mut xr = Vec::new();
         let mut xi = Vec::new();
-        let mut settings = Vec::new();
-        let mut grad = Vec::new();
-        let mut eff = Vec::with_capacity(d);
-        let mut eff_all = Vec::with_capacity(self.k_multi * d);
-
-        // resume: fast-forward the deterministic per-epoch draws so
-        // epoch E sees exactly the batch + perturbations it would have
-        // in an uninterrupted run, then restore the checkpointed Φ
-        // (the optimizer state was restored in `new`)
         if self.start_epoch > 0 {
             for _ in 0..self.start_epoch {
                 self.sampler.batch(self.batch, &mut xr);
@@ -472,75 +523,173 @@ impl<'rt> OnChipTrainer<'rt> {
             }
             phi = self.resume_phi.take().expect("resume phi set with start_epoch");
         }
+        Ok(TrainState {
+            phi,
+            spsa_rng,
+            metrics: RunMetrics::default(),
+            xr,
+            xi,
+            settings: Vec::new(),
+            grad: Vec::new(),
+            eff: Vec::with_capacity(d),
+            eff_all: Vec::with_capacity(self.k_multi * d),
+            consecutive_skipped: 0,
+            epoch: self.start_epoch,
+            t0: Instant::now(),
+        })
+    }
 
-        let mut consecutive_skipped = 0usize;
-        let t0 = Instant::now();
+    /// Whether another epoch remains to run.
+    pub fn epoch_pending(&self, st: &TrainState) -> bool {
+        st.epoch < self.cfg.epochs
+    }
 
-        for epoch in self.start_epoch..self.cfg.epochs {
-            self.sampler.batch(self.batch, &mut xr);
-            self.estimator.sample(d, &mut spsa_rng, &mut xi);
-            self.estimator.build_settings(&phi, &xi, &mut settings);
-            let losses = self.eval_losses(&settings, &xr, &mut eff, &mut eff_all)?;
-            metrics.inferences += (self.n_stencil * self.batch * self.k_multi) as u64;
-            metrics.programmings += self.k_multi as u64;
+    /// Draw this epoch's collocation minibatch + perturbation block and
+    /// build the K commanded phase settings (steps 1-2 of the loop).
+    pub fn epoch_begin(&mut self, st: &mut TrainState) {
+        let d = self.chip.dim();
+        self.sampler.batch(self.batch, &mut st.xr);
+        self.estimator.sample(d, &mut st.spsa_rng, &mut st.xi);
+        self.estimator.build_settings(&st.phi, &st.xi, &mut st.settings);
+    }
 
-            if losses.iter().any(|l| !l.is_finite()) {
-                metrics.skipped_epochs += 1;
-                consecutive_skipped += 1;
-                if self.cfg.max_skipped_run != 0
-                    && consecutive_skipped >= self.cfg.max_skipped_run
-                {
-                    anyhow::bail!(
-                        "training diverged: {consecutive_skipped} consecutive \
-                         epochs produced non-finite probe losses (preset '{}', \
-                         epoch {epoch}, optimizer '{}') — lower lr/spsa_mu or \
-                         raise TrainConfig.max_skipped_run",
-                        self.cfg.preset,
-                        self.cfg.optimizer
-                    );
-                }
-                continue;
-            }
-            consecutive_skipped = 0;
-            self.estimator.estimate(&losses, &xi, &mut grad);
-            self.optimizer.step(&mut phi, &grad, epoch);
+    /// Step 3, unfused: program the chip and dispatch this job's own
+    /// batched (or legacy per-probe Stein) loss evaluation.
+    pub fn dispatch_losses(&self, st: &mut TrainState) -> Result<Vec<f32>> {
+        self.eval_losses(&st.settings, &st.xr, &mut st.eff, &mut st.eff_all)
+    }
 
-            let validate_now = self.cfg.validate_every != 0
-                && (epoch % self.cfg.validate_every == 0 || epoch + 1 == self.cfg.epochs);
-            let val = if validate_now {
-                Some(self.validator.mse_on_chip(&phi, &self.chip)?)
-            } else {
-                None
-            };
-            let lr_now = self.optimizer.lr_at(epoch);
-            if self.cfg.verbose && (validate_now || epoch % 100 == 0) {
-                crate::info!(
-                    "[{}] epoch {:5} loss {:.4e} val {} lr {:.4}",
+    /// Whether this job's loss dispatches can join a fused cross-job
+    /// pass: everything except the legacy per-probe Stein fallback
+    /// (which must re-program the chip between its K dispatches).
+    pub fn can_fuse(&self) -> bool {
+        self.stein_single.is_none()
+    }
+
+    /// Program the chip's noise path for this epoch's K commanded
+    /// settings — exactly what the unfused batched dispatch does first —
+    /// staging the flat (K, d) effective settings for
+    /// [`Self::fused_job`].
+    pub fn prepare_fused(&self, st: &mut TrainState) {
+        let d = self.chip.dim();
+        st.eff_all.clear();
+        st.eff_all.reserve(self.k_multi * d);
+        for i in 0..self.k_multi {
+            self.chip.program(&st.settings[i * d..(i + 1) * d], &mut st.eff);
+            st.eff_all.extend_from_slice(&st.eff);
+        }
+    }
+
+    /// This job's slice of a fused cross-job pass (call
+    /// [`Self::prepare_fused`] first); hand the batch to
+    /// [`crate::runtime::Backend::loss_fused`] and apply this job's
+    /// returned losses with [`Self::epoch_apply`].
+    pub fn fused_job<'s>(&'s self, st: &'s TrainState) -> FusedLossJob<'s> {
+        FusedLossJob {
+            kind: match self.cfg.loss_kind {
+                LossKind::Fd => FusedLossKind::Fd,
+                LossKind::Stein => FusedLossKind::Stein,
+            },
+            phis: &st.eff_all,
+            k: self.k_multi,
+            xr: &st.xr,
+            z: &self.stein_z,
+            opts: self.opts,
+        }
+    }
+
+    /// Steps 4-5 of the loop: metrics accounting, the skip/abort guard
+    /// on non-finite probe losses, the gradient estimate + optimizer
+    /// step, validation (feeding the [`Self::set_on_validate`] hook)
+    /// and checkpointing. Advances the state to the next epoch.
+    pub fn epoch_apply(&mut self, st: &mut TrainState, losses: &[f32]) -> Result<()> {
+        let epoch = st.epoch;
+        st.metrics.inferences += (self.n_stencil * self.batch * self.k_multi) as u64;
+        st.metrics.programmings += self.k_multi as u64;
+
+        if losses.iter().any(|l| !l.is_finite()) {
+            st.metrics.skipped_epochs += 1;
+            st.consecutive_skipped += 1;
+            if self.cfg.max_skipped_run != 0
+                && st.consecutive_skipped >= self.cfg.max_skipped_run
+            {
+                anyhow::bail!(
+                    "training diverged: {} consecutive \
+                     epochs produced non-finite probe losses (preset '{}', \
+                     epoch {epoch}, optimizer '{}') — lower lr/spsa_mu or \
+                     raise TrainConfig.max_skipped_run",
+                    st.consecutive_skipped,
                     self.cfg.preset,
-                    epoch,
-                    losses[0],
-                    val.map(|v| format!("{v:.4e}")).unwrap_or_else(|| "-".into()),
-                    lr_now
+                    self.cfg.optimizer
                 );
             }
-            metrics.push(EpochRecord {
-                epoch,
-                loss: losses[0],
-                val,
-                lr: lr_now,
-            });
-            if validate_now {
-                self.save_checkpoint(epoch + 1, &phi, val)?;
-            }
+            st.epoch += 1;
+            return Ok(());
         }
-        metrics.wall_seconds = t0.elapsed().as_secs_f64();
-        let final_val = self.validator.mse_on_chip(&phi, &self.chip)?;
-        self.save_checkpoint(self.cfg.epochs, &phi, Some(final_val))?;
+        st.consecutive_skipped = 0;
+        self.estimator.estimate(losses, &st.xi, &mut st.grad);
+        self.optimizer.step(&mut st.phi, &st.grad, epoch);
+
+        let validate_now = self.cfg.validate_every != 0
+            && (epoch % self.cfg.validate_every == 0 || epoch + 1 == self.cfg.epochs);
+        let val = if validate_now {
+            let v = self.validator.mse_on_chip(&st.phi, &self.chip)?;
+            if let Some(hook) = &self.on_validate {
+                hook(epoch, v);
+            }
+            Some(v)
+        } else {
+            None
+        };
+        let lr_now = self.optimizer.lr_at(epoch);
+        if self.cfg.verbose && (validate_now || epoch % 100 == 0) {
+            crate::info!(
+                "[{}] epoch {:5} loss {:.4e} val {} lr {:.4}",
+                self.cfg.preset,
+                epoch,
+                losses[0],
+                val.map(|v| format!("{v:.4e}")).unwrap_or_else(|| "-".into()),
+                lr_now
+            );
+        }
+        st.metrics.push(EpochRecord {
+            epoch,
+            loss: losses[0],
+            val,
+            lr: lr_now,
+        });
+        if validate_now {
+            self.save_checkpoint(epoch + 1, &st.phi, val)?;
+        }
+        st.epoch += 1;
+        Ok(())
+    }
+
+    /// Final validation + checkpoint; consumes the state.
+    pub fn finish(&mut self, mut st: TrainState) -> Result<TrainResult> {
+        st.metrics.wall_seconds = st.t0.elapsed().as_secs_f64();
+        let final_val = self.validator.mse_on_chip(&st.phi, &self.chip)?;
+        if let Some(hook) = &self.on_validate {
+            hook(self.cfg.epochs, final_val);
+        }
+        self.save_checkpoint(self.cfg.epochs, &st.phi, Some(final_val))?;
         Ok(TrainResult {
-            phi,
+            phi: st.phi,
             final_val,
-            metrics,
+            metrics: st.metrics,
         })
+    }
+
+    /// Run the full training loop (the stepping API driven start to
+    /// finish — an externally stepped run is bit-identical to this).
+    pub fn train(&mut self) -> Result<TrainResult> {
+        let mut st = self.begin()?;
+        while self.epoch_pending(&st) {
+            self.epoch_begin(&mut st);
+            let losses = self.dispatch_losses(&mut st)?;
+            self.epoch_apply(&mut st, &losses)?;
+        }
+        self.finish(st)
     }
 
     /// Validation MSE of arbitrary commanded params on THIS chip (used to

@@ -108,6 +108,20 @@
 //! `TrainConfig.checkpoint_path` + `--resume` give bit-identical
 //! warm restarts.
 //!
+//! ## Solver service & scheduler
+//!
+//! The deployment loop is [`coordinator::SolverService`]: worker
+//! threads drain a multi-tenant priority/deadline queue
+//! ([`coordinator::scheduler`]) with typed admission verdicts
+//! ([`coordinator::Admission`] — accepted / queue-full backpressure /
+//! tenant over quota / pool dead / closed). Same-preset jobs are popped
+//! as a *gang* and their per-epoch probe dispatches fused into one
+//! cross-job engine pass ([`runtime::Backend::loss_fused`]) — bit-exact
+//! with isolated runs, measured by `benches/throughput.rs`. Validation
+//! passes stream back live as [`coordinator::ProgressEvent`]s, and a
+//! dead worker pool (every backend load failed) fails `submit`/`recv`
+//! fast with the load error instead of hanging.
+//!
 //! Entry points: [`runtime::load_backend`] (or `NativeBackend::builtin`)
 //! loads a backend; [`coordinator`] drives training; `examples/` are
 //! runnable end-to-end drivers.

@@ -5,6 +5,8 @@
 //!   offchip   BP/Adam baseline + mapping to a noisy chip
 //!   table1    the full Table-1 experiment matrix
 //!   hardware  Table-2 hardware report
+//!   serve     solver-service demo: drain a job backlog with fused
+//!             dispatches + streamed progress
 //!   presets   list available presets from the manifest
 //!   pdes      list every registered PDE problem (the pde registry)
 //!   optims    list registered optimizers + gradient estimators
@@ -20,11 +22,17 @@
 //!   photon-pinn train --preset tonn_micro_ac --bc-weight 4.0
 //!   photon-pinn table1 --zo-epochs 800 --bp-epochs 300
 //!   photon-pinn hardware
+//!   photon-pinn serve --jobs 16 --workers 2 --fuse-max 4
 //!   photon-pinn pdes
 
 
+use std::sync::Arc;
+
 use anyhow::Result;
-use photon_pinn::coordinator::{OffChipConfig, OffChipTrainer, OnChipTrainer, TrainConfig};
+use photon_pinn::coordinator::{
+    OffChipConfig, OffChipTrainer, OnChipTrainer, ServiceConfig, SolveRequest, SolverService,
+    TrainConfig,
+};
 use photon_pinn::coordinator::checkpoint::Checkpoint;
 use photon_pinn::coordinator::experiment::{Table1Config, Table1Runner};
 use photon_pinn::pde::Problem;
@@ -113,12 +121,14 @@ fn run() -> Result<()> {
         "offchip" => cmd_offchip(argv),
         "table1" => cmd_table1(argv),
         "hardware" => cmd_hardware(argv),
+        "serve" => cmd_serve(argv),
         "presets" | "--list-presets" => cmd_presets(argv),
         "pdes" | "--list-pdes" => cmd_pdes(argv),
         "optims" | "--list-optimizers" => cmd_optims(argv),
         _ => {
             eprintln!(
-                "usage: photon-pinn <train|offchip|table1|hardware|presets|pdes|optims> [flags]\n\
+                "usage: photon-pinn <train|offchip|table1|hardware|serve|presets|pdes|optims> \
+                 [flags]\n\
                  run a subcommand with --help for its flags"
             );
             Ok(())
@@ -276,6 +286,80 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if let Some(path) = checkpoint {
         println!("checkpoint written to {path}");
     }
+    Ok(())
+}
+
+/// Demo of the deployment loop: start a shared-backend solver service,
+/// submit a same-preset backlog, stream validation progress, and print
+/// per-job results plus aggregate throughput. `--fuse-max 1` disables
+/// gang fusion for an A/B comparison (results are bit-identical either
+/// way — fusion only changes latency).
+fn cmd_serve(argv: Vec<String>) -> Result<()> {
+    let a = Args::new("photon-pinn serve", "solver-service demo: drain a job backlog")
+        .flag("artifacts", None, "artifacts directory (default: auto-discover)")
+        .flag("preset", Some("tonn_micro"), "network preset for every job")
+        .flag("jobs", Some("8"), "number of jobs in the backlog")
+        .flag("workers", Some("2"), "service worker threads")
+        .flag("epochs", Some("60"), "epochs per job")
+        .flag("fuse-max", Some("4"), "max same-preset jobs fused per gang (1 = off)")
+        .flag("tenant-quota", None, "per-tenant cap on in-flight jobs")
+        .flag("seed", Some("0"), "base seed (job i trains with seed + i)")
+        .switch("quiet", "suppress streamed progress lines")
+        .parse(argv)?;
+    let dir = photon_pinn::resolve_artifacts_dir(a.get_str("artifacts").as_deref());
+    let be: Arc<dyn Backend + Send + Sync> =
+        Arc::new(photon_pinn::runtime::NativeBackend::load_or_builtin(&dir)?);
+    let preset = a.get_str("preset").unwrap();
+    let jobs = a.get_usize("jobs")?.unwrap().max(1);
+    let quiet = a.get_bool("quiet");
+    let mut cfg = TrainConfig::from_manifest(be.as_ref(), &preset)?;
+    cfg.epochs = a.get_usize("epochs")?.unwrap();
+    cfg.verbose = false;
+    let mut svc_cfg = ServiceConfig::new(a.get_usize("workers")?.unwrap(), jobs)
+        .with_warmup(&preset)
+        .with_fuse_max(a.get_usize("fuse-max")?.unwrap());
+    if let Some(q) = a.get_usize("tenant-quota")? {
+        svc_cfg = svc_cfg.with_tenant_quota(q);
+    }
+    let service = SolverService::start_shared(be, svc_cfg);
+    let report = service.startup_report();
+    eprintln!(
+        "service up: {}/{} workers live{}",
+        report.live,
+        report.workers,
+        if report.is_warm() { ", warm" } else { "" }
+    );
+    for e in &report.warmup_errors {
+        eprintln!("  warmup degraded: {e}");
+    }
+    let base_seed = a.get_u64("seed")?.unwrap();
+    let t0 = std::time::Instant::now();
+    for i in 0..jobs {
+        let mut c = cfg.clone();
+        c.seed = base_seed + i as u64;
+        service.submit(SolveRequest {
+            id: i as u64,
+            config: c,
+        })?;
+    }
+    for _ in 0..jobs {
+        let r = service.recv()?;
+        if !quiet {
+            while let Some(ev) = service.try_recv_progress() {
+                eprintln!("  progress: job {:3} epoch {:5} val {:.4e}", ev.job, ev.epoch, ev.val);
+            }
+        }
+        match &r.final_val {
+            Ok(v) => println!(
+                "job {:3} worker {} val {:.4e}  (queued {:.3}s, solved {:.3}s)",
+                r.id, r.worker, v, r.queue_seconds, r.solve_seconds
+            ),
+            Err(e) => println!("job {:3} worker {} FAILED: {e:#}", r.id, r.worker),
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("drained {jobs} jobs in {wall:.2}s ({:.1} jobs/s aggregate)", jobs as f64 / wall);
+    service.shutdown();
     Ok(())
 }
 

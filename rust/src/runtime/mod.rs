@@ -39,6 +39,19 @@
 //! remain as deprecated shims that set the backend's *defaults* (what a
 //! dispatch resolves when an option field is `None`), so existing CLI
 //! flows keep working.
+//!
+//! **Fused cross-job dispatches.** [`Backend::loss_fused`] evaluates
+//! the probe losses of SEVERAL same-preset jobs (each a
+//! [`FusedLossJob`]) in one engine pass: the native backend flattens
+//! every job's K probes into a single probe fan-out so co-scheduled
+//! jobs share the engine's thread budget (and the Φ-keyed
+//! materialization cache) instead of competing for it. Per-probe
+//! arithmetic is exactly the unfused batched-loss kernel, so a fused
+//! pass reproduces each job's isolated dispatch bit for bit; the
+//! default implementation simply loops the ordinary batched entries,
+//! so decorator backends keep their semantics unchanged. The
+//! solver-service scheduler ([`crate::coordinator::scheduler`]) is the
+//! consumer.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -311,6 +324,37 @@ impl EvalOptions {
     }
 }
 
+/// Loss estimator of one [`FusedLossJob`] (mirrors the trainer's
+/// `LossKind`: FD stencil vs Gaussian-Stein smoothing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FusedLossKind {
+    Fd,
+    Stein,
+}
+
+/// One job's slice of a fused cross-job loss pass
+/// ([`Backend::loss_fused`]): the flat (k, d) block of programmed
+/// effective phase settings, the job's collocation minibatch, its Stein
+/// smoothing directions (empty for FD) and its own per-dispatch
+/// [`EvalOptions`]. Borrowed, not owned — the caller keeps each job's
+/// buffers alive for the duration of the pass.
+#[derive(Clone, Copy, Debug)]
+pub struct FusedLossJob<'a> {
+    pub kind: FusedLossKind,
+    /// flat (k, d) programmed effective phase settings
+    pub phis: &'a [f32],
+    /// probe count (rows of `phis`)
+    pub k: usize,
+    /// flat (batch, in_dim) collocation minibatch
+    pub xr: &'a [f32],
+    /// flat (stein_q, in_dim) smoothing directions; empty for
+    /// [`FusedLossKind::Fd`]
+    pub z: &'a [f32],
+    /// this job's per-dispatch options (boundary weight etc.); engine-
+    /// parallelism fields are latency-only as always
+    pub opts: EvalOptions,
+}
+
 /// One executable entry point of a preset, regardless of backend.
 pub trait Entry {
     fn meta(&self) -> &EntryMeta;
@@ -403,6 +447,31 @@ pub trait Backend {
 
     /// Get (building/compiling on first use) an entry point of a preset.
     fn entry(&self, preset: &str, entry: &str) -> Result<Arc<dyn Entry>>;
+
+    /// Evaluate the probe losses of several same-preset jobs in one
+    /// fused pass; returns one loss vector (length `jobs[i].k`) per job,
+    /// in job order. The contract is bit-exactness: fused output `i`
+    /// must equal the job's own unfused batched dispatch (`loss_multi` /
+    /// `loss_stein_multi` under `jobs[i].opts`) exactly — fusion may
+    /// only change latency, never results. This default implementation
+    /// IS the unfused dispatch loop, so backends (and decorators) that
+    /// don't override it are trivially conformant; [`NativeBackend`]
+    /// overrides it with a single flat probe fan-out across all jobs.
+    fn loss_fused(&self, preset: &str, jobs: &[FusedLossJob]) -> Result<Vec<Vec<f32>>> {
+        let mut out = Vec::with_capacity(jobs.len());
+        for j in jobs {
+            let losses = match j.kind {
+                FusedLossKind::Fd => self
+                    .entry(preset, "loss_multi")?
+                    .run1_with(&[j.phis, j.xr], &j.opts)?,
+                FusedLossKind::Stein => self
+                    .entry(preset, "loss_stein_multi")?
+                    .run1_with(&[j.phis, j.xr, j.z], &j.opts)?,
+            };
+            out.push(losses);
+        }
+        Ok(out)
+    }
 
     /// Pre-build a set of entries (avoids first-dispatch latency spikes).
     fn warmup(&self, preset: &str, entries: &[&str]) -> Result<()> {

@@ -59,7 +59,9 @@ use std::sync::{Arc, Mutex};
 use anyhow::{anyhow, Context, Result};
 
 use super::parallel::{for_probes_capped, for_row_blocks, ParallelConfig, ParallelCtl};
-use super::{Backend, Entry, EntryMeta, EvalOptions, Manifest, PresetMeta};
+use super::{
+    Backend, Entry, EntryMeta, EvalOptions, FusedLossJob, FusedLossKind, Manifest, PresetMeta,
+};
 use crate::model::{Hyper, Layout, LayoutBuilder};
 use crate::pde::Problem;
 use crate::photonics::mesh;
@@ -774,6 +776,76 @@ impl PresetEval {
         }
     }
 
+    /// Fused cross-job probe pass: the probes of SEVERAL same-preset
+    /// jobs flattened into ONE [`for_probes_capped`] fan-out, so
+    /// co-scheduled jobs share the engine's thread budget (and this
+    /// preset's Φ-keyed materialization cache) instead of competing for
+    /// it. Each flat probe evaluates exactly the per-probe kernel of
+    /// the unfused batched dispatch ([`Self::loss_fd_impl`] /
+    /// [`Self::loss_stein`]) under its OWN job's resolved boundary
+    /// weight, and the engine config is latency-only, so every job's
+    /// fused losses equal its isolated `loss_multi` /
+    /// `loss_stein_multi` dispatch bit for bit.
+    fn loss_fused(&self, jobs: &[FusedLossJob]) -> Result<Vec<Vec<f32>>> {
+        let in_dim = self.problem.in_dim();
+        // resolve every job's options (and validate its buffers) up
+        // front: an unhonorable override fails the whole pass loudly
+        // before any probe runs
+        let mut resolved = Vec::with_capacity(jobs.len());
+        for (ji, j) in jobs.iter().enumerate() {
+            anyhow::ensure!(
+                j.k > 0 && j.phis.len() % j.k == 0,
+                "fused job {ji}: phis length {} is not a (k, d) block for k = {}",
+                j.phis.len(),
+                j.k
+            );
+            anyhow::ensure!(
+                !j.xr.is_empty() && j.xr.len() % in_dim == 0,
+                "fused job {ji}: xr length {} is not a (batch, {in_dim}) block",
+                j.xr.len()
+            );
+            if j.kind == FusedLossKind::Stein {
+                let want = self.stein_q * in_dim;
+                anyhow::ensure!(
+                    j.z.len() == want,
+                    "fused job {ji}: z length {} != (stein_q, in_dim) = {want}",
+                    j.z.len()
+                );
+            }
+            resolved.push(
+                self.resolve(&j.opts)
+                    .with_context(|| format!("fused job {ji}"))?,
+            );
+        }
+        // flat (job, probe) index over the union of all jobs' probes
+        let mut index = Vec::new();
+        for (ji, j) in jobs.iter().enumerate() {
+            let d = j.phis.len() / j.k;
+            for p in 0..j.k {
+                index.push((ji, p, d));
+            }
+        }
+        let mut flat = vec![0.0f32; index.len()];
+        for_probes_capped(self.par.get(), None, &mut flat, |i, inner| {
+            let (ji, p, d) = index[i];
+            let j = &jobs[ji];
+            let o = &resolved[ji];
+            let phi = &j.phis[p * d..(p + 1) * d];
+            match j.kind {
+                FusedLossKind::Fd => self.loss_fd_impl(phi, j.xr, EvalPath::Engine(inner), o.bw),
+                FusedLossKind::Stein => self.loss_stein(phi, j.xr, j.z, inner, o.bw),
+            }
+        });
+        // split the flat probe losses back per job
+        let mut out = Vec::with_capacity(jobs.len());
+        let mut off = 0;
+        for j in jobs {
+            out.push(flat[off..off + j.k].to_vec());
+            off += j.k;
+        }
+        Ok(out)
+    }
+
     /// Validation MSE vs exact-solution targets (python `make_validate`).
     fn validate(&self, phi: &[f32], xv: &[f32], uv: &[f32], par: ParallelConfig) -> f32 {
         let u = self.forward_u(phi, xv, par);
@@ -1076,6 +1148,10 @@ impl Backend for NativeBackend {
         });
         self.cache.lock().unwrap().insert(key, wrapped.clone());
         Ok(wrapped)
+    }
+
+    fn loss_fused(&self, preset: &str, jobs: &[FusedLossJob]) -> Result<Vec<Vec<f32>>> {
+        self.eval(preset)?.loss_fused(jobs)
     }
 }
 
@@ -1866,5 +1942,73 @@ mod tests {
         rng.fill_uniform(&mut xr, 0.1, 0.9);
         assert!(loss.run_scalar(&[&phi, &xr]).unwrap().is_finite());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A fused cross-job pass must reproduce each job's isolated
+    /// batched dispatch bit for bit — FD and Stein jobs mixed in one
+    /// pass, with distinct per-job boundary weights (`tonn_micro_ac`)
+    /// riding along, and unhonorable overrides failing loudly.
+    #[test]
+    fn fused_cross_job_pass_matches_unfused_bitwise() {
+        let be = NativeBackend::builtin();
+        for preset in ["tonn_micro", "tonn_micro_ac"] {
+            let pm = be.manifest().preset(preset).unwrap();
+            let d = pm.layout.param_dim;
+            let mut rng = Rng::new(29);
+            let lm = be.entry(preset, "loss_multi").unwrap();
+            let sm = be.entry(preset, "loss_stein_multi").unwrap();
+            // three jobs: distinct Φ blocks, batches and options
+            let mut data = Vec::new();
+            for jidx in 0..3u32 {
+                let mut phis = vec![0.0f32; K_MULTI * d];
+                rng.fill_normal(&mut phis);
+                let mut xr = vec![0.0f32; lm.meta().input_len(1)];
+                rng.fill_uniform(&mut xr, 0.05, 0.95);
+                let mut z = vec![0.0f32; sm.meta().input_len(2)];
+                rng.fill_normal(&mut z);
+                let opts = if preset == "tonn_micro_ac" {
+                    EvalOptions::NONE.with_bc_weight(0.5 + jidx as f32)
+                } else {
+                    EvalOptions::NONE
+                };
+                data.push((phis, xr, z, opts));
+            }
+            let jobs: Vec<FusedLossJob> = data
+                .iter()
+                .enumerate()
+                .map(|(i, (phis, xr, z, opts))| FusedLossJob {
+                    kind: if i == 1 {
+                        FusedLossKind::Stein
+                    } else {
+                        FusedLossKind::Fd
+                    },
+                    phis,
+                    k: K_MULTI,
+                    xr,
+                    z,
+                    opts: *opts,
+                })
+                .collect();
+            let fused = be.loss_fused(preset, &jobs).unwrap();
+            assert_eq!(fused.len(), jobs.len());
+            for (i, j) in jobs.iter().enumerate() {
+                let solo = match j.kind {
+                    FusedLossKind::Fd => lm.run1_with(&[j.phis, j.xr], &j.opts).unwrap(),
+                    FusedLossKind::Stein => {
+                        sm.run1_with(&[j.phis, j.xr, j.z], &j.opts).unwrap()
+                    }
+                };
+                assert_eq!(fused[i], solo, "{preset} job {i}: fused pass drifted");
+            }
+            if preset == "tonn_micro" {
+                // a boundary weight on a hard-constrained problem must
+                // fail the whole pass loudly, naming the offending job
+                let mut bad = jobs.clone();
+                bad[2].opts = EvalOptions::NONE.with_bc_weight(1.0);
+                let err = format!("{:#}", be.loss_fused(preset, &bad).unwrap_err());
+                assert!(err.contains("fused job 2"), "{err}");
+                assert!(err.contains("no soft constraints"), "{err}");
+            }
+        }
     }
 }

@@ -25,7 +25,12 @@
 //!   row-block evaluation runs on its share of the same thread budget.
 //!   Each probe computes exactly what it would sequentially (row
 //!   blocking never changes a probe's bits — see above), so
-//!   probe-parallel ≡ probe-sequential bit for bit as well.
+//!   probe-parallel ≡ probe-sequential bit for bit as well. The fused
+//!   cross-job pass ([`super::Backend::loss_fused`]) reuses this same
+//!   probe fan-out with the probes of SEVERAL same-preset jobs
+//!   flattened into one lane list — same kernel per probe, same
+//!   bit-exactness contract, one shared thread budget instead of
+//!   per-job contention.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -248,6 +248,35 @@ impl BenchReport {
         });
     }
 
+    /// Record a one-shot wall-time against a one-shot baseline wall-time
+    /// (throughput-style benches, where one timed drain IS the case);
+    /// `speedup = baseline_seconds / seconds`, extra metrics as in
+    /// [`Self::case_raw_with`].
+    pub fn case_raw_vs(
+        &mut self,
+        name: &str,
+        seconds: f64,
+        baseline_seconds: f64,
+        extra: &[(&str, f64)],
+    ) {
+        self.cases.push(BenchCase {
+            name: name.to_string(),
+            iters: 1,
+            median_s: seconds,
+            p10_s: seconds,
+            p90_s: seconds,
+            mean_s: seconds,
+            per_sec: if seconds > 0.0 { 1.0 / seconds } else { 0.0 },
+            baseline_median_s: Some(baseline_seconds),
+            speedup: if seconds > 0.0 {
+                Some(baseline_seconds / seconds)
+            } else {
+                Some(0.0)
+            },
+            extra: extra.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        });
+    }
+
     /// Smallest recorded speedup (None when no case had a baseline).
     pub fn min_speedup(&self) -> Option<f64> {
         let m = self
@@ -418,6 +447,17 @@ mod tests {
         assert_eq!(cases.len(), 4);
         assert_eq!(cases[1].get("speedup").unwrap().as_f64(), Some(4.0));
         assert!(cases[0].get("speedup").is_none());
+    }
+
+    #[test]
+    fn case_raw_vs_records_baseline_and_speedup() {
+        let mut rep = BenchReport::new("throughput", "native-cpu", 2, 32);
+        rep.case_raw_vs("fused drain", 0.5, 1.0, &[("jobs_per_s", 20.0)]);
+        assert_eq!(rep.cases[0].speedup, Some(2.0));
+        assert_eq!(rep.cases[0].baseline_median_s, Some(1.0));
+        assert_eq!(rep.min_speedup(), Some(2.0));
+        let c = &rep.to_json().get("cases").unwrap().as_arr().unwrap()[0];
+        assert_eq!(c.get("jobs_per_s").unwrap().as_f64(), Some(20.0));
     }
 
     #[test]

@@ -1,0 +1,386 @@
+//! Scheduler-layer regressions and acceptance tests for the solver
+//! service: dead-pool fail-fast, warmup surfacing, priority/deadline
+//! ordering, per-tenant quotas under load, bit-exact dispatch fusion,
+//! and streamed progress events.
+//!
+//! The ordering/quota/fusion tests pin the worker deterministically
+//! with a gate decorator: the blocker job's `loss_multi` dispatch
+//! parks inside the backend until the test releases it, so the backlog
+//! can be shaped while the (single) worker is provably busy — no
+//! sleeps, no timing races.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use photon_pinn::coordinator::{
+    Admission, OnChipTrainer, ScheduledJob, ServiceConfig, SolveRequest, SolverService,
+    TrainConfig,
+};
+use photon_pinn::runtime::{Backend, Entry, EvalOptions, FusedLossJob, Manifest, NativeBackend};
+
+fn job(be: &NativeBackend, preset: &str, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::from_manifest(be, preset).unwrap();
+    cfg.epochs = 6;
+    cfg.validate_every = 0;
+    cfg.verbose = false;
+    cfg.seed = seed;
+    cfg
+}
+
+fn req(id: u64, cfg: &TrainConfig) -> SolveRequest {
+    SolveRequest {
+        id,
+        config: cfg.clone(),
+    }
+}
+
+/// The pre-scheduler hang class: a per-worker service whose workers ALL
+/// fail backend load used to accept `submit()` forever and hang in
+/// `recv()`. Now the pool is tracked as dead and both fail fast,
+/// carrying the load error to the caller.
+#[test]
+fn dead_pool_fails_submit_and_recv_with_the_load_error() {
+    let service = SolverService::start_per_worker(
+        |w| anyhow::bail!("simulated device {w} not found"),
+        ServiceConfig::new(2, 4),
+    );
+    let report = service.startup_report();
+    assert_eq!((report.workers, report.live), (2, 0));
+    assert_eq!(report.load_errors.len(), 2);
+    assert!(!report.is_warm());
+
+    let be = NativeBackend::builtin();
+    let cfg = job(&be, "tonn_micro", 1);
+    let err = service.submit(req(0, &cfg)).unwrap_err().to_string();
+    assert!(err.contains("simulated device"), "{err}");
+    let err = service.try_submit(req(1, &cfg)).unwrap_err().to_string();
+    assert!(err.contains("simulated device"), "{err}");
+    match service.admit(ScheduledJob::new(req(2, &cfg))) {
+        Admission::PoolDead { error } => assert!(error.contains("simulated device"), "{error}"),
+        other => panic!("expected PoolDead, got {other:?}"),
+    }
+    // recv must error out, not hang on a result that cannot arrive
+    let err = service.recv().unwrap_err().to_string();
+    assert!(err.contains("simulated device"), "{err}");
+    assert!(service.shutdown().is_empty());
+}
+
+/// Warmup failures used to be silently swallowed (`let _ = warmup(..)`);
+/// they now reach the startup report (and the warn log) while the
+/// service itself keeps working.
+#[test]
+fn warmup_failure_is_surfaced_but_not_fatal() {
+    let be = Arc::new(NativeBackend::builtin());
+    let service = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(1, 2).with_warmup("no_such_preset"),
+    );
+    let report = service.startup_report();
+    assert_eq!((report.workers, report.live), (1, 1));
+    assert!(report.load_errors.is_empty());
+    assert_eq!(report.warmup_errors.len(), 1);
+    assert!(
+        report.warmup_errors[0].contains("no_such_preset"),
+        "{}",
+        report.warmup_errors[0]
+    );
+    assert!(!report.is_warm());
+
+    // a cold service is degraded, not broken
+    let cfg = job(&be, "tonn_micro", 3);
+    service.submit(req(0, &cfg)).unwrap();
+    assert!(service.recv().unwrap().final_val.unwrap().is_finite());
+    assert!(service.shutdown().is_empty());
+
+    // and with a real preset the report is warm
+    let service = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(1, 2).with_warmup("tonn_micro"),
+    );
+    assert!(service.startup_report().is_warm());
+    assert!(service.shutdown().is_empty());
+}
+
+/// Rendezvous gate: the worker parks inside the gated dispatch until
+/// the test releases it, and the test can wait until the worker has
+/// provably arrived there.
+#[derive(Default)]
+struct Gate {
+    /// (worker arrived at the gate, gate released)
+    state: Mutex<(bool, bool)>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn wait_arrived(&self) {
+        let mut s = self.state.lock().unwrap();
+        while !s.0 {
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        self.state.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+
+    fn pass(&self) {
+        let mut s = self.state.lock().unwrap();
+        s.0 = true;
+        self.cv.notify_all();
+        while !s.1 {
+            s = self.cv.wait(s).unwrap();
+        }
+    }
+}
+
+/// Decorator that gates `loss_multi` dispatches of ONE preset (the
+/// blocker job's), then delegates to the real entry. Fused dispatches
+/// delegate straight to the native override, so gang members exercise
+/// the real fused path.
+struct GateBackend {
+    inner: NativeBackend,
+    gate: Arc<Gate>,
+    gated_preset: &'static str,
+}
+
+struct GateEntry {
+    inner: Arc<dyn Entry>,
+    gate: Arc<Gate>,
+}
+
+impl Entry for GateEntry {
+    fn meta(&self) -> &photon_pinn::runtime::EntryMeta {
+        self.inner.meta()
+    }
+    fn dispatches(&self) -> u64 {
+        self.inner.dispatches()
+    }
+    fn run_with(&self, inputs: &[&[f32]], opts: &EvalOptions) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.gate.pass();
+        self.inner.run_with(inputs, opts)
+    }
+}
+
+impl Backend for GateBackend {
+    fn manifest(&self) -> &Manifest {
+        self.inner.manifest()
+    }
+    fn platform(&self) -> String {
+        "gate-decorator".into()
+    }
+    fn entry(&self, preset: &str, entry: &str) -> anyhow::Result<Arc<dyn Entry>> {
+        let real = self.inner.entry(preset, entry)?;
+        if entry == "loss_multi" && preset == self.gated_preset {
+            return Ok(Arc::new(GateEntry {
+                inner: real,
+                gate: self.gate.clone(),
+            }));
+        }
+        Ok(real)
+    }
+    fn loss_fused(&self, preset: &str, jobs: &[FusedLossJob]) -> anyhow::Result<Vec<Vec<f32>>> {
+        self.inner.loss_fused(preset, jobs)
+    }
+}
+
+/// Start a 1-worker gated service and park that worker inside the
+/// blocker job, so the tests below can shape the queue at will.
+fn gated_service(be: &Arc<GateBackend>, cfg: ServiceConfig, blocker_id: u64) -> SolverService {
+    let blocker = job(&be.inner, be.gated_preset, 7);
+    let service = SolverService::start_shared(be.clone(), cfg);
+    service.submit(req(blocker_id, &blocker)).unwrap();
+    be.gate.wait_arrived();
+    service
+}
+
+/// Priority beats FIFO, deadlines order within a priority, and any
+/// deadline beats none — observed end-to-end through a single worker
+/// with fusion off (strictly sequential, so completion order IS
+/// scheduling order).
+#[test]
+fn priority_and_deadline_order_completions() {
+    let be = Arc::new(GateBackend {
+        inner: NativeBackend::builtin(),
+        gate: Arc::new(Gate::default()),
+        gated_preset: "tonn_micro_heat",
+    });
+    let service = gated_service(&be, ServiceConfig::new(1, 16).with_fuse_max(1), 100);
+
+    // the worker is parked inside job 100 — shape the backlog
+    let cfg = job(&be.inner, "tonn_micro", 11);
+    let t = Instant::now();
+    service.submit_scheduled(ScheduledJob::new(req(0, &cfg))).unwrap();
+    service
+        .submit_scheduled(ScheduledJob::new(req(1, &cfg)).with_priority(5))
+        .unwrap();
+    service
+        .submit_scheduled(
+            ScheduledJob::new(req(2, &cfg))
+                .with_priority(5)
+                .with_deadline(t + Duration::from_millis(100)),
+        )
+        .unwrap();
+    service
+        .submit_scheduled(
+            ScheduledJob::new(req(3, &cfg))
+                .with_priority(5)
+                .with_deadline(t + Duration::from_millis(200)),
+        )
+        .unwrap();
+    be.gate.release();
+
+    let order: Vec<u64> = (0..5).map(|_| service.recv().unwrap().id).collect();
+    assert_eq!(
+        order,
+        vec![100, 2, 3, 1, 0],
+        "blocker first, then priority 5 by deadline (any deadline beats \
+         none), then the priority-0 job"
+    );
+    assert!(service.shutdown().is_empty());
+}
+
+/// Per-tenant quota rejections under load, with the typed verdict —
+/// and the slot frees when the tenant's result is delivered.
+#[test]
+fn tenant_quota_rejects_under_load() {
+    let be = Arc::new(GateBackend {
+        inner: NativeBackend::builtin(),
+        gate: Arc::new(Gate::default()),
+        gated_preset: "tonn_micro_heat",
+    });
+    let service = gated_service(&be, ServiceConfig::new(1, 16).with_tenant_quota(2), 100);
+
+    let cfg = job(&be.inner, "tonn_micro", 21);
+    let sched = |id: u64, tenant: &str| ScheduledJob::new(req(id, &cfg)).with_tenant(tenant);
+    assert!(matches!(
+        service.admit(sched(0, "acme")),
+        Admission::Accepted { .. }
+    ));
+    assert!(matches!(
+        service.admit(sched(1, "acme")),
+        Admission::Accepted { .. }
+    ));
+    // third in-flight job for the same tenant: typed rejection
+    match service.admit(sched(2, "acme")) {
+        Admission::QuotaExceeded {
+            tenant,
+            in_flight,
+            quota,
+        } => {
+            assert_eq!(tenant, "acme");
+            assert_eq!((in_flight, quota), (2, 2));
+        }
+        other => panic!("expected QuotaExceeded, got {other:?}"),
+    }
+    // quotas are per tenant — a different tenant still fits, and the
+    // blocker (default tenant) never counted against "acme"
+    assert!(matches!(
+        service.admit(sched(3, "other")),
+        Admission::Accepted { .. }
+    ));
+
+    be.gate.release();
+    let mut done = Vec::new();
+    for _ in 0..4 {
+        let r = service.recv().unwrap();
+        r.final_val.unwrap();
+        done.push(r.id);
+    }
+    done.sort_unstable();
+    assert_eq!(done, vec![0, 1, 3, 100]);
+    // delivered results released the quota slots
+    assert!(matches!(
+        service.admit(sched(4, "acme")),
+        Admission::Accepted { .. }
+    ));
+    service.recv().unwrap().final_val.unwrap();
+    assert!(service.shutdown().is_empty());
+}
+
+/// The isolated-run oracle: the same config solved alone on a FRESH
+/// private backend.
+fn solo(cfg: &TrainConfig) -> (Vec<f32>, f32) {
+    let be = NativeBackend::builtin();
+    let res = OnChipTrainer::new(&be, cfg.clone()).unwrap().train().unwrap();
+    (res.phi, res.final_val)
+}
+
+/// The fusion acceptance test: a gang of same-preset jobs — different
+/// seeds, different epoch budgets, three DIFFERENT soft-boundary
+/// weights — drained through ONE worker's fused lockstep must
+/// reproduce each job's isolated run bit for bit, and each job's
+/// validation passes must stream out as progress events.
+#[test]
+fn fused_gang_matches_solo_runs_bitwise_and_streams_progress() {
+    let be = Arc::new(GateBackend {
+        inner: NativeBackend::builtin(),
+        gate: Arc::new(Gate::default()),
+        gated_preset: "tonn_micro_heat",
+    });
+    // fuse_max covers the whole backlog: one gang of three
+    let service = gated_service(&be, ServiceConfig::new(1, 16).with_fuse_max(4), 100);
+
+    let mut jobs: Vec<TrainConfig> = Vec::new();
+    for (i, (epochs, bc)) in [(6usize, 0.25f64), (9, 4.0), (12, 1.0)].iter().enumerate() {
+        let mut cfg = job(&be.inner, "tonn_micro_ac", 30 + i as u64);
+        cfg.epochs = *epochs;
+        cfg.bc_weight = Some(*bc);
+        cfg.validate_every = 3;
+        jobs.push(cfg);
+    }
+    let oracle: Vec<(Vec<f32>, f32)> = jobs.iter().map(solo).collect();
+
+    for (i, cfg) in jobs.iter().enumerate() {
+        service.submit(req(i as u64, cfg)).unwrap();
+    }
+    be.gate.release();
+
+    let mut got: Vec<Option<(Vec<f32>, f32)>> = vec![None; jobs.len()];
+    for _ in 0..=jobs.len() {
+        let r = service.recv().unwrap();
+        let val = r.final_val.expect("gang job must solve");
+        assert_eq!(r.worker, 0, "single worker solves the whole gang");
+        if r.id != 100 {
+            got[r.id as usize] = Some((r.phi, val));
+        }
+    }
+
+    for (i, (phi, val)) in oracle.iter().enumerate() {
+        let (got_phi, got_val) = got[i].as_ref().expect("every gang job returns once");
+        assert_eq!(
+            got_phi, phi,
+            "job {i}: Φ drifted through the fused cross-job pass"
+        );
+        assert_eq!(got_val, val, "job {i}: final val drifted when fused");
+    }
+
+    // progress streaming: every validation pass of every gang job came
+    // through, in epoch order, ending at the job's final validation
+    // (drained before shutdown consumes the service)
+    let mut events: Vec<Vec<(usize, f32)>> = vec![Vec::new(); jobs.len()];
+    while let Some(ev) = service.try_recv_progress() {
+        if ev.job != 100 {
+            events[ev.job as usize].push((ev.epoch, ev.val));
+        }
+    }
+    assert!(service.shutdown().is_empty());
+    for (i, cfg) in jobs.iter().enumerate() {
+        let evs = &events[i];
+        assert!(
+            evs.len() >= 2,
+            "job {i}: expected mid-run + final validation events, got {evs:?}"
+        );
+        assert!(
+            evs.windows(2).all(|w| w[0].0 < w[1].0),
+            "job {i}: progress epochs must be strictly increasing: {evs:?}"
+        );
+        let (last_epoch, last_val) = *evs.last().unwrap();
+        assert_eq!(last_epoch, cfg.epochs, "job {i}: final event epoch");
+        assert_eq!(
+            last_val,
+            got[i].as_ref().unwrap().1,
+            "job {i}: final event val must be THE final val, bitwise"
+        );
+    }
+}
