@@ -20,7 +20,10 @@ use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
 use photon_pinn::optim::Spsa;
 use photon_pinn::pde::Sampler;
 use photon_pinn::photonics::noise::{ChipRealization, NoiseConfig};
-use photon_pinn::runtime::{Backend, Entry, EvalOptions, NativeBackend, ParallelConfig};
+use photon_pinn::runtime::{
+    Backend, Entry, EvalOptions, EvalPrecision, NativeBackend, ParallelConfig,
+};
+use photon_pinn::tensor::simd;
 use photon_pinn::util::bench::{bench, bench_report_path, report, BenchReport, BenchResult};
 use photon_pinn::util::rng::Rng;
 
@@ -258,6 +261,75 @@ fn main() {
         }
     }
 
+    // precision tiers (their own "precision" report section): the f64
+    // oracle tier is the baseline; the default f32 engine and the
+    // 16-bit quantized tier are measured against it, each case carrying
+    // its loss value and |delta| vs the oracle so the report records
+    // the speed/accuracy trade in one place. The f32-vs-f64 pair joins
+    // the enforce gate: reduced precision must never be SLOWER than the
+    // oracle on a gated-size dispatch.
+    let mut prep = BenchReport::new(
+        "precision",
+        "native-cpu",
+        par_cfg.threads,
+        par_cfg.block_rows,
+    );
+    {
+        let preset = "tonn_small";
+        if let Ok(pm) = rt.manifest().preset(preset) {
+            let (warm, iters) = if fast { (1, 5) } else { (3, 20) };
+            let mut rng = Rng::new(8);
+            let phi = pm.layout.init_vector(&mut rng);
+            let mut sampler = Sampler::new(pm.pde.clone(), 12);
+            let mut xr = Vec::new();
+            sampler.batch(rt.manifest().b_residual, &mut xr);
+            let loss = rt.entry(preset, "loss").unwrap();
+            rt.set_parallel(par_cfg);
+            println!(
+                "\nprecision tiers on {preset}/loss (kernel path: {})",
+                simd::kernel_path()
+            );
+
+            let tiers = [
+                ("f64", EvalPrecision::F64),
+                ("f32", EvalPrecision::F32),
+                ("q16", EvalPrecision::Quantized { bits: 16 }),
+            ];
+            let mut runs: Vec<(BenchResult, f32)> = Vec::new();
+            for (name, tier) in tiers {
+                let o = EvalOptions::NONE.with_precision(tier);
+                let l = loss.run_scalar_with(&[&phi, &xr], &o).unwrap();
+                let r = bench(
+                    &format!("{preset}/loss precision {name}"),
+                    warm,
+                    iters,
+                    || {
+                        loss.run_scalar_with(&[&phi, &xr], &o).unwrap();
+                    },
+                );
+                runs.push((r, l));
+            }
+            let l64 = runs[0].1 as f64;
+            for (i, (r, l)) in runs.iter().enumerate() {
+                let base = if i == 0 { None } else { Some(&runs[0].0) };
+                prep.case_vs(r, base);
+                let c = prep.cases.last_mut().unwrap();
+                c.extra.push(("loss".to_string(), *l as f64));
+                c.extra
+                    .push(("loss_delta_vs_f64".to_string(), (*l as f64 - l64).abs()));
+            }
+            // f32 (the default engine) gated against the f64 oracle
+            enforced.push((
+                runs[1].0.name.clone(),
+                runs[1].0.median_s,
+                runs[0].0.median_s,
+            ));
+            for (r, _) in runs {
+                results.push(r);
+            }
+        }
+    }
+
     // L3-side costs: everything the coordinator does *around* a dispatch
     {
         let pm = rt.manifest().preset("tonn_small").unwrap();
@@ -309,10 +381,15 @@ fn main() {
         eprintln!("cannot write {}: {e:#}", path.display());
         std::process::exit(2);
     }
+    if let Err(e) = prep.write_merged(&path) {
+        eprintln!("cannot write {}: {e:#}", path.display());
+        std::process::exit(2);
+    }
     println!(
-        "\nperf report merged into {} ({} cases, engine {}Tx{} rows/block)",
+        "\nperf report merged into {} ({} + {} cases, engine {}Tx{} rows/block)",
         path.display(),
         rep.cases.len(),
+        prep.cases.len(),
         rep.threads,
         rep.block_rows
     );
@@ -337,7 +414,7 @@ fn main() {
             gated += 1;
             if *p > s * NOISE_MARGIN {
                 failures.push(format!(
-                    "{name}: parallel {:.3}ms > sequential {:.3}ms (+10% margin)",
+                    "{name}: {:.3}ms > baseline {:.3}ms (+10% margin)",
                     p * 1e3,
                     s * 1e3
                 ));
@@ -345,7 +422,7 @@ fn main() {
         }
         if failures.is_empty() {
             println!(
-                "enforce: parallel engine >= sequential on all {gated} gated cases \
+                "enforce: no gated case slower than its baseline, {gated} gated \
                  ({skipped} below the {MIN_GATED_SEQ_S}s work floor)"
             );
         } else {

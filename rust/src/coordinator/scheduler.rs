@@ -42,6 +42,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::service::SolveRequest;
+use crate::runtime::EvalPrecision;
 
 /// One scheduled job: a [`SolveRequest`] plus scheduling metadata.
 /// `SolveRequest::into()` gives the neutral defaults (default tenant,
@@ -332,7 +333,10 @@ impl JobQueue {
     }
 
     /// Blocking worker pop: the top job plus up to `fuse_max - 1`
-    /// consecutive top jobs on the same preset (the fusion gang).
+    /// consecutive top jobs on the same preset AND the same resolved
+    /// precision tier (the fusion gang — a fused engine pass evaluates
+    /// one preset in one precision, so mixed-precision neighbours fence
+    /// the gang exactly like a different preset does).
     /// `None` once the queue is closed AND drained — the ordered-
     /// shutdown contract: everything queued before close still runs.
     pub(crate) fn pop_gang(&self, fuse_max: usize) -> Option<Vec<PoppedJob>> {
@@ -340,13 +344,28 @@ impl JobQueue {
         loop {
             if let Some(top) = st.heap.pop() {
                 let preset = top.job.request.config.preset.clone();
+                let prec = top
+                    .job
+                    .request
+                    .config
+                    .precision
+                    .unwrap_or(EvalPrecision::DEFAULT);
                 let mut gang = vec![PoppedJob {
                     job: top.job,
                     submitted: top.submitted,
                 }];
                 while gang.len() < fuse_max.max(1) {
                     match st.heap.peek() {
-                        Some(next) if next.job.request.config.preset == preset => {
+                        Some(next)
+                            if next.job.request.config.preset == preset
+                                && next
+                                    .job
+                                    .request
+                                    .config
+                                    .precision
+                                    .unwrap_or(EvalPrecision::DEFAULT)
+                                    == prec =>
+                        {
                             let e = st.heap.pop().expect("peeked entry");
                             gang.push(PoppedJob {
                                 job: e.job,
@@ -531,6 +550,34 @@ mod tests {
         assert_eq!(ids(q.pop_gang(4).unwrap()), vec![0, 1]);
         assert_eq!(ids(q.pop_gang(4).unwrap()), vec![2]);
         assert_eq!(ids(q.pop_gang(4).unwrap()), vec![3]);
+    }
+
+    #[test]
+    fn gang_never_mixes_precisions() {
+        let be = NativeBackend::builtin();
+        let q = JobQueue::new(16, None, 1);
+        q.register_live();
+        let with_prec = |id: u64, prec: Option<EvalPrecision>| {
+            let mut r = req(id, "tonn_micro", &be);
+            r.config.precision = prec;
+            ScheduledJob::new(r)
+        };
+        for j in [
+            with_prec(0, None),
+            // explicit f32 == the default tier: still gangs with job 0
+            with_prec(1, Some(EvalPrecision::F32)),
+            // f64 fences the gang exactly like a different preset would
+            with_prec(2, Some(EvalPrecision::F64)),
+            with_prec(3, Some(EvalPrecision::Quantized { bits: 16 })),
+            with_prec(4, None),
+        ] {
+            assert!(matches!(q.admit(&j), Admission::Accepted { .. }));
+        }
+        let ids = |g: Vec<PoppedJob>| g.iter().map(|p| p.job.request.id).collect::<Vec<_>>();
+        assert_eq!(ids(q.pop_gang(8).unwrap()), vec![0, 1]);
+        assert_eq!(ids(q.pop_gang(8).unwrap()), vec![2]);
+        assert_eq!(ids(q.pop_gang(8).unwrap()), vec![3]);
+        assert_eq!(ids(q.pop_gang(8).unwrap()), vec![4]);
     }
 
     #[test]

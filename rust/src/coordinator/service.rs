@@ -264,9 +264,24 @@ fn run_gang<'rt>(
         let mut dispatched: Vec<Option<Result<Vec<f32>>>> =
             (0..lanes.len()).map(|_| None).collect();
         let fuse: Vec<usize> = if lanes.len() >= 2 {
-            (0..lanes.len())
+            let capable: Vec<usize> = (0..lanes.len())
                 .filter(|&i| lanes[i].trainer.can_fuse())
-                .collect()
+                .collect();
+            // a fused pass must be precision-uniform (precision changes
+            // results, unlike the latency-only options): fuse only the
+            // capable lanes on the first capable lane's tier. The
+            // scheduler already fences gangs by precision, so this is
+            // defense in depth — the backend would reject a mixed pass.
+            match capable.first() {
+                Some(&first) => {
+                    let prec = lanes[first].trainer.precision();
+                    capable
+                        .into_iter()
+                        .filter(|&i| lanes[i].trainer.precision() == prec)
+                        .collect()
+                }
+                None => capable,
+            }
         } else {
             Vec::new()
         };

@@ -61,7 +61,9 @@ use super::validator::Validator;
 use crate::optim::{GradientEstimator, LrSchedule, Optimizer};
 use crate::photonics::noise::{ChipRealization, NoiseConfig};
 use crate::pde::{Problem, Sampler};
-use crate::runtime::{Backend, Entry, EvalOptions, FusedLossJob, FusedLossKind, ParallelConfig};
+use crate::runtime::{
+    Backend, Entry, EvalOptions, EvalPrecision, FusedLossJob, FusedLossKind, ParallelConfig,
+};
 use crate::util::rng::Rng;
 
 /// Loss estimator variant (ablation A4: FD vs Stein).
@@ -139,6 +141,12 @@ pub struct TrainConfig {
     /// the engine default, min(threads, K). Latency only — results
     /// never depend on it.
     pub probe_workers: Option<usize>,
+    /// numeric precision tier for THIS job's dispatches
+    /// (`EvalOptions.precision`); `None` = the engine default
+    /// ([`EvalPrecision::DEFAULT`], f32). Unlike the fields above this
+    /// one changes results, so the scheduler/service only fuse jobs
+    /// whose resolved precisions match.
+    pub precision: Option<EvalPrecision>,
     /// print progress lines
     pub verbose: bool,
 }
@@ -168,6 +176,7 @@ impl TrainConfig {
             parallel: None,
             bc_weight: None,
             probe_workers: None,
+            precision: None,
             verbose: false,
         })
     }
@@ -272,6 +281,7 @@ impl<'rt> OnChipTrainer<'rt> {
             parallel: cfg.parallel,
             bc_weight: cfg.bc_weight.map(|w| w as f32),
             probe_workers: cfg.probe_workers,
+            precision: cfg.precision,
         };
         let estimator = crate::optim::estimator::global().build(
             &cfg.estimator,
@@ -564,6 +574,13 @@ impl<'rt> OnChipTrainer<'rt> {
     /// (which must re-program the chip between its K dispatches).
     pub fn can_fuse(&self) -> bool {
         self.stein_single.is_none()
+    }
+
+    /// This job's resolved precision tier. Fused cross-job passes must
+    /// be precision-uniform (precision changes results, not just
+    /// latency), so the service gangs fuse-capable jobs per tier.
+    pub fn precision(&self) -> EvalPrecision {
+        self.opts.precision.unwrap_or(EvalPrecision::DEFAULT)
     }
 
     /// Program the chip's noise path for this epoch's K commanded

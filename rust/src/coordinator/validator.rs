@@ -13,7 +13,10 @@ use crate::runtime::{Backend, Entry, EvalOptions, ParallelConfig};
 /// Evaluation configuration is SESSION-SCOPED: the [`EvalOptions`]
 /// given at construction ride every dispatch this validator issues and
 /// never touch backend state, so concurrent jobs sharing one backend
-/// can validate under different engine configs.
+/// can validate under different engine configs — including different
+/// precision tiers (`EvalOptions.precision`): a job training in a
+/// reduced tier validates in that same tier, which is what its loss
+/// trajectory is measured against.
 pub struct Validator {
     exec: Arc<dyn Entry>,
     xv: Vec<f32>,

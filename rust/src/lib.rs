@@ -19,9 +19,15 @@
 //!   ([`photonics::mesh`]) and TT cores ([`tensor`]), and assembles the
 //!   FD/Stein PINN losses from [`pde`]. Batches run through a parallel,
 //!   cache-aware evaluation engine (per-Φ materialization cache, blocked
-//!   GEMM micro-kernel, scoped-thread row-block fan-out) tuned by
-//!   [`runtime::ParallelConfig`] — results are identical for every
-//!   config. Presets come from the in-repo registry (no build step) or
+//!   GEMM micro-kernel with runtime-dispatched SIMD lanes
+//!   ([`tensor::simd`]: portable wide / AVX2 / forced scalar — all
+//!   bit-identical on the default path), scoped-thread row-block
+//!   fan-out) tuned by [`runtime::ParallelConfig`] — results are
+//!   identical for every config. Three precision tiers ride each
+//!   dispatch as [`runtime::EvalPrecision`]: the default f32 engine, an
+//!   f64 oracle, and bit-depth-quantized weights mapped onto the
+//!   photonics noise model (README §Precision tiers).
+//!   Presets come from the in-repo registry (no build step) or
 //!   any `manifest.json`. `Send + Sync`: solver-service workers share
 //!   ONE backend. This is the path CI exercises
 //!   (`cargo build --release && cargo test -q`) — every integration

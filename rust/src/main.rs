@@ -71,6 +71,8 @@ fn args_for(cmd: &str) -> Args {
         .flag("bc-weight", None, "boundary-loss weight override (soft-constraint problems only)")
         .flag("probe-workers", None, "cap concurrent SPSA probe lanes per batched dispatch \
                (default: min(threads, K))")
+        .flag("precision", None, "evaluation precision tier: f32 (default, bit-exact engine) | \
+               f64 (double-precision oracle) | q<bits> (quantized weights, e.g. q16)")
         .switch("stein", "use the Stein derivative estimator instead of FD")
         .switch("raw-sgd", "disable the signSGD de-noising (ablation)")
         .switch("quiet", "suppress progress lines")
@@ -248,6 +250,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if let Some(p) = a.get_usize("probe-workers")? {
         cfg.probe_workers = Some(p.max(1));
     }
+    if let Some(s) = a.get_str("precision") {
+        cfg.precision = Some(photon_pinn::runtime::EvalPrecision::parse(&s)?);
+    }
     if let Some(ck) = &resumed_ck {
         cfg.seed = ck.seed;
         if !ck.optimizer.is_empty() {
@@ -302,6 +307,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .flag("workers", Some("2"), "service worker threads")
         .flag("epochs", Some("60"), "epochs per job")
         .flag("fuse-max", Some("4"), "max same-preset jobs fused per gang (1 = off)")
+        .flag("precision", None, "evaluation precision tier for every job: f32 | f64 | q<bits>")
         .flag("tenant-quota", None, "per-tenant cap on in-flight jobs")
         .flag("seed", Some("0"), "base seed (job i trains with seed + i)")
         .switch("quiet", "suppress streamed progress lines")
@@ -315,6 +321,9 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let mut cfg = TrainConfig::from_manifest(be.as_ref(), &preset)?;
     cfg.epochs = a.get_usize("epochs")?.unwrap();
     cfg.verbose = false;
+    if let Some(s) = a.get_str("precision") {
+        cfg.precision = Some(photon_pinn::runtime::EvalPrecision::parse(&s)?);
+    }
     let mut svc_cfg = ServiceConfig::new(a.get_usize("workers")?.unwrap(), jobs)
         .with_warmup(&preset)
         .with_fuse_max(a.get_usize("fuse-max")?.unwrap());

@@ -80,6 +80,51 @@ impl NoiseConfig {
             && self.bias_std == 0.0
             && self.amp_drift_std == 0.0
     }
+
+    /// Noise severity equivalent to programming the chip through
+    /// `bits`-bit DACs (the counterpart of the evaluation engine's
+    /// [`EvalPrecision::Quantized`] tier, which quantizes materialized
+    /// weights directly).
+    ///
+    /// A `bits`-bit uniform quantizer over a unit-normalized range has
+    /// step `Δ = 2^-bits` and RMS rounding error `Δ/√12`; that RMS maps
+    /// onto the multiplicative drift channels directly and onto the
+    /// phase-bias channel scaled by the 2π phase range. Crosstalk is a
+    /// thermal effect, not a quantization one, so it stays 0.
+    ///
+    /// [`EvalPrecision::Quantized`]: crate::runtime::EvalPrecision::Quantized
+    pub fn quantization(bits: u8) -> Self {
+        let q = 2f64.powi(-(bits as i32)) / 12f64.sqrt();
+        NoiseConfig {
+            gamma_std: q,
+            crosstalk: 0.0,
+            bias_std: std::f64::consts::TAU * q,
+            amp_drift_std: q,
+        }
+    }
+}
+
+/// Per-tensor symmetric max-abs quantization to `bits` bits, in place:
+/// every value is rounded to the `(2^(bits-1) - 1)`-level uniform grid
+/// spanning `[-max|x|, +max|x|]` — the DAC model behind the evaluation
+/// engine's `Quantized` precision tier. All-zero tensors are untouched
+/// (no scale exists). Deterministic and per-element, so results are
+/// independent of any row blocking or thread count downstream.
+///
+/// Supported range is 2..=24 bits (above 24, f32's own 24-bit mantissa
+/// makes the grid unrepresentable); out-of-range depths panic — callers
+/// validate user input first.
+pub fn quantize_symmetric(xs: &mut [f32], bits: u8) {
+    assert!((2..=24).contains(&bits), "quantize_symmetric: bits {bits} out of 2..=24");
+    let max_abs = xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max_abs == 0.0 || !max_abs.is_finite() {
+        return;
+    }
+    let levels = ((1u32 << (bits - 1)) - 1) as f32;
+    let scale = levels / max_abs;
+    for x in xs.iter_mut() {
+        *x = (*x * scale).round() / scale;
+    }
 }
 
 /// One fabricated chip: fixed noise realization for a parameter layout.
@@ -291,6 +336,54 @@ mod tests {
         let eff = chip.program_vec(&cmd);
         assert!((eff[4] - 0.1).abs() < 1e-6); // neighbour inside segment
         assert_eq!(eff[6], 0.0); // sigma param untouched (different segment)
+    }
+
+    #[test]
+    fn quantize_symmetric_roundtrips_within_half_step() {
+        let mut xs: Vec<f32> = (0..50).map(|i| (i as f32 * 0.37).sin() * 2.5).collect();
+        let orig = xs.clone();
+        quantize_symmetric(&mut xs, 8);
+        let max_abs = orig.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        let step = max_abs / ((1u32 << 7) - 1) as f32;
+        for (q, o) in xs.iter().zip(&orig) {
+            assert!((q - o).abs() <= 0.5 * step + 1e-6, "{q} vs {o}");
+        }
+        // near-idempotent: grid points re-quantize to themselves up to
+        // f32 rescale rounding (the grid is re-derived from the new max)
+        let again = {
+            let mut y = xs.clone();
+            quantize_symmetric(&mut y, 8);
+            y
+        };
+        for (a, b) in xs.iter().zip(&again) {
+            assert!((a - b).abs() <= 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quantize_symmetric_skips_zero_tensor_and_keeps_extrema() {
+        let mut zs = vec![0.0f32; 8];
+        quantize_symmetric(&mut zs, 4);
+        assert!(zs.iter().all(|&v| v == 0.0));
+        let mut xs = vec![-1.5f32, 0.0, 1.5];
+        quantize_symmetric(&mut xs, 6);
+        // max-abs values sit on the grid ends (up to f32 scale rounding)
+        assert!((xs[0] + 1.5).abs() < 1e-6);
+        assert_eq!(xs[1], 0.0);
+        assert!((xs[2] - 1.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantization_config_severity_tracks_bit_depth() {
+        let c8 = NoiseConfig::quantization(8);
+        let c16 = NoiseConfig::quantization(16);
+        assert_eq!(c8.crosstalk, 0.0);
+        assert!(c8.gamma_std > c16.gamma_std);
+        assert!(c8.bias_std > c16.bias_std);
+        // 16-bit DACs are close to ideal
+        assert!(c16.gamma_std < 1e-4);
+        // each extra bit halves the RMS error
+        assert!((c8.gamma_std / c16.gamma_std - 256.0).abs() < 1e-6);
     }
 
     #[test]

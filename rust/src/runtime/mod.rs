@@ -57,7 +57,7 @@ use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::model::{Hyper, Layout};
 use crate::pde::Problem;
@@ -270,6 +270,65 @@ impl Manifest {
     }
 }
 
+/// Numeric precision tier of one evaluation dispatch.
+///
+/// * [`F32`](EvalPrecision::F32) — the default engine: f32 GEMM +
+///   activations, sequential f32 loss reduction. Bit-identical to the
+///   PR-1 scalar oracle (`forward_reference` / `loss_reference`) on
+///   every kernel path.
+/// * [`F64`](EvalPrecision::F64) — double-precision oracle tier: the
+///   materialized net is mirrored to f64, the forward pass (GEMM, sine
+///   activations, readout) and the loss reductions run in f64. Used to
+///   *bound* the error of the cheaper tiers; compared by bound, never
+///   by bit equality.
+/// * [`Quantized`](EvalPrecision::Quantized) — weights-only per-tensor
+///   symmetric quantization to `bits` bits (2..=24), modeling the DAC
+///   bit depth of phase-shifter programming. The same bit depth maps
+///   onto hardware-noise severity via
+///   [`crate::photonics::noise::NoiseConfig::quantization`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EvalPrecision {
+    F64,
+    F32,
+    Quantized { bits: u8 },
+}
+
+impl EvalPrecision {
+    /// The engine default (what `EvalOptions { precision: None, .. }`
+    /// resolves to): the f32 tier, bit-identical to the PR-1 oracle.
+    pub const DEFAULT: EvalPrecision = EvalPrecision::F32;
+
+    /// Parse a CLI spelling: `f64`, `f32`, or `q<bits>` (e.g. `q16`).
+    pub fn parse(s: &str) -> Result<EvalPrecision> {
+        match s {
+            "f64" => Ok(EvalPrecision::F64),
+            "f32" => Ok(EvalPrecision::F32),
+            _ => {
+                let bits: u8 = s
+                    .strip_prefix('q')
+                    .and_then(|b| b.parse().ok())
+                    .ok_or_else(|| {
+                        anyhow!("bad precision '{s}' (expected f64, f32, or q<bits> like q16)")
+                    })?;
+                if !(2..=24).contains(&bits) {
+                    bail!("quantized precision q{bits} out of range (supported: q2..q24)");
+                }
+                Ok(EvalPrecision::Quantized { bits })
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for EvalPrecision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalPrecision::F64 => f.write_str("f64"),
+            EvalPrecision::F32 => f.write_str("f32"),
+            EvalPrecision::Quantized { bits } => write!(f, "q{bits}"),
+        }
+    }
+}
+
 /// Per-dispatch evaluation options.
 ///
 /// Everything a single evaluation may want tuned — engine parallelism,
@@ -298,6 +357,12 @@ pub struct EvalOptions {
     /// multi-Φ dispatch; `None` = min(threads, K). Latency only —
     /// results never depend on it.
     pub probe_workers: Option<usize>,
+    /// numeric precision tier for this dispatch; `None` =
+    /// [`EvalPrecision::DEFAULT`] (f32, bit-identical to the PR-1
+    /// oracle). Unlike the latency-only fields above, this one DOES
+    /// change results — which is why fused cross-job passes refuse to
+    /// gang jobs whose resolved precisions differ.
+    pub precision: Option<EvalPrecision>,
 }
 
 impl EvalOptions {
@@ -306,6 +371,7 @@ impl EvalOptions {
         parallel: None,
         bc_weight: None,
         probe_workers: None,
+        precision: None,
     };
 
     pub fn with_parallel(mut self, par: ParallelConfig) -> EvalOptions {
@@ -320,6 +386,11 @@ impl EvalOptions {
 
     pub fn with_probe_workers(mut self, n: usize) -> EvalOptions {
         self.probe_workers = Some(n);
+        self
+    }
+
+    pub fn with_precision(mut self, prec: EvalPrecision) -> EvalOptions {
+        self.precision = Some(prec);
         self
     }
 }

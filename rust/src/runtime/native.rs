@@ -54,18 +54,19 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use anyhow::{anyhow, Context, Result};
 
 use super::parallel::{for_probes_capped, for_row_blocks, ParallelConfig, ParallelCtl};
 use super::{
-    Backend, Entry, EntryMeta, EvalOptions, FusedLossJob, FusedLossKind, Manifest, PresetMeta,
+    Backend, Entry, EntryMeta, EvalOptions, EvalPrecision, FusedLossJob, FusedLossKind, Manifest,
+    PresetMeta,
 };
 use crate::model::{Hyper, Layout, LayoutBuilder};
 use crate::pde::Problem;
-use crate::photonics::mesh;
-use crate::tensor::{gemm_rows, tt_dense, Mat, TtCore};
+use crate::photonics::{mesh, noise};
+use crate::tensor::{gemm_rows, simd, tt_dense, Mat, TtCore};
 use crate::util::json::Value;
 
 /// Batch shapes shared by all presets (mirrors `python/compile/model.py`).
@@ -179,11 +180,7 @@ impl NetEval {
                 (w.transpose(), slice(phi, bias).to_vec())
             })
             .collect();
-        MaterializedNet {
-            layers,
-            w3: slice(phi, self.w3).to_vec(),
-            b3: phi[self.b3.0],
-        }
+        MaterializedNet::with_operands(layers, slice(phi, self.w3).to_vec(), phi[self.b3.0])
     }
 
     /// Evaluate rows `row0 .. row0 + out.len()` of the flat batch `xs`
@@ -240,6 +237,60 @@ impl NetEval {
         out
     }
 
+    /// [`Self::forward_block`] in the F64 oracle tier: f64 GEMM, f64
+    /// sine activations and readout on the mirrored operands, cast to
+    /// f32 per output row. Same row-block independence as the f32
+    /// engine, so any blocking yields identical outputs.
+    fn forward_block_f64(&self, net: &Net64, xs: &[f32], row0: usize, out: &mut [f32]) {
+        let h = self.hidden;
+        let d = self.in_dim;
+        let nb = out.len();
+        // input zero-padded UP to the layer fan-in
+        let mut act = vec![0.0f64; nb * h];
+        for r in 0..nb {
+            for j in 0..d {
+                act[r * h + j] = xs[(row0 + r) * d + j] as f64;
+            }
+        }
+        let mut z = vec![0.0f64; nb * h];
+        for (li, (wt, bias)) in net.layers.iter().enumerate() {
+            let k_used = if li == 0 { d } else { h };
+            simd::gemm_rows_f64(&act, h, k_used, wt, h, &mut z);
+            for r in 0..nb {
+                let row = &mut z[r * h..(r + 1) * h];
+                for (v, bb) in row.iter_mut().zip(bias) {
+                    *v += *bb;
+                }
+                if li == 0 {
+                    for v in row.iter_mut() {
+                        *v = (self.omega0 as f64 * *v).sin();
+                    }
+                } else {
+                    for v in row.iter_mut() {
+                        *v = v.sin();
+                    }
+                }
+            }
+            std::mem::swap(&mut act, &mut z);
+        }
+        for r in 0..nb {
+            let row = &act[r * h..(r + 1) * h];
+            out[r] = (simd::dot_f64(row, &net.w3) + net.b3) as f32;
+        }
+    }
+
+    /// [`Self::forward_f`] in the F64 oracle tier (lazily mirrors the
+    /// materialized operands to f64).
+    fn forward_f64(&self, mat: &MaterializedNet, xs: &[f32], par: ParallelConfig) -> Vec<f32> {
+        let net64 = mat.mirror64();
+        let b = xs.len() / self.in_dim;
+        let mut out = vec![0.0f32; b];
+        for_row_blocks(par, 1, &mut out, |row0, block| {
+            self.forward_block_f64(&net64, xs, row0, block);
+        });
+        out
+    }
+
     /// The PR-1 scalar evaluator, retained verbatim: per-call layer
     /// materialization, whole-batch `Mat::matmul`, one thread. This is
     /// the correctness oracle the engine is tested against and the
@@ -290,12 +341,109 @@ impl NetEval {
 /// Dense per-layer operands materialized from one phase vector Φ (the
 /// engine's cached "programmed chip state"): per layer the transposed
 /// dense matrix `W^T` in GEMM layout plus bias, and the readout.
-#[derive(Clone, Debug)]
+///
+/// Materialization itself (mesh → SVD → TT → dense) models the optical
+/// hardware and always runs in f32; the precision tiers derive from the
+/// f32 operands lazily — an f64 mirror for the
+/// [`EvalPrecision::F64`] oracle, quantized weight variants for
+/// [`EvalPrecision::Quantized`] — and are cached per materialized net so
+/// the Φ-keyed MRU cache amortizes every tier at once.
+#[derive(Debug)]
 struct MaterializedNet {
     /// per hidden layer: (W^T with shape fan_in x fan_out, bias)
     layers: Vec<(Mat, Vec<f32>)>,
     w3: Vec<f32>,
     b3: f32,
+    /// lazily-built f64 mirror backing the F64 oracle tier
+    mirror64: OnceLock<Arc<Net64>>,
+    /// MRU of weights-quantized variants keyed by bit depth (variants
+    /// themselves carry empty tier caches — they are leaves)
+    quant: Mutex<Vec<(u8, Arc<MaterializedNet>)>>,
+}
+
+/// MRU slots for quantized weight variants of one materialized net — a
+/// bit-depth sweep on one Φ (the quantization ablation) touches a
+/// handful of depths, not many.
+const QUANT_CACHE_SLOTS: usize = 4;
+
+impl MaterializedNet {
+    fn with_operands(layers: Vec<(Mat, Vec<f32>)>, w3: Vec<f32>, b3: f32) -> MaterializedNet {
+        MaterializedNet {
+            layers,
+            w3,
+            b3,
+            mirror64: OnceLock::new(),
+            quant: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The f64 mirror of the f32 operands, built once per materialized
+    /// net and shared by every F64-tier dispatch on this Φ.
+    fn mirror64(&self) -> Arc<Net64> {
+        self.mirror64
+            .get_or_init(|| {
+                Arc::new(Net64 {
+                    layers: self
+                        .layers
+                        .iter()
+                        .map(|(wt, bias)| {
+                            (
+                                wt.data.iter().map(|&x| x as f64).collect(),
+                                bias.iter().map(|&x| x as f64).collect(),
+                            )
+                        })
+                        .collect(),
+                    w3: self.w3.iter().map(|&x| x as f64).collect(),
+                    b3: self.b3 as f64,
+                })
+            })
+            .clone()
+    }
+
+    /// The weights-quantized variant of this net at `bits` (per-tensor
+    /// symmetric quantization of every layer matrix, bias and readout —
+    /// the DAC model; activations stay f32, see
+    /// [`noise::quantize_symmetric`]). Cached per bit depth.
+    fn quantized(self: &Arc<Self>, bits: u8) -> Arc<MaterializedNet> {
+        {
+            let mut q = self.quant.lock().unwrap();
+            if let Some(i) = q.iter().position(|(b, _)| *b == bits) {
+                let hit = q.remove(i);
+                let m = hit.1.clone();
+                q.insert(0, hit);
+                return m;
+            }
+        }
+        // build OUTSIDE the lock (same discipline as the Φ-keyed cache)
+        let mut layers = self.layers.clone();
+        for (wt, bias) in layers.iter_mut() {
+            noise::quantize_symmetric(&mut wt.data, bits);
+            noise::quantize_symmetric(bias, bits);
+        }
+        let mut w3 = self.w3.clone();
+        noise::quantize_symmetric(&mut w3, bits);
+        let m = Arc::new(MaterializedNet::with_operands(layers, w3, self.b3));
+        let mut q = self.quant.lock().unwrap();
+        if let Some(i) = q.iter().position(|(b, _)| *b == bits) {
+            let hit = q.remove(i);
+            let m = hit.1.clone();
+            q.insert(0, hit);
+            return m;
+        }
+        q.insert(0, (bits, m.clone()));
+        q.truncate(QUANT_CACHE_SLOTS);
+        m
+    }
+}
+
+/// f64 mirror of a [`MaterializedNet`]'s operands (the F64 oracle tier):
+/// same `W^T` GEMM layout, flat row-major data.
+#[derive(Debug)]
+struct Net64 {
+    /// per hidden layer: (flat W^T data, shape fan_in x fan_out, bias)
+    layers: Vec<(Vec<f64>, Vec<f64>)>,
+    w3: Vec<f64>,
+    b3: f64,
 }
 
 /// Build the evaluator + parameter layout from a manifest `arch` block
@@ -458,12 +606,14 @@ enum EvalPath {
 }
 
 /// One dispatch's [`EvalOptions`] resolved against a preset's defaults:
-/// the effective engine config, soft-boundary weight and probe-lane cap.
+/// the effective engine config, soft-boundary weight, probe-lane cap
+/// and precision tier.
 #[derive(Clone, Copy, Debug)]
 struct DispatchOpts {
     par: ParallelConfig,
     bw: f32,
     probes: Option<usize>,
+    prec: EvalPrecision,
 }
 
 impl PresetEval {
@@ -489,10 +639,18 @@ impl PresetEval {
             }
             None => self.bc_default(),
         };
+        let prec = opts.precision.unwrap_or(EvalPrecision::DEFAULT);
+        if let EvalPrecision::Quantized { bits } = prec {
+            anyhow::ensure!(
+                (2..=24).contains(&bits),
+                "quantized precision q{bits} out of range (supported: q2..q24)"
+            );
+        }
         Ok(DispatchOpts {
             par,
             bw,
             probes: opts.probe_workers,
+            prec,
         })
     }
 
@@ -529,16 +687,31 @@ impl PresetEval {
 
     /// Engine forward: cached materialization + parallel row-blocks on
     /// an explicit engine config (the per-probe budget of a batched
-    /// dispatch, or the backend's current setting).
-    fn forward_f_with(&self, phi: &[f32], xs: &[f32], par: ParallelConfig) -> Vec<f32> {
+    /// dispatch, or the backend's current setting), in the dispatch's
+    /// precision tier. F32 is bit-identical to the PR-1 oracle;
+    /// Quantized runs the f32 engine on weights-quantized operands; F64
+    /// runs the double-precision oracle forward.
+    fn forward_f_with(
+        &self,
+        phi: &[f32],
+        xs: &[f32],
+        par: ParallelConfig,
+        prec: EvalPrecision,
+    ) -> Vec<f32> {
         let mat = self.materialized(phi);
-        self.net.forward_f(&mat, xs, par)
+        match prec {
+            EvalPrecision::F32 => self.net.forward_f(&mat, xs, par),
+            EvalPrecision::F64 => self.net.forward_f64(&mat, xs, par),
+            EvalPrecision::Quantized { bits } => {
+                self.net.forward_f(&mat.quantized(bits), xs, par)
+            }
+        }
     }
 
     /// Transformed solution u(Φ, x) for a flat batch of rows.
-    fn forward_u(&self, phi: &[f32], xs: &[f32], par: ParallelConfig) -> Vec<f32> {
+    fn forward_u(&self, phi: &[f32], xs: &[f32], par: ParallelConfig, prec: EvalPrecision) -> Vec<f32> {
         let d = self.problem.in_dim();
-        let f = self.forward_f_with(phi, xs, par);
+        let f = self.forward_f_with(phi, xs, par, prec);
         f.iter()
             .enumerate()
             .map(|(i, &fv)| self.problem.transform(fv, &xs[i * d..(i + 1) * d]))
@@ -585,9 +758,29 @@ impl PresetEval {
 
     /// Weighted boundary MSE over the projected rows appended by
     /// [`Self::append_boundary_rows`] (`rows0` = index of the first
-    /// boundary row in the dispatched batch).
-    fn boundary_mse(&self, f: &[f32], x_all: &[f32], rows0: usize, targets: &[f32]) -> f32 {
+    /// boundary row in the dispatched batch). The F64 tier reduces in
+    /// f64 ([`simd::sum_sq_f64`]); the cheaper tiers keep the
+    /// bit-exact sequential f32 accumulation.
+    fn boundary_mse(
+        &self,
+        f: &[f32],
+        x_all: &[f32],
+        rows0: usize,
+        targets: &[f32],
+        prec: EvalPrecision,
+    ) -> f32 {
         let d = self.problem.in_dim();
+        if prec == EvalPrecision::F64 {
+            let errs: Vec<f32> = targets
+                .iter()
+                .enumerate()
+                .map(|(p, tgt)| {
+                    let row = &x_all[(rows0 + p) * d..(rows0 + p + 1) * d];
+                    self.problem.transform(f[rows0 + p], row) - tgt
+                })
+                .collect();
+            return (simd::sum_sq_f64(&errs) / targets.len() as f64) as f32;
+        }
         let mut acc = 0.0f32;
         for (p, tgt) in targets.iter().enumerate() {
             let row = &x_all[(rows0 + p) * d..(rows0 + p + 1) * d];
@@ -601,13 +794,14 @@ impl PresetEval {
     /// BP-free FD-stencil loss (python `pinn.make_loss_fd`) under one
     /// dispatch's resolved options.
     fn loss_fd(&self, phi: &[f32], xr: &[f32], o: DispatchOpts) -> f32 {
-        self.loss_fd_impl(phi, xr, EvalPath::Engine(o.par), o.bw)
+        self.loss_fd_impl(phi, xr, EvalPath::Engine(o.par), o.bw, o.prec)
     }
 
     /// [`Self::loss_fd`] through the PR-1 scalar reference path (with
-    /// the preset's default boundary weight).
+    /// the preset's default boundary weight; always the F32 tier — the
+    /// reference IS the f32 oracle).
     fn loss_fd_reference(&self, phi: &[f32], xr: &[f32]) -> f32 {
-        self.loss_fd_impl(phi, xr, EvalPath::Reference, self.bc_default())
+        self.loss_fd_impl(phi, xr, EvalPath::Reference, self.bc_default(), EvalPrecision::F32)
     }
 
     /// Probe-parallel FD loss over K phase settings (flat (K, d) in
@@ -619,12 +813,19 @@ impl PresetEval {
         let d = phis.len() / k;
         let mut out = vec![0.0f32; k];
         for_probes_capped(o.par, o.probes, &mut out, |i, inner| {
-            self.loss_fd_impl(&phis[i * d..(i + 1) * d], xr, EvalPath::Engine(inner), o.bw)
+            self.loss_fd_impl(&phis[i * d..(i + 1) * d], xr, EvalPath::Engine(inner), o.bw, o.prec)
         });
         out
     }
 
-    fn loss_fd_impl(&self, phi: &[f32], xr: &[f32], path: EvalPath, bw: f32) -> f32 {
+    fn loss_fd_impl(
+        &self,
+        phi: &[f32],
+        xr: &[f32],
+        path: EvalPath,
+        bw: f32,
+        prec: EvalPrecision,
+    ) -> f32 {
         let d = self.problem.in_dim();
         let s = self.problem.n_stencil();
         let dim = self.problem.dim();
@@ -643,11 +844,15 @@ impl PresetEval {
         }
         let f = match path {
             EvalPath::Reference => self.net.forward_f_reference(phi, &x_all),
-            EvalPath::Engine(par) => self.forward_f_with(phi, &x_all, par),
+            EvalPath::Engine(par) => self.forward_f_with(phi, &x_all, par, prec),
         };
         let need_d2 = self.problem.needs_d2();
         let mut df = vec![0.0f32; d];
         let mut d2 = vec![0.0f32; dim];
+        // F64 tier: collect residuals and reduce in f64; cheaper tiers
+        // keep the bit-exact sequential f32 accumulation
+        let wide = prec == EvalPrecision::F64;
+        let mut rs = Vec::with_capacity(if wide { b } else { 0 });
         let mut acc = 0.0f32;
         for p in 0..b {
             let fr = &f[p * s..(p + 1) * s];
@@ -669,11 +874,19 @@ impl PresetEval {
             let r = self
                 .problem
                 .residual(f0, &df, lap, &d2, &xr[p * d..(p + 1) * d]);
-            acc += r * r;
+            if wide {
+                rs.push(r);
+            } else {
+                acc += r * r;
+            }
         }
-        let res = acc / b as f32;
+        let res = if wide {
+            (simd::sum_sq_f64(&rs) / b as f64) as f32
+        } else {
+            acc / b as f32
+        };
         if bw > 0.0 {
-            res + bw * self.boundary_mse(&f, &x_all, b * s, &targets)
+            res + bw * self.boundary_mse(&f, &x_all, b * s, &targets, prec)
         } else {
             res
         }
@@ -694,13 +907,21 @@ impl PresetEval {
         let d = phis.len() / k;
         let mut out = vec![0.0f32; k];
         for_probes_capped(o.par, o.probes, &mut out, |i, inner| {
-            self.loss_stein(&phis[i * d..(i + 1) * d], xr, z, inner, o.bw)
+            self.loss_stein(&phis[i * d..(i + 1) * d], xr, z, inner, o.bw, o.prec)
         });
         out
     }
 
     /// Gaussian-Stein estimator loss (python `pinn.make_loss_stein`).
-    fn loss_stein(&self, phi: &[f32], xr: &[f32], z: &[f32], par: ParallelConfig, bw: f32) -> f32 {
+    fn loss_stein(
+        &self,
+        phi: &[f32],
+        xr: &[f32],
+        z: &[f32],
+        par: ParallelConfig,
+        bw: f32,
+        prec: EvalPrecision,
+    ) -> f32 {
         let d = self.problem.in_dim();
         let dim = self.problem.dim();
         let q = self.stein_q;
@@ -726,13 +947,15 @@ impl PresetEval {
         if bw > 0.0 {
             self.append_boundary_rows(xr, &mut x_all, &mut targets);
         }
-        let f = self.forward_f_with(phi, &x_all, par);
+        let f = self.forward_f_with(phi, &x_all, par, prec);
         let z_sq: Vec<f32> = (0..q)
             .map(|k| z[k * d..k * d + dim].iter().map(|v| v * v).sum())
             .collect();
         let need_d2 = self.problem.needs_d2();
         let mut df = vec![0.0f32; d];
         let mut d2 = vec![0.0f32; dim];
+        let wide = prec == EvalPrecision::F64;
+        let mut rs = Vec::with_capacity(if wide { b } else { 0 });
         let mut acc = 0.0f32;
         for p in 0..b {
             let fr = &f[p * rows..(p + 1) * rows];
@@ -766,11 +989,19 @@ impl PresetEval {
             let r = self
                 .problem
                 .residual(f0, &df, lap, &d2, &xr[p * d..(p + 1) * d]);
-            acc += r * r;
+            if wide {
+                rs.push(r);
+            } else {
+                acc += r * r;
+            }
         }
-        let res = acc / b as f32;
+        let res = if wide {
+            (simd::sum_sq_f64(&rs) / b as f64) as f32
+        } else {
+            acc / b as f32
+        };
         if bw > 0.0 {
-            res + bw * self.boundary_mse(&f, &x_all, b * rows, &targets)
+            res + bw * self.boundary_mse(&f, &x_all, b * rows, &targets, prec)
         } else {
             res
         }
@@ -817,6 +1048,21 @@ impl PresetEval {
                     .with_context(|| format!("fused job {ji}"))?,
             );
         }
+        // precision changes RESULTS (unlike the latency-only options),
+        // so a fused pass must be precision-uniform: mixed gangs are a
+        // scheduler bug upstream — fail loudly instead of silently
+        // evaluating some jobs in the wrong tier
+        if let Some(first) = resolved.first() {
+            for (ji, o) in resolved.iter().enumerate() {
+                anyhow::ensure!(
+                    o.prec == first.prec,
+                    "fused job {ji}: precision {} differs from the gang's {} — \
+                     mixed-precision jobs must not be fused",
+                    o.prec,
+                    first.prec
+                );
+            }
+        }
         // flat (job, probe) index over the union of all jobs' probes
         let mut index = Vec::new();
         for (ji, j) in jobs.iter().enumerate() {
@@ -832,8 +1078,10 @@ impl PresetEval {
             let o = &resolved[ji];
             let phi = &j.phis[p * d..(p + 1) * d];
             match j.kind {
-                FusedLossKind::Fd => self.loss_fd_impl(phi, j.xr, EvalPath::Engine(inner), o.bw),
-                FusedLossKind::Stein => self.loss_stein(phi, j.xr, j.z, inner, o.bw),
+                FusedLossKind::Fd => {
+                    self.loss_fd_impl(phi, j.xr, EvalPath::Engine(inner), o.bw, o.prec)
+                }
+                FusedLossKind::Stein => self.loss_stein(phi, j.xr, j.z, inner, o.bw, o.prec),
             }
         });
         // split the flat probe losses back per job
@@ -847,8 +1095,19 @@ impl PresetEval {
     }
 
     /// Validation MSE vs exact-solution targets (python `make_validate`).
-    fn validate(&self, phi: &[f32], xv: &[f32], uv: &[f32], par: ParallelConfig) -> f32 {
-        let u = self.forward_u(phi, xv, par);
+    fn validate(
+        &self,
+        phi: &[f32],
+        xv: &[f32],
+        uv: &[f32],
+        par: ParallelConfig,
+        prec: EvalPrecision,
+    ) -> f32 {
+        let u = self.forward_u(phi, xv, par, prec);
+        if prec == EvalPrecision::F64 {
+            let errs: Vec<f32> = u.iter().zip(uv).map(|(a, b)| a - b).collect();
+            return (simd::sum_sq_f64(&errs) / uv.len() as f64) as f32;
+        }
         let mut acc = 0.0f32;
         for (a, b) in u.iter().zip(uv) {
             let e = a - b;
@@ -896,21 +1155,21 @@ impl Entry for NativeEntry {
             .with_context(|| format!("entry '{}'", self.meta.name))?;
         self.dispatches.fetch_add(1, Ordering::Relaxed);
         let out = match self.kind {
-            EntryKind::Forward => self.eval.forward_u(inputs[0], inputs[1], o.par),
+            EntryKind::Forward => self.eval.forward_u(inputs[0], inputs[1], o.par, o.prec),
             EntryKind::Loss => vec![self.eval.loss_fd(inputs[0], inputs[1], o)],
             EntryKind::LossMulti => {
                 let k = self.meta.inputs[0].1[0]; // phis is (K, d)
                 self.eval.loss_fd_batch(inputs[0], k, inputs[1], o)
             }
             EntryKind::LossStein => {
-                vec![self.eval.loss_stein(inputs[0], inputs[1], inputs[2], o.par, o.bw)]
+                vec![self.eval.loss_stein(inputs[0], inputs[1], inputs[2], o.par, o.bw, o.prec)]
             }
             EntryKind::LossSteinMulti => {
                 let k = self.meta.inputs[0].1[0]; // phis is (K, d)
                 self.eval.loss_stein_batch(inputs[0], k, inputs[1], inputs[2], o)
             }
             EntryKind::Validate => {
-                vec![self.eval.validate(inputs[0], inputs[1], inputs[2], o.par)]
+                vec![self.eval.validate(inputs[0], inputs[1], inputs[2], o.par, o.prec)]
             }
         };
         Ok(vec![out])
@@ -2010,5 +2269,169 @@ mod tests {
                 assert!(err.contains("no soft constraints"), "{err}");
             }
         }
+    }
+
+    /// An explicit `--precision f32` must be the default tier, bit for
+    /// bit: the F32 path IS the engine that every golden fixture pins.
+    #[test]
+    fn precision_f32_explicit_is_bit_identical_to_default() {
+        let be = NativeBackend::builtin();
+        for preset in ["tonn_micro", "tonn_micro_ac"] {
+            let pm = be.manifest().preset(preset).unwrap();
+            let mut rng = Rng::new(61);
+            let phi = pm.layout.init_vector(&mut rng);
+            let o32 = EvalOptions::NONE.with_precision(EvalPrecision::F32);
+            for entry_name in ["forward", "loss", "loss_stein"] {
+                let e = be.entry(preset, entry_name).unwrap();
+                let mut xs = vec![0.0f32; e.meta().input_len(1)];
+                rng.fill_uniform(&mut xs, 0.05, 0.95);
+                let mut z = vec![0.0f32; e.meta().inputs.get(2).map_or(0, |_| e.meta().input_len(2))];
+                rng.fill_normal(&mut z);
+                let ins: Vec<&[f32]> = if z.is_empty() {
+                    vec![&phi, &xs]
+                } else {
+                    vec![&phi, &xs, &z]
+                };
+                let base = e.run(&ins).unwrap();
+                let explicit = e.run_with(&ins, &o32).unwrap();
+                assert_eq!(base, explicit, "{preset}/{entry_name}: explicit f32 drifted");
+            }
+        }
+    }
+
+    /// The f64 oracle tier must stay close to the default f32 engine:
+    /// same math at higher precision, so losses agree within a loose
+    /// rounding budget (exact bit equality is NOT expected).
+    #[test]
+    fn precision_f64_oracle_tracks_f32_within_bound() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let mut rng = Rng::new(67);
+        let phi = pm.layout.init_vector(&mut rng);
+        let o64 = EvalOptions::NONE.with_precision(EvalPrecision::F64);
+
+        let fwd = be.entry("tonn_micro", "forward").unwrap();
+        let mut x = vec![0.0f32; fwd.meta().input_len(1)];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let u32_ = fwd.run1(&[&phi, &x]).unwrap();
+        let u64_ = fwd.run1_with(&[&phi, &x], &o64).unwrap();
+        assert_eq!(u32_.len(), u64_.len());
+        for (i, (a, b)) in u32_.iter().zip(&u64_).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-3 * a.abs().max(1.0),
+                "row {i}: f32 {a} vs f64 {b}"
+            );
+        }
+        // hard Dirichlet rows are exactly zero in every tier
+        let mut xb = x.clone();
+        xb[0] = 0.0;
+        assert_eq!(fwd.run1_with(&[&phi, &xb], &o64).unwrap()[0], 0.0);
+
+        let loss = be.entry("tonn_micro", "loss").unwrap();
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        let l32 = loss.run_scalar(&[&phi, &xr]).unwrap();
+        let l64 = loss.run_scalar_with(&[&phi, &xr], &o64).unwrap();
+        assert!(l64.is_finite() && l64 >= 0.0);
+        assert!(
+            (l32 - l64).abs() <= 0.05 * l64.abs().max(1.0),
+            "loss tiers diverged: f32 {l32} vs f64 {l64}"
+        );
+        // the oracle is deterministic like every other tier
+        assert_eq!(l64, loss.run_scalar_with(&[&phi, &xr], &o64).unwrap());
+    }
+
+    /// Quantized tiers are deterministic (fixed per-tensor grid, cached
+    /// per bit depth), approach the f32 engine as bits grow, and refuse
+    /// out-of-range bit depths loudly.
+    #[test]
+    fn precision_quantized_is_deterministic_and_bounded() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let mut rng = Rng::new(71);
+        let phi = pm.layout.init_vector(&mut rng);
+        let loss = be.entry("tonn_micro", "loss").unwrap();
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        let l32 = loss.run_scalar(&[&phi, &xr]).unwrap();
+
+        let q16 = EvalOptions::NONE.with_precision(EvalPrecision::Quantized { bits: 16 });
+        let lq = loss.run_scalar_with(&[&phi, &xr], &q16).unwrap();
+        assert!(lq.is_finite() && lq >= 0.0);
+        assert_eq!(lq, loss.run_scalar_with(&[&phi, &xr], &q16).unwrap());
+        // documented bound: 16-bit weights stay within 25% of the engine
+        assert!(
+            (lq - l32).abs() <= 0.25 * l32.abs().max(1.0),
+            "q16 loss out of bound: {lq} vs f32 {l32}"
+        );
+        // coarse grids drift further than fine ones (monotone in bits is
+        // not guaranteed pointwise, but q3 must be the far outlier)
+        let q3 = EvalOptions::NONE.with_precision(EvalPrecision::Quantized { bits: 3 });
+        let lq3 = loss.run_scalar_with(&[&phi, &xr], &q3).unwrap();
+        assert!(lq3.is_finite());
+        assert!(
+            (lq - l32).abs() <= (lq3 - l32).abs().max(1e-6),
+            "q16 ({lq}) further from f32 ({l32}) than q3 ({lq3})"
+        );
+
+        // out-of-range depths are rejected at resolve time, loudly
+        for bits in [0u8, 1, 25] {
+            let bad = EvalOptions::NONE.with_precision(EvalPrecision::Quantized { bits });
+            let err = format!("{:#}", loss.run_scalar_with(&[&phi, &xr], &bad).unwrap_err());
+            assert!(err.contains("out of range"), "bits={bits}: {err}");
+        }
+    }
+
+    /// A fused pass must refuse jobs whose resolved precisions differ —
+    /// one materialized operand set serves the whole gang, so a mixed
+    /// gang would silently evaluate some jobs in the wrong tier.
+    #[test]
+    fn precision_fused_pass_rejects_mixed_tiers() {
+        let be = NativeBackend::builtin();
+        let pm = be.manifest().preset("tonn_micro").unwrap();
+        let d = pm.layout.param_dim;
+        let mut rng = Rng::new(83);
+        let lm = be.entry("tonn_micro", "loss_multi").unwrap();
+        let mut phis = vec![0.0f32; K_MULTI * d];
+        rng.fill_normal(&mut phis);
+        let mut xr = vec![0.0f32; lm.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        let z: Vec<f32> = Vec::new();
+        let job = |opts: EvalOptions| FusedLossJob {
+            kind: FusedLossKind::Fd,
+            phis: &phis,
+            k: K_MULTI,
+            xr: &xr,
+            z: &z,
+            opts,
+        };
+
+        // explicit F32 next to default (= F32) fuses fine
+        let ok = be
+            .loss_fused(
+                "tonn_micro",
+                &[job(EvalOptions::NONE), job(EvalOptions::NONE.with_precision(EvalPrecision::F32))],
+            )
+            .unwrap();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(ok[0], ok[1]);
+
+        // F64 next to default must fail loudly, naming the tiers
+        let err = format!(
+            "{:#}",
+            be.loss_fused(
+                "tonn_micro",
+                &[job(EvalOptions::NONE), job(EvalOptions::NONE.with_precision(EvalPrecision::F64))],
+            )
+            .unwrap_err()
+        );
+        assert!(err.contains("mixed-precision"), "{err}");
+        assert!(err.contains("f64"), "{err}");
+
+        // a uniformly-quantized gang is fine — uniformity, not F32, is
+        // the requirement
+        let q = EvalOptions::NONE.with_precision(EvalPrecision::Quantized { bits: 16 });
+        let okq = be.loss_fused("tonn_micro", &[job(q), job(q)]).unwrap();
+        assert_eq!(okq[0], okq[1]);
     }
 }

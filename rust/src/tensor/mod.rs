@@ -5,6 +5,8 @@
 //! the photonics census and coordinator need, and (b) independent oracles
 //! for integration tests against the artifacts' numerics.
 
+pub mod simd;
+
 /// A TT-matrix shape: `W (M x N)` with `M = prod(factors_m)`,
 /// `N = prod(factors_n)`, carried ranks `r_0..r_L` (r_0 = r_L = 1).
 #[derive(Clone, Debug, PartialEq)]
@@ -213,6 +215,12 @@ impl Mat {
 /// engine's parallel ≡ sequential contract). Four output rows share each
 /// sweep of `b` (register blocking: one load of a `b` row feeds four
 /// accumulator rows).
+///
+/// Dispatches once per process to a wide kernel ([`simd::kernel_path`]):
+/// because the wide paths keep the same per-element ascending-`k`
+/// mul-then-add order, they are **bit-identical** to the scalar kernel
+/// (property-tested in [`simd`]), so dispatch never changes results —
+/// only latency. `PHOTON_FORCE_SCALAR=1` pins the scalar path.
 pub fn gemm_rows(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f32]) {
     let n = b.cols;
     assert!(k_used <= a_cols && k_used <= b.rows, "gemm_rows: k bounds");
@@ -220,6 +228,16 @@ pub fn gemm_rows(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f3
     let rows = out.len() / n;
     assert!(rows * a_cols <= a.len(), "gemm_rows: a too short");
     out.fill(0.0);
+    match simd::kernel_path() {
+        simd::KernelPath::Scalar => gemm_rows_scalar(a, a_cols, k_used, b, out),
+        path => simd::gemm_rows_wide(a, a_cols, k_used, b, out, path),
+    }
+}
+
+/// The scalar GEMM body (PR-1 reference): assumes `out` is zeroed and
+/// bounds are checked by the [`gemm_rows`] dispatcher.
+pub(crate) fn gemm_rows_scalar(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f32]) {
+    let n = b.cols;
     let mut rest = &mut out[..];
     let mut r0 = 0usize;
     while rest.len() >= 4 * n {

@@ -1,0 +1,482 @@
+//! Runtime-dispatched wide kernels for the native evaluation engine.
+//!
+//! # The bit-exactness contract
+//!
+//! Every f32 kernel here accumulates each output element's terms in
+//! ascending `k` order with a separate multiply and add per term —
+//! exactly the evaluation order of the scalar [`gemm_rows`] kernel and
+//! of [`Mat::matmul`]. Widening only changes *which column* a lane
+//! handles, never the order in which one element's partial sums fold,
+//! so the wide paths are **bit-identical** to the scalar path and can
+//! run on the engine's default tier without breaking any golden /
+//! parallel-equivalence test. For the same reason FMA is deliberately
+//! excluded everywhere (`_mm256_fmadd_ps` rounds once where `mul` +
+//! `add` round twice, which would change low-order bits).
+//!
+//! The f64 reduction helpers ([`sum_sq_f64`]) are the one exception:
+//! on wide paths they fold through fixed 4-lane accumulators, which
+//! re-associates the sum. They therefore back only the F64 *oracle*
+//! precision tier, whose results are compared by error bound, never by
+//! bit equality.
+//!
+//! # Dispatch
+//!
+//! [`kernel_path`] is detected once per process: `PHOTON_FORCE_SCALAR=1`
+//! pins the scalar path (the CI precision-matrix job uses this to test
+//! both paths on one machine); otherwise x86-64 machines with AVX2 take
+//! the intrinsics path and everything else takes the portable chunked
+//! path, which the autovectorizer handles well.
+//!
+//! [`gemm_rows`]: super::gemm_rows
+//! [`Mat::matmul`]: super::Mat::matmul
+
+use std::sync::OnceLock;
+
+use super::Mat;
+
+/// Which kernel implementation the process dispatches to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelPath {
+    /// Plain scalar loops — the PR-1 reference kernel, also the forced
+    /// path under `PHOTON_FORCE_SCALAR=1`.
+    Scalar,
+    /// Portable chunked/unrolled lanes (8-wide f32, 4-wide f64) written
+    /// so the autovectorizer can emit SIMD on any target.
+    Portable,
+    /// `std::arch` AVX2 intrinsics (f32 GEMM only), selected via
+    /// `is_x86_feature_detected!` on x86-64.
+    Avx2,
+}
+
+impl std::fmt::Display for KernelPath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            KernelPath::Scalar => "scalar",
+            KernelPath::Portable => "portable",
+            KernelPath::Avx2 => "avx2",
+        })
+    }
+}
+
+/// The process-wide kernel path, detected once (first call) and cached.
+pub fn kernel_path() -> KernelPath {
+    static PATH: OnceLock<KernelPath> = OnceLock::new();
+    *PATH.get_or_init(detect)
+}
+
+fn detect() -> KernelPath {
+    if std::env::var("PHOTON_FORCE_SCALAR").as_deref() == Ok("1") {
+        return KernelPath::Scalar;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return KernelPath::Avx2;
+        }
+    }
+    KernelPath::Portable
+}
+
+/// Wide f32 GEMM body — same signature contract as the scalar kernel
+/// (`out` pre-zeroed by the [`super::gemm_rows`] dispatcher, bounds
+/// already asserted). Bit-identical to the scalar path for any input.
+pub(crate) fn gemm_rows_wide(
+    a: &[f32],
+    a_cols: usize,
+    k_used: usize,
+    b: &Mat,
+    out: &mut [f32],
+    path: KernelPath,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if path == KernelPath::Avx2 {
+            // SAFETY: Avx2 is only ever produced by detect() after
+            // is_x86_feature_detected!("avx2"), or by tests that check
+            // the same cpuid themselves.
+            unsafe { avx2::gemm_rows(a, a_cols, k_used, b, out) };
+            return;
+        }
+    }
+    let _ = path;
+    portable::gemm_rows(a, a_cols, k_used, b, out);
+}
+
+mod portable {
+    use super::Mat;
+
+    const LANES: usize = 8;
+
+    /// `row[j] += x * brow[j]` with an 8-wide unrolled body. Separate
+    /// mul + add per element keeps bit parity with the scalar kernel.
+    #[inline(always)]
+    fn axpy(row: &mut [f32], x: f32, brow: &[f32]) {
+        let mut chunks = row.chunks_exact_mut(LANES);
+        let mut bchunks = brow.chunks_exact(LANES);
+        for (o, bv) in (&mut chunks).zip(&mut bchunks) {
+            for l in 0..LANES {
+                o[l] += x * bv[l];
+            }
+        }
+        for (o, &bv) in chunks.into_remainder().iter_mut().zip(bchunks.remainder()) {
+            *o += x * bv;
+        }
+    }
+
+    pub(super) fn gemm_rows(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f32]) {
+        let n = b.cols;
+        let mut rest = &mut out[..];
+        let mut r0 = 0usize;
+        while rest.len() >= 4 * n {
+            let tmp = std::mem::take(&mut rest);
+            let (quad, tail) = tmp.split_at_mut(4 * n);
+            rest = tail;
+            let (q01, q23) = quad.split_at_mut(2 * n);
+            let (o0, o1) = q01.split_at_mut(n);
+            let (o2, o3) = q23.split_at_mut(n);
+            let a0 = &a[r0 * a_cols..r0 * a_cols + k_used];
+            let a1 = &a[(r0 + 1) * a_cols..(r0 + 1) * a_cols + k_used];
+            let a2 = &a[(r0 + 2) * a_cols..(r0 + 2) * a_cols + k_used];
+            let a3 = &a[(r0 + 3) * a_cols..(r0 + 3) * a_cols + k_used];
+            for k in 0..k_used {
+                let brow = &b.data[k * n..(k + 1) * n];
+                axpy(o0, a0[k], brow);
+                axpy(o1, a1[k], brow);
+                axpy(o2, a2[k], brow);
+                axpy(o3, a3[k], brow);
+            }
+            r0 += 4;
+        }
+        while !rest.is_empty() {
+            let tmp = std::mem::take(&mut rest);
+            let (row, tail) = tmp.split_at_mut(n);
+            rest = tail;
+            let arow = &a[r0 * a_cols..r0 * a_cols + k_used];
+            for (k, &x) in arow.iter().enumerate() {
+                axpy(row, x, &b.data[k * n..(k + 1) * n]);
+            }
+            r0 += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::Mat;
+    use std::arch::x86_64::*;
+
+    /// AVX2 f32 GEMM. One `#[target_feature]` fn holds both the quad
+    /// and remainder loops so the whole kernel inlines under the AVX2
+    /// code model. Uses mul + add (NOT fmadd) to stay bit-identical to
+    /// the scalar kernel.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support (`is_x86_feature_detected!`).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn gemm_rows(
+        a: &[f32],
+        a_cols: usize,
+        k_used: usize,
+        b: &Mat,
+        out: &mut [f32],
+    ) {
+        let n = b.cols;
+        let quads = n / 8;
+        let mut rest = &mut out[..];
+        let mut r0 = 0usize;
+        while rest.len() >= 4 * n {
+            let tmp = std::mem::take(&mut rest);
+            let (quad, tail) = tmp.split_at_mut(4 * n);
+            rest = tail;
+            let (q01, q23) = quad.split_at_mut(2 * n);
+            let (o0, o1) = q01.split_at_mut(n);
+            let (o2, o3) = q23.split_at_mut(n);
+            let a0 = &a[r0 * a_cols..r0 * a_cols + k_used];
+            let a1 = &a[(r0 + 1) * a_cols..(r0 + 1) * a_cols + k_used];
+            let a2 = &a[(r0 + 2) * a_cols..(r0 + 2) * a_cols + k_used];
+            let a3 = &a[(r0 + 3) * a_cols..(r0 + 3) * a_cols + k_used];
+            for k in 0..k_used {
+                let brow = &b.data[k * n..(k + 1) * n];
+                let (x0, x1, x2, x3) = (
+                    _mm256_set1_ps(a0[k]),
+                    _mm256_set1_ps(a1[k]),
+                    _mm256_set1_ps(a2[k]),
+                    _mm256_set1_ps(a3[k]),
+                );
+                for q in 0..quads {
+                    let j = q * 8;
+                    let bv = _mm256_loadu_ps(brow.as_ptr().add(j));
+                    let p0 = _mm256_loadu_ps(o0.as_ptr().add(j));
+                    let p1 = _mm256_loadu_ps(o1.as_ptr().add(j));
+                    let p2 = _mm256_loadu_ps(o2.as_ptr().add(j));
+                    let p3 = _mm256_loadu_ps(o3.as_ptr().add(j));
+                    _mm256_storeu_ps(o0.as_mut_ptr().add(j), _mm256_add_ps(p0, _mm256_mul_ps(x0, bv)));
+                    _mm256_storeu_ps(o1.as_mut_ptr().add(j), _mm256_add_ps(p1, _mm256_mul_ps(x1, bv)));
+                    _mm256_storeu_ps(o2.as_mut_ptr().add(j), _mm256_add_ps(p2, _mm256_mul_ps(x2, bv)));
+                    _mm256_storeu_ps(o3.as_mut_ptr().add(j), _mm256_add_ps(p3, _mm256_mul_ps(x3, bv)));
+                }
+                for j in quads * 8..n {
+                    let bv = brow[j];
+                    o0[j] += a0[k] * bv;
+                    o1[j] += a1[k] * bv;
+                    o2[j] += a2[k] * bv;
+                    o3[j] += a3[k] * bv;
+                }
+            }
+            r0 += 4;
+        }
+        while !rest.is_empty() {
+            let tmp = std::mem::take(&mut rest);
+            let (row, tail) = tmp.split_at_mut(n);
+            rest = tail;
+            let arow = &a[r0 * a_cols..r0 * a_cols + k_used];
+            for (k, &x) in arow.iter().enumerate() {
+                let brow = &b.data[k * n..(k + 1) * n];
+                let xv = _mm256_set1_ps(x);
+                for q in 0..quads {
+                    let j = q * 8;
+                    let bv = _mm256_loadu_ps(brow.as_ptr().add(j));
+                    let pv = _mm256_loadu_ps(row.as_ptr().add(j));
+                    _mm256_storeu_ps(row.as_mut_ptr().add(j), _mm256_add_ps(pv, _mm256_mul_ps(xv, bv)));
+                }
+                for j in quads * 8..n {
+                    row[j] += x * brow[j];
+                }
+            }
+            r0 += 1;
+        }
+    }
+}
+
+/// f64 GEMM for the F64 oracle tier: `out[r][j] = Σ_{k < k_used}
+/// a[r][k] · bt[k][j]` with `bt` a row-major `(k, n)` operand (already
+/// transposed like the f32 kernel's `b`). Scalar and portable paths
+/// only — the oracle tier is bounded-error, never a hot loop, so the
+/// unsafe AVX2 surface stays f32-only.
+pub fn gemm_rows_f64(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n: usize, out: &mut [f64]) {
+    assert!(k_used <= a_cols, "gemm_rows_f64: k bounds");
+    assert!(n > 0 && out.len() % n == 0, "gemm_rows_f64: out shape");
+    assert!(k_used * n <= bt.len(), "gemm_rows_f64: b too short");
+    let rows = out.len() / n;
+    assert!(rows * a_cols <= a.len(), "gemm_rows_f64: a too short");
+    out.fill(0.0);
+    match kernel_path() {
+        KernelPath::Scalar => gemm_rows_f64_scalar(a, a_cols, k_used, bt, n, out),
+        _ => gemm_rows_f64_portable(a, a_cols, k_used, bt, n, out),
+    }
+}
+
+fn gemm_rows_f64_scalar(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n: usize, out: &mut [f64]) {
+    for (r, row) in out.chunks_exact_mut(n).enumerate() {
+        let arow = &a[r * a_cols..r * a_cols + k_used];
+        for (k, &x) in arow.iter().enumerate() {
+            let brow = &bt[k * n..(k + 1) * n];
+            for (o, &bv) in row.iter_mut().zip(brow) {
+                *o += x * bv;
+            }
+        }
+    }
+}
+
+fn gemm_rows_f64_portable(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n: usize, out: &mut [f64]) {
+    const LANES: usize = 4;
+    for (r, row) in out.chunks_exact_mut(n).enumerate() {
+        let arow = &a[r * a_cols..r * a_cols + k_used];
+        for (k, &x) in arow.iter().enumerate() {
+            let brow = &bt[k * n..(k + 1) * n];
+            let mut chunks = row.chunks_exact_mut(LANES);
+            let mut bchunks = brow.chunks_exact(LANES);
+            for (o, bv) in (&mut chunks).zip(&mut bchunks) {
+                for l in 0..LANES {
+                    o[l] += x * bv[l];
+                }
+            }
+            for (o, &bv) in chunks.into_remainder().iter_mut().zip(bchunks.remainder()) {
+                *o += x * bv;
+            }
+        }
+    }
+}
+
+/// Σ x² in f64, for the F64 oracle tier's loss reductions. The scalar
+/// path folds sequentially (one accumulator); wide paths fold through
+/// four fixed lanes — re-associated, so callers must compare results by
+/// bound, not bit equality. Lane count is fixed (not data-length
+/// dependent), so a given path is still deterministic run-to-run.
+pub fn sum_sq_f64(xs: &[f32]) -> f64 {
+    match kernel_path() {
+        KernelPath::Scalar => xs.iter().map(|&x| x as f64 * x as f64).sum(),
+        _ => sum_sq_f64_wide(xs),
+    }
+}
+
+fn sum_sq_f64_wide(xs: &[f32]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let chunks = xs.chunks_exact(4);
+    let tail = chunks.remainder();
+    for c in chunks {
+        for l in 0..4 {
+            let v = c[l] as f64;
+            acc[l] += v * v;
+        }
+    }
+    let mut t = 0.0f64;
+    for &x in tail {
+        t += x as f64 * x as f64;
+    }
+    (acc[0] + acc[1]) + (acc[2] + acc[3]) + t
+}
+
+/// Sequential f64 dot product (readout of the F64 oracle forward pass).
+pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::gemm_rows_scalar;
+    use crate::util::{prop, rng::Rng};
+
+    fn random_case(r: &mut Rng) -> (Vec<f32>, usize, usize, Mat) {
+        // odd/remainder-heavy shapes: rows crosses the quad boundary,
+        // n crosses the 8-lane boundary, k_used < a_cols exercises the
+        // zero-padded structural-zero contract.
+        let rows = 1 + r.below(13);
+        let k_used = 1 + r.below(7);
+        let pad = r.below(4);
+        let a_cols = k_used + pad;
+        let n = 1 + r.below(19);
+        let mut a = vec![0.0f32; rows * a_cols];
+        r.fill_normal(&mut a);
+        for i in 0..rows {
+            for k in k_used..a_cols {
+                a[i * a_cols + k] = 0.0;
+            }
+        }
+        let mut b = Mat::zeros(a_cols, n);
+        r.fill_normal(&mut b.data);
+        (a, a_cols, k_used, b)
+    }
+
+    #[test]
+    fn wide_gemm_portable_is_bit_identical_to_scalar() {
+        prop::check(60, |r| {
+            let (a, a_cols, k_used, b) = random_case(r);
+            let rows = a.len() / a_cols;
+            let n = b.cols;
+            let mut want = vec![0.0f32; rows * n];
+            gemm_rows_scalar(&a, a_cols, k_used, &b, &mut want);
+            let mut got = vec![0.0f32; rows * n];
+            gemm_rows_wide(&a, a_cols, k_used, &b, &mut got, KernelPath::Portable);
+            for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "[{i}] portable {x} != scalar {y} (rows={rows} k={k_used} n={n})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    #[cfg(target_arch = "x86_64")]
+    fn wide_gemm_avx2_is_bit_identical_to_scalar() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("avx2 not available; skipping");
+            return;
+        }
+        prop::check(60, |r| {
+            let (a, a_cols, k_used, b) = random_case(r);
+            let rows = a.len() / a_cols;
+            let n = b.cols;
+            let mut want = vec![0.0f32; rows * n];
+            gemm_rows_scalar(&a, a_cols, k_used, &b, &mut want);
+            let mut got = vec![0.0f32; rows * n];
+            gemm_rows_wide(&a, a_cols, k_used, &b, &mut got, KernelPath::Avx2);
+            for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "[{i}] avx2 {x} != scalar {y} (rows={rows} k={k_used} n={n})"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn wide_gemm_f64_portable_matches_scalar_bitwise() {
+        prop::check(40, |r| {
+            let rows = 1 + r.below(9);
+            let k_used = 1 + r.below(6);
+            let pad = r.below(3);
+            let a_cols = k_used + pad;
+            let n = 1 + r.below(11);
+            let mut af = vec![0.0f32; rows * a_cols];
+            r.fill_normal(&mut af);
+            let a: Vec<f64> = af.iter().map(|&x| x as f64).collect();
+            let mut btf = vec![0.0f32; a_cols * n];
+            r.fill_normal(&mut btf);
+            let bt: Vec<f64> = btf.iter().map(|&x| x as f64).collect();
+            let mut want = vec![0.0f64; rows * n];
+            gemm_rows_f64_scalar(&a, a_cols, k_used, &bt, n, &mut want);
+            let mut got = vec![0.0f64; rows * n];
+            gemm_rows_f64_portable(&a, a_cols, k_used, &bt, n, &mut got);
+            for (i, (x, y)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    x.to_bits() == y.to_bits(),
+                    "[{i}] f64 portable {x} != scalar {y}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn wide_gemm_zero_padded_tail_is_ignored() {
+        // k_used < a_cols with GARBAGE (not zero) in the padded tail:
+        // the kernels must never read past k_used.
+        let mut r = Rng::new(7);
+        let (rows, k_used, a_cols, n) = (5, 3, 6, 9);
+        let mut a = vec![0.0f32; rows * a_cols];
+        r.fill_normal(&mut a);
+        for i in 0..rows {
+            for k in k_used..a_cols {
+                a[i * a_cols + k] = f32::NAN; // poison
+            }
+        }
+        let mut b = Mat::zeros(a_cols, n);
+        r.fill_normal(&mut b.data);
+        let mut want = vec![0.0f32; rows * n];
+        gemm_rows_scalar(&a, a_cols, k_used, &b, &mut want);
+        assert!(want.iter().all(|x| x.is_finite()), "scalar read the tail");
+        let mut got = vec![0.0f32; rows * n];
+        gemm_rows_wide(&a, a_cols, k_used, &b, &mut got, KernelPath::Portable);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            want.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn wide_sum_sq_matches_sequential_within_bound() {
+        prop::check(30, |r| {
+            let len = 1 + r.below(200);
+            let mut xs = vec![0.0f32; len];
+            r.fill_normal(&mut xs);
+            let seq: f64 = xs.iter().map(|&x| x as f64 * x as f64).sum();
+            let wide = sum_sq_f64_wide(&xs);
+            // f64 accumulation of ≤200 f32-derived terms: re-association
+            // error is far below 1e-9 relative.
+            assert!((seq - wide).abs() <= 1e-9 * seq.max(1.0), "{seq} vs {wide}");
+        });
+    }
+
+    #[test]
+    fn kernel_path_detection_is_consistent() {
+        // cached value is stable and respects the force-scalar override
+        let p1 = kernel_path();
+        let p2 = kernel_path();
+        assert_eq!(p1, p2);
+        if std::env::var("PHOTON_FORCE_SCALAR").as_deref() == Ok("1") {
+            assert_eq!(p1, KernelPath::Scalar);
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Registry-wide precision-tier bounds — the accuracy half of the
+//! SIMD + reduced-precision engine's contract (`runtime::EvalPrecision`):
+//!
+//! * the default tier (F32) is the engine every golden fixture pins, so
+//!   an explicit `--precision f32` must be bit-identical to no option
+//!   at all, on EVERY preset and entry;
+//! * the F64 oracle runs the same math in double precision — losses
+//!   must agree with the engine within a small rounding budget, never
+//!   bitwise (a bitwise match would mean the tier is fake);
+//! * the quantized tier (weights-only, per-tensor symmetric grid) at 16
+//!   bits must stay within the documented 25% relative envelope of the
+//!   engine on every preset, and must be deterministic.
+//!
+//! The CI precision matrix runs this file twice: once on the wide
+//! (portable/AVX2) kernels and once under `PHOTON_FORCE_SCALAR=1`, so
+//! the bounds double as a same-results check across kernel paths.
+
+use photon_pinn::runtime::{Backend, EvalOptions, EvalPrecision, NativeBackend};
+use photon_pinn::util::rng::Rng;
+
+/// |a − b| within `rel` of max(|b|, 1) — loose relative error with an
+/// absolute floor for near-zero losses.
+fn within(a: f32, b: f32, rel: f32) -> bool {
+    (a - b).abs() <= rel * b.abs().max(1.0)
+}
+
+fn preset_names(be: &NativeBackend) -> Vec<String> {
+    let mut names: Vec<String> = be.manifest().presets.keys().cloned().collect();
+    names.sort();
+    names
+}
+
+#[test]
+fn precision_explicit_f32_is_bitwise_default_everywhere() {
+    let be = NativeBackend::builtin();
+    let o32 = EvalOptions::NONE.with_precision(EvalPrecision::F32);
+    for preset in preset_names(&be) {
+        let pm = be.manifest().preset(&preset).unwrap();
+        let mut rng = Rng::new(101);
+        let phi = pm.layout.init_vector(&mut rng);
+
+        let fwd = be.entry(&preset, "forward").unwrap();
+        let mut x = vec![0.0f32; fwd.meta().input_len(1)];
+        rng.fill_uniform(&mut x, 0.05, 0.95);
+        assert_eq!(
+            fwd.run1(&[&phi, &x]).unwrap(),
+            fwd.run1_with(&[&phi, &x], &o32).unwrap(),
+            "{preset}: forward drifted under explicit f32"
+        );
+
+        let loss = be.entry(&preset, "loss").unwrap();
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        assert_eq!(
+            loss.run_scalar(&[&phi, &xr]).unwrap(),
+            loss.run_scalar_with(&[&phi, &xr], &o32).unwrap(),
+            "{preset}: loss drifted under explicit f32"
+        );
+
+        let stein = be.entry(&preset, "loss_stein").unwrap();
+        let mut z = vec![0.0f32; stein.meta().input_len(2)];
+        rng.fill_normal(&mut z);
+        assert_eq!(
+            stein.run_scalar(&[&phi, &xr, &z]).unwrap(),
+            stein.run_scalar_with(&[&phi, &xr, &z], &o32).unwrap(),
+            "{preset}: stein loss drifted under explicit f32"
+        );
+    }
+}
+
+#[test]
+fn precision_f64_oracle_bounds_the_engine_on_every_preset() {
+    let be = NativeBackend::builtin();
+    let o64 = EvalOptions::NONE.with_precision(EvalPrecision::F64);
+    for preset in preset_names(&be) {
+        let pm = be.manifest().preset(&preset).unwrap();
+        let mut rng = Rng::new(103);
+        let phi = pm.layout.init_vector(&mut rng);
+        let loss = be.entry(&preset, "loss").unwrap();
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+
+        let l32 = loss.run_scalar(&[&phi, &xr]).unwrap();
+        let l64 = loss.run_scalar_with(&[&phi, &xr], &o64).unwrap();
+        assert!(l64.is_finite() && l64 >= 0.0, "{preset}: f64 loss {l64}");
+        // FD stencils amplify forward rounding by h⁻²; 5% of the oracle
+        // (with an absolute floor of 0.05) is generous for every
+        // registered problem yet far below any real tier bug
+        assert!(
+            within(l32, l64, 0.05),
+            "{preset}: engine {l32} outside the f64 oracle envelope {l64}"
+        );
+        // same budget through the Stein estimator's reduction
+        let stein = be.entry(&preset, "loss_stein").unwrap();
+        let mut z = vec![0.0f32; stein.meta().input_len(2)];
+        rng.fill_normal(&mut z);
+        let s32 = stein.run_scalar(&[&phi, &xr, &z]).unwrap();
+        let s64 = stein.run_scalar_with(&[&phi, &xr, &z], &o64).unwrap();
+        assert!(
+            within(s32, s64, 0.05),
+            "{preset}: stein engine {s32} vs oracle {s64}"
+        );
+    }
+}
+
+#[test]
+fn precision_q16_round_trips_within_documented_bound_everywhere() {
+    let be = NativeBackend::builtin();
+    let q16 = EvalOptions::NONE.with_precision(EvalPrecision::Quantized { bits: 16 });
+    for preset in preset_names(&be) {
+        let pm = be.manifest().preset(&preset).unwrap();
+        let mut rng = Rng::new(107);
+        let phi = pm.layout.init_vector(&mut rng);
+
+        // forward: 16-bit weight grids perturb each output only mildly
+        let fwd = be.entry(&preset, "forward").unwrap();
+        let mut x = vec![0.0f32; fwd.meta().input_len(1)];
+        rng.fill_uniform(&mut x, 0.05, 0.95);
+        let u = fwd.run1(&[&phi, &x]).unwrap();
+        let uq = fwd.run1_with(&[&phi, &x], &q16).unwrap();
+        for (i, (a, b)) in u.iter().zip(&uq).enumerate() {
+            assert!(
+                (a - b).abs() <= 0.05 * a.abs().max(1.0),
+                "{preset}: forward row {i} drifted under q16: {a} vs {b}"
+            );
+        }
+
+        // loss: documented envelope is 25% relative to the engine
+        let loss = be.entry(&preset, "loss").unwrap();
+        let mut xr = vec![0.0f32; loss.meta().input_len(1)];
+        rng.fill_uniform(&mut xr, 0.05, 0.95);
+        let l32 = loss.run_scalar(&[&phi, &xr]).unwrap();
+        let lq = loss.run_scalar_with(&[&phi, &xr], &q16).unwrap();
+        assert!(lq.is_finite() && lq >= 0.0, "{preset}: q16 loss {lq}");
+        assert!(
+            within(lq, l32, 0.25),
+            "{preset}: q16 loss {lq} outside the engine envelope {l32}"
+        );
+        // the quantized grid is fixed per tensor: rerunning must rehit
+        // the cached operands bit for bit
+        assert_eq!(
+            lq,
+            loss.run_scalar_with(&[&phi, &xr], &q16).unwrap(),
+            "{preset}: q16 loss not deterministic"
+        );
+    }
+}

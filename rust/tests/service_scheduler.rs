@@ -16,7 +16,9 @@ use photon_pinn::coordinator::{
     Admission, OnChipTrainer, ScheduledJob, ServiceConfig, SolveRequest, SolverService,
     TrainConfig,
 };
-use photon_pinn::runtime::{Backend, Entry, EvalOptions, FusedLossJob, Manifest, NativeBackend};
+use photon_pinn::runtime::{
+    Backend, Entry, EvalOptions, EvalPrecision, FusedLossJob, Manifest, NativeBackend,
+};
 
 fn job(be: &NativeBackend, preset: &str, seed: u64) -> TrainConfig {
     let mut cfg = TrainConfig::from_manifest(be, preset).unwrap();
@@ -383,4 +385,80 @@ fn fused_gang_matches_solo_runs_bitwise_and_streams_progress() {
             "job {i}: final event val must be THE final val, bitwise"
         );
     }
+}
+
+/// Precision is part of the fusion key: a backlog of same-preset jobs
+/// in DIFFERENT precision tiers must never share a fused pass (which
+/// materializes one operand set for the whole gang). Each job still
+/// solves, reproducing its isolated same-tier run bit for bit — the
+/// regression test for the scheduler fusing across tiers.
+#[test]
+fn mixed_precision_backlog_never_fuses_and_stays_bitwise() {
+    let be = Arc::new(GateBackend {
+        inner: NativeBackend::builtin(),
+        gate: Arc::new(Gate::default()),
+        gated_preset: "tonn_micro_heat",
+    });
+    // fuse_max covers the whole backlog — only the precision fence can
+    // keep these jobs apart
+    let service = gated_service(&be, ServiceConfig::new(1, 16).with_fuse_max(8), 100);
+
+    let tiers = [
+        None, // default = f32
+        Some(EvalPrecision::F32),
+        Some(EvalPrecision::F64),
+        Some(EvalPrecision::Quantized { bits: 16 }),
+    ];
+    // ONE seed across all jobs: the configs differ only in tier, so
+    // tier wiring is observable in the solutions themselves
+    let mut jobs: Vec<TrainConfig> = Vec::new();
+    for tier in &tiers {
+        let mut cfg = job(&be.inner, "tonn_micro", 50);
+        cfg.precision = *tier;
+        jobs.push(cfg);
+    }
+    let oracle: Vec<(Vec<f32>, f32)> = jobs.iter().map(solo).collect();
+
+    for (i, cfg) in jobs.iter().enumerate() {
+        service.submit(req(i as u64, cfg)).unwrap();
+    }
+    be.gate.release();
+
+    let mut got: Vec<Option<(Vec<f32>, f32)>> = vec![None; jobs.len()];
+    for _ in 0..=jobs.len() {
+        let r = service.recv().unwrap();
+        let val = r.final_val.expect("every tier must solve");
+        if r.id != 100 {
+            got[r.id as usize] = Some((r.phi, val));
+        }
+    }
+    assert!(service.shutdown().is_empty());
+
+    for (i, (phi, val)) in oracle.iter().enumerate() {
+        let (got_phi, got_val) = got[i].as_ref().expect("every job returns once");
+        assert_eq!(
+            got_phi, phi,
+            "job {i} ({:?}): Φ drifted through the service",
+            tiers[i]
+        );
+        assert_eq!(got_val, val, "job {i} ({:?}): final val drifted", tiers[i]);
+    }
+    // default and explicit f32 are the same tier — identical configs,
+    // identical trajectories, bit for bit…
+    assert_eq!(
+        got[0].as_ref().unwrap().0,
+        got[1].as_ref().unwrap().0,
+        "explicit f32 drifted from the default tier"
+    );
+    // …while the widened / reduced tiers really computed something else
+    assert_ne!(
+        got[0].as_ref().unwrap().0,
+        got[2].as_ref().unwrap().0,
+        "f64 tier produced the f32 trajectory — the tier is not wired"
+    );
+    assert_ne!(
+        got[0].as_ref().unwrap().0,
+        got[3].as_ref().unwrap().0,
+        "q16 tier produced the f32 trajectory — the tier is not wired"
+    );
 }

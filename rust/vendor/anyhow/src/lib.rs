@@ -1,0 +1,225 @@
+//! Vendored minimal subset of the `anyhow` error-handling API.
+//!
+//! The repository's build environments are offline: a registry
+//! dependency cannot be fetched or checksum-pinned, which is what kept
+//! `Cargo.lock` out of the tree for six PRs (see CHANGES.md). This
+//! in-tree path dependency implements exactly the surface the codebase
+//! uses — `Error`, `Result`, `Context`, and the `anyhow!` / `bail!` /
+//! `ensure!` macros — with the same observable semantics:
+//!
+//! * `{}` displays the outermost message only;
+//! * `{:#}` displays the whole context chain joined by `": "`;
+//! * `{:?}` displays the outermost message plus a `Caused by:` list;
+//! * `?` converts any `std::error::Error + Send + Sync + 'static`
+//!   (the error's own `source()` chain is preserved);
+//! * `Context::{context, with_context}` prepend a new outermost layer.
+//!
+//! Deliberately out of scope (unused in this repo): downcasting,
+//! backtraces, `no_std`.
+
+use std::fmt;
+
+/// `Result` with a defaulted [`struct@Error`] error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error carrying a context chain, outermost layer first.
+pub struct Error {
+    /// `chain[0]` is the outermost context, `chain.last()` the root cause.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with a new outermost context layer.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first (root cause last).
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+// Like upstream anyhow, `Error` intentionally does NOT implement
+// `std::error::Error`: that keeps the blanket `From` below coherent
+// with core's reflexive `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for (i, cause) in self.chain[1..].iter().enumerate() {
+                if self.chain.len() > 2 {
+                    write!(f, "\n    {i}: {cause}")?;
+                } else {
+                    write!(f, "\n    {cause}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Attach context to the error variant of a fallible value.
+pub trait Context<T, E>: Sized {
+    /// Wrap any error with `context` as the new outermost layer.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// [`Context::context`], evaluating the message lazily.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`struct@Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`struct@Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e: Error = Error::from(io_err()).context("loading manifest");
+        assert_eq!(format!("{e}"), "loading manifest");
+    }
+
+    #[test]
+    fn alternate_display_joins_chain() {
+        let e: Error = Error::from(io_err()).context("loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: missing file");
+    }
+
+    #[test]
+    fn with_context_prepends_layers() {
+        fn inner() -> Result<()> {
+            bail!("root cause {}", 42);
+        }
+        let e = inner().with_context(|| "outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root cause 42");
+        assert_eq!(e.root_cause(), "root cause 42");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn ensure_formats_and_question_mark_converts() {
+        fn check(v: f32) -> Result<u8> {
+            ensure!(v.is_finite(), "value {v} must be finite");
+            let n: u8 = "7".parse()?; // std::num::ParseIntError via blanket From
+            Ok(n)
+        }
+        assert_eq!(check(1.0).unwrap(), 7);
+        let e = check(f32::NAN).unwrap_err();
+        assert_eq!(format!("{e}"), "value NaN must be finite");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u8> = None;
+        let e = v.context("nothing there").unwrap_err();
+        assert_eq!(format!("{e}"), "nothing there");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e: Error = Error::from(io_err()).context("step A").context("step B");
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("step B"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("missing file"));
+    }
+}
