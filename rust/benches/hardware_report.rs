@@ -1,0 +1,275 @@
+//! Bench: hardware report — join the photonic performance model
+//! (`photonics::perf::PerfModel`, the engine behind the paper's Table 2)
+//! with the telemetry counters of *actually solved* presets, and merge
+//! the result into `BENCH_native.json` (report section
+//! `hardware_report`).
+//!
+//! For each preset the bench trains to convergence budget, reads the
+//! run's inference/programming counts from its `RunMetrics`, and prices
+//! the same workload on the modeled accelerator: modeled energy
+//! `J = E_inf x inferences` and modeled latency
+//! `s = t_inf x inferences` next to the measured CPU wall time. The
+//! paper-scale TONN-1/ONN rows (Table 2 / §4.2) are emitted as fixed
+//! anchor rows so the reproduction-scale numbers always sit next to the
+//! claims they reproduce, and an `engine_totals` case records the
+//! process-wide telemetry snapshot (dispatch counts, cache hit rate)
+//! for the whole bench run.
+//!
+//!     cargo bench --bench hardware_report
+//!
+//! Environment knobs:
+//! * `PHOTON_BENCH_FAST=1` — smoke budget + micro presets (CI)
+//! * `PHOTON_THREADS=N`    — evaluation-engine threads
+//! * `PHOTON_BENCH_OUT`    — report location (default: repo root)
+
+mod common;
+
+use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
+use photon_pinn::photonics::perf::{Design, NetworkDims, PerfModel, TrainingEfficiency};
+use photon_pinn::runtime::Backend;
+use photon_pinn::tensor::TtShape;
+use photon_pinn::util::bench::{bench_report_path, BenchReport, Table};
+use photon_pinn::util::json::Value;
+use photon_pinn::util::telemetry;
+
+/// Map a preset's manifest `arch` block onto the performance model's
+/// network description. TONN presets price as TONN-1 (the paper's
+/// space+wavelength cascade); dense presets price as ONN.
+fn census_dims(arch: &Value) -> Result<(Design, NetworkDims), String> {
+    let ty = arch
+        .get("type")
+        .and_then(|v| v.as_str())
+        .ok_or("arch.type missing")?;
+    let hidden = arch
+        .get("hidden")
+        .and_then(|v| v.as_usize())
+        .ok_or("arch.hidden missing")?;
+    // the paper's WDM budget, capped by the mesh width at micro scales
+    let wavelengths = hidden.min(32);
+    let usizes = |key: &str| -> Result<Vec<usize>, String> {
+        arch.get(key)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| format!("arch.{key} missing"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| format!("arch.{key} entry")))
+            .collect()
+    };
+    match ty {
+        "tonn" => {
+            let fm = usizes("factors_m")?;
+            let fn_ = usizes("factors_n")?;
+            let ranks = usizes("ranks")?;
+            let tt = TtShape::new(&fm, &fn_, &ranks).map_err(|e| format!("{e:#}"))?;
+            Ok((
+                Design::Tonn1,
+                NetworkDims { hidden, tt: Some(tt), wavelengths },
+            ))
+        }
+        "onn" => Ok((
+            Design::Onn,
+            NetworkDims { hidden, tt: None, wavelengths },
+        )),
+        other => Err(format!("unknown arch type '{other}'")),
+    }
+}
+
+fn sci(v: f64) -> String {
+    format!("{v:.2e}")
+}
+
+fn main() {
+    let fast = common::fast();
+    let rt = common::runtime();
+    let epochs = common::epochs(200);
+    let presets: &[&str] = if fast {
+        &["tonn_micro", "tonn_micro_heat"]
+    } else {
+        &["tonn_small", "onn_small", "tonn_poisson", "tonn_heat"]
+    };
+
+    let model = PerfModel::default();
+    let par = rt.parallel();
+    let mut rep = BenchReport::new("hardware_report", &rt.platform(), par.threads, par.block_rows);
+    let mut t = Table::new(
+        &format!("hardware report ({epochs} epochs per solve; modeled = paper accelerator)"),
+        &[
+            "preset",
+            "design",
+            "MZIs",
+            "params",
+            "inferences",
+            "modeled J",
+            "modeled s",
+            "measured s",
+            "final val",
+        ],
+    );
+
+    let mut failures = 0usize;
+    for preset in presets {
+        let pm = match rt.manifest().preset(preset) {
+            Ok(pm) => pm,
+            Err(e) => {
+                eprintln!("{preset}: no such preset: {e:#}");
+                failures += 1;
+                continue;
+            }
+        };
+        let (design, dims) = match census_dims(&pm.arch) {
+            Ok(x) => x,
+            Err(e) => {
+                eprintln!("{preset}: cannot census arch: {e}");
+                failures += 1;
+                continue;
+            }
+        };
+        let perf = model.report(design, &dims);
+
+        let mut cfg = match TrainConfig::from_manifest(&rt, preset) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("{preset}: {e:#}");
+                failures += 1;
+                continue;
+            }
+        };
+        cfg.epochs = epochs;
+        cfg.seed = 0;
+        cfg.validate_every = 0;
+        cfg.verbose = false;
+        let t0 = std::time::Instant::now();
+        let res = match OnChipTrainer::new(&rt, cfg).and_then(|mut tr| tr.train()) {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("{preset}: solve FAILED: {e:#}");
+                failures += 1;
+                continue;
+            }
+        };
+        let wall = t0.elapsed().as_secs_f64();
+
+        let inferences = res.metrics.inferences as f64;
+        let modeled_s = perf.latency_per_inference_ns * 1e-9 * inferences;
+        let modeled_j = perf.energy_per_inference_j.map(|e| e * inferences);
+        let mut extra: Vec<(&str, f64)> = vec![
+            ("mzis", perf.mzis as f64),
+            ("params", perf.params as f64),
+            ("inferences", inferences),
+            ("programmings", res.metrics.programmings as f64),
+            ("modeled_latency_s", modeled_s),
+            ("final_val", res.final_val as f64),
+        ];
+        // ONN links past the loss budget have no energy figure (paper
+        // §4.2: "insurmountable optical loss") — the metric is omitted,
+        // not zero
+        if let Some(j) = modeled_j {
+            extra.push(("modeled_energy_j", j));
+        }
+        rep.case_raw_with(
+            &format!("hardware/{preset} ({})", perf.design),
+            wall,
+            &extra,
+        );
+        t.row(&[
+            preset.to_string(),
+            perf.design.to_string(),
+            perf.mzis.to_string(),
+            perf.params.to_string(),
+            format!("{inferences:.0}"),
+            modeled_j.map(sci).unwrap_or_else(|| "n/a".into()),
+            sci(modeled_s),
+            format!("{wall:.2}"),
+            sci(res.final_val as f64),
+        ]);
+    }
+
+    // fixed paper-scale anchors (Table 2 / §4.2): the full-scale claims
+    // the measured rows above reproduce at CPU scale. 0-second rows —
+    // nothing is executed, only the model is evaluated.
+    let te = TrainingEfficiency::paper();
+    for (name, design, dims) in [
+        ("paper_tonn", Design::Tonn1, NetworkDims::paper_tonn()),
+        ("paper_onn", Design::Onn, NetworkDims::paper_onn()),
+    ] {
+        let perf = model.report(design, &dims);
+        let mut extra: Vec<(&str, f64)> = vec![
+            ("mzis", perf.mzis as f64),
+            ("params", perf.params as f64),
+            ("latency_per_inference_ns", perf.latency_per_inference_ns),
+            ("inferences", (te.inferences_per_epoch() * te.epochs) as f64),
+        ];
+        if let Some(e_inf) = perf.energy_per_inference_j {
+            let (e_tot, t_tot) = te.totals(e_inf, perf.latency_per_inference_ns);
+            extra.push(("modeled_energy_j", e_tot));
+            extra.push(("modeled_latency_s", t_tot));
+        }
+        rep.case_raw_with(&format!("hardware/{name} ({}) anchor", perf.design), 0.0, &extra);
+        t.row(&[
+            format!("{name} (anchor)"),
+            perf.design.to_string(),
+            perf.mzis.to_string(),
+            perf.params.to_string(),
+            format!("{}", te.inferences_per_epoch() * te.epochs),
+            perf.energy_per_inference_j
+                .map(|e| sci(te.totals(e, perf.latency_per_inference_ns).0))
+                .unwrap_or_else(|| "n/a".into()),
+            perf.energy_per_inference_j
+                .map(|e| sci(te.totals(e, perf.latency_per_inference_ns).1))
+                .unwrap_or_else(|| "-".into()),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    t.print();
+
+    // process-wide engine telemetry for the whole bench run: what the
+    // dispatch path actually did while producing the rows above
+    let snap = telemetry::snapshot();
+    let lookups = snap.engine.mat_cache_hits + snap.engine.mat_cache_misses;
+    rep.case_raw_with(
+        "hardware/engine_totals (telemetry)",
+        0.0,
+        &[
+            ("dispatches_total", snap.engine.dispatches_total() as f64),
+            ("dispatches_f32", snap.engine.dispatches_f32 as f64),
+            ("probe_fanouts", snap.engine.probe_fanouts as f64),
+            ("probe_lanes", snap.engine.probe_lanes as f64),
+            ("mat_cache_hits", snap.engine.mat_cache_hits as f64),
+            (
+                "mat_cache_hit_rate",
+                if lookups > 0 {
+                    snap.engine.mat_cache_hits as f64 / lookups as f64
+                } else {
+                    0.0
+                },
+            ),
+            ("epochs_applied", snap.trainer.epochs_applied as f64),
+            ("inferences", snap.trainer.inferences as f64),
+        ],
+    );
+    println!(
+        "\nengine totals: {} dispatches, {} probe fan-outs, cache {}h/{}m (kernel path {})",
+        snap.engine.dispatches_total(),
+        snap.engine.probe_fanouts,
+        snap.engine.mat_cache_hits,
+        snap.engine.mat_cache_misses,
+        snap.kernel_path,
+    );
+
+    let path = bench_report_path();
+    if let Err(e) = rep.write_merged(&path) {
+        eprintln!("cannot write {}: {e:#}", path.display());
+        std::process::exit(2);
+    }
+    println!(
+        "\nhardware_report merged into {} ({} cases, engine {}Tx{} rows/block)",
+        path.display(),
+        rep.cases.len(),
+        rep.threads,
+        rep.block_rows
+    );
+    if failures > 0 {
+        eprintln!("hardware report FAILED: {failures} preset(s) did not price/solve");
+        std::process::exit(1);
+    }
+}

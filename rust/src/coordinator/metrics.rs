@@ -47,6 +47,18 @@ impl RunMetrics {
     }
 
     /// CSV of the loss curve (the convergence-figure bench consumes this).
+    ///
+    /// Format: a `epoch,loss,val,lr` header, then one row per recorded
+    /// epoch. `val` is the validation MSE and is only measured on
+    /// validation epochs — on every other epoch the field is **bare
+    /// empty** (`12,0.5,,0.1`), not `0`, `nan` or quoted, so
+    /// spreadsheet/pandas readers parse it as a missing value rather
+    /// than a numeric zero. `to_json` encodes the same absence as
+    /// `null`. These run-local counters also flow into the process-wide
+    /// telemetry snapshot
+    /// ([`crate::util::telemetry::TrainerSnapshot`]), which aggregates
+    /// inferences / programmings / skipped epochs across every run in
+    /// the process.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("epoch,loss,val,lr\n");
         for r in &self.records {
@@ -106,6 +118,9 @@ mod tests {
         let csv = m.to_csv();
         assert!(csv.starts_with("epoch,loss,val,lr\n"));
         assert_eq!(csv.lines().count(), 4);
+        // the documented format: non-validation epochs leave the val
+        // field bare empty, not 0/nan
+        assert_eq!(csv.lines().nth(2), Some("1,0.5,,0.1"));
         let j = m.to_json().to_string();
         assert!(j.contains("\"records\""));
     }

@@ -43,6 +43,7 @@ use anyhow::Result;
 
 use super::service::SolveRequest;
 use crate::runtime::EvalPrecision;
+use crate::util::telemetry;
 
 /// One scheduled job: a [`SolveRequest`] plus scheduling metadata.
 /// `SolveRequest::into()` gives the neutral defaults (default tenant,
@@ -297,8 +298,27 @@ impl JobQueue {
             submitted: Instant::now(),
             seq,
         });
+        telemetry::global()
+            .scheduler
+            .queue_depth_hwm
+            .observe(st.heap.len() as u64);
         Admission::Accepted {
             queued: st.heap.len(),
+        }
+    }
+
+    /// Record a TERMINAL admission verdict. Retry loops (blocking
+    /// submits parked on a full queue) must only count the verdict they
+    /// return to the caller, so this lives with the public entry
+    /// points, not inside `try_admit_locked`.
+    fn count_verdict(verdict: &Admission) {
+        let t = &telemetry::global().scheduler;
+        match verdict {
+            Admission::Accepted { .. } => t.admitted.incr(),
+            Admission::QueueFull => t.rejected_queue_full.incr(),
+            Admission::QuotaExceeded { .. } => t.rejected_quota.incr(),
+            Admission::PoolDead { .. } => t.rejected_pool_dead.incr(),
+            Admission::Closed => t.rejected_closed.incr(),
         }
     }
 
@@ -309,6 +329,7 @@ impl JobQueue {
         if matches!(verdict, Admission::Accepted { .. }) {
             self.cv.notify_all();
         }
+        Self::count_verdict(&verdict);
         verdict
     }
 
@@ -318,16 +339,27 @@ impl JobQueue {
     pub(crate) fn submit_blocking(&self, job: ScheduledJob) -> Result<()> {
         let mut st = self.state.lock().unwrap();
         loop {
-            match self.try_admit_locked(&mut st, &job) {
-                Admission::Accepted { .. } => {
-                    self.cv.notify_all();
-                    return Ok(());
-                }
+            let verdict = self.try_admit_locked(&mut st, &job);
+            match verdict {
+                // not terminal: the submitter parks and retries, so no
+                // rejection is recorded for these
                 Admission::QueueFull | Admission::QuotaExceeded { .. } => {
                     st = self.cv.wait(st).unwrap();
                 }
-                Admission::Closed => anyhow::bail!("service is shut down"),
-                Admission::PoolDead { error } => anyhow::bail!("{error}"),
+                terminal => {
+                    Self::count_verdict(&terminal);
+                    match terminal {
+                        Admission::Accepted { .. } => {
+                            self.cv.notify_all();
+                            return Ok(());
+                        }
+                        Admission::Closed => anyhow::bail!("service is shut down"),
+                        Admission::PoolDead { error } => anyhow::bail!("{error}"),
+                        Admission::QueueFull | Admission::QuotaExceeded { .. } => {
+                            unreachable!("handled above")
+                        }
+                    }
+                }
             }
         }
     }
@@ -354,25 +386,53 @@ impl JobQueue {
                     job: top.job,
                     submitted: top.submitted,
                 }];
+                // how the gang stopped growing, for the fence counter
+                enum Grow {
+                    Fuse,
+                    PrecisionFence,
+                    Stop,
+                }
+                let tel = &telemetry::global().scheduler;
                 while gang.len() < fuse_max.max(1) {
-                    match st.heap.peek() {
-                        Some(next)
-                            if next.job.request.config.preset == preset
-                                && next
-                                    .job
-                                    .request
-                                    .config
-                                    .precision
-                                    .unwrap_or(EvalPrecision::DEFAULT)
-                                    == prec =>
-                        {
+                    let grow = match st.heap.peek() {
+                        Some(next) if next.job.request.config.preset == preset => {
+                            if next
+                                .job
+                                .request
+                                .config
+                                .precision
+                                .unwrap_or(EvalPrecision::DEFAULT)
+                                == prec
+                            {
+                                Grow::Fuse
+                            } else {
+                                Grow::PrecisionFence
+                            }
+                        }
+                        _ => Grow::Stop,
+                    };
+                    match grow {
+                        Grow::Fuse => {
                             let e = st.heap.pop().expect("peeked entry");
                             gang.push(PoppedJob {
                                 job: e.job,
                                 submitted: e.submitted,
                             });
                         }
-                        _ => break,
+                        Grow::PrecisionFence => {
+                            tel.precision_fence_splits.incr();
+                            break;
+                        }
+                        Grow::Stop => break,
+                    }
+                }
+                tel.gangs.incr();
+                tel.gang_jobs.add(gang.len() as u64);
+                tel.gang_size.observe(gang.len() as f64);
+                let now = Instant::now();
+                for p in &gang {
+                    if p.job.deadline.map_or(false, |d| d < now) {
+                        tel.deadline_misses.incr();
                     }
                 }
                 // queue slots freed: wake parked submitters
@@ -603,6 +663,53 @@ mod tests {
             .to_string();
         assert!(err.contains("no such device"), "{err}");
         assert!(q.pool_dead_error().is_some());
+    }
+
+    #[test]
+    fn telemetry_counts_gangs_and_precision_fences() {
+        // Telemetry counters are process-global and other tests in this
+        // binary also pump them, so assert on DELTAS with >= where
+        // concurrent tests could interleave.
+        let be = NativeBackend::builtin();
+        let before = telemetry::snapshot().scheduler;
+        let q = JobQueue::new(16, None, 1);
+        q.register_live();
+        let with_prec = |id: u64, prec: Option<EvalPrecision>| {
+            let mut r = req(id, "tonn_micro", &be);
+            r.config.precision = prec;
+            ScheduledJob::new(r)
+        };
+        for j in [
+            with_prec(0, None),
+            with_prec(1, None),
+            with_prec(2, Some(EvalPrecision::F64)),
+        ] {
+            assert!(matches!(q.admit(&j), Admission::Accepted { .. }));
+        }
+        // gang [0, 1] stops at job 2's precision fence; then [2] alone
+        assert_eq!(q.pop_gang(8).unwrap().len(), 2);
+        assert_eq!(q.pop_gang(8).unwrap().len(), 1);
+        let after = telemetry::snapshot().scheduler;
+        assert!(after.admitted >= before.admitted + 3);
+        assert!(after.gangs >= before.gangs + 2);
+        assert!(after.gang_jobs >= before.gang_jobs + 3);
+        assert!(after.precision_fence_splits >= before.precision_fence_splits + 1);
+        assert!(after.queue_depth_hwm >= 3);
+    }
+
+    #[test]
+    fn telemetry_counts_deadline_misses() {
+        let be = NativeBackend::builtin();
+        let before = telemetry::snapshot().scheduler.deadline_misses;
+        let q = JobQueue::new(16, None, 1);
+        q.register_live();
+        // a deadline already in the past when the job is popped
+        let j = job(0, "tonn_micro", &be).with_deadline(Instant::now());
+        assert!(matches!(q.admit(&j), Admission::Accepted { .. }));
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(q.pop_gang(1).unwrap().len(), 1);
+        let after = telemetry::snapshot().scheduler.deadline_misses;
+        assert!(after >= before + 1);
     }
 
     #[test]

@@ -82,6 +82,7 @@ use anyhow::Result;
 use super::scheduler::{Admission, JobQueue, PoppedJob, ProgressEvent, ScheduledJob, StartupReport};
 use super::trainer::{OnChipTrainer, TrainConfig, TrainState};
 use crate::runtime::{Backend, FusedLossJob, ParallelConfig};
+use crate::util::telemetry;
 
 /// One solve job.
 #[derive(Clone, Debug)]
@@ -203,12 +204,21 @@ fn finish_member(
     final_val: Result<f32>,
     phi: Vec<f32>,
 ) {
+    let solve_seconds = t0.elapsed().as_secs_f64();
+    let tel = &telemetry::global().service;
+    if final_val.is_ok() {
+        tel.jobs_completed.incr();
+    } else {
+        tel.jobs_failed.incr();
+    }
+    tel.queue_wait_s.observe(m.queue_seconds);
+    tel.solve_s.observe(solve_seconds);
     let _ = p.res_tx.send(SolveResult {
         id: m.id,
         final_val,
         phi,
         queue_seconds: m.queue_seconds,
-        solve_seconds: t0.elapsed().as_secs_f64(),
+        solve_seconds,
         worker: w,
     });
     p.queue.job_done(&m.tenant);
@@ -286,6 +296,8 @@ fn run_gang<'rt>(
             Vec::new()
         };
         if fuse.len() >= 2 {
+            // lane-epochs riding the shared cross-job pass this round
+            telemetry::global().service.fused_epochs.add(fuse.len() as u64);
             for &i in &fuse {
                 let lane = &mut lanes[i];
                 lane.trainer.prepare_fused(&mut lane.state);
@@ -312,6 +324,7 @@ fn run_gang<'rt>(
         }
         for (i, slot) in dispatched.iter_mut().enumerate() {
             if slot.is_none() {
+                telemetry::global().service.unfused_epochs.incr();
                 let lane = &mut lanes[i];
                 *slot = Some(lane.trainer.dispatch_losses(&mut lane.state));
             }

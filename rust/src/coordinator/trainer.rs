@@ -65,6 +65,7 @@ use crate::runtime::{
     Backend, Entry, EvalOptions, EvalPrecision, FusedLossJob, FusedLossKind, ParallelConfig,
 };
 use crate::util::rng::Rng;
+use crate::util::telemetry;
 
 /// Loss estimator variant (ablation A4: FD vs Stein).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -621,11 +622,18 @@ impl<'rt> OnChipTrainer<'rt> {
     /// and checkpointing. Advances the state to the next epoch.
     pub fn epoch_apply(&mut self, st: &mut TrainState, losses: &[f32]) -> Result<()> {
         let epoch = st.epoch;
-        st.metrics.inferences += (self.n_stencil * self.batch * self.k_multi) as u64;
+        let tel = &telemetry::global().trainer;
+        let inferences = (self.n_stencil * self.batch * self.k_multi) as u64;
+        st.metrics.inferences += inferences;
         st.metrics.programmings += self.k_multi as u64;
+        // mirror the run-local RunMetrics counters process-wide so the
+        // telemetry snapshot sees them without owning any TrainResult
+        tel.inferences.add(inferences);
+        tel.programmings.add(self.k_multi as u64);
 
         if losses.iter().any(|l| !l.is_finite()) {
             st.metrics.skipped_epochs += 1;
+            tel.skipped_epochs.incr();
             st.consecutive_skipped += 1;
             if self.cfg.max_skipped_run != 0
                 && st.consecutive_skipped >= self.cfg.max_skipped_run
@@ -644,13 +652,17 @@ impl<'rt> OnChipTrainer<'rt> {
             return Ok(());
         }
         st.consecutive_skipped = 0;
+        tel.epochs_applied.incr();
         self.estimator.estimate(losses, &st.xi, &mut st.grad);
         self.optimizer.step(&mut st.phi, &st.grad, epoch);
 
         let validate_now = self.cfg.validate_every != 0
             && (epoch % self.cfg.validate_every == 0 || epoch + 1 == self.cfg.epochs);
         let val = if validate_now {
+            let v0 = Instant::now();
             let v = self.validator.mse_on_chip(&st.phi, &self.chip)?;
+            tel.validations.incr();
+            tel.validate_s.observe(v0.elapsed().as_secs_f64());
             if let Some(hook) = &self.on_validate {
                 hook(epoch, v);
             }
@@ -685,7 +697,11 @@ impl<'rt> OnChipTrainer<'rt> {
     /// Final validation + checkpoint; consumes the state.
     pub fn finish(&mut self, mut st: TrainState) -> Result<TrainResult> {
         st.metrics.wall_seconds = st.t0.elapsed().as_secs_f64();
+        let tel = &telemetry::global().trainer;
+        let v0 = Instant::now();
         let final_val = self.validator.mse_on_chip(&st.phi, &self.chip)?;
+        tel.validations.incr();
+        tel.validate_s.observe(v0.elapsed().as_secs_f64());
         if let Some(hook) = &self.on_validate {
             hook(self.cfg.epochs, final_val);
         }

@@ -128,6 +128,33 @@
 //! dead worker pool (every backend load failed) fails `submit`/`recv`
 //! fast with the load error instead of hanging.
 //!
+//! ## Observability (the `util::telemetry` subsystem)
+//!
+//! Every layer of the dispatch path feeds process-wide lock-free
+//! counters in [`util::telemetry`] — engine (materialization-cache
+//! hits/misses/evictions, per-precision-tier dispatch counts, probe-lane
+//! utilization, the SIMD kernel path taken), scheduler (terminal
+//! admission verdicts by type, queue-depth high-water mark, gang
+//! widths, precision-fence splits, deadline misses), service
+//! (completions/failures, fused vs unfused lane-epochs, queue-wait and
+//! solve-span histograms) and trainer (epochs applied/skipped,
+//! inferences, programmings, validation spans). Updates are single
+//! relaxed atomic RMWs — no locks on any hot path, and nothing inside
+//! `tensor::gemm_rows` — so telemetry stays on in production and every
+//! bit-exactness suite passes unchanged with it enabled
+//! (`tests/telemetry.rs`). Counters reconcile by construction:
+//! `admitted = completed + failed + in-flight` after any drained
+//! backlog.
+//!
+//! [`util::telemetry::snapshot`] materializes a schema-versioned
+//! [`util::telemetry::TelemetrySnapshot`]; `photon-pinn stats` prints
+//! one, `--telemetry-out <path>` on `train`/`serve` writes one
+//! atomically at exit, and `benches/hardware_report.rs` joins these
+//! counters with [`photonics::perf::PerfModel`] to report modeled
+//! J/s-per-solve and MZI counts per preset next to measured wall time
+//! (the `hardware_report` section of `BENCH_native.json` — the paper's
+//! Table 2 claims as a tracked regression surface).
+//!
 //! Entry points: [`runtime::load_backend`] (or `NativeBackend::builtin`)
 //! loads a backend; [`coordinator`] drives training; `examples/` are
 //! runnable end-to-end drivers.

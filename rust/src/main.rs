@@ -7,12 +7,16 @@
 //!   hardware  Table-2 hardware report
 //!   serve     solver-service demo: drain a job backlog with fused
 //!             dispatches + streamed progress
+//!   stats     print (or validate) a telemetry snapshot — the process's
+//!             own counters, or a `--telemetry-out` file
 //!   presets   list available presets from the manifest
 //!   pdes      list every registered PDE problem (the pde registry)
 //!   optims    list registered optimizers + gradient estimators
 //!
 //! `--list-presets` / `--list-pdes` / `--list-optimizers` are accepted
-//! as top-level aliases.
+//! as top-level aliases. `train` and `serve` take `--telemetry-out
+//! <path>` to atomically write the end-of-run telemetry snapshot
+//! (README §Observability).
 //!
 //! Examples:
 //!   photon-pinn train --preset tonn_small --epochs 1500
@@ -22,7 +26,8 @@
 //!   photon-pinn train --preset tonn_micro_ac --bc-weight 4.0
 //!   photon-pinn table1 --zo-epochs 800 --bp-epochs 300
 //!   photon-pinn hardware
-//!   photon-pinn serve --jobs 16 --workers 2 --fuse-max 4
+//!   photon-pinn serve --jobs 16 --workers 2 --fuse-max 4 --telemetry-out telemetry.json
+//!   photon-pinn stats telemetry.json --require-active
 //!   photon-pinn pdes
 
 
@@ -73,6 +78,8 @@ fn args_for(cmd: &str) -> Args {
                (default: min(threads, K))")
         .flag("precision", None, "evaluation precision tier: f32 (default, bit-exact engine) | \
                f64 (double-precision oracle) | q<bits> (quantized weights, e.g. q16)")
+        .flag("telemetry-out", None, "atomically write the end-of-run telemetry snapshot \
+               (JSON) to this path")
         .switch("stein", "use the Stein derivative estimator instead of FD")
         .switch("raw-sgd", "disable the signSGD de-noising (ablation)")
         .switch("quiet", "suppress progress lines")
@@ -124,12 +131,13 @@ fn run() -> Result<()> {
         "table1" => cmd_table1(argv),
         "hardware" => cmd_hardware(argv),
         "serve" => cmd_serve(argv),
+        "stats" => cmd_stats(argv),
         "presets" | "--list-presets" => cmd_presets(argv),
         "pdes" | "--list-pdes" => cmd_pdes(argv),
         "optims" | "--list-optimizers" => cmd_optims(argv),
         _ => {
             eprintln!(
-                "usage: photon-pinn <train|offchip|table1|hardware|serve|presets|pdes|optims> \
+                "usage: photon-pinn <train|offchip|table1|hardware|serve|stats|presets|pdes|optims> \
                  [flags]\n\
                  run a subcommand with --help for its flags"
             );
@@ -291,6 +299,17 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if let Some(path) = checkpoint {
         println!("checkpoint written to {path}");
     }
+    write_telemetry_out(&a)?;
+    Ok(())
+}
+
+/// Honor `--telemetry-out <path>`: atomically write the process's
+/// end-of-run telemetry snapshot (no-op when the flag is absent).
+fn write_telemetry_out(a: &Args) -> Result<()> {
+    if let Some(path) = a.get_str("telemetry-out") {
+        photon_pinn::util::telemetry::write_snapshot(std::path::Path::new(&path))?;
+        eprintln!("telemetry snapshot written to {path}");
+    }
     Ok(())
 }
 
@@ -310,6 +329,8 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .flag("precision", None, "evaluation precision tier for every job: f32 | f64 | q<bits>")
         .flag("tenant-quota", None, "per-tenant cap on in-flight jobs")
         .flag("seed", Some("0"), "base seed (job i trains with seed + i)")
+        .flag("telemetry-out", None, "atomically write the end-of-run telemetry snapshot \
+               (JSON) to this path")
         .switch("quiet", "suppress streamed progress lines")
         .parse(argv)?;
     let dir = photon_pinn::resolve_artifacts_dir(a.get_str("artifacts").as_deref());
@@ -369,6 +390,126 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     println!("drained {jobs} jobs in {wall:.2}s ({:.1} jobs/s aggregate)", jobs as f64 / wall);
     service.shutdown();
+    write_telemetry_out(&a)?;
+    Ok(())
+}
+
+/// Print (and optionally validate) a telemetry snapshot: with a file
+/// argument, the JSON written by `--telemetry-out`; without one, the
+/// current process's own counters (mostly zeros from a fresh `stats`
+/// invocation — the file form is the useful one).
+fn cmd_stats(argv: Vec<String>) -> Result<()> {
+    let a = Args::new(
+        "photon-pinn stats [snapshot.json]",
+        "print a telemetry snapshot (own process, or a --telemetry-out file)",
+    )
+    .switch("json", "print the raw snapshot JSON instead of tables")
+    .switch(
+        "require-active",
+        "fail unless dispatch AND admission counters are non-zero (CI smoke)",
+    )
+    .parse(argv)?;
+    use photon_pinn::util::json::Value;
+    let v: Value = match a.positional().first() {
+        Some(path) => photon_pinn::util::json::parse_file(std::path::Path::new(path))?,
+        None => photon_pinn::util::telemetry::snapshot().to_json(),
+    };
+    let version = v.req("schema_version")?.as_usize().unwrap_or(0) as u64;
+    anyhow::ensure!(
+        version == photon_pinn::util::telemetry::SCHEMA_VERSION,
+        "telemetry snapshot has schema_version {version}, this binary reads {}",
+        photon_pinn::util::telemetry::SCHEMA_VERSION
+    );
+    if a.get_bool("json") {
+        println!("{}", v.to_string());
+    } else {
+        print_stats_tables(&v)?;
+    }
+    if a.get_bool("require-active") {
+        let dispatches = v
+            .req("engine")?
+            .req("dispatches")?
+            .req("total")?
+            .as_usize()
+            .unwrap_or(0);
+        let admitted = v.req("scheduler")?.req("admitted")?.as_usize().unwrap_or(0);
+        anyhow::ensure!(
+            dispatches > 0 && admitted > 0,
+            "snapshot records no activity (engine dispatches = {dispatches}, \
+             scheduler admissions = {admitted}) — the run it came from did \
+             no work"
+        );
+        eprintln!("snapshot is active: {dispatches} engine dispatches, {admitted} admissions");
+    }
+    Ok(())
+}
+
+/// Human-readable tables for the snapshot's headline counters (the raw
+/// document has more — use `--json` for everything).
+fn print_stats_tables(v: &photon_pinn::util::json::Value) -> Result<()> {
+    let n = |v: &photon_pinn::util::json::Value, path: &[&str]| -> f64 {
+        let mut cur = v;
+        for k in path {
+            match cur.get(k) {
+                Some(next) => cur = next,
+                None => return 0.0,
+            }
+        }
+        cur.as_f64().unwrap_or(0.0)
+    };
+    println!(
+        "telemetry snapshot (schema v{}, kernel path: {})",
+        n(v, &["schema_version"]),
+        v.req("kernel_path")?.as_str().unwrap_or("?")
+    );
+    let mut t = Table::new("engine", &["counter", "value"]);
+    for (label, path) in [
+        ("mat cache hits", vec!["engine", "mat_cache", "hits"]),
+        ("mat cache misses", vec!["engine", "mat_cache", "misses"]),
+        ("mat cache evictions", vec!["engine", "mat_cache", "evictions"]),
+        ("dispatches f32", vec!["engine", "dispatches", "f32"]),
+        ("dispatches f64", vec!["engine", "dispatches", "f64"]),
+        ("dispatches quantized", vec!["engine", "dispatches", "quantized"]),
+        ("probe fan-outs", vec!["engine", "probe_fanouts"]),
+        ("probe lanes", vec!["engine", "probe_lanes"]),
+    ] {
+        t.row(&[label.to_string(), format!("{}", n(v, &path))]);
+    }
+    t.print();
+    let mut t = Table::new("scheduler", &["counter", "value"]);
+    for (label, path) in [
+        ("admitted", vec!["scheduler", "admitted"]),
+        ("rejected (queue full)", vec!["scheduler", "rejected", "queue_full"]),
+        ("rejected (quota)", vec!["scheduler", "rejected", "quota"]),
+        ("rejected (pool dead)", vec!["scheduler", "rejected", "pool_dead"]),
+        ("rejected (closed)", vec!["scheduler", "rejected", "closed"]),
+        ("queue depth high-water", vec!["scheduler", "queue_depth_hwm"]),
+        ("gangs", vec!["scheduler", "gangs"]),
+        ("gang jobs", vec!["scheduler", "gang_jobs"]),
+        ("precision fence splits", vec!["scheduler", "precision_fence_splits"]),
+        ("deadline misses", vec!["scheduler", "deadline_misses"]),
+    ] {
+        t.row(&[label.to_string(), format!("{}", n(v, &path))]);
+    }
+    t.print();
+    let mut t = Table::new("service + trainer", &["counter", "value"]);
+    for (label, path) in [
+        ("jobs completed", vec!["service", "jobs_completed"]),
+        ("jobs failed", vec!["service", "jobs_failed"]),
+        ("jobs in flight", vec!["service", "jobs_in_flight"]),
+        ("fused lane-epochs", vec!["service", "fused_epochs"]),
+        ("unfused lane-epochs", vec!["service", "unfused_epochs"]),
+        ("mean queue wait (s)", vec!["service", "spans", "queue_wait_s", "mean"]),
+        ("mean solve (s)", vec!["service", "spans", "solve_s", "mean"]),
+        ("epochs applied", vec!["trainer", "epochs_applied"]),
+        ("epochs skipped", vec!["trainer", "skipped_epochs"]),
+        ("chip inferences", vec!["trainer", "inferences"]),
+        ("chip programmings", vec!["trainer", "programmings"]),
+        ("validations", vec!["trainer", "validations"]),
+    ] {
+        t.row(&[label.to_string(), format!("{}", n(v, &path))]);
+    }
+    t.print();
     Ok(())
 }
 

@@ -68,6 +68,7 @@ use crate::pde::Problem;
 use crate::photonics::{mesh, noise};
 use crate::tensor::{gemm_rows, simd, tt_dense, Mat, TtCore};
 use crate::util::json::Value;
+use crate::util::telemetry;
 
 /// Batch shapes shared by all presets (mirrors `python/compile/model.py`).
 pub const B_FWD: usize = 128;
@@ -657,23 +658,27 @@ impl PresetEval {
     /// The materialized layer operands for Φ — cached by exact phase
     /// vector ("once per phase-vector, not per call").
     fn materialized(&self, phi: &[f32]) -> Arc<MaterializedNet> {
+        let tel = &telemetry::global().engine;
         {
             let mut cache = self.mat_cache.lock().unwrap();
             if let Some(i) = cache.iter().position(|(p, _)| p.as_slice() == phi) {
                 let hit = cache.remove(i);
                 let m = hit.1.clone();
                 cache.insert(0, hit);
+                tel.mat_cache_hits.incr();
                 return m;
             }
         }
         // build OUTSIDE the lock: materialization is the expensive part
         // and concurrent workers may be evaluating a different Φ
+        tel.mat_cache_misses.incr();
         let m = Arc::new(self.net.materialize(phi));
         let mut cache = self.mat_cache.lock().unwrap();
         // two workers can race to build the same Φ; re-check under the
         // second lock so the loser adopts the winner's entry instead of
         // inserting a duplicate (which would waste a MAT_CACHE_SLOT and
-        // could evict a live probe entry mid-epoch)
+        // could evict a live probe entry mid-epoch). The loser still
+        // built (and discards) a net, so its miss above stands.
         if let Some(i) = cache.iter().position(|(p, _)| p.as_slice() == phi) {
             let hit = cache.remove(i);
             let m = hit.1.clone();
@@ -681,6 +686,10 @@ impl PresetEval {
             return m;
         }
         cache.insert(0, (phi.to_vec(), m.clone()));
+        let evicted = cache.len().saturating_sub(MAT_CACHE_SLOTS);
+        if evicted > 0 {
+            tel.mat_cache_evictions.add(evicted as u64);
+        }
         cache.truncate(MAT_CACHE_SLOTS);
         m
     }
@@ -812,6 +821,8 @@ impl PresetEval {
     fn loss_fd_batch(&self, phis: &[f32], k: usize, xr: &[f32], o: DispatchOpts) -> Vec<f32> {
         let d = phis.len() / k;
         let mut out = vec![0.0f32; k];
+        telemetry::global().engine.probe_fanouts.incr();
+        telemetry::global().engine.probe_lanes.add(k as u64);
         for_probes_capped(o.par, o.probes, &mut out, |i, inner| {
             self.loss_fd_impl(&phis[i * d..(i + 1) * d], xr, EvalPath::Engine(inner), o.bw, o.prec)
         });
@@ -906,6 +917,8 @@ impl PresetEval {
     ) -> Vec<f32> {
         let d = phis.len() / k;
         let mut out = vec![0.0f32; k];
+        telemetry::global().engine.probe_fanouts.incr();
+        telemetry::global().engine.probe_lanes.add(k as u64);
         for_probes_capped(o.par, o.probes, &mut out, |i, inner| {
             self.loss_stein(&phis[i * d..(i + 1) * d], xr, z, inner, o.bw, o.prec)
         });
@@ -1063,6 +1076,18 @@ impl PresetEval {
                 );
             }
         }
+        // each fused job is one per-tier dispatch, same as its unfused
+        // `run_with` would have been
+        {
+            let tel = &telemetry::global().engine;
+            for o in &resolved {
+                match o.prec {
+                    EvalPrecision::F32 => tel.dispatches_f32.incr(),
+                    EvalPrecision::F64 => tel.dispatches_f64.incr(),
+                    EvalPrecision::Quantized { .. } => tel.dispatches_quantized.incr(),
+                }
+            }
+        }
         // flat (job, probe) index over the union of all jobs' probes
         let mut index = Vec::new();
         for (ji, j) in jobs.iter().enumerate() {
@@ -1072,6 +1097,8 @@ impl PresetEval {
             }
         }
         let mut flat = vec![0.0f32; index.len()];
+        telemetry::global().engine.probe_fanouts.incr();
+        telemetry::global().engine.probe_lanes.add(flat.len() as u64);
         for_probes_capped(self.par.get(), None, &mut flat, |i, inner| {
             let (ji, p, d) = index[i];
             let j = &jobs[ji];
@@ -1154,6 +1181,14 @@ impl Entry for NativeEntry {
             .resolve(opts)
             .with_context(|| format!("entry '{}'", self.meta.name))?;
         self.dispatches.fetch_add(1, Ordering::Relaxed);
+        {
+            let tel = &telemetry::global().engine;
+            match o.prec {
+                EvalPrecision::F32 => tel.dispatches_f32.incr(),
+                EvalPrecision::F64 => tel.dispatches_f64.incr(),
+                EvalPrecision::Quantized { .. } => tel.dispatches_quantized.incr(),
+            }
+        }
         let out = match self.kind {
             EntryKind::Forward => self.eval.forward_u(inputs[0], inputs[1], o.par, o.prec),
             EntryKind::Loss => vec![self.eval.loss_fd(inputs[0], inputs[1], o)],

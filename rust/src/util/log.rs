@@ -1,9 +1,12 @@
 //! Leveled stderr logger with monotonic timestamps.
 //!
-//! Level from `PHOTON_LOG` (error|warn|info|debug|trace), default info.
+//! Level from `PHOTON_LOG` (error|warn|info|debug|trace), default info;
+//! an unrecognized value warns once and falls back to info instead of
+//! silently defaulting. Output goes to stderr unless a sink is
+//! installed with [`set_sink`] (tests capture log lines that way).
 
-use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::OnceLock;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -17,18 +20,48 @@ pub enum Level {
 
 static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX);
 static START: OnceLock<Instant> = OnceLock::new();
+static BAD_ENV_WARNED: AtomicBool = AtomicBool::new(false);
+
+type SinkFn = Box<dyn Fn(Level, &str, &str) + Send + Sync>;
+
+fn sink_slot() -> &'static Mutex<Option<SinkFn>> {
+    static SINK: OnceLock<Mutex<Option<SinkFn>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Map a `PHOTON_LOG` value to a level; `None` for unrecognized values
+/// (empty/unset counts as the info default, not unrecognized).
+fn parse_level(raw: &str) -> Option<u8> {
+    match raw.to_lowercase().as_str() {
+        "error" => Some(0),
+        "warn" => Some(1),
+        "" | "info" => Some(2),
+        "debug" => Some(3),
+        "trace" => Some(4),
+        _ => None,
+    }
+}
 
 fn level() -> u8 {
     let cur = LEVEL.load(Ordering::Relaxed);
     if cur != u8::MAX {
         return cur;
     }
-    let v = match std::env::var("PHOTON_LOG").unwrap_or_default().to_lowercase().as_str() {
-        "error" => 0,
-        "warn" => 1,
-        "debug" => 3,
-        "trace" => 4,
-        _ => 2,
+    let raw = std::env::var("PHOTON_LOG").unwrap_or_default();
+    let v = match parse_level(&raw) {
+        Some(v) => v,
+        None => {
+            // Store BEFORE warning: the warn_! below re-enters level(),
+            // which must already see the resolved default.
+            LEVEL.store(2, Ordering::Relaxed);
+            if !BAD_ENV_WARNED.swap(true, Ordering::Relaxed) {
+                crate::warn_!(
+                    "unrecognized PHOTON_LOG value '{raw}' \
+                     (expected error|warn|info|debug|trace), defaulting to info"
+                );
+            }
+            2
+        }
     };
     LEVEL.store(v, Ordering::Relaxed);
     v
@@ -37,6 +70,17 @@ fn level() -> u8 {
 /// Override the level programmatically (tests, `--quiet`).
 pub fn set_level(l: Level) {
     LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Route log output through `f` instead of stderr. The sink runs with
+/// an internal lock held, so it must not call back into the logger.
+pub fn set_sink(f: impl Fn(Level, &str, &str) + Send + Sync + 'static) {
+    *sink_slot().lock().unwrap_or_else(|e| e.into_inner()) = Some(Box::new(f));
+}
+
+/// Restore the default stderr output.
+pub fn clear_sink() {
+    *sink_slot().lock().unwrap_or_else(|e| e.into_inner()) = None;
 }
 
 /// Seconds since the first log call (monotonic).
@@ -53,8 +97,20 @@ pub fn log(l: Level, module: &str, msg: &str) {
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
         };
-        eprintln!("[{:>9.3}s {tag} {module}] {msg}", uptime());
+        let guard = sink_slot().lock().unwrap_or_else(|e| e.into_inner());
+        match guard.as_ref() {
+            Some(sink) => sink(l, module, msg),
+            None => {
+                drop(guard);
+                eprintln!("[{:>9.3}s {tag} {module}] {msg}", uptime());
+            }
+        }
     }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Error, module_path!(), &format!($($t)*)) };
 }
 
 #[macro_export]
@@ -72,9 +128,15 @@ macro_rules! debug {
     ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Debug, module_path!(), &format!($($t)*)) };
 }
 
+#[macro_export]
+macro_rules! trace {
+    ($($t:tt)*) => { $crate::util::log::log($crate::util::log::Level::Trace, module_path!(), &format!($($t)*)) };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn uptime_monotonic() {
@@ -88,5 +150,54 @@ mod tests {
         set_level(Level::Error);
         log(Level::Debug, "test", "should not print");
         set_level(Level::Info);
+    }
+
+    #[test]
+    fn parse_level_maps_names_and_flags_garbage() {
+        assert_eq!(parse_level("error"), Some(0));
+        assert_eq!(parse_level("WARN"), Some(1));
+        assert_eq!(parse_level(""), Some(2));
+        assert_eq!(parse_level("info"), Some(2));
+        assert_eq!(parse_level("debug"), Some(3));
+        assert_eq!(parse_level("Trace"), Some(4));
+        assert_eq!(parse_level("verbose"), None);
+        assert_eq!(parse_level("2"), None);
+    }
+
+    #[test]
+    fn sink_captures_log_lines() {
+        // Serialize against other tests that might log: set level to a
+        // tier only this test emits at, capture, then restore stderr.
+        let seen: Arc<Mutex<Vec<(Level, String, String)>>> = Arc::new(Mutex::new(Vec::new()));
+        let seen2 = Arc::clone(&seen);
+        set_sink(move |l, module, msg| {
+            seen2
+                .lock()
+                .unwrap()
+                .push((l, module.to_string(), msg.to_string()));
+        });
+        // `set_level_silences` may race this test's level writes from
+        // another harness thread, so re-arm and retry until the trace
+        // line lands (errors always pass the level gate).
+        for _ in 0..1000 {
+            set_level(Level::Trace);
+            crate::trace!("captured {}", 42);
+            let landed = seen
+                .lock()
+                .unwrap()
+                .iter()
+                .any(|(l, _, s)| *l == Level::Trace && s == "captured 42");
+            if landed {
+                break;
+            }
+        }
+        crate::error!("boom");
+        set_level(Level::Info);
+        clear_sink();
+        let got = seen.lock().unwrap();
+        assert!(got
+            .iter()
+            .any(|(l, m, s)| *l == Level::Trace && m.contains("log::tests") && s == "captured 42"));
+        assert!(got.iter().any(|(l, _, s)| *l == Level::Error && s == "boom"));
     }
 }

@@ -1,9 +1,10 @@
 //! Dependency-free substrates: RNG, JSON, CLI, stats, logging, bench
-//! harness, and a tiny property-testing helper.
+//! harness, telemetry counters, and a tiny property-testing helper.
 //!
 //! This environment has no crate registry beyond the `xla` closure
 //! (DESIGN.md §Substitutions), so the pieces that `rand`/`serde`/`clap`/
-//! `criterion` would normally provide are implemented — and tested — here.
+//! `criterion`/`prometheus` would normally provide are implemented — and
+//! tested — here.
 
 pub mod bench;
 pub mod cli;
@@ -12,3 +13,4 @@ pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod telemetry;

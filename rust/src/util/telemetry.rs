@@ -1,0 +1,661 @@
+//! Process-wide telemetry: lock-free counters + histogram buckets for
+//! every layer of the dispatch path, snapshotted on demand.
+//!
+//! The paper's headline claims are observability claims — 1.36 J and
+//! 1.15 s per 20-dim HJB solve, a 1.17e3x MZI reduction — so the repo
+//! records where dispatches, joules-proxies and microseconds go:
+//!
+//! * **engine** ([`EngineStats`], fed from `runtime::native`):
+//!   materialization-cache hits / misses / evictions, per-precision-tier
+//!   dispatch counts, probe fan-outs vs probe lanes (lane utilization);
+//!   the SIMD kernel path rides each snapshot.
+//! * **scheduler** ([`SchedulerStats`], fed from
+//!   `coordinator::scheduler`): terminal admission verdicts by type,
+//!   queue-depth high-water mark, gang count / widths, precision-fence
+//!   splits, deadline misses.
+//! * **service** ([`ServiceStats`], fed from `coordinator::service`):
+//!   completed / failed jobs, fused vs unfused epoch dispatches, and
+//!   span histograms for queue-wait and solve time.
+//! * **trainer** ([`TrainerStats`], fed from `coordinator::trainer`):
+//!   the `RunMetrics` counters (inferences, programmings, skipped
+//!   epochs) accumulated process-wide instead of staying trainer-
+//!   private, plus validation-pass spans.
+//!
+//! # Cost contract
+//!
+//! Every hot-path update is ONE relaxed atomic RMW — no locks, no
+//! syscalls, no allocation. Nothing here is read by any numeric code, so
+//! telemetry can never perturb results: the bit-exactness suites pass
+//! unchanged with it enabled (`tests/telemetry.rs` proves a run
+//! interleaved with [`snapshot`] calls is bit-identical to one without).
+//! The inner GEMM kernel (`tensor::gemm_rows`) is deliberately NOT
+//! instrumented; the kernel path taken is detected once per process by
+//! [`crate::tensor::simd::kernel_path`] and only *reported* here.
+//!
+//! # Balance invariants
+//!
+//! Counters are designed to reconcile, so a stuck pipeline is visible as
+//! an imbalance instead of a guess:
+//!
+//! * terminal admission verdicts: `admitted + rejected_total` = every
+//!   submission answered;
+//! * `admitted = jobs_completed + jobs_failed + in_flight` (and
+//!   `in_flight = 0` once a backlog is drained);
+//! * `gang_jobs` = jobs handed to workers = `admitted` after a drain.
+//!
+//! # Export
+//!
+//! [`snapshot`] materializes a [`TelemetrySnapshot`] (plain data);
+//! `TelemetrySnapshot::to_json` serializes it with a schema version
+//! (`schema_version = `[`SCHEMA_VERSION`]) through [`crate::util::json`];
+//! [`write_snapshot`] writes it atomically (tmp + rename — the
+//! `--telemetry-out` flag and the CI obs-smoke job consume this).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+/// Version of the snapshot JSON schema (bump on breaking field changes;
+/// additive fields keep the version).
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// A monotonically increasing event count. All updates are relaxed
+/// atomics: cheap enough for dispatch hot paths, exact under any
+/// interleaving (only cross-counter *ratios* are racy, never totals).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn incr(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A high-water mark (e.g. queue depth): `observe` keeps the maximum.
+#[derive(Debug, Default)]
+pub struct MaxGauge(AtomicU64);
+
+impl MaxGauge {
+    pub fn observe(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bound bucket histogram (cumulative-style bounds, final bucket
+/// is overflow). Values are also summed (micro-unit fixed point) so a
+/// snapshot can report the mean without a float atomic.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: &'static [f64],
+    /// `bounds.len() + 1` buckets; bucket i counts values <= bounds[i],
+    /// the last bucket counts the rest
+    buckets: Vec<AtomicU64>,
+    count: Counter,
+    /// total in micro-units (value * 1e6), saturating at u64
+    sum_micros: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram {
+            bounds,
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: Counter::default(),
+            sum_micros: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.count.incr();
+        let micros = if v.is_finite() && v > 0.0 { (v * 1e6) as u64 } else { 0 };
+        self.sum_micros.fetch_add(micros, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.get()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_micros.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            bounds: self.bounds.to_vec(),
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+            count: self.count(),
+            sum: self.sum(),
+        }
+    }
+}
+
+/// Plain-data snapshot of a [`Histogram`].
+#[derive(Clone, Debug)]
+pub struct HistogramSnapshot {
+    pub bounds: Vec<f64>,
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    fn to_json(&self) -> Value {
+        Value::obj(vec![
+            (
+                "bounds",
+                Value::Arr(self.bounds.iter().map(|&b| Value::Num(b)).collect()),
+            ),
+            (
+                "buckets",
+                Value::Arr(self.buckets.iter().map(|&b| Value::Num(b as f64)).collect()),
+            ),
+            ("count", Value::Num(self.count as f64)),
+            ("sum", Value::Num(self.sum)),
+            ("mean", Value::Num(self.mean())),
+        ])
+    }
+}
+
+/// Span-duration buckets (seconds): sub-millisecond dispatches up to
+/// multi-second solves.
+const SPAN_BOUNDS: &[f64] = &[0.001, 0.01, 0.1, 1.0, 10.0];
+
+/// Gang-width buckets (jobs per pop).
+const GANG_BOUNDS: &[f64] = &[1.0, 2.0, 4.0, 8.0];
+
+/// Evaluation-engine counters (`runtime::native`).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// Φ-keyed materialization cache, per lookup outcome
+    pub mat_cache_hits: Counter,
+    pub mat_cache_misses: Counter,
+    /// entries dropped off the MRU tail on insert
+    pub mat_cache_evictions: Counter,
+    /// entry dispatches by resolved precision tier
+    pub dispatches_f32: Counter,
+    pub dispatches_f64: Counter,
+    pub dispatches_quantized: Counter,
+    /// probe fan-out calls (batched / fused loss passes) ...
+    pub probe_fanouts: Counter,
+    /// ... and the probe lanes they carried: `probe_lanes /
+    /// probe_fanouts` is the mean lane occupancy per fan-out
+    pub probe_lanes: Counter,
+}
+
+/// Scheduler counters (`coordinator::scheduler`). Only *terminal*
+/// verdicts count: a blocking submit that parks on a full queue and
+/// later lands is one `admitted`, not a rejection.
+#[derive(Debug)]
+pub struct SchedulerStats {
+    pub admitted: Counter,
+    pub rejected_queue_full: Counter,
+    pub rejected_quota: Counter,
+    pub rejected_pool_dead: Counter,
+    pub rejected_closed: Counter,
+    pub queue_depth_hwm: MaxGauge,
+    /// gangs popped / jobs inside them / width distribution
+    pub gangs: Counter,
+    pub gang_jobs: Counter,
+    pub gang_size: Histogram,
+    /// gang growth stopped by a same-preset neighbour on a different
+    /// precision tier (the fusion fence)
+    pub precision_fence_splits: Counter,
+    /// jobs popped after their deadline had already passed
+    pub deadline_misses: Counter,
+}
+
+impl SchedulerStats {
+    fn new() -> SchedulerStats {
+        SchedulerStats {
+            admitted: Counter::default(),
+            rejected_queue_full: Counter::default(),
+            rejected_quota: Counter::default(),
+            rejected_pool_dead: Counter::default(),
+            rejected_closed: Counter::default(),
+            queue_depth_hwm: MaxGauge::default(),
+            gangs: Counter::default(),
+            gang_jobs: Counter::default(),
+            gang_size: Histogram::new(GANG_BOUNDS),
+            precision_fence_splits: Counter::default(),
+            deadline_misses: Counter::default(),
+        }
+    }
+}
+
+/// Solver-service counters (`coordinator::service`).
+#[derive(Debug)]
+pub struct ServiceStats {
+    pub jobs_completed: Counter,
+    pub jobs_failed: Counter,
+    /// per-lane epoch dispatches that went through a fused cross-job
+    /// pass vs solo
+    pub fused_epochs: Counter,
+    pub unfused_epochs: Counter,
+    /// per-job spans: submission -> pop, pop -> result
+    pub queue_wait_s: Histogram,
+    pub solve_s: Histogram,
+}
+
+impl ServiceStats {
+    fn new() -> ServiceStats {
+        ServiceStats {
+            jobs_completed: Counter::default(),
+            jobs_failed: Counter::default(),
+            fused_epochs: Counter::default(),
+            unfused_epochs: Counter::default(),
+            queue_wait_s: Histogram::new(SPAN_BOUNDS),
+            solve_s: Histogram::new(SPAN_BOUNDS),
+        }
+    }
+}
+
+/// Trainer counters (`coordinator::trainer`): the `RunMetrics` fields,
+/// accumulated process-wide.
+#[derive(Debug)]
+pub struct TrainerStats {
+    /// epochs that applied an optimizer step
+    pub epochs_applied: Counter,
+    /// epochs skipped on non-finite probe losses
+    pub skipped_epochs: Counter,
+    /// simulated single-sample chip inferences
+    pub inferences: Counter,
+    /// distinct chip (re)programming events
+    pub programmings: Counter,
+    pub validations: Counter,
+    pub validate_s: Histogram,
+}
+
+impl TrainerStats {
+    fn new() -> TrainerStats {
+        TrainerStats {
+            epochs_applied: Counter::default(),
+            skipped_epochs: Counter::default(),
+            inferences: Counter::default(),
+            programmings: Counter::default(),
+            validations: Counter::default(),
+            validate_s: Histogram::new(SPAN_BOUNDS),
+        }
+    }
+}
+
+/// The process-wide telemetry registry ([`global`]).
+#[derive(Debug)]
+pub struct Telemetry {
+    pub engine: EngineStats,
+    pub scheduler: SchedulerStats,
+    pub service: ServiceStats,
+    pub trainer: TrainerStats,
+}
+
+impl Telemetry {
+    fn new() -> Telemetry {
+        Telemetry {
+            engine: EngineStats::default(),
+            scheduler: SchedulerStats::new(),
+            service: ServiceStats::new(),
+            trainer: TrainerStats::new(),
+        }
+    }
+
+    /// Materialize a consistent-enough snapshot (each counter is read
+    /// once, relaxed; cross-counter skew is bounded by in-flight work).
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            schema_version: SCHEMA_VERSION,
+            kernel_path: crate::tensor::simd::kernel_path().to_string(),
+            engine: EngineSnapshot {
+                mat_cache_hits: self.engine.mat_cache_hits.get(),
+                mat_cache_misses: self.engine.mat_cache_misses.get(),
+                mat_cache_evictions: self.engine.mat_cache_evictions.get(),
+                dispatches_f32: self.engine.dispatches_f32.get(),
+                dispatches_f64: self.engine.dispatches_f64.get(),
+                dispatches_quantized: self.engine.dispatches_quantized.get(),
+                probe_fanouts: self.engine.probe_fanouts.get(),
+                probe_lanes: self.engine.probe_lanes.get(),
+            },
+            scheduler: SchedulerSnapshot {
+                admitted: self.scheduler.admitted.get(),
+                rejected_queue_full: self.scheduler.rejected_queue_full.get(),
+                rejected_quota: self.scheduler.rejected_quota.get(),
+                rejected_pool_dead: self.scheduler.rejected_pool_dead.get(),
+                rejected_closed: self.scheduler.rejected_closed.get(),
+                queue_depth_hwm: self.scheduler.queue_depth_hwm.get(),
+                gangs: self.scheduler.gangs.get(),
+                gang_jobs: self.scheduler.gang_jobs.get(),
+                gang_size: self.scheduler.gang_size.snapshot(),
+                precision_fence_splits: self.scheduler.precision_fence_splits.get(),
+                deadline_misses: self.scheduler.deadline_misses.get(),
+            },
+            service: ServiceSnapshot {
+                jobs_completed: self.service.jobs_completed.get(),
+                jobs_failed: self.service.jobs_failed.get(),
+                fused_epochs: self.service.fused_epochs.get(),
+                unfused_epochs: self.service.unfused_epochs.get(),
+                queue_wait_s: self.service.queue_wait_s.snapshot(),
+                solve_s: self.service.solve_s.snapshot(),
+            },
+            trainer: TrainerSnapshot {
+                epochs_applied: self.trainer.epochs_applied.get(),
+                skipped_epochs: self.trainer.skipped_epochs.get(),
+                inferences: self.trainer.inferences.get(),
+                programmings: self.trainer.programmings.get(),
+                validations: self.trainer.validations.get(),
+                validate_s: self.trainer.validate_s.snapshot(),
+            },
+        }
+    }
+}
+
+/// The process-wide registry. Counters are global by design: one solver
+/// process is one accounting domain, and global relaxed atomics keep
+/// the hot-path cost at a single RMW.
+pub fn global() -> &'static Telemetry {
+    static G: OnceLock<Telemetry> = OnceLock::new();
+    G.get_or_init(Telemetry::new)
+}
+
+/// [`Telemetry::snapshot`] of the [`global`] registry.
+pub fn snapshot() -> TelemetrySnapshot {
+    global().snapshot()
+}
+
+/// Plain-data engine counters.
+#[derive(Clone, Debug)]
+pub struct EngineSnapshot {
+    pub mat_cache_hits: u64,
+    pub mat_cache_misses: u64,
+    pub mat_cache_evictions: u64,
+    pub dispatches_f32: u64,
+    pub dispatches_f64: u64,
+    pub dispatches_quantized: u64,
+    pub probe_fanouts: u64,
+    pub probe_lanes: u64,
+}
+
+impl EngineSnapshot {
+    pub fn dispatches_total(&self) -> u64 {
+        self.dispatches_f32 + self.dispatches_f64 + self.dispatches_quantized
+    }
+}
+
+/// Plain-data scheduler counters.
+#[derive(Clone, Debug)]
+pub struct SchedulerSnapshot {
+    pub admitted: u64,
+    pub rejected_queue_full: u64,
+    pub rejected_quota: u64,
+    pub rejected_pool_dead: u64,
+    pub rejected_closed: u64,
+    pub queue_depth_hwm: u64,
+    pub gangs: u64,
+    pub gang_jobs: u64,
+    pub gang_size: HistogramSnapshot,
+    pub precision_fence_splits: u64,
+    pub deadline_misses: u64,
+}
+
+impl SchedulerSnapshot {
+    pub fn rejected_total(&self) -> u64 {
+        self.rejected_queue_full
+            + self.rejected_quota
+            + self.rejected_pool_dead
+            + self.rejected_closed
+    }
+}
+
+/// Plain-data service counters.
+#[derive(Clone, Debug)]
+pub struct ServiceSnapshot {
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub fused_epochs: u64,
+    pub unfused_epochs: u64,
+    pub queue_wait_s: HistogramSnapshot,
+    pub solve_s: HistogramSnapshot,
+}
+
+/// Plain-data trainer counters.
+#[derive(Clone, Debug)]
+pub struct TrainerSnapshot {
+    pub epochs_applied: u64,
+    pub skipped_epochs: u64,
+    pub inferences: u64,
+    pub programmings: u64,
+    pub validations: u64,
+    pub validate_s: HistogramSnapshot,
+}
+
+/// One materialized, schema-versioned view of the registry.
+#[derive(Clone, Debug)]
+pub struct TelemetrySnapshot {
+    pub schema_version: u64,
+    pub kernel_path: String,
+    pub engine: EngineSnapshot,
+    pub scheduler: SchedulerSnapshot,
+    pub service: ServiceSnapshot,
+    pub trainer: TrainerSnapshot,
+}
+
+impl TelemetrySnapshot {
+    /// Scheduler-admitted jobs whose result has not been emitted yet.
+    /// After a drained backlog this is 0 and `admitted = completed +
+    /// failed` (the balance invariant `tests/telemetry.rs` asserts).
+    pub fn in_flight(&self) -> u64 {
+        self.scheduler
+            .admitted
+            .saturating_sub(self.service.jobs_completed + self.service.jobs_failed)
+    }
+
+    pub fn to_json(&self) -> Value {
+        let n = |v: u64| Value::Num(v as f64);
+        Value::obj(vec![
+            ("schema_version", n(self.schema_version)),
+            ("kernel_path", Value::Str(self.kernel_path.clone())),
+            (
+                "engine",
+                Value::obj(vec![
+                    (
+                        "mat_cache",
+                        Value::obj(vec![
+                            ("hits", n(self.engine.mat_cache_hits)),
+                            ("misses", n(self.engine.mat_cache_misses)),
+                            ("evictions", n(self.engine.mat_cache_evictions)),
+                        ]),
+                    ),
+                    (
+                        "dispatches",
+                        Value::obj(vec![
+                            ("f32", n(self.engine.dispatches_f32)),
+                            ("f64", n(self.engine.dispatches_f64)),
+                            ("quantized", n(self.engine.dispatches_quantized)),
+                            ("total", n(self.engine.dispatches_total())),
+                        ]),
+                    ),
+                    ("probe_fanouts", n(self.engine.probe_fanouts)),
+                    ("probe_lanes", n(self.engine.probe_lanes)),
+                ]),
+            ),
+            (
+                "scheduler",
+                Value::obj(vec![
+                    ("admitted", n(self.scheduler.admitted)),
+                    (
+                        "rejected",
+                        Value::obj(vec![
+                            ("queue_full", n(self.scheduler.rejected_queue_full)),
+                            ("quota", n(self.scheduler.rejected_quota)),
+                            ("pool_dead", n(self.scheduler.rejected_pool_dead)),
+                            ("closed", n(self.scheduler.rejected_closed)),
+                            ("total", n(self.scheduler.rejected_total())),
+                        ]),
+                    ),
+                    ("queue_depth_hwm", n(self.scheduler.queue_depth_hwm)),
+                    ("gangs", n(self.scheduler.gangs)),
+                    ("gang_jobs", n(self.scheduler.gang_jobs)),
+                    ("gang_size", self.scheduler.gang_size.to_json()),
+                    (
+                        "precision_fence_splits",
+                        n(self.scheduler.precision_fence_splits),
+                    ),
+                    ("deadline_misses", n(self.scheduler.deadline_misses)),
+                ]),
+            ),
+            (
+                "service",
+                Value::obj(vec![
+                    ("jobs_completed", n(self.service.jobs_completed)),
+                    ("jobs_failed", n(self.service.jobs_failed)),
+                    ("jobs_in_flight", n(self.in_flight())),
+                    ("fused_epochs", n(self.service.fused_epochs)),
+                    ("unfused_epochs", n(self.service.unfused_epochs)),
+                    (
+                        "spans",
+                        Value::obj(vec![
+                            ("queue_wait_s", self.service.queue_wait_s.to_json()),
+                            ("solve_s", self.service.solve_s.to_json()),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "trainer",
+                Value::obj(vec![
+                    ("epochs_applied", n(self.trainer.epochs_applied)),
+                    ("skipped_epochs", n(self.trainer.skipped_epochs)),
+                    ("inferences", n(self.trainer.inferences)),
+                    ("programmings", n(self.trainer.programmings)),
+                    ("validations", n(self.trainer.validations)),
+                    (
+                        "spans",
+                        Value::obj(vec![(
+                            "validate_s",
+                            self.trainer.validate_s.to_json(),
+                        )]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Atomically write the current global snapshot as JSON: serialize to a
+/// pid-suffixed temp file next to `path`, then rename over it — a
+/// reader never observes a torn snapshot (same discipline as the
+/// checkpoint writer).
+pub fn write_snapshot(path: &Path) -> Result<()> {
+    let snap = snapshot();
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, snap.to_json().to_string())
+        .with_context(|| format!("writing telemetry snapshot to {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| {
+        format!("renaming telemetry snapshot into {}", path.display())
+    })?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_are_exact_under_concurrent_hammering() {
+        let c = Counter::default();
+        let g = MaxGauge::default();
+        let h = Histogram::new(SPAN_BOUNDS);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let (c, g, h) = (&c, &g, &h);
+                s.spawn(move || {
+                    for i in 0..1000 {
+                        c.incr();
+                        g.observe(t * 1000 + i);
+                        h.observe(0.0005 * (1 + i % 4) as f64);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+        assert_eq!(g.get(), 7999);
+        assert_eq!(h.count(), 8000);
+        let snap = h.snapshot();
+        assert_eq!(snap.buckets.iter().sum::<u64>(), 8000);
+        // 0.5ms and 1.0ms land in the first bucket (<= 1ms), 1.5/2.0ms
+        // in the second
+        assert_eq!(snap.buckets[0], 4000);
+        assert_eq!(snap.buckets[1], 4000);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket_catches_the_tail() {
+        let h = Histogram::new(SPAN_BOUNDS);
+        h.observe(100.0); // beyond the last bound
+        h.observe(-1.0); // clamped into the first bucket, sum unchanged
+        let s = h.snapshot();
+        assert_eq!(s.buckets[s.buckets.len() - 1], 1);
+        assert_eq!(s.count, 2);
+        assert!((s.sum - 100.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn snapshot_serializes_with_schema_version() {
+        let v = global().snapshot().to_json();
+        assert_eq!(
+            v.req("schema_version").unwrap().as_usize().unwrap() as u64,
+            SCHEMA_VERSION
+        );
+        for section in ["engine", "scheduler", "service", "trainer"] {
+            assert!(v.get(section).is_some(), "missing section '{section}'");
+        }
+        // parse round trip through the JSON codec
+        let text = v.to_string();
+        let back = crate::util::json::parse(&text).unwrap();
+        assert!(back.get("kernel_path").and_then(|k| k.as_str()).is_some());
+    }
+
+    #[test]
+    fn write_snapshot_is_atomic_and_parseable() {
+        let dir = std::env::temp_dir().join(format!("photon_tel_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("telemetry.json");
+        write_snapshot(&path).unwrap();
+        let v = crate::util::json::parse_file(&path).unwrap();
+        assert_eq!(v.req("schema_version").unwrap().as_usize(), Some(1));
+        // no stray temp file left behind
+        assert!(!path.with_extension(format!("tmp.{}", std::process::id())).exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,172 @@
+//! Telemetry acceptance tests: the counters must *balance* under
+//! concurrent load (every submission is accounted for exactly once) and
+//! must be *free* (reading snapshots between epochs cannot perturb a
+//! single bit of the training trajectory).
+//!
+//! Telemetry counters are process-global, so these tests serialize on a
+//! local mutex and assert exact before/after deltas — no other test in
+//! this binary can interleave its counts.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use photon_pinn::coordinator::trainer::{OnChipTrainer, TrainConfig};
+use photon_pinn::coordinator::{Admission, ScheduledJob, ServiceConfig, SolveRequest, SolverService};
+use photon_pinn::runtime::NativeBackend;
+use photon_pinn::util::telemetry;
+
+/// Serializes the tests in this binary (the harness runs them on
+/// parallel threads; the counters are process-global).
+static GUARD: Mutex<()> = Mutex::new(());
+
+fn cfg(be: &NativeBackend, preset: &str, seed: u64, epochs: usize) -> TrainConfig {
+    let mut cfg = TrainConfig::from_manifest(be, preset).unwrap();
+    cfg.epochs = epochs;
+    cfg.validate_every = 0;
+    cfg.verbose = false;
+    cfg.seed = seed;
+    cfg
+}
+
+/// The balance invariant: after a fully drained backlog, every
+/// submission answered with a terminal verdict is accounted for —
+/// `admitted = completed + failed` and `rejected` matches what the
+/// submitters were actually told, even when 4 threads hammer a small
+/// queue with per-tenant quotas.
+#[test]
+fn service_counters_balance_under_concurrent_submitters() {
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let before = telemetry::snapshot();
+
+    let be = Arc::new(NativeBackend::builtin());
+    let svc = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(2, 4).with_tenant_quota(2).with_fuse_max(4),
+    );
+    let accepted = AtomicU64::new(0);
+    let rejected = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let svc = &svc;
+            let be = &be;
+            let (accepted, rejected) = (&accepted, &rejected);
+            s.spawn(move || {
+                for i in 0..8u64 {
+                    let c = cfg(be, "tonn_micro", 100 * t + i, 3);
+                    let job = ScheduledJob::new(SolveRequest { id: 8 * t + i, config: c })
+                        .with_tenant(&format!("tenant{t}"));
+                    match svc.admit(job) {
+                        Admission::Accepted { .. } => accepted.fetch_add(1, Ordering::Relaxed),
+                        Admission::QueueFull
+                        | Admission::QuotaExceeded { .. }
+                        | Admission::PoolDead { .. }
+                        | Admission::Closed => rejected.fetch_add(1, Ordering::Relaxed),
+                    };
+                }
+            });
+        }
+    });
+    let n_accepted = accepted.load(Ordering::Relaxed);
+    let n_rejected = rejected.load(Ordering::Relaxed);
+    assert_eq!(n_accepted + n_rejected, 32, "every admit got a verdict");
+    assert!(n_accepted > 0, "some jobs must land");
+    for _ in 0..n_accepted {
+        svc.recv().unwrap();
+    }
+    assert!(svc.shutdown().is_empty(), "backlog fully drained");
+
+    let after = telemetry::snapshot();
+    assert_eq!(
+        after.scheduler.admitted - before.scheduler.admitted,
+        n_accepted,
+        "admitted counter == verdicts the submitters saw"
+    );
+    assert_eq!(
+        after.scheduler.rejected_total() - before.scheduler.rejected_total(),
+        n_rejected,
+        "rejected counters == verdicts the submitters saw"
+    );
+    let done = (after.service.jobs_completed + after.service.jobs_failed)
+        - (before.service.jobs_completed + before.service.jobs_failed);
+    assert_eq!(done, n_accepted, "admitted = completed + failed after a drain");
+    assert!(
+        after.engine.dispatches_f32 > before.engine.dispatches_f32,
+        "the drained jobs dispatched on the default f32 tier"
+    );
+    assert!(after.scheduler.queue_depth_hwm >= 1);
+    assert_eq!(
+        after.service.queue_wait_s.count - before.service.queue_wait_s.count,
+        n_accepted,
+        "one queue-wait span per finished job"
+    );
+}
+
+/// Telemetry is observation, not intervention: driving the stepping API
+/// with a snapshot taken between every epoch must reproduce the plain
+/// `train()` trajectory bit-for-bit.
+#[test]
+fn snapshots_do_not_perturb_training() {
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let be = NativeBackend::builtin();
+
+    let base = OnChipTrainer::new(&be, cfg(&be, "tonn_micro", 7, 25))
+        .unwrap()
+        .train()
+        .unwrap();
+
+    let mut tr = OnChipTrainer::new(&be, cfg(&be, "tonn_micro", 7, 25)).unwrap();
+    let mut st = tr.begin().unwrap();
+    while tr.epoch_pending(&st) {
+        tr.epoch_begin(&mut st);
+        let losses = tr.dispatch_losses(&mut st).unwrap();
+        tr.epoch_apply(&mut st, &losses).unwrap();
+        // the observation under test: a full registry read every epoch
+        let snap = telemetry::snapshot();
+        assert!(snap.engine.dispatches_total() > 0);
+    }
+    let probed = tr.finish(st).unwrap();
+
+    assert_eq!(base.phi, probed.phi, "identical parameter trajectory");
+    assert_eq!(
+        base.final_val.to_bits(),
+        probed.final_val.to_bits(),
+        "identical final validation, to the bit"
+    );
+}
+
+/// `write_snapshot` output must round-trip through the JSON parser with
+/// the schema version and live counter values intact.
+#[test]
+fn snapshot_file_round_trips_through_json() {
+    let _g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let be = NativeBackend::builtin();
+    OnChipTrainer::new(&be, cfg(&be, "tonn_micro", 3, 2))
+        .unwrap()
+        .train()
+        .unwrap();
+
+    let dir = std::env::temp_dir().join(format!("photon_tel_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path: PathBuf = dir.join("snapshot.json");
+    telemetry::write_snapshot(&path).unwrap();
+
+    let v = photon_pinn::util::json::parse_file(&path).unwrap();
+    let schema = v.get("schema_version").and_then(|x| x.as_usize()).unwrap();
+    assert_eq!(schema as u64, telemetry::SCHEMA_VERSION);
+    let total = v
+        .get("engine")
+        .and_then(|e| e.get("dispatches"))
+        .and_then(|d| d.get("total"))
+        .and_then(|x| x.as_f64())
+        .unwrap();
+    assert!(total >= 1.0, "the train run above dispatched, got {total}");
+    let applied = v
+        .get("trainer")
+        .and_then(|t| t.get("epochs_applied"))
+        .and_then(|x| x.as_f64())
+        .unwrap();
+    assert!(applied >= 2.0, "{applied}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
