@@ -245,6 +245,10 @@ fn main() {
             ),
             ("epochs_applied", snap.trainer.epochs_applied as f64),
             ("inferences", snap.trainer.inferences as f64),
+            ("pool_dispatches", snap.pool.dispatches as f64),
+            ("pool_tasks_executed", snap.pool.tasks_executed as f64),
+            ("pool_tasks_stolen", snap.pool.tasks_stolen as f64),
+            ("pool_queue_depth_hwm", snap.pool.queue_depth_hwm as f64),
         ],
     );
     println!(
@@ -254,6 +258,14 @@ fn main() {
         snap.engine.mat_cache_hits,
         snap.engine.mat_cache_misses,
         snap.kernel_path,
+    );
+    println!(
+        "worker pool ({}): {} fan-outs, {} tasks executed + {} stolen on {} worker(s)",
+        snap.pool.driver,
+        snap.pool.dispatches,
+        snap.pool.tasks_executed,
+        snap.pool.tasks_stolen,
+        snap.pool.workers,
     );
 
     let path = bench_report_path();

@@ -11,7 +11,9 @@
 //! * `PHOTON_BENCH_FAST=1`    — tiny-preset smoke run (CI)
 //! * `PHOTON_THREADS=N`       — engine threads for the parallel cases
 //! * `PHOTON_BENCH_ENFORCE=1` — exit non-zero if the parallel engine is
-//!   slower than the sequential engine on any sizable (non-micro) preset
+//!   slower than the sequential engine on any sizable (non-micro)
+//!   preset, or if the persistent worker pool is slower than the
+//!   scoped-thread oracle driver on any gated pool-vs-scoped case
 //! * `PHOTON_BENCH_OUT=path`  — report location (default: repo root)
 
 mod common;
@@ -259,6 +261,95 @@ fn main() {
             results.push(seq);
             results.push(par);
         }
+    }
+
+    // pool vs scoped dispatch driver: the persistent work-stealing pool
+    // against the retained scoped-thread oracle (PHOTON_FORCE_SCOPED=1)
+    // on the same probe-parallel workload, per gated preset size, plus a
+    // full training run. Results are bit-identical by construction; the
+    // pool cases join the enforce gate below, so CI fails if routing
+    // dispatches through the persistent pool is ever slower than
+    // spawning fresh scoped threads per dispatch.
+    {
+        use photon_pinn::runtime::pool;
+        rt.set_parallel(par_cfg);
+        for preset in presets {
+            let Ok(pm) = rt.manifest().preset(preset) else { continue };
+            if preset.contains("micro") {
+                continue; // below the enforce gate's work floor
+            }
+            let Ok(lm) = rt.entry(preset, "loss_multi") else { continue };
+            let (warm, iters) = match (fast, *preset) {
+                (true, _) => (1, 5),
+                (false, "tonn_paper") => (1, 5),
+                (false, _) => (3, 20),
+            };
+            let mut rng = Rng::new(21);
+            let phi = pm.layout.init_vector(&mut rng);
+            let k = rt.manifest().k_multi;
+            let phis: Vec<f32> = (0..k).flat_map(|_| phi.iter().copied()).collect();
+            let mut sampler = Sampler::new(pm.pde.clone(), 22);
+            let mut xr = Vec::new();
+            sampler.batch(rt.manifest().b_residual, &mut xr);
+            pool::set_force_scoped(true);
+            let scoped = bench(
+                &format!("{preset}/loss_multi driver scoped({}T)", par_cfg.threads),
+                warm,
+                iters,
+                || {
+                    lm.run1(&[&phis, &xr]).unwrap();
+                },
+            );
+            pool::set_force_scoped(false);
+            let pooled = bench(
+                &format!("{preset}/loss_multi driver pool({}T)", par_cfg.threads),
+                warm,
+                iters,
+                || {
+                    lm.run1(&[&phis, &xr]).unwrap();
+                },
+            );
+            rep.case_vs(&scoped, None);
+            rep.case_vs(&pooled, Some(&scoped));
+            enforced.push((pooled.name.clone(), pooled.median_s, scoped.median_s));
+            results.push(scoped);
+            results.push(pooled);
+        }
+        // the acceptance number: whole training epochs, pool vs scoped
+        let preset = "tonn_small";
+        if rt.manifest().preset(preset).is_ok() {
+            let epochs = if fast { 3 } else { 12 };
+            let iters = if fast { 3 } else { 5 };
+            let mut cfg = TrainConfig::from_manifest(&rt, preset).unwrap();
+            cfg.epochs = epochs;
+            cfg.seed = 1;
+            cfg.validate_every = 0;
+            cfg.verbose = false;
+            let mut run = |label: &str| {
+                bench(&format!("train/{preset} {epochs}ep {label}"), 1, iters, || {
+                    OnChipTrainer::new(&rt, cfg.clone()).unwrap().train().unwrap();
+                })
+            };
+            pool::set_force_scoped(true);
+            let scoped = run("driver scoped");
+            pool::set_force_scoped(false);
+            let pooled = run("driver pool");
+            rep.case_vs(&scoped, None);
+            rep.case_vs(&pooled, Some(&scoped));
+            rep.case_raw_with(
+                &format!("train_throughput/{preset} pool-vs-scoped"),
+                pooled.median_s,
+                &[
+                    ("epochs_per_s_pool", epochs as f64 / pooled.median_s),
+                    ("epochs_per_s_scoped", epochs as f64 / scoped.median_s),
+                ],
+            );
+            enforced.push((pooled.name.clone(), pooled.median_s, scoped.median_s));
+            results.push(scoped);
+            results.push(pooled);
+        }
+        // leave the driver as the environment requested it
+        pool::set_force_scoped(std::env::var("PHOTON_FORCE_SCOPED").as_deref() == Ok("1"));
     }
 
     // precision tiers (their own "precision" report section): the f64

@@ -5,6 +5,10 @@
 //! epoch) and once with `fuse_max = 1` (every job dispatches alone, the
 //! pre-scheduler behavior). Fusion changes LATENCY ONLY: both drains
 //! produce bit-identical Φ/val per job (`tests/service_scheduler.rs`).
+//! All worker threads fan their engine passes out on the ONE shared
+//! evaluation pool (`runtime::pool`); its counters are recorded as a
+//! `pool_totals` case so steal/occupancy behavior under a multi-worker
+//! backlog stays visible across PRs.
 //! Every case merges into `BENCH_native.json` (schema:
 //! `util::bench::BenchReport`) so perf is comparable across PRs.
 //!
@@ -120,11 +124,34 @@ fn main() {
         results.push(fused);
     }
 
+    // what the shared worker pool did while {WORKERS} service workers
+    // drained the backlogs above (process-wide totals)
+    let snap = photon_pinn::util::telemetry::snapshot();
+    rep.case_raw_with(
+        &format!("service/{PRESET} pool_totals (telemetry)"),
+        0.0,
+        &[
+            ("pool_dispatches", snap.pool.dispatches as f64),
+            ("pool_tasks_executed", snap.pool.tasks_executed as f64),
+            ("pool_tasks_stolen", snap.pool.tasks_stolen as f64),
+            ("pool_queue_depth_hwm", snap.pool.queue_depth_hwm as f64),
+            ("pool_lane_width_hwm", snap.pool.lane_width_hwm as f64),
+        ],
+    );
+
     report(&results);
     println!(
         "\naggregate throughput: {WORKERS} workers, {EPOCHS}-epoch {PRESET} jobs; fused drains"
     );
     println!("merge each epoch's probe dispatches across a gang of <= {fused_width} jobs.");
+    println!(
+        "shared pool ({}): {} fan-outs, {} tasks executed + {} stolen, queue hwm {}",
+        snap.pool.driver,
+        snap.pool.dispatches,
+        snap.pool.tasks_executed,
+        snap.pool.tasks_stolen,
+        snap.pool.queue_depth_hwm,
+    );
 
     let path = bench_report_path();
     if let Err(e) = rep.write_merged(&path) {

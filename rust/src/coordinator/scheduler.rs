@@ -21,7 +21,10 @@
 //!   preset, which the service drives in lockstep and fuses into
 //!   cross-job engine passes ([`crate::runtime::Backend::loss_fused`]).
 //!   Only consecutive heap tops are grouped, so gang formation never
-//!   reorders across priorities.
+//!   reorders across priorities. Fused or solo, every engine pass fans
+//!   out on the ONE process-wide worker pool
+//!   ([`crate::runtime::pool`]), whose global thread budget all gangs
+//!   and workers cooperatively share.
 //! * **Live-worker tracking**: workers register their backend load
 //!   outcome; once every worker has resolved and none is live, the pool
 //!   is dead and `submit`/`recv` fail fast with the load error instead

@@ -39,7 +39,12 @@
 //! (`TrainConfig.{parallel,bc_weight,probe_workers}`) rides every
 //! dispatch as [`EvalOptions`](crate::runtime::EvalOptions) — fused or
 //! not, no backend state is mutated per job. `ServiceConfig.parallel`
-//! still sets the backend-wide *default* engine config once at startup.
+//! still sets the backend-wide *default* engine config once at startup —
+//! which also sizes the global thread budget of the persistent worker
+//! pool ([`crate::runtime::pool`]) every dispatch of every worker fans
+//! out on, so N concurrent jobs cooperatively divide the cores instead
+//! of each spawning `threads` of their own. [`SolverService::shutdown`]
+//! drains that pool before returning.
 //!
 //! Failure containment, three layers:
 //!
@@ -113,9 +118,11 @@ pub struct ServiceConfig {
     pub warmup_preset: Option<String>,
     /// backend-wide DEFAULT evaluation-engine parallelism, applied to
     /// the backend(s) once at startup (via the deprecated
-    /// `set_parallel` shim); `None` keeps the backend's current
+    /// `set_parallel` shim, which also sets the shared worker pool's
+    /// global thread budget); `None` keeps the backend's current
     /// setting. Jobs override it per dispatch through
-    /// `TrainConfig.parallel` ([`crate::runtime::EvalOptions`]).
+    /// `TrainConfig.parallel` ([`crate::runtime::EvalOptions`]) — such
+    /// overrides cap at the pool budget rather than oversubscribing.
     pub parallel: Option<ParallelConfig>,
     /// per-tenant cap on in-flight (queued + running) jobs; `None`
     /// disables quota checks
@@ -600,7 +607,9 @@ impl SolverService {
     /// No spin-waits: the workers hold the only result senders, so the
     /// blocking drain ends exactly when the last worker exits — and a
     /// worker blocked mid-`send` on a full results channel is freed by
-    /// that same drain, so the join can never wedge.
+    /// that same drain, so the join can never wedge. Finally the shared
+    /// evaluation pool ([`crate::runtime::pool`]) is drained, so the
+    /// caller gets back a quiescent process (parked pool workers only).
     pub fn shutdown(self) -> Vec<SolveResult> {
         self.queue.close();
         let mut rest = Vec::new();
@@ -610,6 +619,7 @@ impl SolverService {
         for h in self.workers {
             let _ = h.join();
         }
+        crate::runtime::pool::drain();
         rest
     }
 }

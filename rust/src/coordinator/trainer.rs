@@ -11,8 +11,9 @@
 //! 3. programs each setting through the chip's noise path
 //!    (Φ_eff = Ω(ΓΦ)+Φ_b) and dispatches ONE batched loss executable
 //!    (`loss_multi` / `loss_stein_multi`) — the native engine fans the
-//!    K independent probes out across workers (two-level parallelism:
-//!    probes × row blocks, see [`crate::runtime::parallel`]), and
+//!    K independent probes out across the persistent shared worker pool
+//!    (two-level parallelism: probes × row blocks, see
+//!    [`crate::runtime::parallel`] and [`crate::runtime::pool`]), and
 //!    probe-parallel ≡ sequential bit for bit;
 //! 4. forms the gradient estimate (Eq. 5) and applies the pluggable
 //!    [`Optimizer`] (resolved from [`crate::optim::optimizer::global`];
@@ -32,7 +33,9 @@
 //! [`EvalOptions`] and rides every dispatch: the trainer never mutates
 //! shared backend state, so concurrent mixed-config jobs on a
 //! shared-backend solver service cannot corrupt each other's losses
-//! (`tests/service_mixed_workload.rs`).
+//! (`tests/service_mixed_workload.rs`). A per-job `parallel.threads`
+//! wider than the shared pool's global budget caps at the budget
+//! (warned once) instead of oversubscribing the machine.
 //!
 //! The loop body is also exposed as a **stepping API** —
 //! [`OnChipTrainer::begin`] / [`OnChipTrainer::epoch_begin`] /

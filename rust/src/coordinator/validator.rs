@@ -61,7 +61,9 @@ impl Validator {
     /// dispatches and nothing else. Validation batches are the largest
     /// row blocks the engine sees (B_VAL rows per dispatch), so
     /// standalone validation sweeps benefit the most from parallel
-    /// row-blocks.
+    /// row-blocks — fanned out, like every dispatch, on the shared
+    /// worker pool ([`crate::runtime::pool`]) within its global thread
+    /// budget.
     pub fn with_parallel(
         rt: &dyn Backend,
         preset: &str,

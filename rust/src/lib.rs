@@ -21,9 +21,11 @@
 //!   cache-aware evaluation engine (per-Φ materialization cache, blocked
 //!   GEMM micro-kernel with runtime-dispatched SIMD lanes
 //!   ([`tensor::simd`]: portable wide / AVX2 / forced scalar — all
-//!   bit-identical on the default path), scoped-thread row-block
-//!   fan-out) tuned by [`runtime::ParallelConfig`] — results are
-//!   identical for every config. Three precision tiers ride each
+//!   bit-identical on the default path), row-block fan-out on the
+//!   process-wide persistent work-stealing pool ([`runtime::pool`],
+//!   scoped-thread oracle behind `PHOTON_FORCE_SCOPED=1`)) tuned by
+//!   [`runtime::ParallelConfig`] — results are
+//!   identical for every config and driver. Three precision tiers ride each
 //!   dispatch as [`runtime::EvalPrecision`]: the default f32 engine, an
 //!   f64 oracle, and bit-depth-quantized weights mapped onto the
 //!   photonics noise model (README §Precision tiers).
@@ -107,9 +109,13 @@
 //! The K probe losses of an epoch go through the **batched loss API**
 //! (`loss_multi` / `loss_stein_multi` entries): the native engine fans
 //! probes across workers and row-blocks within each probe under one
-//! [`runtime::ParallelConfig`] (two-level parallelism), bit-identical
+//! [`runtime::ParallelConfig`] (two-level parallelism), both levels
+//! executing on the shared persistent worker pool ([`runtime::pool`])
+//! within its one global thread budget, bit-identical
 //! to the sequential path — `rust/tests/probe_parallel.rs` checks every
-//! builtin preset in both FD and Stein modes. Divergent runs abort
+//! builtin preset in both FD and Stein modes, and
+//! `rust/tests/pool_equivalence.rs` pins the pool against the
+//! scoped-thread oracle driver. Divergent runs abort
 //! after `TrainConfig.max_skipped_run` consecutive non-finite epochs;
 //! `TrainConfig.checkpoint_path` + `--resume` give bit-identical
 //! warm restarts.
@@ -137,8 +143,10 @@
 //! admission verdicts by type, queue-depth high-water mark, gang
 //! widths, precision-fence splits, deadline misses), service
 //! (completions/failures, fused vs unfused lane-epochs, queue-wait and
-//! solve-span histograms) and trainer (epochs applied/skipped,
-//! inferences, programmings, validation spans). Updates are single
+//! solve-span histograms), trainer (epochs applied/skipped,
+//! inferences, programmings, validation spans) and the shared worker
+//! pool (tasks executed vs stolen, park/unpark transitions, queue and
+//! fan-out-width high-waters, per-dispatch span histogram). Updates are single
 //! relaxed atomic RMWs — no locks on any hot path, and nothing inside
 //! `tensor::gemm_rows` — so telemetry stays on in production and every
 //! bit-exactness suite passes unchanged with it enabled

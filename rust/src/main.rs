@@ -82,6 +82,8 @@ fn args_for(cmd: &str) -> Args {
                (JSON) to this path")
         .switch("stein", "use the Stein derivative estimator instead of FD")
         .switch("raw-sgd", "disable the signSGD de-noising (ablation)")
+        .switch("force-scoped", "pin the scoped-thread oracle dispatch driver instead of the \
+               persistent worker pool (same as PHOTON_FORCE_SCOPED=1)")
         .switch("quiet", "suppress progress lines")
 }
 
@@ -106,18 +108,23 @@ fn load_runtime(a: &Args) -> Result<Box<dyn Backend>> {
     if let Some(b) = a.get_usize("block-rows")? {
         par.block_rows = b.max(1);
     }
+    if a.get_bool("force-scoped") {
+        photon_pinn::runtime::pool::set_force_scoped(true);
+    }
     // CLI flow: one backend per process, so setting the backend-wide
     // DEFAULT engine config via the deprecated shim is exactly right
-    // (per-job overrides ride TrainConfig.parallel -> EvalOptions)
+    // (per-job overrides ride TrainConfig.parallel -> EvalOptions); it
+    // also sizes the shared worker pool's global thread budget
     rt.set_parallel(par);
     let par = rt.parallel();
     eprintln!(
-        "loaded {} presets ({} backend: {}, engine {} thread(s) x {} rows/block)",
+        "loaded {} presets ({} backend: {}, engine {} thread(s) x {} rows/block, {} driver)",
         rt.manifest().presets.len(),
         which,
         rt.platform(),
         par.threads,
-        par.block_rows
+        par.block_rows,
+        if photon_pinn::runtime::pool::force_scoped() { "scoped" } else { "pool" }
     );
     Ok(rt)
 }
@@ -331,8 +338,16 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
         .flag("seed", Some("0"), "base seed (job i trains with seed + i)")
         .flag("telemetry-out", None, "atomically write the end-of-run telemetry snapshot \
                (JSON) to this path")
+        .switch(
+            "force-scoped",
+            "pin the scoped-thread oracle dispatch driver instead of the \
+             persistent worker pool (same as PHOTON_FORCE_SCOPED=1)",
+        )
         .switch("quiet", "suppress streamed progress lines")
         .parse(argv)?;
+    if a.get_bool("force-scoped") {
+        photon_pinn::runtime::pool::set_force_scoped(true);
+    }
     let dir = photon_pinn::resolve_artifacts_dir(a.get_str("artifacts").as_deref());
     let be: Arc<dyn Backend + Send + Sync> =
         Arc::new(photon_pinn::runtime::NativeBackend::load_or_builtin(&dir)?);
@@ -506,6 +521,31 @@ fn print_stats_tables(v: &photon_pinn::util::json::Value) -> Result<()> {
         ("chip inferences", vec!["trainer", "inferences"]),
         ("chip programmings", vec!["trainer", "programmings"]),
         ("validations", vec!["trainer", "validations"]),
+    ] {
+        t.row(&[label.to_string(), format!("{}", n(v, &path))]);
+    }
+    t.print();
+    let mut t = Table::new("worker pool", &["counter", "value"]);
+    t.row(&[
+        "dispatch driver".to_string(),
+        v.get("pool")
+            .and_then(|p| p.get("driver"))
+            .and_then(|d| d.as_str())
+            .unwrap_or("?")
+            .to_string(),
+    ]);
+    for (label, path) in [
+        ("thread budget", vec!["pool", "budget"]),
+        ("persistent workers", vec!["pool", "workers"]),
+        ("pool dispatches", vec!["pool", "dispatches"]),
+        ("tasks executed (own lane)", vec!["pool", "tasks_executed"]),
+        ("tasks stolen", vec!["pool", "tasks_stolen"]),
+        ("worker parks", vec!["pool", "parks"]),
+        ("worker unparks", vec!["pool", "unparks"]),
+        ("queue depth high-water", vec!["pool", "queue_depth_hwm"]),
+        ("widest fan-out (lanes)", vec!["pool", "lane_width_hwm"]),
+        ("budget high-water", vec!["pool", "budget_hwm"]),
+        ("mean fan-out span (s)", vec!["pool", "spans", "fanout_s", "mean"]),
     ] {
         t.row(&[label.to_string(), format!("{}", n(v, &path))]);
     }

@@ -28,6 +28,9 @@
 //! [`parallel::for_probes`]) with results bit-identical to K sequential
 //! single-Φ dispatches; backends without a batched executable keep the
 //! per-probe `loss_stein` path (the trainer falls back automatically).
+//! Both fan-out levels execute on the process-wide persistent worker
+//! pool ([`pool`]), whose single thread budget all concurrent jobs
+//! share; `PHOTON_FORCE_SCOPED=1` pins the scoped-thread oracle driver.
 //!
 //! **Per-dispatch options.** Evaluation configuration — engine
 //! parallelism, the soft-constraint boundary weight, the probe budget
@@ -65,6 +68,7 @@ use crate::util::json::{self, Value};
 
 pub mod native;
 pub mod parallel;
+pub mod pool;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 #[cfg(all(feature = "pjrt", not(feature = "pjrt-xla")))]

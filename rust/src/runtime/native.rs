@@ -14,10 +14,12 @@
 //!   dispatch (the same amortization the artifacts perform);
 //! * batches stream through the parallel evaluation engine: contiguous
 //!   row-blocks hit the [`crate::tensor::gemm_rows`] micro-kernel and
-//!   fan out across scoped worker threads
-//!   ([`super::parallel::for_row_blocks`]), configured per dispatch by
-//!   [`EvalOptions::parallel`] (falling back to the backend default the
-//!   deprecated [`Backend::set_parallel`] shim still sets).
+//!   fan out across the persistent shared worker pool
+//!   ([`super::parallel::for_row_blocks`] → [`super::pool`]),
+//!   configured per dispatch by [`EvalOptions::parallel`] (falling back
+//!   to the backend default the deprecated [`Backend::set_parallel`]
+//!   shim still sets — which also steers the pool's global thread
+//!   budget).
 //!   Row-independent arithmetic makes the parallel path produce results
 //!   identical to the sequential one for every config; the PR-1 scalar
 //!   evaluator is retained as the reference oracle and bench baseline
@@ -227,8 +229,8 @@ impl NetEval {
     }
 
     /// Raw network output f for a flat batch of rows (B·in_dim values):
-    /// blocked GEMM over contiguous row-blocks, fanned out across scoped
-    /// worker threads. Results are identical for every `par` value.
+    /// blocked GEMM over contiguous row-blocks, fanned out across the
+    /// shared worker pool. Results are identical for every `par` value.
     fn forward_f(&self, mat: &MaterializedNet, xs: &[f32], par: ParallelConfig) -> Vec<f32> {
         let b = xs.len() / self.in_dim;
         let mut out = vec![0.0f32; b];
@@ -623,7 +625,15 @@ impl PresetEval {
     /// a hard-constrained problem, a non-finite/negative weight) are
     /// loud errors — never silently ignored or clamped.
     fn resolve(&self, opts: &EvalOptions) -> Result<DispatchOpts> {
-        let par = opts.parallel.unwrap_or_else(|| self.par.get());
+        let par = match opts.parallel {
+            Some(p) => {
+                // per-job overrides cap at the shared pool's budget now
+                // instead of oversubscribing — warn (once) when capped
+                super::pool::note_parallel_override(p.threads);
+                p
+            }
+            None => self.par.get(),
+        };
         let bw = match opts.bc_weight {
             Some(w) => {
                 anyhow::ensure!(
@@ -1394,6 +1404,9 @@ impl Backend for NativeBackend {
 
     fn set_parallel(&self, cfg: ParallelConfig) -> bool {
         self.par.set(cfg);
+        // one global thread budget: the backend-wide engine default also
+        // sizes the shared worker pool all dispatches fan out on
+        super::pool::set_budget(cfg.threads);
         true
     }
 

@@ -1,4 +1,5 @@
-//! Evaluation-engine parallelism: row-block fan-out over scoped threads.
+//! Evaluation-engine parallelism: row-block and probe fan-out over the
+//! persistent worker pool ([`super::pool`]).
 //!
 //! The native backend evaluates batches row-independently (every network
 //! output depends only on its own input row), so a batch can be cut into
@@ -16,8 +17,13 @@
 //!   the solver service.
 //! * [`ParallelCtl`] — the atomic cell a backend shares with its cached
 //!   entries so the config is runtime-tunable without rebuilding them.
-//! * [`for_row_blocks`] — the scoped-thread driver (std threads only;
-//!   the repo substrate stays tokio-free, DESIGN.md §Substitutions).
+//! * [`for_row_blocks`] — the row-block dispatch driver. Blocks become
+//!   tasks on the shared [`super::pool`] (persistent parked std
+//!   threads; the repo substrate stays tokio-free, DESIGN.md
+//!   §Substitutions), with the fan-out width capped at the pool's
+//!   global thread budget. The pre-pool driver — fresh scoped threads
+//!   per call — is retained verbatim behind `PHOTON_FORCE_SCOPED=1`
+//!   ([`super::pool::force_scoped`]) as the bit-equality oracle.
 //! * [`for_probes`] / [`probe_split`] — the OUTER level of the training
 //!   hot path's two-level parallelism: a ZO epoch is K = N+1 fully
 //!   independent loss evaluations at different phase settings (paper
@@ -31,8 +37,17 @@
 //!   flattened into one lane list — same kernel per probe, same
 //!   bit-exactness contract, one shared thread budget instead of
 //!   per-job contention.
+//!
+//! Both fan-out levels submit to the ONE process-wide pool, so N
+//! concurrent solver-service jobs cooperatively divide the budget's
+//! cores instead of each spawning `threads` of their own — and the
+//! per-dispatch spawn/join cost (tens of µs under the scoped driver,
+//! real for micro presets and the K-small-dispatch training hot path)
+//! is gone: `benches/latency.rs` pins pool ≥ scoped at the gated sizes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::pool;
 
 /// Default rows per work block: sized so a block's activations stay
 /// cache-resident for the repro-scale hidden widths while still cutting
@@ -47,7 +62,8 @@ pub const DEFAULT_BLOCK_ROWS: usize = 32;
 /// latency only.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ParallelConfig {
-    /// scoped worker threads per batch evaluation
+    /// worker threads per batch evaluation (per-dispatch fan-out width;
+    /// additionally capped at the [`super::pool`] thread budget)
     pub threads: usize,
     /// contiguous rows per work block
     pub block_rows: usize,
@@ -71,7 +87,9 @@ impl ParallelConfig {
     }
 
     /// Hardware-sized default: `PHOTON_THREADS` / `PHOTON_BLOCK_ROWS`
-    /// env overrides, else one worker per available core.
+    /// env overrides, else one worker per available core. The pool's
+    /// global budget resolves this ONCE at init ([`super::pool`]) — per
+    /// dispatch only the plain struct fields are read.
     pub fn auto() -> ParallelConfig {
         let threads = std::env::var("PHOTON_THREADS")
             .ok()
@@ -125,20 +143,21 @@ impl ParallelCtl {
 
 /// Cut `out` (a flat batch of `out.len() / row_len` rows) into blocks of
 /// `cfg.block_rows` rows and run `eval(first_row, block)` on every block,
-/// fanned out across `cfg.threads` scoped workers.
+/// fanned out across up to `cfg.threads` workers of the shared
+/// [`super::pool`] (capped at the pool's global thread budget).
 ///
-/// Blocks are assigned round-robin (block `i` -> worker `i % threads`):
-/// a static, deterministic partition — no work queue, no locks — and
+/// Blocks are assigned round-robin (block `i` -> lane `i % workers`),
+/// mirroring the scoped driver's static partition; pool participants may
+/// additionally STEAL blocks from other lanes, which is pure scheduling —
 /// because `eval` must compute each row independently of the blocking,
-/// the result is identical for every `ParallelConfig`. Small batches
-/// (one block) and `threads == 1` stay on the calling thread.
+/// the result is identical for every `ParallelConfig`, every driver and
+/// every steal order. Small batches (one block) and `threads == 1` stay
+/// on the calling thread, touching no pool state.
 ///
-/// Workers are fresh scoped threads per call (tens of µs per dispatch):
-/// negligible against the standard batches (100·43 stencil rows, 1024
-/// validation rows) but real for micro presets — run those with
-/// `threads = 1`. A persistent pool is the natural next optimization if
-/// profiling ever shows the spawn cost on top (the parallel ≡ sequential
-/// contract would carry over unchanged).
+/// `PHOTON_FORCE_SCOPED=1` (or [`super::pool::set_force_scoped`]) pins
+/// the pre-pool oracle driver: fresh scoped threads per call, uncapped
+/// by the pool budget. `tests/pool_equivalence.rs` holds the two
+/// drivers bit-equal across the preset registry.
 pub fn for_row_blocks<F>(cfg: ParallelConfig, row_len: usize, out: &mut [f32], eval: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
@@ -149,7 +168,14 @@ where
     let block = cfg.block_rows.max(1);
     let threads = cfg.threads.max(1);
     let chunk = block * row_len;
-    if threads == 1 || rows <= block {
+    let force_scoped = pool::force_scoped();
+    let mut workers = threads;
+    if threads > 1 && rows > block && !force_scoped {
+        // Only a real fan-out consults the budget (the first query is
+        // what lazily starts the pool).
+        workers = threads.min(pool::budget());
+    }
+    if workers == 1 || rows <= block {
         let mut row0 = 0;
         for c in out.chunks_mut(chunk) {
             let nr = c.len() / row_len;
@@ -159,22 +185,32 @@ where
         return;
     }
     let n_blocks = rows / block + usize::from(rows % block != 0);
-    let workers = threads.min(n_blocks);
-    let mut assignments: Vec<Vec<(usize, &mut [f32])>> =
-        (0..workers).map(|_| Vec::new()).collect();
-    for (bi, c) in out.chunks_mut(chunk).enumerate() {
-        assignments[bi % workers].push((bi * block, c));
+    let workers = workers.min(n_blocks);
+    if force_scoped {
+        let mut assignments: Vec<Vec<(usize, &mut [f32])>> =
+            (0..workers).map(|_| Vec::new()).collect();
+        for (bi, c) in out.chunks_mut(chunk).enumerate() {
+            assignments[bi % workers].push((bi * block, c));
+        }
+        let eval = &eval;
+        std::thread::scope(|s| {
+            for list in assignments {
+                s.spawn(move || {
+                    for (row0, c) in list {
+                        eval(row0, c);
+                    }
+                });
+            }
+        });
+        return;
     }
     let eval = &eval;
-    std::thread::scope(|s| {
-        for list in assignments {
-            s.spawn(move || {
-                for (row0, c) in list {
-                    eval(row0, c);
-                }
-            });
-        }
-    });
+    let mut lanes: Vec<Vec<pool::Task<'_>>> = (0..workers).map(|_| Vec::new()).collect();
+    for (bi, c) in out.chunks_mut(chunk).enumerate() {
+        let row0 = bi * block;
+        lanes[bi % workers].push(Box::new(move || eval(row0, c)));
+    }
+    pool::run(lanes);
 }
 
 /// Split one engine thread budget across `k` concurrent probe
@@ -231,32 +267,54 @@ where
 /// [`probe_split_capped`]): fewer probes run at once, each on a larger
 /// inner thread budget. Bit-identical to the uncapped fan-out for every
 /// `cap` — the probe-parallel contract is split-independent.
+///
+/// Probe tasks go to the same shared [`super::pool`] as the row blocks
+/// (the pool budget further caps the lanes, refunding the freed budget
+/// to each probe's inner config); the scoped oracle driver sits behind
+/// `PHOTON_FORCE_SCOPED=1`, as in [`for_row_blocks`].
 pub fn for_probes_capped<F>(cfg: ParallelConfig, cap: Option<usize>, out: &mut [f32], eval: F)
 where
     F: Fn(usize, ParallelConfig) -> f32 + Sync,
 {
     let k = out.len();
-    let (workers, inner) = probe_split_capped(cfg, k, cap);
+    let force_scoped = pool::force_scoped();
+    let (mut workers, mut inner) = probe_split_capped(cfg, k, cap);
+    if workers > 1 && !force_scoped {
+        let budget = pool::budget();
+        if budget < workers {
+            let capped = cap.unwrap_or(usize::MAX).min(budget);
+            (workers, inner) = probe_split_capped(cfg, k, Some(capped));
+        }
+    }
     if workers <= 1 {
         for (i, o) in out.iter_mut().enumerate() {
             *o = eval(i, cfg);
         }
         return;
     }
-    let mut lanes: Vec<Vec<(usize, &mut f32)>> = (0..workers).map(|_| Vec::new()).collect();
-    for (i, o) in out.iter_mut().enumerate() {
-        lanes[i % workers].push((i, o));
+    if force_scoped {
+        let mut lanes: Vec<Vec<(usize, &mut f32)>> = (0..workers).map(|_| Vec::new()).collect();
+        for (i, o) in out.iter_mut().enumerate() {
+            lanes[i % workers].push((i, o));
+        }
+        let eval = &eval;
+        std::thread::scope(|s| {
+            for lane in lanes {
+                s.spawn(move || {
+                    for (i, o) in lane {
+                        *o = eval(i, inner);
+                    }
+                });
+            }
+        });
+        return;
     }
     let eval = &eval;
-    std::thread::scope(|s| {
-        for lane in lanes {
-            s.spawn(move || {
-                for (i, o) in lane {
-                    *o = eval(i, inner);
-                }
-            });
-        }
-    });
+    let mut lanes: Vec<Vec<pool::Task<'_>>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, o) in out.iter_mut().enumerate() {
+        lanes[i % workers].push(Box::new(move || *o = eval(i, inner)));
+    }
+    pool::run(lanes);
 }
 
 #[cfg(test)]
@@ -420,6 +478,36 @@ mod tests {
         let mut par = vec![0.0f32; 7];
         for_probes(ParallelConfig { threads: 6, block_rows: 5 }, &mut par, probe_eval);
         assert_eq!(seq, par);
+    }
+
+    /// The pool and scoped-oracle drivers produce bit-identical buffers
+    /// for both fan-out levels — the contract `PHOTON_FORCE_SCOPED=1`
+    /// exists to check. Restores the env-resolved driver afterwards, so
+    /// it composes with a forced-scoped CI leg.
+    #[test]
+    fn pool_and_scoped_drivers_agree() {
+        let cfg = ParallelConfig {
+            threads: 4,
+            block_rows: 5,
+        };
+        let row_eval = |row0: usize, block: &mut [f32]| {
+            for (r, v) in block.iter_mut().enumerate() {
+                *v = ((row0 + r) as f32 * 0.37).sin();
+            }
+        };
+        let probe_eval = |i: usize, _inner: ParallelConfig| ((i as f32) * 0.91).cos();
+        let run_both = |scoped: bool| -> (Vec<f32>, Vec<f32>) {
+            pool::set_force_scoped(scoped);
+            let mut rows = vec![0.0f32; 57];
+            for_row_blocks(cfg, 1, &mut rows, row_eval);
+            let mut probes = vec![0.0f32; 11];
+            for_probes(cfg, &mut probes, probe_eval);
+            (rows, probes)
+        };
+        let scoped = run_both(true);
+        let pooled = run_both(false);
+        pool::set_force_scoped(std::env::var("PHOTON_FORCE_SCOPED").as_deref() == Ok("1"));
+        assert_eq!(scoped, pooled, "drivers must agree bitwise");
     }
 
     /// Parallel and sequential drivers produce identical buffers for a

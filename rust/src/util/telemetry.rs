@@ -20,6 +20,12 @@
 //!   the `RunMetrics` counters (inferences, programmings, skipped
 //!   epochs) accumulated process-wide instead of staying trainer-
 //!   private, plus validation-pass spans.
+//! * **pool** ([`PoolStats`], fed from `runtime::pool`): dispatches
+//!   through the persistent worker pool, own-lane vs stolen task
+//!   executions, worker park/unpark transitions, queue-occupancy and
+//!   fan-out-width high-waters, and a per-dispatch span histogram; the
+//!   snapshot also probes the pool's resolved budget / spawned-worker
+//!   count / active driver without ever starting it.
 //!
 //! # Cost contract
 //!
@@ -312,6 +318,46 @@ impl TrainerStats {
     }
 }
 
+/// Worker-pool counters (`runtime::pool`).
+#[derive(Debug)]
+pub struct PoolStats {
+    /// fan-outs submitted to the pool (the scoped oracle counts nothing)
+    pub dispatches: Counter,
+    /// tasks popped from a participant's own lane ...
+    pub tasks_executed: Counter,
+    /// ... vs stolen from another lane's back (load-imbalance signal)
+    pub tasks_stolen: Counter,
+    /// worker park/unpark transitions (idle churn)
+    pub parks: Counter,
+    pub unparks: Counter,
+    /// pending-dispatch queue occupancy high-water
+    pub queue_depth_hwm: MaxGauge,
+    /// widest single-dispatch fan-out (lanes); never exceeds
+    /// `budget_hwm` — the budget-compliance invariant the stress test
+    /// checks
+    pub lane_width_hwm: MaxGauge,
+    /// highest thread budget ever in effect
+    pub budget_hwm: MaxGauge,
+    /// per-dispatch submit -> all-tasks-done span
+    pub fanout_span_s: Histogram,
+}
+
+impl PoolStats {
+    fn new() -> PoolStats {
+        PoolStats {
+            dispatches: Counter::default(),
+            tasks_executed: Counter::default(),
+            tasks_stolen: Counter::default(),
+            parks: Counter::default(),
+            unparks: Counter::default(),
+            queue_depth_hwm: MaxGauge::default(),
+            lane_width_hwm: MaxGauge::default(),
+            budget_hwm: MaxGauge::default(),
+            fanout_span_s: Histogram::new(SPAN_BOUNDS),
+        }
+    }
+}
+
 /// The process-wide telemetry registry ([`global`]).
 #[derive(Debug)]
 pub struct Telemetry {
@@ -319,6 +365,7 @@ pub struct Telemetry {
     pub scheduler: SchedulerStats,
     pub service: ServiceStats,
     pub trainer: TrainerStats,
+    pub pool: PoolStats,
 }
 
 impl Telemetry {
@@ -328,6 +375,7 @@ impl Telemetry {
             scheduler: SchedulerStats::new(),
             service: ServiceStats::new(),
             trainer: TrainerStats::new(),
+            pool: PoolStats::new(),
         }
     }
 
@@ -375,6 +423,25 @@ impl Telemetry {
                 programmings: self.trainer.programmings.get(),
                 validations: self.trainer.validations.get(),
                 validate_s: self.trainer.validate_s.snapshot(),
+            },
+            pool: {
+                // non-initializing probe: a snapshot must never be the
+                // thing that starts the pool
+                let (budget, workers, driver) = crate::runtime::pool::probe();
+                PoolSnapshot {
+                    budget,
+                    workers,
+                    driver: driver.to_string(),
+                    dispatches: self.pool.dispatches.get(),
+                    tasks_executed: self.pool.tasks_executed.get(),
+                    tasks_stolen: self.pool.tasks_stolen.get(),
+                    parks: self.pool.parks.get(),
+                    unparks: self.pool.unparks.get(),
+                    queue_depth_hwm: self.pool.queue_depth_hwm.get(),
+                    lane_width_hwm: self.pool.lane_width_hwm.get(),
+                    budget_hwm: self.pool.budget_hwm.get(),
+                    fanout_span_s: self.pool.fanout_span_s.snapshot(),
+                }
             },
         }
     }
@@ -459,6 +526,25 @@ pub struct TrainerSnapshot {
     pub validate_s: HistogramSnapshot,
 }
 
+/// Plain-data worker-pool counters. `budget`/`workers`/`driver` come
+/// from a live (non-initializing) pool probe at snapshot time: budget 0
+/// means the pool has not started.
+#[derive(Clone, Debug)]
+pub struct PoolSnapshot {
+    pub budget: u64,
+    pub workers: u64,
+    pub driver: String,
+    pub dispatches: u64,
+    pub tasks_executed: u64,
+    pub tasks_stolen: u64,
+    pub parks: u64,
+    pub unparks: u64,
+    pub queue_depth_hwm: u64,
+    pub lane_width_hwm: u64,
+    pub budget_hwm: u64,
+    pub fanout_span_s: HistogramSnapshot,
+}
+
 /// One materialized, schema-versioned view of the registry.
 #[derive(Clone, Debug)]
 pub struct TelemetrySnapshot {
@@ -468,6 +554,7 @@ pub struct TelemetrySnapshot {
     pub scheduler: SchedulerSnapshot,
     pub service: ServiceSnapshot,
     pub trainer: TrainerSnapshot,
+    pub pool: PoolSnapshot,
 }
 
 impl TelemetrySnapshot {
@@ -568,6 +655,26 @@ impl TelemetrySnapshot {
                     ),
                 ]),
             ),
+            (
+                "pool",
+                Value::obj(vec![
+                    ("driver", Value::Str(self.pool.driver.clone())),
+                    ("budget", n(self.pool.budget)),
+                    ("workers", n(self.pool.workers)),
+                    ("dispatches", n(self.pool.dispatches)),
+                    ("tasks_executed", n(self.pool.tasks_executed)),
+                    ("tasks_stolen", n(self.pool.tasks_stolen)),
+                    ("parks", n(self.pool.parks)),
+                    ("unparks", n(self.pool.unparks)),
+                    ("queue_depth_hwm", n(self.pool.queue_depth_hwm)),
+                    ("lane_width_hwm", n(self.pool.lane_width_hwm)),
+                    ("budget_hwm", n(self.pool.budget_hwm)),
+                    (
+                        "spans",
+                        Value::obj(vec![("fanout_s", self.pool.fanout_span_s.to_json())]),
+                    ),
+                ]),
+            ),
         ])
     }
 }
@@ -637,7 +744,7 @@ mod tests {
             v.req("schema_version").unwrap().as_usize().unwrap() as u64,
             SCHEMA_VERSION
         );
-        for section in ["engine", "scheduler", "service", "trainer"] {
+        for section in ["engine", "scheduler", "service", "trainer", "pool"] {
             assert!(v.get(section).is_some(), "missing section '{section}'");
         }
         // parse round trip through the JSON codec

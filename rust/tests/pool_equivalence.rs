@@ -1,0 +1,295 @@
+//! Persistent worker pool ≡ scoped-thread oracle, bit for bit.
+//!
+//! PR 9 reroutes both fan-out levels (probes × row blocks,
+//! `runtime::parallel::{for_probes, for_row_blocks}`) from per-dispatch
+//! `std::thread::scope` spawns onto the process-wide persistent
+//! work-stealing pool (`runtime::pool`). The partitioning is computed
+//! BEFORE tasks reach the pool and every task writes a disjoint output
+//! slice, so results cannot depend on the driver — these tests pin that
+//! contract:
+//!
+//! * every builtin preset × every entry kind (forward, FD / Stein loss,
+//!   batched probe losses, validate) produces bitwise-identical output
+//!   under the pool and under the retained scoped oracle
+//!   (`PHOTON_FORCE_SCOPED=1` / `pool::set_force_scoped`);
+//! * a fused same-preset cross-job gang (`Backend::loss_fused`) is
+//!   driver-independent too;
+//! * the stress gate: 4 service workers drain a mixed-precision backlog
+//!   on ONE shared pool, every result matches its solo oracle bitwise,
+//!   and the pool's telemetry shows it never fanned a dispatch wider
+//!   than the global thread budget.
+//!
+//! The driver toggle and the pool budget are process-global, so every
+//! test in this binary serializes on one mutex.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use photon_pinn::coordinator::{
+    OnChipTrainer, ServiceConfig, SolveRequest, SolverService, TrainConfig,
+};
+use photon_pinn::runtime::{
+    pool, Backend, Entry, EvalPrecision, FusedLossJob, FusedLossKind, NativeBackend,
+    ParallelConfig,
+};
+use photon_pinn::util::rng::Rng;
+
+/// Serializes the binary's tests: they toggle the process-global
+/// dispatch driver (and read process-global pool telemetry).
+fn driver_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Restore whatever driver the environment asked for (the CI scoped leg
+/// runs this binary under `PHOTON_FORCE_SCOPED=1`).
+fn restore_env_driver() {
+    pool::set_force_scoped(std::env::var("PHOTON_FORCE_SCOPED").as_deref() == Ok("1"));
+}
+
+/// Run `f` under the pool driver or the scoped oracle.
+fn with_driver<T>(scoped: bool, f: impl FnOnce() -> T) -> T {
+    pool::set_force_scoped(scoped);
+    f()
+}
+
+/// K distinct probe settings around an init draw (the same +0.002·k
+/// spread the golden loss_multi fixtures use).
+fn probe_block(phi: &[f32], k: usize) -> Vec<f32> {
+    (0..k)
+        .flat_map(|ki| phi.iter().map(move |p| p + 0.002 * ki as f32))
+        .collect()
+}
+
+fn skip_in_debug(name: &str) -> bool {
+    cfg!(debug_assertions) && name.contains("paper")
+}
+
+/// Deterministic inputs + evaluation of one entry. Re-seeded per call,
+/// so two calls (one per driver) see identical inputs; the multi-probe
+/// entries get a K-row probe block as input 0, everything else the
+/// plain init draw. Stein smoothing directions (input index 2 of the
+/// stein entries) are normal draws, all other batches uniform in the
+/// domain interior.
+fn eval_entry(be: &NativeBackend, preset: &str, entry: &str) -> Vec<Vec<f32>> {
+    let pm = be.manifest().preset(preset).unwrap();
+    let e = be.entry(preset, entry).unwrap();
+    let mut rng = Rng::new(97);
+    let phi = pm.layout.init_vector(&mut rng);
+    let first: Vec<f32> = if entry.ends_with("_multi") {
+        probe_block(&phi, be.manifest().k_multi)
+    } else {
+        phi
+    };
+    let mut rest: Vec<Vec<f32>> = Vec::new();
+    for i in 1..e.meta().inputs.len() {
+        let mut buf = vec![0.0f32; e.meta().input_len(i)];
+        if entry.contains("stein") && i == 2 {
+            rng.fill_normal(&mut buf);
+        } else {
+            rng.fill_uniform(&mut buf, 0.05, 0.95);
+        }
+        rest.push(buf);
+    }
+    let mut inputs: Vec<&[f32]> = vec![&first];
+    inputs.extend(rest.iter().map(|b| b.as_slice()));
+    e.run(&inputs).unwrap()
+}
+
+/// Every builtin preset × every entry kind: the pool driver reproduces
+/// the scoped-thread oracle bit for bit under a parallel engine config.
+#[test]
+fn pool_matches_scoped_for_every_builtin_entry() {
+    let _g = driver_lock();
+    let be = NativeBackend::builtin();
+    assert!(be.set_parallel(ParallelConfig { threads: 4, block_rows: 9 }));
+    let mut names: Vec<String> = be.manifest().presets.keys().cloned().collect();
+    names.sort();
+    let mut covered = 0usize;
+    let mut entries_checked = 0usize;
+    for name in &names {
+        if skip_in_debug(name) {
+            continue;
+        }
+        let pm = be.manifest().preset(name).unwrap();
+        let mut any = false;
+        for entry in [
+            "forward",
+            "loss",
+            "loss_stein",
+            "loss_multi",
+            "loss_stein_multi",
+            "validate",
+        ] {
+            if !pm.entries.contains_key(entry) {
+                continue;
+            }
+            let scoped = with_driver(true, || eval_entry(&be, name, entry));
+            let pooled = with_driver(false, || eval_entry(&be, name, entry));
+            assert!(
+                scoped.iter().flatten().all(|v| v.is_finite()),
+                "{name}/{entry}: oracle produced non-finite output"
+            );
+            assert_eq!(pooled, scoped, "{name}/{entry}: pool driver drifted");
+            any = true;
+            entries_checked += 1;
+        }
+        covered += usize::from(any);
+    }
+    restore_env_driver();
+    assert!(covered >= 10, "only {covered} presets covered — registry shrank?");
+    assert!(entries_checked >= 30, "only {entries_checked} entries checked");
+}
+
+/// A fused same-preset 2-job FD gang (`Backend::loss_fused`) is
+/// driver-independent, and both drivers match the jobs' own unfused
+/// batched dispatches.
+#[test]
+fn fused_gang_matches_scoped_and_unfused() {
+    let _g = driver_lock();
+    let be = NativeBackend::builtin();
+    assert!(be.set_parallel(ParallelConfig { threads: 4, block_rows: 9 }));
+    let preset = "tonn_micro";
+    let pm = be.manifest().preset(preset).unwrap();
+    let k = be.manifest().k_multi;
+    let lm = be.entry(preset, "loss_multi").unwrap();
+    let mut rng = Rng::new(41);
+    let base = pm.layout.init_vector(&mut rng);
+    let phis_a = probe_block(&base, k);
+    let phis_b: Vec<f32> = phis_a.iter().map(|p| p + 0.007).collect();
+    let mut xr = vec![0.0f32; lm.meta().input_len(1)];
+    rng.fill_uniform(&mut xr, 0.05, 0.95);
+    let jobs = [
+        FusedLossJob {
+            kind: FusedLossKind::Fd,
+            phis: &phis_a,
+            k,
+            xr: &xr,
+            z: &[],
+            opts: photon_pinn::runtime::EvalOptions::NONE,
+        },
+        FusedLossJob {
+            kind: FusedLossKind::Fd,
+            phis: &phis_b,
+            k,
+            xr: &xr,
+            z: &[],
+            opts: photon_pinn::runtime::EvalOptions::NONE,
+        },
+    ];
+
+    let scoped = with_driver(true, || be.loss_fused(preset, &jobs).unwrap());
+    let pooled = with_driver(false, || be.loss_fused(preset, &jobs).unwrap());
+    assert_eq!(pooled, scoped, "fused gang drifted across drivers");
+
+    // both match the unfused per-job batched dispatches (scoped oracle)
+    let solo = with_driver(true, || {
+        [
+            lm.run1(&[&phis_a, &xr]).unwrap(),
+            lm.run1(&[&phis_b, &xr]).unwrap(),
+        ]
+    });
+    for (i, s) in solo.iter().enumerate() {
+        assert_eq!(&scoped[i], s, "fused job {i} drifted from its unfused dispatch");
+    }
+    restore_env_driver();
+}
+
+fn epochs() -> usize {
+    if std::env::var("PHOTON_BENCH_FAST").as_deref() == Ok("1") {
+        8
+    } else {
+        15
+    }
+}
+
+fn job(
+    be: &NativeBackend,
+    preset: &str,
+    seed: u64,
+    par: Option<ParallelConfig>,
+    precision: Option<EvalPrecision>,
+) -> TrainConfig {
+    let mut cfg = TrainConfig::from_manifest(be, preset).unwrap();
+    cfg.epochs = epochs();
+    cfg.validate_every = 0;
+    cfg.verbose = false;
+    cfg.seed = seed;
+    cfg.parallel = par;
+    cfg.precision = precision;
+    cfg
+}
+
+/// The isolated-run oracle: the same config solved alone on a FRESH
+/// private backend.
+fn solo(cfg: &TrainConfig) -> (Vec<f32>, f32) {
+    let be = NativeBackend::builtin();
+    let res = OnChipTrainer::new(&be, cfg.clone()).unwrap().train().unwrap();
+    (res.phi, res.final_val)
+}
+
+/// The stress gate: 4 service workers drain a mixed-precision backlog
+/// whose engine passes all fan out on the ONE shared pool. Every job
+/// reproduces its solo oracle bitwise, and the pool telemetry proves
+/// (a) the pool actually carried dispatches and (b) no dispatch fanned
+/// out wider than the global thread budget — a job asking for 16
+/// threads caps at the budget instead of oversubscribing.
+#[test]
+fn mixed_precision_backlog_on_shared_pool_matches_solo_oracles() {
+    let _g = driver_lock();
+    pool::set_force_scoped(false);
+    let be: Arc<NativeBackend> = Arc::new(NativeBackend::builtin());
+    let par = |threads, block_rows| ParallelConfig { threads, block_rows };
+    let jobs: Vec<TrainConfig> = vec![
+        job(&be, "tonn_micro", 11, Some(par(4, 8)), None),
+        job(&be, "tonn_micro_ac", 12, Some(par(2, 16)), Some(EvalPrecision::F64)),
+        job(&be, "tonn_micro", 13, Some(par(16, 5)), Some(EvalPrecision::F32)),
+        job(&be, "tonn_micro_heat", 14, None, Some(EvalPrecision::Quantized { bits: 16 })),
+        job(&be, "tonn_micro_ac", 15, Some(par(3, 7)), Some(EvalPrecision::Quantized { bits: 12 })),
+        job(&be, "tonn_micro", 16, Some(par(4, 32)), Some(EvalPrecision::F64)),
+    ];
+    let oracle: Vec<(Vec<f32>, f32)> = jobs.iter().map(solo).collect();
+
+    // the service's engine default sizes the shared pool budget (4)
+    let service = SolverService::start_shared(
+        be.clone(),
+        ServiceConfig::new(4, jobs.len())
+            .with_warmup("tonn_micro")
+            .with_parallel(par(4, 16)),
+    );
+    for (i, cfg) in jobs.iter().enumerate() {
+        service
+            .submit(SolveRequest {
+                id: i as u64,
+                config: cfg.clone(),
+            })
+            .unwrap();
+    }
+    let mut got: Vec<Option<(Vec<f32>, f32)>> = vec![None; jobs.len()];
+    for _ in 0..jobs.len() {
+        let r = service.recv().unwrap();
+        let val = r.final_val.expect("mixed-precision job must solve");
+        got[r.id as usize] = Some((r.phi, val));
+    }
+    assert!(service.shutdown().is_empty());
+
+    for (i, (phi, val)) in oracle.iter().enumerate() {
+        let (got_phi, got_val) = got[i].as_ref().expect("every job returns once");
+        assert_eq!(
+            got_phi, phi,
+            "job {i} ({}): Φ drifted on the shared pool",
+            jobs[i].preset
+        );
+        assert_eq!(got_val, val, "job {i} ({}): final val drifted", jobs[i].preset);
+    }
+
+    let snap = photon_pinn::util::telemetry::snapshot();
+    assert!(snap.pool.dispatches > 0, "backlog never reached the pool");
+    assert!(snap.pool.tasks_executed > 0);
+    assert!(
+        snap.pool.lane_width_hwm <= snap.pool.budget_hwm,
+        "a dispatch fanned out {} lanes wide, over the budget high-water {}",
+        snap.pool.lane_width_hwm,
+        snap.pool.budget_hwm
+    );
+    restore_env_driver();
+}
