@@ -1,0 +1,121 @@
+//! photon-lint CLI: run the repo's static-analysis contracts
+//! ([`photon_pinn::lint`]) over the crate sources and exit nonzero on
+//! any finding.
+//!
+//! ```text
+//! photon_lint [--json] [--out <file>] [paths...]
+//! ```
+//!
+//! * with no paths, scans the crate source tree (`rust/src`, located by
+//!   walking up from the current directory; `PHOTON_LINT_SRC`
+//!   overrides) — the CI invocation;
+//! * explicit paths (files or directories) scan exactly those — how
+//!   the fixture self-checks drive single bad snippets;
+//! * `--json` prints the machine-readable findings object instead of
+//!   the human table; `--out <file>` additionally writes the JSON
+//!   findings to a file (for artifact upload) in either mode.
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage/IO errors.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use photon_pinn::lint;
+
+fn usage() -> ! {
+    eprintln!("usage: photon_lint [--json] [--out <file>] [paths...]");
+    std::process::exit(2);
+}
+
+/// Locate the crate source tree: `PHOTON_LINT_SRC`, else the nearest
+/// `rust/src` (or a bare `src` next to a `Cargo.toml`) walking up from
+/// the current directory, so the tool runs from the repo root, from
+/// `rust/`, or from any subdirectory.
+fn default_root() -> Option<PathBuf> {
+    if let Ok(p) = std::env::var("PHOTON_LINT_SRC") {
+        return Some(p.into());
+    }
+    let mut dir = std::env::current_dir().ok()?;
+    loop {
+        let cand = dir.join("rust/src");
+        if cand.is_dir() {
+            return Some(cand);
+        }
+        let bare = dir.join("src");
+        if bare.is_dir() && dir.join("Cargo.toml").is_file() {
+            return Some(bare);
+        }
+        if !dir.pop() {
+            return None;
+        }
+    }
+}
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut out: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--out" => match args.next() {
+                Some(p) => out = Some(p.into()),
+                None => usage(),
+            },
+            "--help" | "-h" => usage(),
+            _ if a.starts_with('-') => usage(),
+            _ => paths.push(a.into()),
+        }
+    }
+    if paths.is_empty() {
+        match default_root() {
+            Some(p) => paths.push(p),
+            None => {
+                eprintln!(
+                    "photon_lint: no paths given and no rust/src found above the \
+                     current directory (set PHOTON_LINT_SRC)"
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    let mut files = 0usize;
+    for p in &paths {
+        match lint::scan_tree(p) {
+            Ok(rep) => {
+                files += rep.files_scanned;
+                findings.extend(rep.findings);
+            }
+            Err(e) => {
+                eprintln!("photon_lint: {e}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    let rep = lint::Report {
+        files_scanned: files,
+        findings,
+    };
+
+    let json_text = rep.to_json().to_string();
+    if let Some(path) = &out {
+        if let Err(e) = std::fs::write(path, &json_text) {
+            eprintln!("photon_lint: write {}: {e}", path.display());
+            return ExitCode::from(2);
+        }
+    }
+    if json {
+        println!("{json_text}");
+    } else {
+        print!("{}", rep.human());
+    }
+    if rep.clean() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}

@@ -110,6 +110,7 @@ impl Checkpoint {
         let tmp = path.with_file_name(tmp_name);
         std::fs::write(&tmp, v.to_string())?;
         if let Err(e) = std::fs::rename(&tmp, path) {
+            // lint: allow(result-discard): best-effort tmp cleanup — the rename error below is what the caller acts on
             let _ = std::fs::remove_file(&tmp);
             return Err(e.into());
         }

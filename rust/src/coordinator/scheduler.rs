@@ -39,7 +39,7 @@
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, HashMap};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::Instant;
 
 use anyhow::Result;
@@ -245,6 +245,27 @@ impl JobQueue {
         }
     }
 
+    /// Acquire the scheduler state, adopting a poisoned guard. A job
+    /// that panics while a thread holds this lock must not take the
+    /// whole multi-tenant service down: every critical section in this
+    /// module leaves `QState` consistent at each possible panic point
+    /// (single push/pop/counter mutations, no multi-step invariants
+    /// spanning a call that can unwind), so recovering the guard is
+    /// sound and admission keeps answering with typed verdicts instead
+    /// of cascading the abort.
+    fn locked(&self) -> std::sync::MutexGuard<'_, QState> {
+        self.state.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// `Condvar::wait` with the same poison-adoption policy as
+    /// [`Self::locked`].
+    fn wait_on<'a>(
+        &self,
+        st: std::sync::MutexGuard<'a, QState>,
+    ) -> std::sync::MutexGuard<'a, QState> {
+        self.cv.wait(st).unwrap_or_else(PoisonError::into_inner)
+    }
+
     /// The dead-pool condition: every worker resolved its backend load
     /// and none is draining the queue (and nobody asked us to close) —
     /// anything submitted now would sit forever.
@@ -270,7 +291,7 @@ impl JobQueue {
     /// The dead-pool error for `recv`-style callers (None while any
     /// worker lives or loads).
     pub(crate) fn pool_dead_error(&self) -> Option<String> {
-        Self::dead_error(&self.state.lock().unwrap())
+        Self::dead_error(&self.locked())
     }
 
     fn try_admit_locked(&self, st: &mut QState, job: &ScheduledJob) -> Admission {
@@ -327,7 +348,7 @@ impl JobQueue {
 
     /// Non-blocking admission with a typed verdict.
     pub(crate) fn admit(&self, job: &ScheduledJob) -> Admission {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         let verdict = self.try_admit_locked(&mut st, job);
         if matches!(verdict, Admission::Accepted { .. }) {
             self.cv.notify_all();
@@ -340,14 +361,14 @@ impl JobQueue {
     /// at quota (capacity frees as workers pop / results deliver);
     /// errors out on a closed service or a dead pool.
     pub(crate) fn submit_blocking(&self, job: ScheduledJob) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         loop {
             let verdict = self.try_admit_locked(&mut st, &job);
             match verdict {
                 // not terminal: the submitter parks and retries, so no
                 // rejection is recorded for these
                 Admission::QueueFull | Admission::QuotaExceeded { .. } => {
-                    st = self.cv.wait(st).unwrap();
+                    st = self.wait_on(st);
                 }
                 terminal => {
                     Self::count_verdict(&terminal);
@@ -375,7 +396,7 @@ impl JobQueue {
     /// `None` once the queue is closed AND drained — the ordered-
     /// shutdown contract: everything queued before close still runs.
     pub(crate) fn pop_gang(&self, fuse_max: usize) -> Option<Vec<PoppedJob>> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         loop {
             if let Some(top) = st.heap.pop() {
                 let preset = top.job.request.config.preset.clone();
@@ -416,6 +437,7 @@ impl JobQueue {
                     };
                     match grow {
                         Grow::Fuse => {
+                            // lint: allow(unwrap): Grow::Fuse is only built after peek() returned Some under this same guard
                             let e = st.heap.pop().expect("peeked entry");
                             gang.push(PoppedJob {
                                 job: e.job,
@@ -445,13 +467,13 @@ impl JobQueue {
             if st.closed {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = self.wait_on(st);
         }
     }
 
     /// A job's result was delivered: release its tenant quota slot.
     pub(crate) fn job_done(&self, tenant: &str) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         if let Some(n) = st.in_flight.get_mut(tenant) {
             *n = n.saturating_sub(1);
             if *n == 0 {
@@ -463,7 +485,7 @@ impl JobQueue {
 
     /// A worker loaded its backend and is entering the drain loop.
     pub(crate) fn register_live(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         st.resolved += 1;
         st.live += 1;
         self.cv.notify_all();
@@ -471,7 +493,7 @@ impl JobQueue {
 
     /// A worker failed to load its backend and will never drain jobs.
     pub(crate) fn register_load_failure(&self, worker: usize, error: String) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         st.resolved += 1;
         st.load_errors.push((worker, error));
         self.cv.notify_all();
@@ -479,7 +501,7 @@ impl JobQueue {
 
     /// A previously live worker left its drain loop.
     pub(crate) fn worker_exited(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         st.live = st.live.saturating_sub(1);
         self.cv.notify_all();
     }
@@ -487,7 +509,7 @@ impl JobQueue {
     /// Record a warmup failure for the startup report (the service
     /// still runs — first dispatches pay the build latency instead).
     pub(crate) fn record_warmup_error(&self, error: String) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         st.warmup_errors.push(error);
         self.cv.notify_all();
     }
@@ -495,16 +517,16 @@ impl JobQueue {
     /// Close the queue: no new admissions; workers drain what is left,
     /// then their pops return `None`.
     pub(crate) fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.locked().closed = true;
         self.cv.notify_all();
     }
 
     /// Block until every worker's backend load has resolved, then
     /// report pool liveness + load/warmup failures.
     pub(crate) fn startup_report(&self) -> StartupReport {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.locked();
         while st.resolved < st.spawned {
-            st = self.cv.wait(st).unwrap();
+            st = self.wait_on(st);
         }
         StartupReport {
             workers: st.spawned,
@@ -729,5 +751,35 @@ mod tests {
         // the job queued before close still comes out, then None
         assert_eq!(q.pop_gang(4).unwrap()[0].job.request.id, 0);
         assert!(q.pop_gang(4).is_none());
+    }
+
+    #[test]
+    fn poisoned_state_lock_still_yields_typed_verdicts() {
+        let be = NativeBackend::builtin();
+        let q = JobQueue::new(16, None, 1);
+        q.register_live();
+        assert!(matches!(
+            q.admit(&job(0, "tonn_micro", &be)),
+            Admission::Accepted { .. }
+        ));
+        // Poison the scheduler mutex: a thread panics while holding it
+        // (the shape of a job panicking inside a critical section).
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                let _st = q.state.lock().unwrap();
+                panic!("poisoning the scheduler state lock");
+            });
+            assert!(h.join().is_err());
+        });
+        assert!(q.state.is_poisoned());
+        // The queue must keep answering with typed verdicts — admission,
+        // draining and close all still work instead of aborting.
+        assert!(matches!(
+            q.admit(&job(1, "tonn_micro", &be)),
+            Admission::Accepted { queued: 2 }
+        ));
+        assert_eq!(q.pop_gang(1).unwrap()[0].job.request.id, 0);
+        q.close();
+        assert_eq!(q.admit(&job(2, "tonn_micro", &be)), Admission::Closed);
     }
 }

@@ -220,6 +220,7 @@ fn finish_member(
     }
     tel.queue_wait_s.observe(m.queue_seconds);
     tel.solve_s.observe(solve_seconds);
+    // lint: allow(result-discard): send fails only if the client dropped its result receiver — delivery is best-effort by contract
     let _ = p.res_tx.send(SolveResult {
         id: m.id,
         final_val,
@@ -246,12 +247,14 @@ fn run_gang<'rt>(
 ) {
     let mut lanes: Vec<Lane<'rt>> = Vec::with_capacity(members.len());
     for (mi, m) in members.iter_mut().enumerate() {
+        // lint: allow(unwrap): config is populated at admission and taken exactly once, here
         let config = m.config.take().expect("config present before run");
         let preset = config.preset.clone();
         let id = m.id;
         let ptx = p.prog_tx.clone();
         let built = OnChipTrainer::new(rt, config).and_then(|mut trainer| {
             trainer.set_on_validate(move |epoch, val| {
+                // lint: allow(result-discard): progress streaming is optional — a dropped subscriber must not fail the job
                 let _ = ptx.send(ProgressEvent {
                     job: id,
                     epoch,
@@ -339,7 +342,7 @@ fn run_gang<'rt>(
         let mut still_running: Vec<Lane<'rt>> = Vec::with_capacity(lanes.len());
         for (mut lane, slot) in lanes.into_iter().zip(dispatched) {
             let step = slot
-                .expect("every lane dispatched")
+                .expect("every lane dispatched") // lint: allow(unwrap): the fill loop above leaves no slot None
                 .and_then(|losses| lane.trainer.epoch_apply(&mut lane.state, &losses));
             match step {
                 Err(e) => finish_member(p, &mut members[lane.mi], t0, w, Err(e), Vec::new()),
@@ -616,8 +619,10 @@ impl SolverService {
         while let Ok(r) = self.results.recv() {
             rest.push(r);
         }
-        for h in self.workers {
-            let _ = h.join();
+        for (w, h) in self.workers.into_iter().enumerate() {
+            if h.join().is_err() {
+                crate::warn_!("worker {w} panicked; its in-flight job was lost");
+            }
         }
         crate::runtime::pool::drain();
         rest

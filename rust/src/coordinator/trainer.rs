@@ -322,7 +322,7 @@ impl<'rt> OnChipTrainer<'rt> {
                 let len = multi
                     .as_ref()
                     .or(single.as_ref())
-                    .unwrap()
+                    .unwrap() // lint: allow(unwrap): the match above set exactly one of the two
                     .meta()
                     .input_len(2);
                 let mut z = vec![0.0f32; len];
@@ -491,7 +491,7 @@ impl<'rt> OnChipTrainer<'rt> {
             LossKind::Stein => self
                 .stein_multi
                 .as_ref()
-                .unwrap()
+                .unwrap() // lint: allow(unwrap): set at construction for LossKind::Stein
                 .run1_with(&[eff_all.as_slice(), xr, &self.stein_z], &self.opts),
         }
     }
@@ -535,6 +535,7 @@ impl<'rt> OnChipTrainer<'rt> {
                 self.sampler.batch(self.batch, &mut xr);
                 self.estimator.sample(d, &mut spsa_rng, &mut xi);
             }
+            // lint: allow(unwrap): a nonzero start_epoch is only set together with a resume checkpoint
             phi = self.resume_phi.take().expect("resume phi set with start_epoch");
         }
         Ok(TrainState {

@@ -154,6 +154,21 @@
 //! `admitted = completed + failed + in-flight` after any drained
 //! backlog.
 //!
+//! That cost contract is *machine-checked*: every function on the
+//! dispatch hot path — the `tensor::gemm_rows`/[`tensor::simd`]
+//! kernels, the [`util::telemetry`] counter ops, the
+//! [`runtime::pool`] task-execution loop — carries a
+//! `// lint: hot-path` tag, and the in-repo static analyzer
+//! ([`lint`], run as `photon_lint` in the `static-analysis` CI job)
+//! rejects any lock acquisition, heap allocation, `format!`, or I/O
+//! inside a tagged function. Adding work to a hot path means either
+//! keeping it to arithmetic and relaxed atomics, or writing down why
+//! an exception is sound (`// lint: allow(hot-path): <why>`) where
+//! the next reader will see it. The same pass audits lock ordering
+//! against the declared hierarchy ([`lint::locks`]), `let _ =` Result
+//! discards, production `unwrap`/`expect`, and atomic-ordering
+//! strength in telemetry (README §Static analysis).
+//!
 //! [`util::telemetry::snapshot`] materializes a schema-versioned
 //! [`util::telemetry::TelemetrySnapshot`]; `photon-pinn stats` prints
 //! one, `--telemetry-out <path>` on `train`/`serve` writes one
@@ -177,6 +192,7 @@
 #![allow(clippy::needless_range_loop, clippy::type_complexity)]
 
 pub mod coordinator;
+pub mod lint;
 pub mod model;
 pub mod optim;
 pub mod pde;

@@ -1,0 +1,114 @@
+//! The crate's declared lock hierarchy and lock-site classification.
+//!
+//! Every production `Mutex` in the crate is declared here, ranked
+//! outermost-first. The lock-order rule permits acquiring a lock only
+//! while holding locks of strictly *lower* rank index (outer before
+//! inner); acquiring same-or-outer while an inner guard is live is a
+//! finding. Re-acquiring the *same* lock while its guard is held is
+//! always a finding (self-deadlock with `std::sync::Mutex`).
+//!
+//! The ordering encodes the real call structure:
+//!
+//! * the scheduler admits/pops under `scheduler.state` and never calls
+//!   back into the engine while holding it;
+//! * the pool's registry (`pool.shared`) is released before any
+//!   dispatch work runs; lane deques (`pool.lane`) are leaf-level
+//!   steal targets; `pool.panic` is taken before `pool.done` (the
+//!   completion flip in `Dispatch::execute`);
+//! * the engine caches are independent leaves (materialization happens
+//!   *outside* the cache locks by design — see
+//!   `NativeBackend::materialized`);
+//! * the log sink is innermost: any layer may emit a log line, so the
+//!   sink lock may never be held while acquiring anything else.
+//!
+//! New files introduce lock sites either by adding a [`LockDecl`] row
+//! here or with a `// lint: declare-lock <recv-substr> <lock-id>` file
+//! pragma (the fixture mechanism). An undeclared `.lock()` in
+//! production code is itself a finding: the table is the contract.
+
+/// Lock ids, outermost acquisition rank first.
+pub const HIERARCHY: &[&str] = &[
+    "scheduler.state",
+    "pool.shared",
+    "pool.lane",
+    "pool.panic",
+    "pool.done",
+    "engine.entry_cache",
+    "engine.mat_cache",
+    "engine.quant",
+    "log.sink",
+];
+
+/// Classifies a `.lock()` receiver in a given file.
+pub struct LockDecl {
+    /// Path suffix the declaration applies to.
+    pub file: &'static str,
+    /// Substring of the receiver expression (field / accessor name).
+    pub recv: &'static str,
+    /// Entry of [`HIERARCHY`].
+    pub id: &'static str,
+}
+
+/// Declaration table. Order matters where receivers nest textually
+/// (`mat_cache` must precede the generic `cache`).
+pub const DECLS: &[LockDecl] = &[
+    LockDecl { file: "coordinator/scheduler.rs", recv: "state", id: "scheduler.state" },
+    LockDecl { file: "runtime/pool.rs", recv: "shared", id: "pool.shared" },
+    LockDecl { file: "runtime/pool.rs", recv: "lanes", id: "pool.lane" },
+    LockDecl { file: "runtime/pool.rs", recv: "panic", id: "pool.panic" },
+    LockDecl { file: "runtime/pool.rs", recv: "done", id: "pool.done" },
+    LockDecl { file: "runtime/native.rs", recv: "mat_cache", id: "engine.mat_cache" },
+    LockDecl { file: "runtime/native.rs", recv: "quant", id: "engine.quant" },
+    LockDecl { file: "runtime/native.rs", recv: "cache", id: "engine.entry_cache" },
+    LockDecl { file: "runtime/pjrt.rs", recv: "cache", id: "engine.entry_cache" },
+    LockDecl { file: "util/log.rs", recv: "sink_slot", id: "log.sink" },
+];
+
+/// Rank of a lock id in the declared hierarchy (lower = outer).
+pub fn rank(id: &str) -> Option<usize> {
+    HIERARCHY.iter().position(|&h| h == id)
+}
+
+/// Classify a receiver expression at a `.lock()` site. File pragmas
+/// (fixtures, future modules) take precedence over the static table.
+pub fn classify(path: &str, receiver: &str, pragmas: &[(String, String)]) -> Option<String> {
+    let norm = path.replace('\\', "/");
+    for (recv, id) in pragmas {
+        if receiver.contains(recv.as_str()) {
+            return Some(id.clone());
+        }
+    }
+    for d in DECLS {
+        if norm.ends_with(d.file) && receiver.contains(d.recv) {
+            return Some(d.id.to_string());
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_decl_ranks() {
+        for d in DECLS {
+            assert!(rank(d.id).is_some(), "undeclared hierarchy id {}", d.id);
+        }
+    }
+
+    #[test]
+    fn mat_cache_wins_over_cache() {
+        let id = classify("rust/src/runtime/native.rs", "self.mat_cache", &[]);
+        assert_eq!(id.as_deref(), Some("engine.mat_cache"));
+        let id = classify("rust/src/runtime/native.rs", "self.cache", &[]);
+        assert_eq!(id.as_deref(), Some("engine.entry_cache"));
+    }
+
+    #[test]
+    fn pragmas_take_precedence() {
+        let pragmas = vec![("my_lock".to_string(), "pool.lane".to_string())];
+        let id = classify("x/fixture.rs", "self.my_lock", &pragmas);
+        assert_eq!(id.as_deref(), Some("pool.lane"));
+    }
+}

@@ -1,0 +1,222 @@
+//! photon-lint: repo-aware static analysis for the crate's own
+//! contracts (run as `photon_lint`, built from `src/bin/photon_lint.rs`).
+//!
+//! The paper's pitch is a *cost contract* (fJ/MAC, real-time solves);
+//! this crate mirrors it with software contracts that used to exist
+//! only as prose: telemetry is single relaxed RMWs with no locks on
+//! hot paths, the pool never deadlocks, `let _ =` never swallows a
+//! Result (the PR-6 bug class), production code never unwraps without
+//! a proven invariant. photon-lint machine-checks those contracts on
+//! every CI run:
+//!
+//! | rule | contract |
+//! |------|----------|
+//! | `hot-path` | fns tagged `// lint: hot-path` may not lock, heap-allocate, `format!`, or do I/O |
+//! | `lock-order` | `.lock()` sites follow the declared hierarchy in [`locks::HIERARCHY`]; undeclared locks are findings |
+//! | `result-discard` | `let _ =` needs a justification annotation |
+//! | `unwrap` | `.unwrap()` / `.expect("..")` outside tests need the poisoned-lock pattern or a justification |
+//! | `atomic-ordering` | files tagged `// lint: relaxed-atomics` justify every ordering stronger than Relaxed |
+//!
+//! Escape hatch grammar (see [`scan::Annot`]): `// lint: allow(<rule>):
+//! <why>` on the offending line or the comment line above it. The
+//! `<why>` is mandatory — a bare allow is itself a finding.
+//!
+//! No `syn`, no proc-macros, no dependencies: a hand-rolled lexical
+//! scanner ([`scan`]) consistent with the vendored-`anyhow` offline
+//! build. That buys zero compile-time cost and full control over the
+//! repo-specific rules, at the price of lexical (not type-level)
+//! precision — the approximations are documented in [`rules`].
+
+pub mod locks;
+pub mod rules;
+pub mod scan;
+
+use std::path::Path;
+
+pub use rules::{check, Finding};
+pub use scan::SourceFile;
+
+use crate::util::json::Value;
+
+/// Outcome of scanning a file set.
+pub struct Report {
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Machine-readable findings (the `--json` output): schema-versioned,
+    /// one object per finding plus per-rule counts.
+    pub fn to_json(&self) -> Value {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Value::obj(vec![
+                    ("rule", Value::Str(f.rule.to_string())),
+                    ("file", Value::Str(f.file.clone())),
+                    ("line", Value::Num(f.line as f64)),
+                    ("message", Value::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        let mut by_rule: Vec<(&str, usize)> = Vec::new();
+        for f in &self.findings {
+            match by_rule.iter_mut().find(|(r, _)| *r == f.rule) {
+                Some((_, n)) => *n += 1,
+                None => by_rule.push((f.rule, 1)),
+            }
+        }
+        let by_rule = by_rule
+            .into_iter()
+            .map(|(r, n)| (r, Value::Num(n as f64)))
+            .collect();
+        Value::obj(vec![
+            ("schema", Value::Num(1.0)),
+            ("files_scanned", Value::Num(self.files_scanned as f64)),
+            ("findings", Value::Arr(findings)),
+            ("by_rule", Value::obj(by_rule)),
+        ])
+    }
+
+    /// Human-readable findings table (aligned columns, one row per
+    /// finding), plus a one-line summary.
+    pub fn human(&self) -> String {
+        let mut out = String::new();
+        if self.findings.is_empty() {
+            out.push_str(&format!(
+                "photon-lint: {} file(s) scanned, no findings\n",
+                self.files_scanned
+            ));
+            return out;
+        }
+        let loc: Vec<String> = self
+            .findings
+            .iter()
+            .map(|f| format!("{}:{}", f.file, f.line))
+            .collect();
+        let wloc = loc.iter().map(String::len).max().unwrap_or(0);
+        let wrule = self.findings.iter().map(|f| f.rule.len()).max().unwrap_or(0);
+        for (f, l) in self.findings.iter().zip(&loc) {
+            out.push_str(&format!(
+                "{:<wl$}  {:<wr$}  {}\n",
+                l,
+                f.rule,
+                f.message,
+                wl = wloc,
+                wr = wrule
+            ));
+        }
+        out.push_str(&format!(
+            "photon-lint: {} finding(s) in {} file(s)\n",
+            self.findings.len(),
+            self.files_scanned
+        ));
+        out
+    }
+}
+
+/// Scan one `.rs` file (path used verbatim as the display path; lock
+/// classification matches on its suffix).
+pub fn scan_file(path: &Path) -> anyhow::Result<Vec<Finding>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    let sf = SourceFile::parse(&path.display().to_string(), &text);
+    Ok(check(&sf))
+}
+
+/// Scan a file or a directory tree (recursively; `vendor/`, `target/`
+/// and dot-dirs are skipped — vendored code is not ours to lint).
+pub fn scan_tree(root: &Path) -> anyhow::Result<Report> {
+    let mut findings = Vec::new();
+    let mut files = 0usize;
+    walk(root, &mut findings, &mut files)?;
+    findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(Report {
+        files_scanned: files,
+        findings,
+    })
+}
+
+fn walk(path: &Path, findings: &mut Vec<Finding>, files: &mut usize) -> anyhow::Result<()> {
+    if path.is_dir() {
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if name == "vendor" || name == "target" || name.starts_with('.') {
+            return Ok(());
+        }
+        let mut entries: Vec<_> = std::fs::read_dir(path)
+            .map_err(|e| anyhow::anyhow!("read dir {}: {e}", path.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for e in entries {
+            walk(&e, findings, files)?;
+        }
+        return Ok(());
+    }
+    if path.extension().and_then(|x| x.to_str()) == Some("rs") {
+        findings.extend(scan_file(path)?);
+        *files += 1;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_json_round_trips_through_the_codec() {
+        let rep = Report {
+            files_scanned: 2,
+            findings: vec![Finding {
+                rule: "unwrap",
+                file: "x.rs".to_string(),
+                line: 7,
+                message: "msg".to_string(),
+            }],
+        };
+        let text = rep.to_json().to_string();
+        let v = crate::util::json::parse(&text).expect("valid json");
+        assert_eq!(v.get("schema").and_then(|s| s.as_f64()), Some(1.0));
+        let fs = v.get("findings").and_then(|f| f.as_arr()).expect("findings arr");
+        assert_eq!(fs.len(), 1);
+        assert_eq!(
+            fs[0].get("rule").and_then(|r| r.as_str()),
+            Some("unwrap")
+        );
+        assert_eq!(fs[0].get("line").and_then(|l| l.as_f64()), Some(7.0));
+        assert_eq!(
+            v.get("by_rule").and_then(|b| b.get("unwrap")).and_then(|n| n.as_f64()),
+            Some(1.0)
+        );
+    }
+
+    #[test]
+    fn human_table_lists_every_finding() {
+        let rep = Report {
+            files_scanned: 1,
+            findings: vec![
+                Finding {
+                    rule: "hot-path",
+                    file: "a.rs".to_string(),
+                    line: 3,
+                    message: "m1".to_string(),
+                },
+                Finding {
+                    rule: "unwrap",
+                    file: "b.rs".to_string(),
+                    line: 14,
+                    message: "m2".to_string(),
+                },
+            ],
+        };
+        let h = rep.human();
+        assert!(h.contains("a.rs:3") && h.contains("b.rs:14"));
+        assert!(h.contains("2 finding(s)"));
+    }
+}

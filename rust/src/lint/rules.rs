@@ -1,0 +1,766 @@
+//! The five photon-lint rules.
+//!
+//! All rules work off the lexical [`scan::SourceFile`] model — they
+//! pattern-match classified code text, never raw source, so string
+//! literals, comments and char literals cannot produce false hits.
+//! Production-only rules (everything except hot-path purity, which
+//! follows its tag wherever it is) skip `#[cfg(test)]` module spans:
+//! the contracts guard the deployed dispatch path, and tests unwrap
+//! freely by design.
+//!
+//! Known, documented approximations (this is a lexical tool, not a
+//! type checker — the contract is "flag the repo's real patterns with
+//! zero false positives on a clean tree"):
+//!
+//! * lock-order analysis is intra-function: a lock held across a call
+//!   into another function is not tracked into the callee (the
+//!   hierarchy is designed so no such pattern exists — pool lane work
+//!   runs after the registry guard drops);
+//! * guard extents are computed lexically: `let g = x.lock()...;`
+//!   chains ending in the unwrap family bind a guard until the
+//!   enclosing block closes (or `drop(g)`); chains that keep calling
+//!   past the unwrap (`.lock().unwrap().pop_front()`) are
+//!   statement-scoped temporaries; `if let` / `while let` / `match` /
+//!   `for` scrutinee temporaries are held through the construct's
+//!   block — the Rust pre-2024 temporary-lifetime footgun, modeled
+//!   deliberately so it gets *caught*, not excused;
+//! * the Result-discard rule flags every `let _ =` in production code
+//!   rather than resolving return types: the PR-6 bug class is cheap
+//!   to annotate and expensive to miss.
+
+use super::locks;
+use super::scan::{Annot, FnSpan, SourceFile};
+
+/// One rule violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Rule id: `hot-path`, `lock-order`, `result-discard`, `unwrap`,
+    /// `atomic-ordering`, or `annotation` (malformed `lint:` comment).
+    pub rule: &'static str,
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    pub message: String,
+}
+
+/// Run every rule over one scanned file.
+pub fn check(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    annotations(sf, &mut out);
+    hot_path(sf, &mut out);
+    lock_order(sf, &mut out);
+    result_discard(sf, &mut out);
+    unwrap_audit(sf, &mut out);
+    atomic_ordering(sf, &mut out);
+    out
+}
+
+fn finding(sf: &SourceFile, rule: &'static str, line: usize, message: String) -> Finding {
+    Finding {
+        rule,
+        file: sf.path.clone(),
+        line,
+        message,
+    }
+}
+
+/// A `lint:` comment that is not part of the grammar is an error: a
+/// typo'd allow must not silently stop suppressing (or enforcing).
+fn annotations(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, l) in sf.lines.iter().enumerate() {
+        if let Some(Annot::Malformed(text)) = &l.annot {
+            out.push(finding(
+                sf,
+                "annotation",
+                i + 1,
+                format!(
+                    "malformed lint annotation `lint: {text}` — grammar: `hot-path`, \
+                     `allow(<rule>): <why>`, `relaxed-atomics`, `declare-lock <recv> <id>`"
+                ),
+            ));
+        }
+    }
+}
+
+/// (pattern, what it is, needs-ident-boundary-before).
+const HOT_FORBIDDEN: &[(&str, &str, bool)] = &[
+    (".lock(", "lock acquisition", false),
+    ("format!", "allocating format", true),
+    ("vec![", "heap allocation", true),
+    ("Vec::new", "heap allocation", true),
+    ("Vec::with_capacity", "heap allocation", true),
+    ("Box::new", "heap allocation", true),
+    ("Arc::new", "heap allocation", true),
+    ("Rc::new", "heap allocation", true),
+    ("String::new", "heap allocation", true),
+    ("String::from", "heap allocation", true),
+    (".to_string(", "heap allocation", false),
+    (".to_vec(", "heap allocation", false),
+    (".to_owned(", "heap allocation", false),
+    (".collect(", "heap allocation", false),
+    (".collect::<", "heap allocation", false),
+    (".push_str(", "heap allocation", false),
+    ("println!", "I/O", true),
+    ("eprintln!", "I/O", true),
+    ("print!", "I/O", true),
+    ("eprint!", "I/O", true),
+    ("writeln!", "I/O", true),
+    ("write!", "I/O", true),
+    ("std::fs::", "I/O", false),
+    ("std::io::", "I/O", false),
+    ("File::", "I/O", true),
+];
+
+/// Rule 1: functions tagged `// lint: hot-path` may not lock,
+/// heap-allocate, format, or do I/O. This is the machine check behind
+/// the telemetry cost contract ("single relaxed RMWs, no locks on any
+/// hot path") and the kernel purity claim.
+fn hot_path(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for f in sf.fns.iter().filter(|f| f.hot) {
+        for ln in f.open..=f.close {
+            let code = &sf.line(ln).code;
+            for &(pat, what, boundary) in HOT_FORBIDDEN {
+                if find_bounded(code, pat, boundary).is_none() {
+                    continue;
+                }
+                if sf.allowed(ln, "hot-path").is_some() {
+                    continue;
+                }
+                out.push(finding(
+                    sf,
+                    "hot-path",
+                    ln,
+                    format!(
+                        "`{}` ({what}) inside hot-path fn `{}` — hot paths may not \
+                         lock, allocate, format, or do I/O",
+                        pat.trim_end_matches('('),
+                        f.name
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Find `pat` in `code`; when `boundary`, the char before the match
+/// must not be an identifier char (keeps `println!` from also matching
+/// inside `eprintln!`).
+fn find_bounded(code: &str, pat: &str, boundary: bool) -> Option<usize> {
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(pat) {
+        let at = from + rel;
+        if !boundary || at == 0 || {
+            let c = code.as_bytes()[at - 1] as char;
+            !(c.is_alphanumeric() || c == '_')
+        } {
+            return Some(at);
+        }
+        from = at + pat.len();
+    }
+    None
+}
+
+/// Rule 3: `let _ =` discards in production code. Conservatively flags
+/// every occurrence (no type resolution): the PR-6 warmup-failure
+/// swallow is exactly this shape, and non-Result discards are cheap to
+/// justify with `// lint: allow(result-discard): <why>`.
+fn result_discard(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, l) in sf.lines.iter().enumerate() {
+        let ln = i + 1;
+        if sf.in_test(ln) {
+            continue;
+        }
+        let Some(at) = find_bounded(&l.code, "let _", true) else {
+            continue;
+        };
+        // `let _x` is a named hold, not a discard; require `=` next.
+        let rest = l.code[at + 5..].trim_start();
+        if !rest.starts_with('=') || rest.starts_with("==") {
+            continue;
+        }
+        if sf.allowed(ln, "result-discard").is_some() {
+            continue;
+        }
+        out.push(finding(
+            sf,
+            "result-discard",
+            ln,
+            "`let _ =` discards the value (a Result here swallows the error) — handle \
+             it or annotate `// lint: allow(result-discard): <why>`"
+                .to_string(),
+        ));
+    }
+}
+
+/// Rule 4: `.unwrap()` / `.expect("...")` outside tests. The poisoned
+/// -lock pattern is allow-listed: `.lock().unwrap()` and
+/// `.wait(..).unwrap()` abort only when another thread already
+/// panicked while holding the guard, which is the crash-consistent
+/// choice everywhere we have not adopted explicit poison recovery.
+fn unwrap_audit(sf: &SourceFile, out: &mut Vec<Finding>) {
+    for (i, l) in sf.lines.iter().enumerate() {
+        let ln = i + 1;
+        if sf.in_test(ln) {
+            continue;
+        }
+        let chars: Vec<char> = l.code.chars().collect();
+        let mut from = 0;
+        while let Some(rel) = l.code[from..].find(".unwrap()") {
+            let at = from + rel;
+            from = at + ".unwrap()".len();
+            if lock_family_before(&chars, at) {
+                continue;
+            }
+            if sf.allowed(ln, "unwrap").is_some() {
+                continue;
+            }
+            out.push(finding(
+                sf,
+                "unwrap",
+                ln,
+                "`.unwrap()` in production code — return the error, prove the \
+                 invariant with `// lint: allow(unwrap): <why>`, or use the \
+                 poisoned-lock pattern"
+                    .to_string(),
+            ));
+        }
+        if l.code.contains(".expect(\"") && sf.allowed(ln, "unwrap").is_none() {
+            out.push(finding(
+                sf,
+                "unwrap",
+                ln,
+                "`.expect(..)` in production code — return the error or prove the \
+                 invariant with `// lint: allow(unwrap): <why>`"
+                    .to_string(),
+            ));
+        }
+    }
+}
+
+/// Does the call chain immediately before position `at` (the dot of
+/// `.unwrap()`) end in `.lock()` or `.wait(..)`?
+fn lock_family_before(chars: &[char], at: usize) -> bool {
+    if at == 0 || chars[at - 1] != ')' {
+        return false;
+    }
+    // skip the balanced `(...)` group backwards
+    let mut j = at as isize - 1;
+    let mut depth = 0i32;
+    while j >= 0 {
+        match chars[j as usize] {
+            ')' => depth += 1,
+            '(' => {
+                depth -= 1;
+                if depth == 0 {
+                    j -= 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+        j -= 1;
+    }
+    if j < 0 {
+        return false;
+    }
+    let mut end = j;
+    while end >= 0 {
+        let c = chars[end as usize];
+        if c.is_alphanumeric() || c == '_' {
+            end -= 1;
+        } else {
+            break;
+        }
+    }
+    let name: String = chars[(end + 1) as usize..=j as usize].iter().collect();
+    (name == "lock" || name == "wait") && end >= 0 && chars[end as usize] == '.'
+}
+
+/// Rule 5: in files opted in with `// lint: relaxed-atomics`, any
+/// atomic ordering stronger than `Relaxed` needs a justification
+/// (`util::telemetry`'s whole design is single relaxed RMWs — a
+/// SeqCst creeping in silently re-fences every counter bump).
+fn atomic_ordering(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !sf.has_pragma_relaxed_atomics() {
+        return;
+    }
+    const STRONG: &[&str] = &[
+        "Ordering::SeqCst",
+        "Ordering::AcqRel",
+        "Ordering::Acquire",
+        "Ordering::Release",
+    ];
+    for (i, l) in sf.lines.iter().enumerate() {
+        let ln = i + 1;
+        if sf.in_test(ln) {
+            continue;
+        }
+        for pat in STRONG {
+            if l.code.contains(pat) && sf.allowed(ln, "atomic-ordering").is_none() {
+                out.push(finding(
+                    sf,
+                    "atomic-ordering",
+                    ln,
+                    format!(
+                        "`{pat}` in a relaxed-atomics file — justify the fence with \
+                         `// lint: allow(atomic-ordering): <why>` or use Relaxed"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+/// Rule 2: lock-order discipline. Walks each fn body tracking held
+/// guards (see module docs for the extent model) and flags (a)
+/// acquisitions that are same-or-outer rank relative to any held
+/// guard, and (b) `.lock()` receivers the declaration table cannot
+/// classify.
+fn lock_order(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let pragmas = sf.lock_pragmas();
+    for f in &sf.fns {
+        lock_order_fn(sf, f, &pragmas, out);
+    }
+}
+
+struct Held {
+    var: Option<String>,
+    id: String,
+    depth: i32,
+    line: usize,
+}
+
+fn lock_order_fn(
+    sf: &SourceFile,
+    f: &FnSpan,
+    pragmas: &[(String, String)],
+    out: &mut Vec<Finding>,
+) {
+    let mut held: Vec<Held> = Vec::new();
+    let mut depth = 0i32;
+    for ln in f.open..=f.close {
+        if sf.in_test(ln) && !sf.in_test(f.header) {
+            continue; // nested test mod inside a production span
+        }
+        let chars: Vec<char> = sf.line(ln).code.chars().collect();
+        let mut i = 0usize;
+        while i < chars.len() {
+            match chars[i] {
+                '{' => {
+                    depth += 1;
+                    i += 1;
+                }
+                '}' => {
+                    depth -= 1;
+                    held.retain(|h| h.depth <= depth);
+                    i += 1;
+                    if depth == 0 {
+                        return; // end of fn body
+                    }
+                }
+                'd' if starts_at(&chars, i, "drop(") && ident_boundary_before(&chars, i) => {
+                    let name: String = chars[i + 5..]
+                        .iter()
+                        .take_while(|c| c.is_alphanumeric() || **c == '_')
+                        .collect();
+                    held.retain(|h| h.var.as_deref() != Some(name.as_str()));
+                    i += 5;
+                }
+                '.' if starts_at(&chars, i, ".lock(") => {
+                    lock_site(sf, f, pragmas, &chars, i, ln, depth, &mut held, out);
+                    i += 6;
+                }
+                _ => i += 1,
+            }
+        }
+    }
+}
+
+fn starts_at(chars: &[char], i: usize, pat: &str) -> bool {
+    chars[i..].iter().zip(pat.chars()).filter(|(a, b)| **a == *b).count() == pat.len()
+}
+
+fn ident_boundary_before(chars: &[char], i: usize) -> bool {
+    i == 0 || {
+        let c = chars[i - 1];
+        !(c.is_alphanumeric() || c == '_' || c == '.')
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn lock_site(
+    sf: &SourceFile,
+    f: &FnSpan,
+    pragmas: &[(String, String)],
+    chars: &[char],
+    dot: usize,
+    ln: usize,
+    depth: i32,
+    held: &mut Vec<Held>,
+    out: &mut Vec<Finding>,
+) {
+    let (recv_start, receiver) = receiver_before(chars, dot);
+    let in_test = sf.in_test(ln);
+    let Some(id) = locks::classify(&sf.path, &receiver, pragmas) else {
+        if !in_test && sf.allowed(ln, "lock-order").is_none() {
+            out.push(finding(
+                sf,
+                "lock-order",
+                ln,
+                format!(
+                    "undeclared lock receiver `{receiver}` — declare it in \
+                     lint::locks::DECLS or with `// lint: declare-lock <recv> <id>`"
+                ),
+            ));
+        }
+        return;
+    };
+    let rank = locks::rank(&id).unwrap_or(usize::MAX);
+    for h in held.iter() {
+        let hrank = locks::rank(&h.id).unwrap_or(usize::MAX);
+        if rank <= hrank && !in_test && sf.allowed(ln, "lock-order").is_none() {
+            out.push(finding(
+                sf,
+                "lock-order",
+                ln,
+                format!(
+                    "acquired `{id}` (rank {rank}) while holding `{}` (rank {hrank}, \
+                     line {}) in fn `{}` — declared order is outer→inner: {}",
+                    h.id,
+                    h.line,
+                    f.name,
+                    locks::HIERARCHY.join(" → ")
+                ),
+            ));
+        }
+    }
+    // Guard-extent bookkeeping.
+    let stmt = statement_prefix(sf, f, ln, recv_start);
+    let t = stmt.trim_start();
+    if t.starts_with("if let")
+        || t.starts_with("while let")
+        || t.starts_with("match ")
+        || t.starts_with("for ")
+    {
+        // Scrutinee temporary: lives through the construct's block.
+        held.push(Held { var: None, id, depth: depth + 1, line: ln });
+        return;
+    }
+    if !chain_ends_as_guard(chars, dot) {
+        return; // statement-scoped temporary
+    }
+    if let Some(rest) = t.strip_prefix("let ") {
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+        let name: String = rest
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        let var = if name.is_empty() { None } else { Some(name) };
+        held.push(Held { var, id, depth, line: ln });
+        return;
+    }
+    // `sh = p.shared.lock()...;` assignment: re-bind the existing
+    // guard variable at its original scope depth.
+    let name: String = t.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    if !name.is_empty() && t[name.len()..].trim_start().starts_with('=') {
+        let prev_depth = held
+            .iter()
+            .position(|h| h.var.as_deref() == Some(name.as_str()))
+            .map(|p| held.remove(p).depth)
+            .unwrap_or(depth);
+        held.push(Held { var: Some(name), id, depth: prev_depth, line: ln });
+    }
+}
+
+/// Receiver expression ending right before `dot`: identifier path
+/// segments plus balanced `[...]` / `(...)` groups. Returns (start
+/// index, text).
+fn receiver_before(chars: &[char], dot: usize) -> (usize, String) {
+    let mut j = dot as isize - 1;
+    while j >= 0 {
+        let c = chars[j as usize];
+        if c.is_alphanumeric() || c == '_' || c == '.' || c == ':' {
+            j -= 1;
+        } else if c == ']' || c == ')' {
+            let open = if c == ']' { '[' } else { '(' };
+            let close = c;
+            let mut d = 0i32;
+            let mut k = j;
+            while k >= 0 {
+                let cc = chars[k as usize];
+                if cc == close {
+                    d += 1;
+                } else if cc == open {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                }
+                k -= 1;
+            }
+            if k < 0 {
+                break; // unbalanced on this line; stop here
+            }
+            j = k - 1;
+        } else {
+            break;
+        }
+    }
+    let start = (j + 1) as usize;
+    (start, chars[start..dot].iter().collect())
+}
+
+/// Does the call chain starting at the `.lock(` end the statement
+/// after the unwrap family (guard binding), or keep calling into the
+/// guard (statement temporary)?
+fn chain_ends_as_guard(chars: &[char], dot: usize) -> bool {
+    // consume `.lock( ... )`
+    let Some(mut i) = consume_call(chars, dot) else {
+        return true; // spills to next line; treat as guard (conservative)
+    };
+    loop {
+        while i < chars.len() && chars[i].is_whitespace() {
+            i += 1;
+        }
+        if i >= chars.len() {
+            return true; // chain continues next line; conservative guard
+        }
+        match chars[i] {
+            ';' => return true,
+            '?' => i += 1,
+            '.' => {
+                let name: String = chars[i + 1..]
+                    .iter()
+                    .take_while(|c| c.is_alphanumeric() || **c == '_')
+                    .collect();
+                const UNWRAP_FAMILY: &[&str] =
+                    &["unwrap", "expect", "unwrap_or_else", "unwrap_or", "unwrap_or_default"];
+                if !UNWRAP_FAMILY.contains(&name.as_str()) {
+                    return false;
+                }
+                let after = i + 1 + name.len();
+                match chars.get(after) {
+                    Some('(') => match consume_call(chars, after - 1) {
+                        // consume_call expects the index before `(`;
+                        // re-point: it scans from `name(`s dot — adjust below.
+                        Some(n) => i = n,
+                        None => return true,
+                    },
+                    _ => return false,
+                }
+            }
+            _ => return false,
+        }
+    }
+}
+
+/// From the index of the `.` (or any position whose next `(` opens the
+/// call), consume through the matching `)`; returns the index after
+/// it, or None if the line ends first.
+fn consume_call(chars: &[char], from: usize) -> Option<usize> {
+    let mut i = from;
+    while i < chars.len() && chars[i] != '(' {
+        i += 1;
+    }
+    let mut d = 0i32;
+    while i < chars.len() {
+        match chars[i] {
+            '(' => d += 1,
+            ')' => {
+                d -= 1;
+                if d == 0 {
+                    return Some(i + 1);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Text between the previous statement boundary (`;`, `{`, `}`) and
+/// `col` on line `ln`, walking back across lines within the fn body.
+fn statement_prefix(sf: &SourceFile, f: &FnSpan, ln: usize, col: usize) -> String {
+    let mut parts: Vec<String> = Vec::new();
+    let mut line = ln;
+    let mut end = col;
+    loop {
+        let code = &sf.line(line).code;
+        let upto: String = code.chars().take(end).collect();
+        if let Some(b) = upto.rfind(|c| c == ';' || c == '{' || c == '}') {
+            parts.push(upto[b + 1..].to_string());
+            break;
+        }
+        parts.push(upto);
+        if line <= f.open {
+            break;
+        }
+        line -= 1;
+        end = sf.line(line).code.chars().count();
+    }
+    parts.reverse();
+    parts.join(" ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lint::scan::SourceFile;
+
+    fn run(src: &str) -> Vec<Finding> {
+        check(&SourceFile::parse("x/fixture.rs", src))
+    }
+
+    #[test]
+    fn hot_path_flags_locks_and_allocs() {
+        let src = "\
+// lint: hot-path
+fn kernel(x: &mut [f32]) {
+    let v = vec![0.0f32; 4];
+    x[0] = v[0];
+}
+";
+        let f = run(src);
+        assert!(f.iter().any(|f| f.rule == "hot-path" && f.line == 3), "{f:?}");
+    }
+
+    #[test]
+    fn hot_path_clean_fn_passes() {
+        let src = "\
+// lint: hot-path
+fn kernel(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v += 1.0;
+    }
+}
+";
+        assert!(run(src).is_empty());
+    }
+
+    #[test]
+    fn lock_order_inversion_flagged_and_correct_order_passes() {
+        let src = "\
+// lint: declare-lock outer_q pool.shared
+// lint: declare-lock inner_q pool.lane
+fn bad(&self) {
+    let g = self.inner_q.lock().unwrap();
+    let h = self.outer_q.lock().unwrap();
+}
+fn good(&self) {
+    let g = self.outer_q.lock().unwrap();
+    let h = self.inner_q.lock().unwrap();
+}
+";
+        let f = run(src);
+        assert_eq!(f.iter().filter(|f| f.rule == "lock-order").count(), 1, "{f:?}");
+        assert!(f.iter().any(|f| f.rule == "lock-order" && f.line == 5));
+    }
+
+    #[test]
+    fn lock_guard_released_by_block_drop_and_temporaries() {
+        let src = "\
+// lint: declare-lock outer_q pool.shared
+// lint: declare-lock inner_q pool.lane
+fn ok(&self) {
+    {
+        let g = self.inner_q.lock().unwrap();
+    }
+    let h = self.outer_q.lock().unwrap();
+    drop(h);
+    let t = self.inner_q.lock().unwrap().pop_front();
+    let s = self.inner_q.lock().unwrap().pop_back();
+    let g2 = self.outer_q.lock().unwrap();
+}
+";
+        let f = run(src);
+        assert!(
+            f.iter().all(|f| f.rule != "lock-order"),
+            "block scoping / drop / temporaries must release: {f:?}"
+        );
+    }
+
+    #[test]
+    fn if_let_scrutinee_guard_is_held_through_block() {
+        let src = "\
+// lint: declare-lock outer_q pool.shared
+// lint: declare-lock inner_q pool.lane
+fn bad(&self) {
+    if let Some(x) = self.inner_q.lock().unwrap().front() {
+        let g = self.outer_q.lock().unwrap();
+    }
+}
+";
+        let f = run(src);
+        assert!(f.iter().any(|f| f.rule == "lock-order" && f.line == 5), "{f:?}");
+    }
+
+    #[test]
+    fn undeclared_lock_is_a_finding() {
+        let f = run("fn f(&self) { let g = self.mystery.lock().unwrap(); }\n");
+        assert!(f.iter().any(|f| f.rule == "lock-order" && f.message.contains("undeclared")));
+    }
+
+    #[test]
+    fn result_discard_flagged_unless_annotated() {
+        let src = "\
+fn f() {
+    let _ = send();
+    // lint: allow(result-discard): receiver may be gone at shutdown
+    let _ = send2();
+}
+";
+        let f = run(src);
+        assert_eq!(f.iter().filter(|f| f.rule == "result-discard").count(), 1);
+        assert!(f.iter().any(|f| f.rule == "result-discard" && f.line == 2));
+    }
+
+    #[test]
+    fn unwrap_audit_allows_lock_family_and_annotations() {
+        let src = "\
+// lint: declare-lock state scheduler.state
+fn f(&self) {
+    let g = self.state.lock().unwrap();
+    let v = self.items.pop().unwrap();
+    let w = self.items.first().expect(\"non-empty\");
+    // lint: allow(unwrap): checked two lines above
+    let u = self.items.last().unwrap();
+}
+";
+        let f = run(src);
+        let lines: Vec<usize> = f.iter().filter(|f| f.rule == "unwrap").map(|f| f.line).collect();
+        assert_eq!(lines, vec![4, 5], "{f:?}");
+    }
+
+    #[test]
+    fn atomic_ordering_needs_pragma_and_justification() {
+        let quiet = run("fn f() { X.fetch_add(1, Ordering::SeqCst); }\n");
+        assert!(quiet.iter().all(|f| f.rule != "atomic-ordering"), "no pragma, no rule");
+        let src = "\
+// lint: relaxed-atomics
+fn f() {
+    X.fetch_add(1, Ordering::SeqCst);
+    // lint: allow(atomic-ordering): publishes the buffer to the reader
+    Y.store(1, Ordering::Release);
+}
+";
+        let f = run(src);
+        let lines: Vec<usize> =
+            f.iter().filter(|f| f.rule == "atomic-ordering").map(|f| f.line).collect();
+        assert_eq!(lines, vec![3], "{f:?}");
+    }
+
+    #[test]
+    fn test_mods_are_exempt() {
+        let src = "\
+#[cfg(test)]
+mod tests {
+    fn t() {
+        let _ = send();
+        let v = items.pop().unwrap();
+    }
+}
+";
+        assert!(run(src).is_empty());
+    }
+}

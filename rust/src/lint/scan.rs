@@ -1,0 +1,555 @@
+//! Lexical source model for photon-lint.
+//!
+//! A deliberately small, dependency-free scanner (no `syn`, per the
+//! vendored-`anyhow` offline constraint): one character-level pass
+//! classifies every byte of a file as code, comment, or literal
+//! content, producing per-line views the rules can pattern-match
+//! without tripping over strings ("a `.lock()` inside an error
+//! message"), comments, char literals, or lifetimes. On top of that it
+//! extracts the annotation grammar, function spans (with brace
+//! matching), and `#[cfg(test)]` module spans so production-only rules
+//! can skip test code.
+//!
+//! ## What the `code` view guarantees
+//!
+//! * comments are blanked (their text is kept per-line in
+//!   [`Line::comment`] for annotation parsing);
+//! * string / raw-string / byte-string / char-literal *contents* are
+//!   blanked but the delimiters are kept, so `.expect("msg")` still
+//!   reads `.expect("   ")` — the `("` is what the unwrap rule keys on
+//!   (and what keeps `json.rs`'s own `expect(b'x')` parser method from
+//!   false-positiving);
+//! * lifetimes (`'env`) are left intact, char literals (`'x'`, `'\n'`)
+//!   are blanked;
+//! * every line of `code` is the same length as `raw`, so columns line
+//!   up for diagnostics.
+
+/// One source line in both raw and lexically-classified form.
+pub struct Line {
+    /// Original text (no trailing newline).
+    pub raw: String,
+    /// Same length as `raw`; comment and literal contents blanked.
+    pub code: String,
+    /// Text of any comment on this line (`//` line comments and the
+    /// per-line slices of `/* */` blocks), annotation parsing input.
+    pub comment: String,
+    /// Parsed `// lint: ...` annotation, if any.
+    pub annot: Option<Annot>,
+}
+
+/// The photon-lint annotation grammar (README §Static analysis):
+///
+/// * `// lint: hot-path` — tags the next `fn` as a hot path;
+/// * `// lint: allow(<rule>): <why>` — suppresses `<rule>` on the same
+///   line or the next code line; the justification is mandatory;
+/// * `// lint: relaxed-atomics` — file pragma opting the file into the
+///   atomic-ordering audit;
+/// * `// lint: declare-lock <recv-substr> <lock-id>` — file pragma
+///   declaring a lock site classification (fixtures + future files
+///   without editing `lint::locks`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Annot {
+    HotPath,
+    Allow { rule: String, reason: String },
+    RelaxedAtomics,
+    DeclareLock { recv: String, id: String },
+    /// Syntactically `lint:`-prefixed but not part of the grammar —
+    /// surfaced as a finding so typos cannot silently disable a rule.
+    Malformed(String),
+}
+
+/// A `fn` item: header line, body span, hot-path tag.
+pub struct FnSpan {
+    pub name: String,
+    /// 1-based line of the `fn` keyword.
+    pub header: usize,
+    /// 1-based lines of the body's opening and closing braces.
+    pub open: usize,
+    pub close: usize,
+    /// Tagged `// lint: hot-path` above the header (blank, comment and
+    /// attribute lines may sit between the tag and the `fn`).
+    pub hot: bool,
+}
+
+/// A scanned source file.
+pub struct SourceFile {
+    /// Display path (as given to the scanner).
+    pub path: String,
+    pub lines: Vec<Line>,
+    pub fns: Vec<FnSpan>,
+    /// 1-based inclusive line spans of `#[cfg(test)]` modules.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl SourceFile {
+    pub fn parse(path: &str, text: &str) -> SourceFile {
+        let lines = strip(text);
+        let mut sf = SourceFile {
+            path: path.to_string(),
+            lines,
+            fns: Vec::new(),
+            test_spans: Vec::new(),
+        };
+        sf.test_spans = find_test_spans(&sf.lines);
+        sf.fns = find_fns(&sf.lines);
+        sf
+    }
+
+    /// 1-based accessor.
+    pub fn line(&self, n: usize) -> &Line {
+        &self.lines[n - 1]
+    }
+
+    pub fn in_test(&self, n: usize) -> bool {
+        self.test_spans.iter().any(|&(a, b)| n >= a && n <= b)
+    }
+
+    /// File-level pragma present anywhere in the file?
+    pub fn has_pragma_relaxed_atomics(&self) -> bool {
+        self.lines
+            .iter()
+            .any(|l| matches!(l.annot, Some(Annot::RelaxedAtomics)))
+    }
+
+    /// All `declare-lock` pragmas in the file.
+    pub fn lock_pragmas(&self) -> Vec<(String, String)> {
+        self.lines
+            .iter()
+            .filter_map(|l| match &l.annot {
+                Some(Annot::DeclareLock { recv, id }) => Some((recv.clone(), id.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Justification for suppressing `rule` at line `n`: a trailing
+    /// annotation on the line itself, or a comment-only line directly
+    /// above. Returns the reason text when allowed.
+    pub fn allowed(&self, n: usize, rule: &str) -> Option<&str> {
+        let matches_rule = |l: &Line| match &l.annot {
+            Some(Annot::Allow { rule: r, reason }) if r == rule && !reason.is_empty() => {
+                Some(reason.as_str())
+            }
+            _ => None,
+        };
+        if let Some(r) = matches_rule(self.line(n)) {
+            return Some(r);
+        }
+        if n >= 2 {
+            let above = self.line(n - 1);
+            if above.code.trim().is_empty() {
+                return matches_rule(above);
+            }
+        }
+        None
+    }
+}
+
+/// Character-level classification pass. Keeps literal delimiters,
+/// blanks their contents; routes comment text to the side channel.
+fn strip(text: &str) -> Vec<Line> {
+    enum St {
+        Code,
+        Line,
+        Block(u32),
+        Str,
+        RawStr(usize),
+    }
+    let mut st = St::Code;
+    let mut out = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    for raw in text.lines() {
+        let b: Vec<char> = raw.chars().collect();
+        let mut i = 0usize;
+        // A line comment never crosses a newline.
+        if matches!(st, St::Line) {
+            st = St::Code;
+        }
+        while i < b.len() {
+            let c = b[i];
+            let next = b.get(i + 1).copied();
+            match st {
+                St::Code => {
+                    if c == '/' && next == Some('/') {
+                        comment.extend(&b[i..]);
+                        code.extend(std::iter::repeat(' ').take(b.len() - i));
+                        i = b.len();
+                        st = St::Line;
+                    } else if c == '/' && next == Some('*') {
+                        code.push_str("  ");
+                        i += 2;
+                        st = St::Block(1);
+                    } else if c == '"' {
+                        code.push('"');
+                        i += 1;
+                        st = St::Str;
+                    } else if c == 'b' && next == Some('"') && !prev_is_ident(&code) {
+                        code.push_str("b\"");
+                        i += 2;
+                        st = St::Str;
+                    } else if (c == 'r' || c == 'b') && !prev_is_ident(&code) {
+                        // r"..." / r#"..."# / br#"..."# raw strings.
+                        let mut j = i + 1;
+                        if c == 'b' && b.get(j) == Some(&'r') {
+                            j += 1;
+                        }
+                        let mut hashes = 0usize;
+                        while b.get(j) == Some(&'#') {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if (c == 'r' || j > i + 1) && b.get(j) == Some(&'"') {
+                            for &d in &b[i..=j] {
+                                code.push(d);
+                            }
+                            i = j + 1;
+                            st = St::RawStr(hashes);
+                        } else if c == 'b' && next == Some('\'') {
+                            // byte char literal b'x' / b'\n'
+                            code.push_str("b'");
+                            i += 2;
+                            i = blank_char_literal(&b, i, &mut code);
+                        } else {
+                            code.push(c);
+                            i += 1;
+                        }
+                    } else if c == '\'' {
+                        // char literal vs lifetime
+                        if next == Some('\\')
+                            || (next.is_some() && b.get(i + 2) == Some(&'\''))
+                        {
+                            code.push('\'');
+                            i += 1;
+                            i = blank_char_literal(&b, i, &mut code);
+                        } else {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                St::Line => unreachable!("line comments consume the rest of the line"),
+                St::Block(d) => {
+                    if c == '/' && next == Some('*') {
+                        st = St::Block(d + 1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '*' && next == Some('/') {
+                        st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                        code.push_str("  ");
+                        i += 2;
+                    } else {
+                        comment.push(c);
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::Str => {
+                    if c == '\\' {
+                        let take = 2.min(b.len() - i);
+                        code.extend(std::iter::repeat(' ').take(take));
+                        i += take;
+                    } else if c == '"' {
+                        code.push('"');
+                        i += 1;
+                        st = St::Code;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::RawStr(h) => {
+                    if c == '"' && b[i + 1..].iter().take_while(|&&d| d == '#').count() >= h {
+                        for &d in &b[i..=i + h] {
+                            code.push(d);
+                        }
+                        i += h + 1;
+                        st = St::Code;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            }
+        }
+        let annot = parse_annot(&comment);
+        out.push(Line {
+            raw: raw.to_string(),
+            code: std::mem::take(&mut code),
+            comment: std::mem::take(&mut comment),
+            annot,
+        });
+    }
+    out
+}
+
+fn prev_is_ident(code: &str) -> bool {
+    code.chars()
+        .last()
+        .map(|c| c.is_alphanumeric() || c == '_')
+        .unwrap_or(false)
+}
+
+/// Blank a char literal's interior starting right after the opening
+/// quote; returns the index after the closing quote.
+fn blank_char_literal(b: &[char], mut i: usize, code: &mut String) -> usize {
+    while i < b.len() && b[i] != '\'' {
+        if b[i] == '\\' {
+            code.push(' ');
+            i += 1;
+        }
+        if i < b.len() {
+            code.push(' ');
+            i += 1;
+        }
+    }
+    if i < b.len() {
+        code.push('\'');
+        i += 1;
+    }
+    i
+}
+
+fn parse_annot(comment: &str) -> Option<Annot> {
+    // The annotation must be the comment's whole content (`// lint: ...`),
+    // so prose *mentioning* the grammar (docs, this file) never parses.
+    let t = comment.trim_start_matches(|c: char| c == '/' || c == '!' || c.is_whitespace());
+    let rest = t.strip_prefix("lint:")?.trim();
+    if rest == "hot-path" {
+        return Some(Annot::HotPath);
+    }
+    if rest == "relaxed-atomics" {
+        return Some(Annot::RelaxedAtomics);
+    }
+    if let Some(r) = rest.strip_prefix("declare-lock") {
+        let mut it = r.split_whitespace();
+        if let (Some(recv), Some(id)) = (it.next(), it.next()) {
+            return Some(Annot::DeclareLock {
+                recv: recv.to_string(),
+                id: id.to_string(),
+            });
+        }
+        return Some(Annot::Malformed(rest.to_string()));
+    }
+    if let Some(r) = rest.strip_prefix("allow(") {
+        if let Some(close) = r.find(')') {
+            let rule = r[..close].trim().to_string();
+            let after = r[close + 1..].trim_start();
+            if let Some(reason) = after.strip_prefix(':') {
+                let reason = reason.trim();
+                if !rule.is_empty() && !reason.is_empty() {
+                    return Some(Annot::Allow {
+                        rule,
+                        reason: reason.to_string(),
+                    });
+                }
+            }
+        }
+        return Some(Annot::Malformed(rest.to_string()));
+    }
+    Some(Annot::Malformed(rest.to_string()))
+}
+
+/// `#[cfg(test)]` module spans: from the attribute line through the
+/// matching close brace of the `mod` that follows it.
+fn find_test_spans(lines: &[Line]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        if !l.code.contains("#[cfg(test)]") {
+            continue;
+        }
+        // Find the `mod` item within the next few lines (attributes and
+        // blanks may intervene) and brace-match its body.
+        for j in idx..lines.len().min(idx + 5) {
+            if let Some(col) = find_keyword(&lines[j].code, "mod") {
+                if let Some(open) = find_open_brace(lines, j, col) {
+                    if let Some(close) = match_brace(lines, open.0, open.1) {
+                        spans.push((idx + 1, close + 1));
+                    }
+                }
+                break;
+            }
+        }
+    }
+    spans
+}
+
+/// Position of keyword `kw` in `code` with non-identifier chars on both
+/// sides, or None.
+fn find_keyword(code: &str, kw: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(kw) {
+        let at = from + rel;
+        let pre_ok = at == 0 || {
+            let c = bytes[at - 1] as char;
+            !(c.is_alphanumeric() || c == '_')
+        };
+        let end = at + kw.len();
+        let post_ok = end >= bytes.len() || {
+            let c = bytes[end] as char;
+            !(c.is_alphanumeric() || c == '_')
+        };
+        if pre_ok && post_ok {
+            return Some(at);
+        }
+        from = at + kw.len();
+    }
+    None
+}
+
+/// First `{` at or after (line, col), stopping at a `;` (bodyless item).
+/// Returns (line_idx, col) 0-based.
+fn find_open_brace(lines: &[Line], line: usize, col: usize) -> Option<(usize, usize)> {
+    let mut c = col;
+    for (i, l) in lines.iter().enumerate().skip(line) {
+        for (j, ch) in l.code.char_indices().skip(if i == line { c } else { 0 }) {
+            match ch {
+                '{' => return Some((i, j)),
+                ';' => return None,
+                _ => {}
+            }
+        }
+        c = 0;
+    }
+    None
+}
+
+/// Match the brace opened at (line_idx, col); returns the closing
+/// brace's 0-based line index.
+fn match_brace(lines: &[Line], line: usize, col: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    for (i, l) in lines.iter().enumerate().skip(line) {
+        for (j, ch) in l.code.char_indices() {
+            if i == line && j < col {
+                continue;
+            }
+            match ch {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(i);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+fn find_fns(lines: &[Line]) -> Vec<FnSpan> {
+    let mut fns = Vec::new();
+    for (idx, l) in lines.iter().enumerate() {
+        let Some(col) = find_keyword(&l.code, "fn") else {
+            continue;
+        };
+        // name: identifier after `fn`
+        let after = &l.code[col + 2..];
+        let name: String = after
+            .trim_start()
+            .chars()
+            .take_while(|c| c.is_alphanumeric() || *c == '_')
+            .collect();
+        if name.is_empty() {
+            continue; // `fn(` pointer types etc.
+        }
+        let Some((oline, ocol)) = find_open_brace(lines, idx, col) else {
+            continue; // trait method declaration
+        };
+        let Some(cline) = match_brace(lines, oline, ocol) else {
+            continue;
+        };
+        // hot tag: walk up over blank / comment-only / attribute lines.
+        let mut hot = false;
+        let mut up = idx;
+        while up > 0 {
+            up -= 1;
+            let cand = &lines[up];
+            let t = cand.code.trim();
+            let is_meta = t.is_empty() || t.starts_with("#[") || t.starts_with("#!");
+            if !is_meta {
+                break;
+            }
+            if matches!(cand.annot, Some(Annot::HotPath)) {
+                hot = true;
+                break;
+            }
+        }
+        fns.push(FnSpan {
+            name,
+            header: idx + 1,
+            open: oline + 1,
+            close: cline + 1,
+            hot,
+        });
+    }
+    fns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_blank_but_delimiters_stay() {
+        let sf = SourceFile::parse("t.rs", "let x = \"a.lock()\"; y.expect(\"msg\");");
+        let code = &sf.lines[0].code;
+        assert!(!code.contains("a.lock()"), "string contents blanked: {code}");
+        assert!(code.contains(".expect(\""), "expect delimiter kept: {code}");
+        assert_eq!(code.len(), sf.lines[0].raw.len());
+    }
+
+    #[test]
+    fn comments_and_char_literals_strip_lifetimes_survive() {
+        let src = "fn f<'a>(x: &'a u8) { let c = '}'; // }.lock()\n}";
+        let sf = SourceFile::parse("t.rs", src);
+        assert!(!sf.lines[0].code.contains(".lock()"));
+        assert!(sf.lines[0].code.contains("'a"));
+        assert_eq!(sf.fns.len(), 1);
+        assert_eq!(sf.fns[0].close, 2, "comment-brace did not confuse matching");
+    }
+
+    #[test]
+    fn annotations_parse() {
+        let src = "\
+// lint: hot-path
+fn hot() { }
+// lint: allow(unwrap): invariant by construction
+// lint: relaxed-atomics
+// lint: declare-lock state scheduler.state
+// lint: allow(unwrap)
+";
+        let sf = SourceFile::parse("t.rs", src);
+        assert_eq!(sf.lines[0].annot, Some(Annot::HotPath));
+        assert!(sf.fns[0].hot);
+        assert!(matches!(
+            sf.lines[2].annot,
+            Some(Annot::Allow { ref rule, .. }) if rule == "unwrap"
+        ));
+        assert_eq!(sf.lines[3].annot, Some(Annot::RelaxedAtomics));
+        assert!(matches!(sf.lines[4].annot, Some(Annot::DeclareLock { .. })));
+        // reason-less allow is malformed, it must not suppress anything
+        assert!(matches!(sf.lines[5].annot, Some(Annot::Malformed(_))));
+    }
+
+    #[test]
+    fn test_spans_cover_cfg_test_mods() {
+        let src = "\
+fn prod() { x.unwrap(); }
+#[cfg(test)]
+mod tests {
+    fn t() { y.unwrap(); }
+}
+fn prod2() { }
+";
+        let sf = SourceFile::parse("t.rs", src);
+        assert!(!sf.in_test(1));
+        assert!(sf.in_test(2) && sf.in_test(4) && sf.in_test(5));
+        assert!(!sf.in_test(6));
+    }
+}

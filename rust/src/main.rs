@@ -234,7 +234,7 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     };
     let preset = match &resumed_ck {
         Some(ck) => ck.preset.clone(),
-        None => a.get_str("preset").unwrap(),
+        None => a.need_str("preset")?,
     };
     let mut cfg = TrainConfig::from_manifest(&rt, &preset)?;
     if let Some(e) = a.get_usize("epochs")? {
@@ -243,9 +243,9 @@ fn cmd_train(argv: Vec<String>) -> Result<()> {
     if let Some(lr) = a.get_f64("lr")? {
         cfg.lr = lr;
     }
-    cfg.seed = a.get_u64("seed")?.unwrap();
-    cfg.chip_seed = a.get_u64("chip-seed")?.unwrap();
-    cfg.noise = NoiseConfig::default_chip().scaled(a.get_f64("noise-scale")?.unwrap());
+    cfg.seed = a.need_u64("seed")?;
+    cfg.chip_seed = a.need_u64("chip-seed")?;
+    cfg.noise = NoiseConfig::default_chip().scaled(a.need_f64("noise-scale")?);
     cfg.verbose = !a.get_bool("quiet");
     if a.get_bool("stein") {
         cfg.loss_kind = photon_pinn::coordinator::trainer::LossKind::Stein;
@@ -351,18 +351,18 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     let dir = photon_pinn::resolve_artifacts_dir(a.get_str("artifacts").as_deref());
     let be: Arc<dyn Backend + Send + Sync> =
         Arc::new(photon_pinn::runtime::NativeBackend::load_or_builtin(&dir)?);
-    let preset = a.get_str("preset").unwrap();
-    let jobs = a.get_usize("jobs")?.unwrap().max(1);
+    let preset = a.need_str("preset")?;
+    let jobs = a.need_usize("jobs")?.max(1);
     let quiet = a.get_bool("quiet");
     let mut cfg = TrainConfig::from_manifest(be.as_ref(), &preset)?;
-    cfg.epochs = a.get_usize("epochs")?.unwrap();
+    cfg.epochs = a.need_usize("epochs")?;
     cfg.verbose = false;
     if let Some(s) = a.get_str("precision") {
         cfg.precision = Some(photon_pinn::runtime::EvalPrecision::parse(&s)?);
     }
-    let mut svc_cfg = ServiceConfig::new(a.get_usize("workers")?.unwrap(), jobs)
+    let mut svc_cfg = ServiceConfig::new(a.need_usize("workers")?, jobs)
         .with_warmup(&preset)
-        .with_fuse_max(a.get_usize("fuse-max")?.unwrap());
+        .with_fuse_max(a.need_usize("fuse-max")?);
     if let Some(q) = a.get_usize("tenant-quota")? {
         svc_cfg = svc_cfg.with_tenant_quota(q);
     }
@@ -377,7 +377,7 @@ fn cmd_serve(argv: Vec<String>) -> Result<()> {
     for e in &report.warmup_errors {
         eprintln!("  warmup degraded: {e}");
     }
-    let base_seed = a.get_u64("seed")?.unwrap();
+    let base_seed = a.need_u64("seed")?;
     let t0 = std::time::Instant::now();
     for i in 0..jobs {
         let mut c = cfg.clone();
@@ -556,22 +556,22 @@ fn print_stats_tables(v: &photon_pinn::util::json::Value) -> Result<()> {
 fn cmd_offchip(argv: Vec<String>) -> Result<()> {
     let a = args_for("offchip").parse(argv)?;
     let rt = load_runtime(&a)?;
-    let preset = a.get_str("preset").unwrap();
+    let preset = a.need_str("preset")?;
     let mut cfg = OffChipConfig::new(&preset, a.get_usize("epochs")?.unwrap_or(400));
-    cfg.seed = a.get_u64("seed")?.unwrap();
+    cfg.seed = a.need_u64("seed")?;
     cfg.verbose = !a.get_bool("quiet");
     let mut tr = OffChipTrainer::new(&rt, cfg)?;
     let (phi, ideal, _) = tr.train()?;
     let pm = rt.manifest().preset(&preset)?;
-    let noise = NoiseConfig::default_chip().scaled(a.get_f64("noise-scale")?.unwrap());
-    let chip = ChipRealization::sample(&pm.layout, &noise, a.get_u64("chip-seed")?.unwrap());
+    let noise = NoiseConfig::default_chip().scaled(a.need_f64("noise-scale")?);
+    let chip = ChipRealization::sample(&pm.layout, &noise, a.need_u64("chip-seed")?);
     let mapped = tr.score_mapped(&phi, &chip)?;
     println!("off-chip val MSE: ideal {ideal:.4e}  mapped-to-chip {mapped:.4e}");
     if let Some(path) = a.get_str("checkpoint") {
         Checkpoint {
             preset: preset.clone(),
             epoch: a.get_usize("epochs")?.unwrap_or(400),
-            seed: a.get_u64("seed")?.unwrap(),
+            seed: a.need_u64("seed")?,
             phi,
             final_val: Some(ideal),
             // the BP baseline is not resumable: no ZO optimizer state
@@ -591,12 +591,12 @@ fn cmd_table1(argv: Vec<String>) -> Result<()> {
     let a = args_for("table1").parse(argv)?;
     let rt = load_runtime(&a)?;
     let cfg = Table1Config {
-        zo_epochs: a.get_usize("zo-epochs")?.unwrap(),
-        bp_epochs: a.get_usize("bp-epochs")?.unwrap(),
-        noise: NoiseConfig::default_chip().scaled(a.get_f64("noise-scale")?.unwrap()),
-        chip_seed: a.get_u64("chip-seed")?.unwrap(),
-        aware_seed: a.get_u64("chip-seed")?.unwrap() ^ 0xAA,
-        seed: a.get_u64("seed")?.unwrap(),
+        zo_epochs: a.need_usize("zo-epochs")?,
+        bp_epochs: a.need_usize("bp-epochs")?,
+        noise: NoiseConfig::default_chip().scaled(a.need_f64("noise-scale")?),
+        chip_seed: a.need_u64("chip-seed")?,
+        aware_seed: a.need_u64("chip-seed")? ^ 0xAA,
+        seed: a.need_u64("seed")?,
         verbose: !a.get_bool("quiet"),
     };
     let runner = Table1Runner { rt: &rt, cfg };
@@ -655,7 +655,9 @@ fn cmd_hardware(argv: Vec<String>) -> Result<()> {
 
     let te = TrainingEfficiency::paper();
     let dims = NetworkDims::paper_tonn();
-    let e_inf = model.energy_j(Design::Tonn1, &dims).unwrap();
+    let e_inf = model
+        .energy_j(Design::Tonn1, &dims)
+        .ok_or_else(|| anyhow::anyhow!("TONN-1 paper dims exceed the optical loss budget"))?;
     let t_inf = model.latency_ns(Design::Tonn1, &dims);
     let (e_tot, t_tot) = te.totals(e_inf, t_inf);
     println!(

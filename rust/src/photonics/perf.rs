@@ -63,6 +63,15 @@ impl NetworkDims {
         }
     }
 
+    /// The TT shape of a tensorized design. The TONN match arms are
+    /// only reachable for dims constructed with a shape, so absence is
+    /// a construction bug, not a runtime condition — one audited
+    /// unwrap instead of ten.
+    fn tt(&self) -> &TtShape {
+        // lint: allow(unwrap): TONN dims are only constructed with a TT shape (doc above)
+        self.tt.as_ref().expect("TONN dims carry a TT shape")
+    }
+
     /// Weight-space parameter census (paper Table 1/2 "Params" column):
     /// TT entries (or dense entries) of both square layers + the readout
     /// modulator row.
@@ -121,7 +130,7 @@ impl PerfModel {
                 a.max(b)
             })
             .max()
-            .unwrap()
+            .unwrap() // lint: allow(unwrap): a valid TtShape has at least one core
     }
 
     /// MZI census for a design.
@@ -133,7 +142,7 @@ impl PerfModel {
                 2 * 2 * mesh::mzi_count(dims.hidden)
             }
             Design::Tonn1 => {
-                let tt = dims.tt.as_ref().expect("TONN needs a TT shape");
+                let tt = dims.tt();
                 let core_ch = Self::core_channels(tt);
                 let reps = Self::space_replicas(dims, core_ch);
                 let per_core: usize = (0..tt.cores())
@@ -147,7 +156,7 @@ impl PerfModel {
             Design::Tonn2 => {
                 // a single physical mesh, the largest core unfolding;
                 // U and V passes share it across time
-                let tt = dims.tt.as_ref().expect("TONN needs a TT shape");
+                let tt = dims.tt();
                 mesh::mzi_count(Self::core_channels(tt))
             }
         }
@@ -159,7 +168,7 @@ impl PerfModel {
             Design::Onn | Design::Tonn1 => 1,
             Design::Tonn2 => {
                 // every (layer, core, U/V pass, space slice) is one cycle
-                let tt = dims.tt.as_ref().expect("TONN needs a TT shape");
+                let tt = dims.tt();
                 let core_ch = Self::core_channels(tt);
                 let reps = Self::space_replicas(dims, core_ch);
                 2 * tt.cores() * 2 * reps
@@ -172,7 +181,7 @@ impl PerfModel {
         match design {
             Design::Onn => mesh::depth(dims.hidden),
             Design::Tonn1 => {
-                let tt = dims.tt.as_ref().expect("TONN needs a TT shape");
+                let tt = dims.tt();
                 (0..tt.cores())
                     .map(|k| {
                         let (a, b) = tt.core_unfolding(k);
@@ -181,7 +190,7 @@ impl PerfModel {
                     .sum()
             }
             Design::Tonn2 => {
-                let tt = dims.tt.as_ref().expect("TONN needs a TT shape");
+                let tt = dims.tt();
                 mesh::depth(Self::core_channels(tt))
             }
         }
@@ -196,7 +205,7 @@ impl PerfModel {
             // per cycle the light traverses the whole cascade (ONN/TONN-1)
             // or the single core (TONN-2)
             Design::Tonn2 => {
-                let tt = dims.tt.as_ref().unwrap();
+                let tt = dims.tt();
                 mesh::depth(Self::core_channels(tt)) as f64 * t.t_stage_ns
             }
             _ => self.cascade_stages(design, dims) as f64 * t.t_stage_ns,
@@ -209,12 +218,12 @@ impl PerfModel {
         match design {
             Design::Onn => dims.hidden,
             Design::Tonn1 => {
-                let tt = dims.tt.as_ref().unwrap();
+                let tt = dims.tt();
                 let core_ch = Self::core_channels(tt);
                 dims.wavelengths * Self::space_replicas(dims, core_ch)
             }
             Design::Tonn2 => {
-                let tt = dims.tt.as_ref().unwrap();
+                let tt = dims.tt();
                 Self::core_channels(tt)
             }
         }
@@ -226,7 +235,7 @@ impl PerfModel {
             Design::Onn => dims.wavelengths,
             Design::Tonn1 => dims.wavelengths,
             Design::Tonn2 => {
-                let tt = dims.tt.as_ref().unwrap();
+                let tt = dims.tt();
                 Self::core_channels(tt) // one line per core channel
             }
         }
@@ -238,7 +247,7 @@ impl PerfModel {
         // per cycle the light only crosses what is physically cascaded
         let stages = match design {
             Design::Tonn2 => {
-                let tt = dims.tt.as_ref().unwrap();
+                let tt = dims.tt();
                 mesh::depth(Self::core_channels(tt))
             }
             _ => self.cascade_stages(design, dims),

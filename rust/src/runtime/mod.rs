@@ -453,6 +453,7 @@ pub trait Entry {
     fn run1_with(&self, inputs: &[&[f32]], opts: &EvalOptions) -> Result<Vec<f32>> {
         let mut out = self.run_with(inputs, opts)?;
         anyhow::ensure!(out.len() == 1, "{}: multi-output", self.meta().name);
+        // lint: allow(unwrap): length checked to be exactly 1 on the line above
         Ok(out.pop().unwrap())
     }
 

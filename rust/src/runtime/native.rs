@@ -1356,7 +1356,7 @@ impl NativeBackend {
     /// The in-repo preset registry (no files needed at all).
     pub fn builtin() -> NativeBackend {
         NativeBackend::from_manifest(builtin_manifest())
-            .expect("builtin manifest is well-formed")
+            .expect("builtin manifest is well-formed") // lint: allow(unwrap): compile-time constant, exercised by every test
     }
 
     /// `load` when a manifest exists at `dir`, else [`Self::builtin`].
@@ -1702,8 +1702,10 @@ fn builtin_entry_meta(ename: &str, d: usize, ind: usize, stein_q: usize) -> Entr
 pub fn builtin_manifest() -> Manifest {
     let mut presets = HashMap::new();
     for p in BUILTIN_PRESETS {
+        // lint: allow(unwrap): BUILTIN_PRESETS only references registered problems
         let problem = crate::pde::lookup(p.pde).expect("builtin preset names a registered problem");
         let arch = builtin_arch(p, problem.in_dim());
+        // lint: allow(unwrap): builtin arch dims are compile-time constants
         let (_, layout) = build_net(&arch).expect("builtin arch is well-formed");
         let hyper = builtin_hyper();
         let d = layout.param_dim;

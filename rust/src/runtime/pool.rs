@@ -197,7 +197,17 @@ pub(crate) fn run(lanes: Vec<Vec<Task<'_>>>) {
     // only empty deques), so nothing outlives 'env.
     let lanes: Vec<Mutex<VecDeque<Task<'static>>>> = lanes
         .into_iter()
-        .map(|lane| Mutex::new(lane.into_iter().map(|t| unsafe { erase(t) }).collect()))
+        .map(|lane| {
+            let erased: VecDeque<Task<'static>> = lane
+                .into_iter()
+                .map(|t| {
+                    // SAFETY: executed (and thus dropped) before `run`
+                    // returns — the lifetime argument above.
+                    unsafe { erase(t) }
+                })
+                .collect();
+            Mutex::new(erased)
+        })
         .collect();
     let width = lanes.len();
     let d = Arc::new(Dispatch {
@@ -264,10 +274,12 @@ struct Dispatch {
 impl Dispatch {
     /// Work this dispatch from `home` lane until no task is claimable:
     /// own lane from the front, then steal from the backs of the others.
+    // lint: hot-path
     fn help(&self, home: usize) {
         let tel = &telemetry::global().pool;
         let n = self.lanes.len();
         loop {
+            // lint: allow(hot-path): the lane deques ARE the work-stealing substrate
             let own = self.lanes[home].lock().unwrap().pop_front();
             if let Some(t) = own {
                 tel.tasks_executed.incr();
@@ -276,6 +288,7 @@ impl Dispatch {
             }
             let mut stolen = None;
             for off in 1..n {
+                // lint: allow(hot-path): steal probe on a sibling lane deque
                 if let Some(t) = self.lanes[(home + off) % n].lock().unwrap().pop_back() {
                     stolen = Some(t);
                     break;
@@ -291,8 +304,10 @@ impl Dispatch {
         }
     }
 
+    // lint: hot-path
     fn execute(&self, t: Task<'static>) {
         if let Err(p) = catch_unwind(AssertUnwindSafe(t)) {
+            // lint: allow(hot-path): task-panic path only, never taken on healthy dispatches
             let mut slot = self.panic.lock().unwrap();
             if slot.is_none() {
                 *slot = Some(p);
@@ -302,6 +317,7 @@ impl Dispatch {
         // task's completion, so the submitter's reads of the output
         // buffers see all task writes.
         if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            // lint: allow(hot-path): final-task completion edge, once per dispatch
             let mut done = self.done.lock().unwrap();
             *done = true;
             self.done_cv.notify_all();
@@ -386,6 +402,7 @@ impl Pool {
             std::thread::Builder::new()
                 .name(format!("photon-pool-{id}"))
                 .spawn(move || self.worker_loop())
+                // lint: allow(unwrap): thread-spawn failure at pool init is unrecoverable
                 .expect("spawn pool worker");
         }
     }

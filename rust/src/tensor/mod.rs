@@ -85,6 +85,7 @@ impl TtShape {
     /// The paper's TONN layer factorization: 1024x1024 = [4,8,4,8]x[8,4,8,4],
     /// ranks [1,2,1,2,1].
     pub fn paper_layer() -> TtShape {
+        // lint: allow(unwrap): constant factorization, validated by construction
         TtShape::new(&[4, 8, 4, 8], &[8, 4, 8, 4], &[1, 2, 1, 2, 1]).unwrap()
     }
 }
@@ -221,6 +222,7 @@ impl Mat {
 /// mul-then-add order, they are **bit-identical** to the scalar kernel
 /// (property-tested in [`simd`]), so dispatch never changes results —
 /// only latency. `PHOTON_FORCE_SCALAR=1` pins the scalar path.
+// lint: hot-path
 pub fn gemm_rows(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f32]) {
     let n = b.cols;
     assert!(k_used <= a_cols && k_used <= b.rows, "gemm_rows: k bounds");
@@ -236,6 +238,7 @@ pub fn gemm_rows(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f3
 
 /// The scalar GEMM body (PR-1 reference): assumes `out` is zeroed and
 /// bounds are checked by the [`gemm_rows`] dispatcher.
+// lint: hot-path
 pub(crate) fn gemm_rows_scalar(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f32]) {
     let n = b.cols;
     let mut rest = &mut out[..];

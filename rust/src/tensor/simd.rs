@@ -80,6 +80,7 @@ fn detect() -> KernelPath {
 /// Wide f32 GEMM body — same signature contract as the scalar kernel
 /// (`out` pre-zeroed by the [`super::gemm_rows`] dispatcher, bounds
 /// already asserted). Bit-identical to the scalar path for any input.
+// lint: hot-path
 pub(crate) fn gemm_rows_wide(
     a: &[f32],
     a_cols: usize,
@@ -98,6 +99,7 @@ pub(crate) fn gemm_rows_wide(
             return;
         }
     }
+    // lint: allow(result-discard): non-x86 unused-param silencer (the AVX2 arm is compiled out)
     let _ = path;
     portable::gemm_rows(a, a_cols, k_used, b, out);
 }
@@ -109,6 +111,7 @@ mod portable {
 
     /// `row[j] += x * brow[j]` with an 8-wide unrolled body. Separate
     /// mul + add per element keeps bit parity with the scalar kernel.
+    // lint: hot-path
     #[inline(always)]
     fn axpy(row: &mut [f32], x: f32, brow: &[f32]) {
         let mut chunks = row.chunks_exact_mut(LANES);
@@ -123,6 +126,7 @@ mod portable {
         }
     }
 
+    // lint: hot-path
     pub(super) fn gemm_rows(a: &[f32], a_cols: usize, k_used: usize, b: &Mat, out: &mut [f32]) {
         let n = b.cols;
         let mut rest = &mut out[..];
@@ -172,6 +176,7 @@ mod avx2 {
     ///
     /// # Safety
     /// Caller must have verified AVX2 support (`is_x86_feature_detected!`).
+    // lint: hot-path
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn gemm_rows(
         a: &[f32],
@@ -253,6 +258,7 @@ mod avx2 {
 /// transposed like the f32 kernel's `b`). Scalar and portable paths
 /// only — the oracle tier is bounded-error, never a hot loop, so the
 /// unsafe AVX2 surface stays f32-only.
+// lint: hot-path
 pub fn gemm_rows_f64(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n: usize, out: &mut [f64]) {
     assert!(k_used <= a_cols, "gemm_rows_f64: k bounds");
     assert!(n > 0 && out.len() % n == 0, "gemm_rows_f64: out shape");
@@ -266,6 +272,7 @@ pub fn gemm_rows_f64(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n: usi
     }
 }
 
+// lint: hot-path
 fn gemm_rows_f64_scalar(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n: usize, out: &mut [f64]) {
     for (r, row) in out.chunks_exact_mut(n).enumerate() {
         let arow = &a[r * a_cols..r * a_cols + k_used];
@@ -278,6 +285,7 @@ fn gemm_rows_f64_scalar(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n: 
     }
 }
 
+// lint: hot-path
 fn gemm_rows_f64_portable(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n: usize, out: &mut [f64]) {
     const LANES: usize = 4;
     for (r, row) in out.chunks_exact_mut(n).enumerate() {
@@ -303,6 +311,7 @@ fn gemm_rows_f64_portable(a: &[f64], a_cols: usize, k_used: usize, bt: &[f64], n
 /// four fixed lanes — re-associated, so callers must compare results by
 /// bound, not bit equality. Lane count is fixed (not data-length
 /// dependent), so a given path is still deterministic run-to-run.
+// lint: hot-path
 pub fn sum_sq_f64(xs: &[f32]) -> f64 {
     match kernel_path() {
         KernelPath::Scalar => xs.iter().map(|&x| x as f64 * x as f64).sum(),
@@ -310,6 +319,7 @@ pub fn sum_sq_f64(xs: &[f32]) -> f64 {
     }
 }
 
+// lint: hot-path
 fn sum_sq_f64_wide(xs: &[f32]) -> f64 {
     let mut acc = [0.0f64; 4];
     let chunks = xs.chunks_exact(4);
@@ -328,6 +338,7 @@ fn sum_sq_f64_wide(xs: &[f32]) -> f64 {
 }
 
 /// Sequential f64 dot product (readout of the F64 oracle forward pass).
+// lint: hot-path
 pub fn dot_f64(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b).map(|(x, y)| x * y).sum()
 }

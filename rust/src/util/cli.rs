@@ -140,6 +140,29 @@ impl Args {
         self.raw(name).map(|v| v == "true" || v == "1").unwrap_or(false)
     }
 
+    fn missing(name: &str) -> anyhow::Error {
+        anyhow::anyhow!("--{name} is required (and has no default)")
+    }
+
+    /// `get_str` for flags the command cannot run without: a typed
+    /// error instead of an `unwrap` when neither a value nor a default
+    /// is present.
+    pub fn need_str(&self, name: &str) -> anyhow::Result<String> {
+        self.get_str(name).ok_or_else(|| Self::missing(name))
+    }
+
+    pub fn need_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get_usize(name)?.ok_or_else(|| Self::missing(name))
+    }
+
+    pub fn need_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get_u64(name)?.ok_or_else(|| Self::missing(name))
+    }
+
+    pub fn need_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get_f64(name)?.ok_or_else(|| Self::missing(name))
+    }
+
     pub fn positional(&self) -> &[String] {
         &self.positional
     }

@@ -276,6 +276,7 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
+        // lint: allow(unwrap): the scanned range is ASCII digits/signs/dots only
         let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         s.parse::<f64>()
             .map(Value::Num)
@@ -332,6 +333,7 @@ impl<'a> Parser<'a> {
                     // consume one UTF-8 scalar
                     let rest = std::str::from_utf8(&self.b[self.i..])
                         .map_err(|_| self.err("bad utf8"))?;
+                    // lint: allow(unwrap): Some(_) peek guarantees a nonempty remainder
                     let c = rest.chars().next().unwrap();
                     out.push(c);
                     self.i += c.len_utf8();

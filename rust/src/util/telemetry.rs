@@ -57,6 +57,13 @@
 //! [`write_snapshot`] writes it atomically (tmp + rename — the
 //! `--telemetry-out` flag and the CI obs-smoke job consume this).
 
+// lint: relaxed-atomics
+//
+// The cost contract above is enforced by photon-lint: every ordering
+// stronger than Relaxed in this file needs an
+// `allow(atomic-ordering): <why>` justification, and the counter ops
+// are tagged hot-path (no locks / allocation / I/O in their bodies).
+
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
@@ -76,14 +83,17 @@ pub const SCHEMA_VERSION: u64 = 1;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    // lint: hot-path
     pub fn incr(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    // lint: hot-path
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    // lint: hot-path
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -94,10 +104,12 @@ impl Counter {
 pub struct MaxGauge(AtomicU64);
 
 impl MaxGauge {
+    // lint: hot-path
     pub fn observe(&self, v: u64) {
         self.0.fetch_max(v, Ordering::Relaxed);
     }
 
+    // lint: hot-path
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -127,6 +139,7 @@ impl Histogram {
         }
     }
 
+    // lint: hot-path
     pub fn observe(&self, v: f64) {
         let i = self
             .bounds

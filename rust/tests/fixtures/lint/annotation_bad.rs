@@ -1,0 +1,8 @@
+// Failing fixture for the `annotation` rule: an allow without the
+// mandatory reason must itself be a finding, not a silent suppression.
+// Expected finding: rule `annotation`, line 6.
+
+fn f(items: &[u32]) -> u32 {
+    // lint: allow(unwrap)
+    *items.first().unwrap()
+}

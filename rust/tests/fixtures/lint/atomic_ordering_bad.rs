@@ -1,0 +1,8 @@
+// Failing fixture for the `atomic-ordering` rule: an unjustified SeqCst
+// in a relaxed-atomics file. Expected finding: rule `atomic-ordering`,
+// line 7.
+
+// lint: relaxed-atomics
+fn bump(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::SeqCst);
+}

@@ -1,0 +1,9 @@
+// Passing fixture for the `atomic-ordering` rule: a relaxed-atomics
+// file whose one stronger ordering is justified.
+
+// lint: relaxed-atomics
+fn bump(c: &AtomicU64, flag: &AtomicBool) {
+    c.fetch_add(1, Ordering::Relaxed);
+    // lint: allow(atomic-ordering): publishes the finished snapshot to readers
+    flag.store(true, Ordering::Release);
+}

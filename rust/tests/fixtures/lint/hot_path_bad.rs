@@ -1,0 +1,12 @@
+// Failing fixture for the `hot-path` rule: the tagged fn heap-allocates.
+// Expected finding: rule `hot-path`, line 8.
+
+// lint: hot-path
+fn kernel(x: &mut [f32]) {
+    let mut acc = 0.0f32;
+    for v in x.iter() {
+        let scratch = vec![*v; 4];
+        acc += scratch[0];
+    }
+    x[0] = acc;
+}

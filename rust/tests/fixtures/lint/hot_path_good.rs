@@ -1,0 +1,10 @@
+// Passing fixture for the `hot-path` rule: a tagged kernel that only
+// touches preallocated buffers. Scanned by tests/lint_self.rs — never
+// compiled.
+
+// lint: hot-path
+fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * *xi;
+    }
+}

@@ -1,0 +1,10 @@
+// Failing fixture for the `lock-order` rule: acquires the outer lock
+// while holding the inner one. Expected finding: rule `lock-order`,
+// line 9.
+
+// lint: declare-lock outer_q pool.shared
+// lint: declare-lock inner_q pool.lane
+fn inverted(&self) {
+    let g = self.inner_q.lock().unwrap();
+    let h = self.outer_q.lock().unwrap();
+}

@@ -1,0 +1,12 @@
+// Passing fixture for the `lock-order` rule: nested acquisition in
+// declared outer→inner order, plus release-by-drop before re-locking.
+
+// lint: declare-lock outer_q pool.shared
+// lint: declare-lock inner_q pool.lane
+fn nested_in_order(&self) {
+    let g = self.outer_q.lock().unwrap();
+    let h = self.inner_q.lock().unwrap();
+    drop(h);
+    drop(g);
+    let again = self.outer_q.lock().unwrap();
+}

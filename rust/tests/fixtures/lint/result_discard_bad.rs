@@ -1,0 +1,6 @@
+// Failing fixture for the `result-discard` rule: a bare `let _ =`
+// swallowing a Result. Expected finding: rule `result-discard`, line 5.
+
+fn shutdown(tx: &Sender<u32>) {
+    let _ = tx.send(1);
+}

@@ -1,0 +1,7 @@
+// Passing fixture for the `result-discard` rule: the discard carries a
+// justification annotation.
+
+fn shutdown(tx: &Sender<u32>) {
+    // lint: allow(result-discard): the receiver may already be gone at shutdown
+    let _ = tx.send(1);
+}

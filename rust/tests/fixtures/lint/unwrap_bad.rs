@@ -1,0 +1,8 @@
+// Failing fixture for the `unwrap` rule: bare unwrap and expect in
+// production code. Expected findings: rule `unwrap`, lines 5 and 6.
+
+fn drain(items: &[u32]) -> u32 {
+    let v = items.first().unwrap();
+    let w = items.last().expect("non-empty");
+    *v + *w
+}

@@ -1,0 +1,9 @@
+// Passing fixture for the `unwrap` rule: the poisoned-lock pattern is
+// allow-listed, and a proven invariant carries an annotation.
+
+// lint: declare-lock state scheduler.state
+fn drain(&self) {
+    let g = self.state.lock().unwrap();
+    // lint: allow(unwrap): the caller checked the queue non-empty under this same guard
+    let v = g.items.first().unwrap();
+}

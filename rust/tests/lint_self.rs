@@ -1,0 +1,124 @@
+//! photon-lint self-tests: every rule has a passing and a failing
+//! fixture under `tests/fixtures/lint/`, and the crate's own source
+//! tree must scan clean — the same invariant the CI `static-analysis`
+//! job enforces with the `photon_lint` binary.
+//!
+//! The bad-fixture assertions go through the JSON report (not the
+//! in-memory findings) so the machine-readable schema that CI
+//! artifacts and downstream tooling consume is pinned too.
+
+use std::path::{Path, PathBuf};
+
+use photon_pinn::lint;
+use photon_pinn::util::json::Value;
+
+fn fixture(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/lint")
+        .join(name)
+}
+
+/// Scan one fixture and return its JSON report value.
+fn scan_json(name: &str) -> Value {
+    let findings = lint::scan_file(&fixture(name)).expect("fixture readable");
+    let rep = lint::Report {
+        files_scanned: 1,
+        findings,
+    };
+    photon_pinn::util::json::parse(&rep.to_json().to_string()).expect("report json parses")
+}
+
+/// The `(rule, line)` pairs of every finding in a JSON report.
+fn rule_lines(v: &Value) -> Vec<(String, usize)> {
+    v.get("findings")
+        .and_then(|f| f.as_arr())
+        .expect("findings array")
+        .iter()
+        .map(|f| {
+            (
+                f.get("rule").and_then(|r| r.as_str()).expect("rule").to_string(),
+                f.get("line").and_then(|l| l.as_usize()).expect("line"),
+            )
+        })
+        .collect()
+}
+
+fn assert_clean(name: &str) {
+    let v = scan_json(name);
+    assert_eq!(
+        rule_lines(&v),
+        Vec::<(String, usize)>::new(),
+        "good fixture {name} must scan clean"
+    );
+}
+
+fn assert_finds(name: &str, expect: &[(&str, usize)]) {
+    let got = rule_lines(&scan_json(name));
+    for (rule, line) in expect {
+        assert!(
+            got.iter().any(|(r, l)| r == rule && l == line),
+            "bad fixture {name}: expected ({rule}, {line}) among {got:?}"
+        );
+    }
+}
+
+#[test]
+fn hot_path_fixtures() {
+    assert_clean("hot_path_good.rs");
+    assert_finds("hot_path_bad.rs", &[("hot-path", 8)]);
+}
+
+#[test]
+fn lock_order_fixtures() {
+    assert_clean("lock_order_good.rs");
+    assert_finds("lock_order_bad.rs", &[("lock-order", 9)]);
+}
+
+#[test]
+fn result_discard_fixtures() {
+    assert_clean("result_discard_good.rs");
+    assert_finds("result_discard_bad.rs", &[("result-discard", 5)]);
+}
+
+#[test]
+fn unwrap_fixtures() {
+    assert_clean("unwrap_good.rs");
+    assert_finds("unwrap_bad.rs", &[("unwrap", 5), ("unwrap", 6)]);
+}
+
+#[test]
+fn atomic_ordering_fixtures() {
+    assert_clean("atomic_ordering_good.rs");
+    assert_finds("atomic_ordering_bad.rs", &[("atomic-ordering", 7)]);
+}
+
+#[test]
+fn malformed_annotation_is_a_finding_and_does_not_suppress() {
+    // the typo'd allow is flagged AND the unwrap it failed to cover
+    // still fires — a bad annotation must never silently suppress
+    assert_finds("annotation_bad.rs", &[("annotation", 6), ("unwrap", 7)]);
+}
+
+#[test]
+fn by_rule_counts_match_findings() {
+    let v = scan_json("unwrap_bad.rs");
+    assert_eq!(
+        v.get("by_rule").and_then(|b| b.get("unwrap")).and_then(|n| n.as_usize()),
+        Some(2)
+    );
+    assert_eq!(v.get("schema").and_then(|s| s.as_usize()), Some(1));
+}
+
+/// The crate's own sources hold the contracts they declare: a clean
+/// tree is the acceptance bar the CI `static-analysis` job enforces.
+#[test]
+fn crate_source_tree_scans_clean() {
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let rep = lint::scan_tree(&src).expect("src tree scans");
+    assert!(rep.files_scanned > 20, "walked {} files", rep.files_scanned);
+    assert!(
+        rep.clean(),
+        "the crate source tree must lint clean:\n{}",
+        rep.human()
+    );
+}
